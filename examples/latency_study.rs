@@ -1,0 +1,72 @@
+//! The §4.2 latency study on the live cluster: N loader workers per access
+//! method, percentile report in the paper's Table-2 format, plus the
+//! P99-P50 spread analysis of §4.2.2. (The paper-scale version with 256
+//! loaders runs in the simulator: `cargo bench --bench table2`.)
+//!
+//!     cargo run --release --example latency_study [-- --loaders 8 --steps 15]
+
+use getbatch::client::loader::{AccessMode, DataLoader};
+use getbatch::client::sdk::Client;
+use getbatch::testutil::fixtures;
+use getbatch::util::cli::Args;
+use getbatch::util::stats::Samples;
+use getbatch::util::threadpool::scoped_map;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let loaders = args.usize_or("loaders", 8);
+    let steps = args.usize_or("steps", 15);
+    let batch = args.usize_or("batch", 32);
+
+    let cluster = fixtures::cluster(4);
+    let manifest = fixtures::stage_shards(&cluster, "speech", 16, 64, 8192.0, 3);
+    println!(
+        "{} loaders x {} steps, batch {}, {} samples staged\n",
+        loaders, steps, batch, manifest.len()
+    );
+    println!("{:<16} {:>44}  {:>44}", "method", "batch ms (P50/P95/P99/Avg)", "per-object ms (P50/P95/P99/Avg)");
+
+    let mut rows = Vec::new();
+    for mode in [AccessMode::Sequential, AccessMode::RandomGet, AccessMode::GetBatch] {
+        let per: Vec<(Samples, Samples)> =
+            scoped_map(&(0..loaders as u64).collect::<Vec<_>>(), loaders, |_, &w| {
+                let mut dl = DataLoader::new(
+                    Client::new(&cluster.proxy_addr()),
+                    manifest.clone(),
+                    mode,
+                    batch,
+                    w * 31 + 5,
+                );
+                let mut bs = Samples::new();
+                let mut os = Samples::new();
+                for _ in 0..steps {
+                    if let Ok((_, t)) = dl.next_batch() {
+                        bs.add(t.batch.as_secs_f64() * 1e3);
+                        for d in t.per_object {
+                            os.add(d.as_secs_f64() * 1e3);
+                        }
+                    }
+                }
+                (bs, os)
+            });
+        let mut bs = Samples::new();
+        let mut os = Samples::new();
+        for (b, o) in per {
+            bs.merge(&b);
+            os.merge(&o);
+        }
+        let brow = bs.row();
+        println!(
+            "{:<16} {:>10.1}/{:>10.1}/{:>10.1}/{:>9.1}  {:>10.2}/{:>10.2}/{:>10.2}/{:>9.2}",
+            mode.name(),
+            brow.p50, brow.p95, brow.p99, brow.avg,
+            os.row().p50, os.row().p95, os.row().p99, os.row().avg,
+        );
+        rows.push((mode, brow));
+    }
+    let get = rows.iter().find(|(m, _)| *m == AccessMode::RandomGet).unwrap().1;
+    let gb = rows.iter().find(|(m, _)| *m == AccessMode::GetBatch).unwrap().1;
+    println!("\n§4.2.2 spread (P99-P50): GET {:.1} ms vs GetBatch {:.1} ms ({:.0}% reduction)",
+             get.spread(), gb.spread(), (1.0 - gb.spread() / get.spread()) * 100.0);
+    Ok(())
+}

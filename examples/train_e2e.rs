@@ -1,0 +1,87 @@
+//! END-TO-END VALIDATION (DESIGN.md E2E): train the AOT-compiled
+//! transformer LM on a synthetic corpus stored in the live cluster, once
+//! per data-access method, proving all three layers compose:
+//!
+//!   L3 rust cluster (GetBatch) → collate HLO (L1 Pallas kernel inside) →
+//!   train-step HLO (L2 JAX fwd/bwd with the L1 attention kernel) via PJRT.
+//!
+//! Prerequisite: `make artifacts`. Run:
+//!     cargo run --release --example train_e2e [-- --steps 200]
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use getbatch::client::loader::{AccessMode, DataLoader};
+use getbatch::client::sdk::Client;
+use getbatch::runtime::pjrt::Runtime;
+use getbatch::runtime::trainer::{artifacts_dir, final_loss, train};
+use getbatch::testutil::fixtures;
+use getbatch::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 200);
+
+    let rt = Runtime::load(&artifacts_dir()?)?;
+    println!(
+        "model: {} params ({} tensors), batch {}, seq {}, platform {}",
+        rt.meta.n_params,
+        rt.meta.n_param_tensors,
+        rt.meta.batch,
+        rt.meta.seq_len,
+        rt.platform()
+    );
+
+    // Synthetic byte-level corpus: structured text so the LM has signal.
+    let cluster = fixtures::cluster(4);
+    let mut manifest = getbatch::client::loader::Manifest::default();
+    {
+        use getbatch::tar::{write_archive, Entry};
+        let phrases = ["the quick brown fox ", "jumps over the lazy dog ", "pack my box ", "with five dozen jugs "];
+        let mut rng = getbatch::util::rng::Rng::new(17);
+        for s in 0..12 {
+            let entries: Vec<Entry> = (0..32)
+                .map(|i| {
+                    let mut text = String::new();
+                    while text.len() < 64 + rng.usize_below(128) {
+                        text.push_str(phrases[rng.usize_below(phrases.len())]);
+                    }
+                    Entry { name: format!("doc-{s:03}-{i:03}.txt"), data: text.into_bytes() }
+                })
+                .collect();
+            let shard = format!("shards/s-{s:05}.tar");
+            cluster.put_direct("corpus", &shard, &write_archive(&entries)?)?;
+            for e in &entries {
+                manifest.samples.push(getbatch::client::loader::SampleRef {
+                    bucket: "corpus".into(),
+                    shard: Some(shard.clone()),
+                    name: e.name.clone(),
+                    size: e.data.len() as u64,
+                });
+            }
+        }
+    }
+    println!("corpus: {} docs in 12 shards\n", manifest.len());
+
+    for mode in [AccessMode::Sequential, AccessMode::RandomGet, AccessMode::GetBatch] {
+        let mut loader =
+            DataLoader::new(Client::new(&cluster.proxy_addr()), manifest.clone(), mode, rt.meta.batch, 5);
+        let report = train(&rt, &mut loader, steps, 0)?;
+        let first = report.losses.first().copied().unwrap_or(f32::NAN);
+        let last = final_loss(&report.losses, 20);
+        println!("{:<16} loss {first:.3} -> {last:.3} over {steps} steps ({:.1}s)", report.mode, report.total_secs);
+        println!("                 data-load  {}", report.load_ms);
+        println!("                 train-step {}", report.step_ms);
+        // loss curve (every steps/10)
+        let stride = (steps / 10).max(1);
+        let curve: Vec<String> = report
+            .losses
+            .iter()
+            .step_by(stride)
+            .map(|l| format!("{l:.2}"))
+            .collect();
+        println!("                 curve: {}\n", curve.join(" "));
+        anyhow::ensure!(last < first, "{mode:?}: loss should decrease");
+    }
+    println!("all three layers compose: cluster fetch -> Pallas collate -> JAX train step (PJRT)");
+    Ok(())
+}

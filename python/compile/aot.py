@@ -1,0 +1,118 @@
+"""AOT lowering: jax → HLO *text* → ``artifacts/``.
+
+HLO text (not ``HloModuleProto.serialize``) is the interchange format: the
+sandbox's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction-id
+protos; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts:
+  artifacts/init.hlo.txt        (seed i32)                    -> params…
+  artifacts/collate.hlo.txt     (flat [CAP] i32, off [B+1])   -> batch, mask
+  artifacts/train_step.hlo.txt  (params…, batch, mask)        -> params…, loss
+  artifacts/meta.json           shapes + arity for the rust runtime
+
+Usage: python -m compile.aot --out ../artifacts [--d-model 128 ...]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, collate_fn, init, n_params, param_spec, train_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(cfg: ModelConfig, out_dir: str, token_capacity: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    spec = param_spec(cfg)
+    param_structs = tuple(jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec)
+
+    # ---- init ---------------------------------------------------------------
+    init_lowered = jax.jit(lambda seed: init(cfg, seed)).lower(
+        jax.ShapeDtypeStruct((), jnp.int32)
+    )
+    with open(os.path.join(out_dir, "init.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(init_lowered))
+
+    # ---- collate -------------------------------------------------------------
+    collate_lowered = jax.jit(lambda flat, off: collate_fn(cfg, flat, off)).lower(
+        jax.ShapeDtypeStruct((token_capacity,), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.batch + 1,), jnp.int32),
+    )
+    with open(os.path.join(out_dir, "collate.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(collate_lowered))
+
+    # ---- train step ------------------------------------------------------------
+    step_lowered = jax.jit(
+        lambda *args: train_step(cfg, args[:-2], args[-2], args[-1])
+    ).lower(
+        *param_structs,
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.float32),
+    )
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(step_lowered))
+
+    meta = {
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "lr": cfg.lr,
+        "pad_id": cfg.pad_id,
+        "token_capacity": token_capacity,
+        "n_param_tensors": len(spec),
+        "n_params": int(n_params(cfg)),
+        "param_shapes": [list(s) for _, s in spec],
+        "param_names": [n for n, _ in spec],
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args(argv)
+    cfg = ModelConfig(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        n_layers=args.n_layers,
+        seq_len=args.seq_len,
+        batch=args.batch,
+        lr=args.lr,
+    )
+    token_capacity = args.batch * args.seq_len * 2
+    meta = lower_all(cfg, args.out, token_capacity)
+    print(
+        f"lowered model ({meta['n_params']:,} params, {meta['n_param_tensors']} tensors) "
+        f"to {args.out}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: fused causal attention.
+
+TPU-structured (DESIGN.md §Hardware-Adaptation): the grid iterates over
+(batch, head) so each program instance holds one [T, D] tile of Q/K/V in
+VMEM and drives the MXU with two [T,T]x[T,D] matmuls fused with the softmax
+— the HBM↔VMEM schedule a CUDA flash-attention kernel would express with
+threadblocks is expressed here with BlockSpec. Lowered with
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic custom-calls,
+so interpret mode is the correctness (and AOT) path; real-TPU efficiency is
+estimated from the block shapes in DESIGN.md §Perf.
+
+The kernel is wrapped in ``jax.custom_vjp`` (backward = the standard
+attention gradient in plain jnp) so the L2 train step can differentiate
+through it — plain ``pallas_call`` has no autodiff rule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    """One (batch, head) program: refs are [1, 1, T, D] VMEM tiles."""
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    t, d = q.shape
+    logits = jnp.dot(q, k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    logits = jnp.where(col <= row, logits, NEG_INF)
+    # Numerically stable softmax, fused with both matmuls in one program.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v).astype(o_ref.dtype)
+
+
+def _attention_fwd_pallas(q, k, v):
+    b, h, t, d = q.shape
+    spec = pl.BlockSpec((1, 1, t, d), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Fused causal attention: [B,H,T,D]^3 -> [B,H,T,D]."""
+    return _attention_fwd_pallas(q, k, v)
+
+
+def _fwd(q, k, v):
+    return _attention_fwd_pallas(q, k, v), (q, k, v)
+
+
+def _bwd(res, g):
+    q, k, v = res
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    dv = jnp.einsum("bhts,bhtd->bhsd", p, g)
+    dp = jnp.einsum("bhtd,bhsd->bhts", g, v)
+    # softmax backward
+    dlogits = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dlogits = jnp.where(mask, dlogits, 0.0)
+    dq = jnp.einsum("bhts,bhsd->bhtd", dlogits, k) * scale
+    dk = jnp.einsum("bhts,bhtd->bhsd", dlogits, q) * scale
+    return dq, dk, dv
+
+
+attention.defvjp(_fwd, _bwd)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_footprint_bytes(t, d, dtype_bytes=4):
+    """Per-program VMEM estimate for DESIGN.md §Perf: q,k,v,o tiles plus the
+    [T,T] logits/probs scratch (×2 for exp + normalize temporaries)."""
+    return 4 * t * d * dtype_bytes + 2 * t * t * dtype_bytes

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: batch collation — the data-pipeline hot spot between
+GetBatch's TAR stream and the model's dense tensors.
+
+Samples arrive from the object store as variable-length token streams,
+concatenated into one flat buffer with an offsets vector (built in rust,
+zero-copy from the ordered batch). The kernel gathers each sample's window
+into a padded [B, T] batch and emits the validity mask — one grid program
+per row, so on TPU each program pulls exactly one sample's bytes HBM→VMEM
+(BlockSpec over rows), the analogue of a threadblock-per-sample CUDA gather.
+
+``interpret=True`` for CPU-PJRT executability (see attention.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _collate_kernel(pad_id, flat_ref, off_ref, batch_ref, mask_ref):
+    """One program per batch row. flat/off are full-array refs; batch/mask
+    refs are [1, T] row tiles."""
+    i = pl.program_id(0)
+    t = batch_ref.shape[1]
+    start = off_ref[i]
+    end = off_ref[i + 1]
+    length = jnp.minimum(end - start, t)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+    cap = flat_ref.shape[0]
+    idx = jnp.clip(start + pos, 0, cap - 1)
+    toks = flat_ref[idx]
+    valid = pos < length
+    batch_ref[0, :] = jnp.where(valid, toks, pad_id).astype(jnp.int32)
+    mask_ref[0, :] = valid.astype(jnp.float32)
+
+
+def collate(flat_tokens, offsets, seq_len, pad_id=0):
+    """Gather + pad: ([CAP] i32, [B+1] i32) -> ([B,T] i32, [B,T] f32)."""
+    b = offsets.shape[0] - 1
+    t = seq_len
+    row_spec = pl.BlockSpec((1, t), lambda i: (i, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    kernel = lambda flat_ref, off_ref, batch_ref, mask_ref: _collate_kernel(
+        pad_id, flat_ref, off_ref, batch_ref, mask_ref
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[full(flat_tokens.shape), full(offsets.shape)],
+        out_specs=[row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t), jnp.int32),
+            jax.ShapeDtypeStruct((b, t), jnp.float32),
+        ],
+        interpret=True,
+    )(flat_tokens, offsets)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package must match its ``*_ref`` twin to float
+tolerance; pytest + hypothesis sweep shapes/dtypes in
+``python/tests/test_kernels.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Causal scaled dot-product attention.
+
+    q, k, v: [B, H, T, D] -> [B, H, T, D]
+    """
+    d = q.shape[-1]
+    logits = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(d).astype(q.dtype)
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)
+
+
+def collate_ref(flat_tokens, offsets, seq_len, pad_id):
+    """Gather variable-length samples into a padded [B, T] batch + mask.
+
+    flat_tokens: [CAP] int32 — concatenated token streams of all samples
+    offsets: [B+1] int32 — sample i occupies flat[offsets[i]:offsets[i+1]]
+    Returns (batch [B, T] int32, mask [B, T] float32).
+    """
+    b = offsets.shape[0] - 1
+    t = seq_len
+    pos = jnp.arange(t, dtype=jnp.int32)
+
+    def row(i):
+        start = offsets[i]
+        length = jnp.minimum(offsets[i + 1] - start, t)
+        idx = jnp.clip(start + pos, 0, flat_tokens.shape[0] - 1)
+        toks = flat_tokens[idx]
+        valid = pos < length
+        return jnp.where(valid, toks, pad_id), valid.astype(jnp.float32)
+
+    rows = [row(i) for i in range(b)]
+    batch = jnp.stack([r[0] for r in rows])
+    mask = jnp.stack([r[1] for r in rows])
+    return batch, mask

@@ -1,0 +1,130 @@
+"""L2: the training-side consumer of GetBatch (§4 analog) — a decoder-only
+transformer LM with a fused train step, written in JAX, calling the L1
+Pallas attention kernel. Build-time only: ``aot.py`` lowers ``init``,
+``collate_fn`` and ``train_step`` to HLO text once; the rust runtime
+executes them via PJRT with no python on the training path.
+
+Parameters travel as a flat list of arrays (stable order defined by
+``param_spec``) so the rust side can thread outputs back into inputs
+positionally without understanding the pytree.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.collate import collate
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256        # byte-level
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    seq_len: int = 128
+    batch: int = 8
+    lr: float = 3e-3
+    pad_id: int = 0
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list — the flat-parameter ABI shared with rust."""
+    d, v, t = cfg.d_model, cfg.vocab, cfg.seq_len
+    spec = [("embed", (v, d)), ("pos", (t, d))]
+    for l in range(cfg.n_layers):
+        spec += [
+            (f"l{l}.ln1_w", (d,)),
+            (f"l{l}.ln1_b", (d,)),
+            (f"l{l}.wqkv", (d, 3 * d)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.ln2_w", (d,)),
+            (f"l{l}.ln2_b", (d,)),
+            (f"l{l}.w1", (d, 4 * d)),
+            (f"l{l}.b1", (4 * d,)),
+            (f"l{l}.w2", (4 * d, d)),
+            (f"l{l}.b2", (d,)),
+        ]
+    spec += [("lnf_w", (d,)), ("lnf_b", (d,)), ("head", (d, v))]
+    return spec
+
+
+def n_params(cfg: ModelConfig):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def init(cfg: ModelConfig, seed):
+    """Initialize the flat parameter list from an int32 seed (lowered to HLO
+    so rust never computes initializers itself)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", ".b1", ".b2", "lnf_b")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(("ln1_w", "ln2_w", "lnf_w")):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            out.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            )
+    return tuple(out)
+
+
+def _layernorm(x, w, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * w + b
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens: [B, T] int32 -> logits [B, T, V]."""
+    it = iter(params)
+    p = {name: next(it) for name, _ in param_spec(cfg)}
+    b, t = tokens.shape
+    x = p["embed"][tokens] + p["pos"][None, :t, :]
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, p[f"l{l}.ln1_w"], p[f"l{l}.ln1_b"])
+        qkv = h @ p[f"l{l}.wqkv"]                       # [B,T,3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        def heads(z):
+            return z.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        o = attention(heads(q), heads(k), heads(v))     # L1 Pallas kernel
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + o @ p[f"l{l}.wo"]
+        h = _layernorm(x, p[f"l{l}.ln2_w"], p[f"l{l}.ln2_b"])
+        h = jax.nn.gelu(h @ p[f"l{l}.w1"] + p[f"l{l}.b1"])
+        x = x + h @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+    x = _layernorm(x, p["lnf_w"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, mask):
+    """Next-token cross-entropy, masked by sample validity."""
+    logits = forward(cfg, params, tokens)               # [B,T,V]
+    tgt = tokens[:, 1:]                                 # predict t+1
+    lg = logits[:, :-1, :]
+    m = mask[:, 1:] * mask[:, :-1]
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def train_step(cfg: ModelConfig, params, tokens, mask):
+    """One fused SGD step: (params, batch) -> (new_params..., loss)."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens, mask))(params)
+    new_params = tuple(p - cfg.lr * g for p, g in zip(params, grads))
+    return new_params + (loss,)
+
+
+def collate_fn(cfg: ModelConfig, flat_tokens, offsets):
+    """The L1 collate kernel as its own lowerable graph:
+    ([CAP] i32, [B+1] i32) -> ([B,T] i32, [B,T] f32)."""
+    return collate(flat_tokens, offsets, cfg.seq_len, pad_id=cfg.pad_id)

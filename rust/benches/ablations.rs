@@ -1,0 +1,110 @@
+//! Design-choice ablations (DESIGN.md A1-A4):
+//!   A1 colocation hint on/off       — cross-node sender traffic + latency
+//!   A2 streaming vs buffered DT     — time-to-first-byte + total
+//!   A3 persistent pool vs cold conn — client connection reuse effect
+//!   A4 batch-size sweep             — objects/s vs batch size (1..512)
+
+use std::time::Duration;
+
+use getbatch::aisloader::{self, LoadSpec};
+use getbatch::batch::request::BatchRequest;
+use getbatch::client::sdk::Client;
+use getbatch::testutil::fixtures;
+use getbatch::util::cli::Args;
+use getbatch::util::stats::Samples;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let iters = args.usize_or("iters", 30);
+
+    // ---- A1: colocation ----------------------------------------------------
+    println!("## A1 — colocation hint (single-shard batch, 4 targets)");
+    let c = fixtures::cluster(4);
+    let manifest = fixtures::stage_shards(&c, "audio", 1, 128, 4096.0, 1);
+    let client = Client::new(&c.proxy_addr());
+    for coloc in [false, true] {
+        let before: u64 = c.targets.iter().map(|t| t.metrics.sender_entries.get()).sum();
+        let mut lat = Samples::new();
+        for _ in 0..iters {
+            let entries: Vec<_> = manifest.samples.iter().take(64).map(|s| s.to_entry()).collect();
+            let req = BatchRequest::new(entries).colocation(coloc);
+            let (_, stats) = client.get_batch_timed(&req).unwrap();
+            lat.add(stats.total.as_secs_f64() * 1e3);
+        }
+        let crossed: u64 =
+            c.targets.iter().map(|t| t.metrics.sender_entries.get()).sum::<u64>() - before;
+        println!(
+            "  coloc={coloc:<5}  cross-node entries={crossed:>5}  batch {}",
+            lat.row()
+        );
+    }
+
+    // ---- A2: streaming vs buffered ------------------------------------------
+    println!("## A2 — streaming vs buffered DT (64 x 64KiB batch)");
+    let c = fixtures::cluster(4);
+    let names = fixtures::stage_objects(&c, "b", 256, 64 << 10, 2);
+    let client = Client::new(&c.proxy_addr());
+    for strm in [true, false] {
+        let mut ttfb = Samples::new();
+        let mut total = Samples::new();
+        for _ in 0..iters {
+            let entries: Vec<_> = names
+                .iter()
+                .take(64)
+                .map(|n| getbatch::batch::request::BatchEntry::obj("b", n))
+                .collect();
+            let req = BatchRequest::new(entries).streaming(strm);
+            let (_, stats) = client.get_batch_timed(&req).unwrap();
+            ttfb.add(stats.ttfb.as_secs_f64() * 1e3);
+            total.add(stats.total.as_secs_f64() * 1e3);
+        }
+        println!(
+            "  strm={strm:<5}  ttfb P50 {:>7.2} ms  total P50 {:>7.2} ms",
+            ttfb.percentile(50.0),
+            total.percentile(50.0)
+        );
+    }
+
+    // ---- A3: connection reuse ------------------------------------------------
+    println!("## A3 — client connection reuse (GET path, 10KiB)");
+    let c = fixtures::cluster(2);
+    let spec = LoadSpec {
+        object_size: 10 << 10,
+        workers: 4,
+        duration: Duration::from_millis(args.u64_or("ms", 1200)),
+        num_objects: 256,
+        ..Default::default()
+    };
+    aisloader::stage_uniform(&c, "bench", &spec);
+    for no_reuse in [false, true] {
+        let r = aisloader::run(&c, "bench", &LoadSpec { no_reuse, ..spec.clone() });
+        println!(
+            "  reuse={:<5}  {:>9.0} obj/s  lat {}",
+            !no_reuse,
+            r.throughput.ops_per_sec(),
+            r.request_ms
+        );
+    }
+
+    // ---- A4: batch-size sweep --------------------------------------------------
+    println!("## A4 — batch-size sweep (10KiB objects)");
+    let c = fixtures::cluster(4);
+    let spec = LoadSpec {
+        object_size: 10 << 10,
+        workers: 8,
+        duration: Duration::from_millis(args.u64_or("ms", 1200)),
+        num_objects: 1024,
+        ..Default::default()
+    };
+    aisloader::stage_uniform(&c, "bench", &spec);
+    let base = aisloader::run(&c, "bench", &spec);
+    println!("  batch=1(GET)  {:>9.0} obj/s", base.throughput.ops_per_sec());
+    for k in [4usize, 16, 32, 64, 128, 256, 512] {
+        let r = aisloader::run(&c, "bench", &LoadSpec { batch: Some(k), ..spec.clone() });
+        println!(
+            "  batch={k:<5}  {:>9.0} obj/s  ({:.1}x)",
+            r.throughput.ops_per_sec(),
+            r.throughput.ops_per_sec() / base.throughput.ops_per_sec()
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Figure 3 reproduction: throughput scaling series (CSV) — one series per
+//! object size over {GET, Batch 32, 64, 128}, both SIM and LIVE.
+//!
+//! Output is CSV so the figure can be re-plotted directly:
+//!   config,object_size,mode,batch,gib_per_sec,speedup
+
+use std::time::Duration;
+
+use getbatch::aisloader::{self, LoadSpec};
+use getbatch::sim::model::CostModel;
+use getbatch::sim::workload::run_synthetic;
+use getbatch::testutil::fixtures;
+use getbatch::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    println!("config,object_size,mode,batch,gib_per_sec,speedup");
+    let sizes: [u64; 3] = [10 << 10, 100 << 10, 1 << 20];
+    let batches = [32usize, 64, 128];
+
+    let m = CostModel::oci_16node();
+    let secs = args.f64_or("sim-secs", 4.0);
+    for &size in &sizes {
+        let get = run_synthetic(&m, 80, size, None, secs, size);
+        let g = get.throughput.gib_per_sec();
+        println!("sim,{size},get,1,{g:.3},1.0");
+        for &k in &batches {
+            let r = run_synthetic(&m, 80, size, Some(k), secs, size + k as u64);
+            let t = r.throughput.gib_per_sec();
+            println!("sim,{size},getbatch,{k},{t:.3},{:.2}", t / g);
+        }
+    }
+
+    if args.bool("no-live") {
+        return;
+    }
+    let workers = args.usize_or("live-workers", 8);
+    let ms = args.u64_or("live-ms", 1200);
+    for &size in &sizes {
+        let c = fixtures::cluster(4);
+        let base = LoadSpec {
+            object_size: size,
+            workers,
+            duration: Duration::from_millis(ms),
+            num_objects: if size >= 1 << 20 { 128 } else { 512 },
+            ..Default::default()
+        };
+        aisloader::stage_uniform(&c, "bench", &base);
+        let get = aisloader::run(&c, "bench", &base);
+        let g = get.throughput.gib_per_sec();
+        println!("live,{size},get,1,{g:.3},1.0");
+        for &k in &batches {
+            let r = aisloader::run(&c, "bench", &LoadSpec { batch: Some(k), ..base.clone() });
+            let t = r.throughput.gib_per_sec();
+            println!("live,{size},getbatch,{k},{t:.3},{:.2}", t / g);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Micro-benchmarks of the L3 hot paths (feeds the §Perf iteration loop):
+//! TAR assembly, frame encode/decode, reorder buffer, JSON request parse,
+//! end-to-end single-batch latency on a live cluster.
+
+use std::time::Instant;
+
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::client::sdk::Client;
+use getbatch::dt::order::OrderBuffer;
+use getbatch::proto::frame::{encode_into, read_frame, Frame};
+use getbatch::tar::TarWriter;
+use getbatch::testutil::fixtures;
+use getbatch::util::cli::Args;
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed() / iters as u32;
+    println!("{name:<44} {per:>12.2?}/iter   ({iters} iters)");
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let quick = args.bool("quick");
+    let scale = if quick { 1 } else { 4 };
+
+    // TAR assembly of a 128 x 10KiB batch (the DT serialization core)
+    let payload = vec![7u8; 10 << 10];
+    bench("tar: assemble 128 x 10KiB", 200 * scale, || {
+        let mut w = TarWriter::new(Vec::with_capacity(130 * 10 << 10));
+        for i in 0..128 {
+            w.append(&format!("obj-{i:06}"), &payload).unwrap();
+        }
+        w.finish().unwrap();
+    });
+
+    // frame encode+decode of a 10KiB entry
+    let f = Frame::data(1, 0, vec![9u8; 10 << 10]);
+    let mut buf = Vec::new();
+    bench("frame: encode 10KiB", 20_000 * scale, || {
+        encode_into(&f, &mut buf);
+    });
+    encode_into(&f, &mut buf);
+    bench("frame: decode 10KiB (incl. crc)", 20_000 * scale, || {
+        let mut cur = std::io::Cursor::new(&buf);
+        read_frame(&mut cur).unwrap().unwrap();
+    });
+
+    // reorder buffer: 256 out-of-order fills + ordered drain
+    bench("order: 256-slot fill+drain", 2_000 * scale, || {
+        let b = OrderBuffer::new(256);
+        for i in (0..256u32).rev() {
+            b.fill(i, vec![0u8; 64]);
+        }
+        for i in 0..256u32 {
+            b.wait_take(i, std::time::Duration::from_secs(1));
+        }
+    });
+
+    // JSON parse of a 512-entry batch request (proxy coloc path + DT)
+    let req = BatchRequest::new(
+        (0..512).map(|i| BatchEntry::member("bucket", &format!("shard-{:04}.tar", i % 16), &format!("member-{i:05}"))).collect(),
+    );
+    let body = req.to_body();
+    println!("request body: {} bytes for 512 entries", body.len());
+    bench("wire: parse 512-entry batch request", 2_000 * scale, || {
+        BatchRequest::from_body(&body).unwrap();
+    });
+
+    // end-to-end single batch on a live cluster
+    let c = fixtures::cluster(4);
+    let names = fixtures::stage_objects(&c, "b", 256, 10 << 10, 1);
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> =
+        names.iter().take(128).map(|n| BatchEntry::obj("b", n)).collect();
+    bench("e2e: GetBatch(128 x 10KiB) live", 50 * scale, || {
+        client.get_batch_collect(&BatchRequest::new(entries.clone())).unwrap();
+    });
+    let one = vec![BatchEntry::obj("b", &names[0])];
+    bench("e2e: GET-equivalent batch(1) live", 200 * scale, || {
+        client.get_batch_collect(&BatchRequest::new(one.clone())).unwrap();
+    });
+    bench("e2e: plain GET live", 200 * scale, || {
+        client.get("b", &names[0]).unwrap();
+    });
+}

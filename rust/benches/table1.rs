@@ -1,0 +1,80 @@
+//! Table 1 reproduction: sustained throughput, individual GET vs
+//! GetBatch(32/64/128) × {10 KiB, 100 KiB, 1 MiB}.
+//!
+//! Two harnesses, both printed:
+//!  - SIM  — the 16-node OCI cost model at paper scale (80 workers), the
+//!           apples-to-apples shape comparison with the paper's table;
+//!  - LIVE — the real in-process cluster over localhost TCP (scaled down:
+//!           fewer workers, shorter windows, smaller object counts).
+//!
+//! Usage: cargo bench --bench table1 [-- --live-ms 1500 --live-workers 8]
+
+use std::time::Duration;
+
+use getbatch::aisloader::{self, LoadSpec};
+use getbatch::sim::model::CostModel;
+use getbatch::sim::workload::run_synthetic;
+use getbatch::testutil::fixtures;
+use getbatch::util::bytes::fmt_size;
+use getbatch::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let sizes: [u64; 3] = [10 << 10, 100 << 10, 1 << 20];
+    let batches = [32usize, 64, 128];
+
+    // ------------------------------------------------------------- SIM ----
+    println!("## Table 1 — SIM (16-node OCI model, 80 workers, paper scale)");
+    println!("{:<10} {:>10} {:>16} {:>16} {:>16}", "size", "GET", "Batch32", "Batch64", "Batch128");
+    let m = CostModel::oci_16node();
+    let secs = args.f64_or("sim-secs", 5.0);
+    for (row, &size) in sizes.iter().enumerate() {
+        let get = run_synthetic(&m, 80, size, None, secs, 100 + row as u64);
+        let g = get.throughput.gib_per_sec();
+        let mut cells = Vec::new();
+        for (bi, &k) in batches.iter().enumerate() {
+            let r = run_synthetic(&m, 80, size, Some(k), secs, 200 + (row * 3 + bi) as u64);
+            let t = r.throughput.gib_per_sec();
+            cells.push(format!("{t:>7.2} ({:>4.1}x)", t / g));
+        }
+        println!("{:<10} {:>7.2}    {} {} {}", fmt_size(size), g, cells[0], cells[1], cells[2]);
+    }
+    println!("paper:     10KiB GET 0.5 | 4.5 (9x) 6.0 (12x) 7.3 (15x)");
+    println!("           100KiB GET 4.2 | 20.7 (4.9x) 24.1 (5.7x) 26.1 (6.2x)");
+    println!("           1MiB GET 22.3 | 32.4 (1.5x) 35.2 (1.6x) 37.0 (1.7x)\n");
+
+    // ------------------------------------------------------------- LIVE ---
+    if args.bool("no-live") {
+        return;
+    }
+    println!("## Table 1 — LIVE (in-process cluster, localhost TCP, scaled)");
+    let workers = args.usize_or("live-workers", 8);
+    let ms = args.u64_or("live-ms", 1500);
+    let targets = args.usize_or("live-targets", 4);
+    let live_sizes: [u64; 3] = [10 << 10, 100 << 10, 1 << 20];
+    println!(
+        "{} targets, {} workers, {} ms per cell",
+        targets, workers, ms
+    );
+    println!("{:<10} {:>10} {:>16} {:>16} {:>16}", "size", "GET", "Batch32", "Batch64", "Batch128");
+    for &size in &live_sizes {
+        let c = fixtures::cluster(targets);
+        let base = LoadSpec {
+            object_size: size,
+            workers,
+            duration: Duration::from_millis(ms),
+            num_objects: if size >= 1 << 20 { 128 } else { 512 },
+            ..Default::default()
+        };
+        aisloader::stage_uniform(&c, "bench", &base);
+        let get = aisloader::run(&c, "bench", &base);
+        let g = get.throughput.gib_per_sec();
+        let mut cells = Vec::new();
+        for &k in &batches {
+            let r = aisloader::run(&c, "bench", &LoadSpec { batch: Some(k), ..base.clone() });
+            let t = r.throughput.gib_per_sec();
+            cells.push(format!("{t:>7.2} ({:>4.1}x)", t / g));
+        }
+        println!("{:<10} {:>7.2}    {} {} {}", fmt_size(size), g, cells[0], cells[1], cells[2]);
+    }
+}

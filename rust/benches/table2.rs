@@ -1,0 +1,93 @@
+//! Table 2 reproduction: batch + per-object latency percentiles for the
+//! three data-access methods under a training workload.
+//!
+//! SIM: 256 bursty loaders vs the 16-node model (the paper's reduced-client
+//! §4.2.1 setup). LIVE: scaled-down training-shaped load on the in-process
+//! cluster with loader workers sharing the cluster.
+
+use getbatch::client::loader::{AccessMode, DataLoader};
+use getbatch::client::sdk::Client;
+use getbatch::sim::model::CostModel;
+use getbatch::sim::workload::run_training;
+use getbatch::testutil::fixtures;
+use getbatch::util::cli::Args;
+use getbatch::util::stats::Samples;
+use getbatch::util::threadpool::scoped_map;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+
+    println!("## Table 2 — SIM (256 loaders, batch 128, bursty synchronous steps)");
+    println!("{:<18} {:>42}  {:>42}", "method", "batch latency ms (P50/P95/P99/Avg)", "per-object ms (P50/P95/P99/Avg)");
+    let m = CostModel::oci_16node();
+    let steps = args.usize_or("sim-steps", 10);
+    let mut rows = Vec::new();
+    for mode in [AccessMode::Sequential, AccessMode::RandomGet, AccessMode::GetBatch] {
+        let r = run_training(&m, mode, 256, 128, steps, 120.0, 42);
+        println!(
+            "{:<18} {:>9.1}/{:>9.1}/{:>9.1}/{:>9.1}  {:>9.2}/{:>9.2}/{:>9.2}/{:>9.2}",
+            mode.name(),
+            r.batch_ms.p50, r.batch_ms.p95, r.batch_ms.p99, r.batch_ms.avg,
+            r.per_object_ms.p50, r.per_object_ms.p95, r.per_object_ms.p99, r.per_object_ms.avg,
+        );
+        rows.push(r);
+    }
+    let get = &rows[1];
+    let gb = &rows[2];
+    println!("\nderived (§4.2.2):");
+    println!("  P95 batch reduction GetBatch vs GET : {:.2}x (paper: 2.0x)", get.batch_ms.p95 / gb.batch_ms.p95);
+    println!("  P99 batch reduction                 : {:.2}x (paper: 1.75x)", get.batch_ms.p99 / gb.batch_ms.p99);
+    println!("  P99 per-object reduction            : {:.2}x (paper: 3.7x)", get.per_object_ms.p99 / gb.per_object_ms.p99);
+    println!(
+        "  P99-P50 spread: GET {:.0} ms vs GetBatch {:.0} ms ({:.0}% reduction; paper: 40%)",
+        get.batch_ms.spread(),
+        gb.batch_ms.spread(),
+        (1.0 - gb.batch_ms.spread() / get.batch_ms.spread()) * 100.0
+    );
+    println!("paper table 2 (batch ms):  Seq 243.7/431.2/638.9/261.4 | GET 934.7/3668.7/4814.3/1320.0 | GetBatch 427.5/1808.6/2744.7/624.7\n");
+
+    // ------------------------------------------------------------- LIVE ---
+    if args.bool("no-live") {
+        return;
+    }
+    println!("## Table 2 — LIVE (in-process cluster, {} loader workers, batch {})",
+             args.usize_or("live-loaders", 8), args.usize_or("live-batch", 32));
+    let c = fixtures::cluster(4);
+    let manifest = fixtures::stage_shards(&c, "audio", 16, 64, 8192.0, 21);
+    let loaders = args.usize_or("live-loaders", 8);
+    let batch = args.usize_or("live-batch", 32);
+    let steps = args.usize_or("live-steps", 12);
+    for mode in [AccessMode::Sequential, AccessMode::RandomGet, AccessMode::GetBatch] {
+        let per_worker: Vec<(Samples, Samples)> = scoped_map(
+            &(0..loaders as u64).collect::<Vec<_>>(),
+            loaders,
+            |_, &w| {
+                let mut dl = DataLoader::new(
+                    Client::new(&c.proxy_addr()),
+                    manifest.clone(),
+                    mode,
+                    batch,
+                    w + 7,
+                );
+                let mut bs = Samples::new();
+                let mut os = Samples::new();
+                for _ in 0..steps {
+                    if let Ok((_, timing)) = dl.next_batch() {
+                        bs.add(timing.batch.as_secs_f64() * 1e3);
+                        for d in timing.per_object {
+                            os.add(d.as_secs_f64() * 1e3);
+                        }
+                    }
+                }
+                (bs, os)
+            },
+        );
+        let mut bs = Samples::new();
+        let mut os = Samples::new();
+        for (b, o) in per_worker {
+            bs.merge(&b);
+            os.merge(&o);
+        }
+        println!("{:<18} batch {}  per-obj {}", mode.name(), bs.row(), os.row());
+    }
+}

@@ -1,0 +1,83 @@
+//! Error taxonomy (§2.4.2): *hard* errors abort the request; *soft* errors
+//! (missing objects/members, transient stream failures, sender timeouts) may
+//! be tolerated under continue-on-error, surfacing as placeholders instead.
+
+/// Why an individual entry failed.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum EntryError {
+    #[error("object not found: {0}")]
+    NotFound(String),
+    #[error("archive member not found: {0}")]
+    MemberNotFound(String),
+    #[error("transient stream failure: {0}")]
+    StreamFailure(String),
+    #[error("timed out waiting for sender (entry {0})")]
+    SenderTimeout(u32),
+    #[error("local read failed: {0}")]
+    ReadFailure(String),
+}
+
+impl EntryError {
+    /// All per-entry retrieval errors are classified soft; only exhausted
+    /// budgets (checked by the DT) escalate them to fatal (§2.4.2).
+    pub fn is_soft(&self) -> bool {
+        true
+    }
+
+    /// Whether get-from-neighbor recovery could plausibly resolve it.
+    /// Missing data won't appear elsewhere under unique placement, but
+    /// transient stream/read failures and timeouts are worth retrying.
+    pub fn recoverable(&self) -> bool {
+        matches!(
+            self,
+            EntryError::StreamFailure(_) | EntryError::SenderTimeout(_) | EntryError::ReadFailure(_)
+        )
+    }
+}
+
+/// Request-level failure.
+#[derive(Debug, thiserror::Error)]
+pub enum BatchError {
+    #[error("request aborted: entry {index} failed: {source}")]
+    EntryFailed {
+        index: u32,
+        #[source]
+        source: EntryError,
+    },
+    #[error("soft-error budget exceeded ({count} > {limit})")]
+    SoftErrorBudget { count: u32, limit: u32 },
+    #[error("admission rejected: {0}")]
+    Admission(String),
+    #[error("bad request: {0}")]
+    BadRequest(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_classification() {
+        assert!(EntryError::NotFound("x".into()).is_soft());
+        assert!(EntryError::SenderTimeout(3).is_soft());
+    }
+
+    #[test]
+    fn recoverability() {
+        assert!(!EntryError::NotFound("x".into()).recoverable());
+        assert!(!EntryError::MemberNotFound("x".into()).recoverable());
+        assert!(EntryError::StreamFailure("rst".into()).recoverable());
+        assert!(EntryError::SenderTimeout(0).recoverable());
+        assert!(EntryError::ReadFailure("eio".into()).recoverable());
+    }
+
+    #[test]
+    fn display_strings() {
+        let e = BatchError::EntryFailed { index: 4, source: EntryError::NotFound("b/o".into()) };
+        assert!(e.to_string().contains("entry 4"));
+        let b = BatchError::SoftErrorBudget { count: 11, limit: 10 };
+        assert!(b.to_string().contains("11 > 10"));
+    }
+}

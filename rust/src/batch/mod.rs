@@ -1,0 +1,7 @@
+//! GetBatch request/response model: the entry list a client submits, the
+//! execution options (§2.4.1), the ordered response reader, and the
+//! hard/soft error taxonomy (§2.4.2).
+
+pub mod request;
+pub mod reader;
+pub mod error;

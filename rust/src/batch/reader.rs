@@ -1,0 +1,118 @@
+//! Client-side ordered response reader: iterates the GetBatch TAR stream,
+//! yielding entries in exact request order, with continue-on-error
+//! placeholders surfaced as `BatchItem::Missing` (§2.2 ordering guarantee).
+
+use std::io::Read;
+
+use crate::tar::{self, TarReader};
+
+/// One item of a batch response, in request order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchItem {
+    /// Successfully retrieved entry.
+    Ok { name: String, data: Vec<u8> },
+    /// Continue-on-error placeholder: the entry could not be retrieved.
+    Missing { name: String },
+}
+
+impl BatchItem {
+    pub fn name(&self) -> &str {
+        match self {
+            BatchItem::Ok { name, .. } => name,
+            BatchItem::Missing { name } => name,
+        }
+    }
+    pub fn data(&self) -> Option<&[u8]> {
+        match self {
+            BatchItem::Ok { data, .. } => Some(data),
+            BatchItem::Missing { .. } => None,
+        }
+    }
+    pub fn is_missing(&self) -> bool {
+        matches!(self, BatchItem::Missing { .. })
+    }
+}
+
+/// Streaming iterator over a GetBatch response body.
+pub struct BatchReader<R: Read> {
+    inner: TarReader<R>,
+}
+
+impl<R: Read> BatchReader<R> {
+    pub fn new(body: R) -> BatchReader<R> {
+        BatchReader { inner: TarReader::new(body) }
+    }
+
+    pub fn next_item(&mut self) -> Result<Option<BatchItem>, tar::TarError> {
+        match self.inner.next_entry()? {
+            None => Ok(None),
+            Some(e) => {
+                if let Some(orig) = tar::missing_original(&e.name) {
+                    Ok(Some(BatchItem::Missing { name: orig.to_string() }))
+                } else {
+                    Ok(Some(BatchItem::Ok { name: e.name, data: e.data }))
+                }
+            }
+        }
+    }
+
+    /// Drain the stream into a vector (small batches / tests).
+    pub fn collect_all(mut self) -> Result<Vec<BatchItem>, tar::TarError> {
+        let mut out = Vec::new();
+        while let Some(item) = self.next_item()? {
+            out.push(item);
+        }
+        Ok(out)
+    }
+}
+
+impl<R: Read> Iterator for BatchReader<R> {
+    type Item = Result<BatchItem, tar::TarError>;
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_item().transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tar::TarWriter;
+    use std::io::Cursor;
+
+    #[test]
+    fn yields_in_order_with_placeholders() {
+        let mut w = TarWriter::new(Vec::new());
+        w.append("e0", b"aaa").unwrap();
+        w.append_missing("e1").unwrap();
+        w.append("e2", b"cc").unwrap();
+        let bytes = w.into_inner().unwrap();
+
+        let items = BatchReader::new(Cursor::new(bytes)).collect_all().unwrap();
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0], BatchItem::Ok { name: "e0".into(), data: b"aaa".to_vec() });
+        assert_eq!(items[1], BatchItem::Missing { name: "e1".into() });
+        assert!(items[1].is_missing());
+        assert_eq!(items[2].data(), Some(&b"cc"[..]));
+    }
+
+    #[test]
+    fn empty_stream() {
+        let w = TarWriter::new(Vec::new());
+        let bytes = w.into_inner().unwrap();
+        let items = BatchReader::new(Cursor::new(bytes)).collect_all().unwrap();
+        assert!(items.is_empty());
+    }
+
+    #[test]
+    fn iterator_interface() {
+        let mut w = TarWriter::new(Vec::new());
+        for i in 0..5 {
+            w.append(&format!("e{i}"), &[i as u8]).unwrap();
+        }
+        let bytes = w.into_inner().unwrap();
+        let names: Vec<String> = BatchReader::new(Cursor::new(bytes))
+            .map(|r| r.unwrap().name().to_string())
+            .collect();
+        assert_eq!(names, vec!["e0", "e1", "e2", "e3", "e4"]);
+    }
+}

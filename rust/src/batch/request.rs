@@ -1,0 +1,238 @@
+//! The GetBatch request: an ordered list of entries (objects or archive
+//! members, possibly spanning buckets) plus execution options. Ships as the
+//! JSON body of an HTTP GET (§2.2).
+
+use crate::util::json::Value;
+
+/// Output serialization format. The paper's default is uncompressed TAR;
+/// TGZ is provided as the natural extension (shards on disk may be either).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputFormat {
+    #[default]
+    Tar,
+    Tgz,
+}
+
+impl OutputFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OutputFormat::Tar => "tar",
+            OutputFormat::Tgz => "tgz",
+        }
+    }
+    pub fn parse(s: &str) -> Option<OutputFormat> {
+        match s {
+            "tar" | ".tar" => Some(OutputFormat::Tar),
+            "tgz" | ".tgz" | "tar.gz" => Some(OutputFormat::Tgz),
+            _ => None,
+        }
+    }
+}
+
+/// One requested item: a standalone object, or — when `archpath` is set — a
+/// member to extract from a TAR shard (§2.2 "standalone objects or archive
+/// shards").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchEntry {
+    pub bucket: String,
+    pub obj: String,
+    /// Member path within the shard `obj`, if extracting.
+    pub archpath: Option<String>,
+}
+
+impl BatchEntry {
+    pub fn obj(bucket: &str, obj: &str) -> BatchEntry {
+        BatchEntry { bucket: bucket.to_string(), obj: obj.to_string(), archpath: None }
+    }
+
+    pub fn member(bucket: &str, shard: &str, member: &str) -> BatchEntry {
+        BatchEntry {
+            bucket: bucket.to_string(),
+            obj: shard.to_string(),
+            archpath: Some(member.to_string()),
+        }
+    }
+
+    /// Placement key: shard members live wherever their shard object lives.
+    pub fn location_key(&self) -> String {
+        format!("{}/{}", self.bucket, self.obj)
+    }
+
+    /// Name of this entry in the output TAR stream. Members keep their
+    /// in-archive path so downstream consumers see stable names.
+    pub fn output_name(&self) -> String {
+        match &self.archpath {
+            Some(m) => format!("{}/{}", self.obj, m),
+            None => self.obj.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj()
+            .set("bucket", Value::str(&self.bucket))
+            .set("objname", Value::str(&self.obj));
+        if let Some(a) = &self.archpath {
+            v = v.set("archpath", Value::str(a));
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Option<BatchEntry> {
+        Some(BatchEntry {
+            bucket: v.str_field("bucket")?.to_string(),
+            obj: v.str_field("objname")?.to_string(),
+            archpath: v.str_field("archpath").map(|s| s.to_string()),
+        })
+    }
+}
+
+/// Execution options (§2.4.1). None of these change correctness — only how
+/// the request executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchOpts {
+    /// Streaming: DT starts emitting as soon as head-of-line entries are
+    /// ready (vs. buffering the whole result).
+    pub streaming: bool,
+    /// Continue-on-error: soft failures become placeholder entries instead
+    /// of aborting the request.
+    pub continue_on_err: bool,
+    /// Colocation hint: proxy unmarshals the entry list and picks the DT
+    /// owning the largest fraction of requested data.
+    pub colocation: bool,
+    pub output: OutputFormat,
+}
+
+impl Default for BatchOpts {
+    fn default() -> Self {
+        BatchOpts {
+            streaming: true,
+            continue_on_err: false,
+            colocation: false,
+            output: OutputFormat::Tar,
+        }
+    }
+}
+
+/// A full GetBatch request.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BatchRequest {
+    pub entries: Vec<BatchEntry>,
+    pub opts: BatchOpts,
+}
+
+impl BatchRequest {
+    pub fn new(entries: Vec<BatchEntry>) -> BatchRequest {
+        BatchRequest { entries, opts: BatchOpts::default() }
+    }
+
+    pub fn streaming(mut self, on: bool) -> Self {
+        self.opts.streaming = on;
+        self
+    }
+    pub fn continue_on_err(mut self, on: bool) -> Self {
+        self.opts.continue_on_err = on;
+        self
+    }
+    pub fn colocation(mut self, on: bool) -> Self {
+        self.opts.colocation = on;
+        self
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("output_format", Value::str(self.opts.output.as_str()))
+            .set("streaming", Value::Bool(self.opts.streaming))
+            .set("continue_on_err", Value::Bool(self.opts.continue_on_err))
+            .set(
+                "in",
+                Value::Arr(self.entries.iter().map(|e| e.to_json()).collect()),
+            )
+    }
+
+    pub fn to_body(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    pub fn from_json(v: &Value) -> Option<BatchRequest> {
+        let entries = v
+            .get("in")?
+            .as_arr()?
+            .iter()
+            .map(BatchEntry::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        let opts = BatchOpts {
+            streaming: v.bool_field("streaming").unwrap_or(true),
+            continue_on_err: v.bool_field("continue_on_err").unwrap_or(false),
+            colocation: false, // rides the query string, not the body (§2.4.1)
+            output: v
+                .str_field("output_format")
+                .and_then(OutputFormat::parse)
+                .unwrap_or_default(),
+        };
+        Some(BatchRequest { entries, opts })
+    }
+
+    pub fn from_body(body: &[u8]) -> Option<BatchRequest> {
+        let s = std::str::from_utf8(body).ok()?;
+        BatchRequest::from_json(&Value::parse(s).ok()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_kinds() {
+        let o = BatchEntry::obj("b1", "x.wav");
+        assert_eq!(o.location_key(), "b1/x.wav");
+        assert_eq!(o.output_name(), "x.wav");
+        let m = BatchEntry::member("b1", "shard-0001.tar", "utt/17.wav");
+        assert_eq!(m.location_key(), "b1/shard-0001.tar");
+        assert_eq!(m.output_name(), "shard-0001.tar/utt/17.wav");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let req = BatchRequest::new(vec![
+            BatchEntry::obj("audio", "a.wav"),
+            BatchEntry::member("audio", "s.tar", "m.wav"),
+            BatchEntry::obj("labels", "a.txt"),
+        ])
+        .continue_on_err(true)
+        .streaming(false);
+        let body = req.to_body();
+        let back = BatchRequest::from_body(&body).unwrap();
+        assert_eq!(back.entries, req.entries);
+        assert_eq!(back.opts.continue_on_err, true);
+        assert_eq!(back.opts.streaming, false);
+        assert_eq!(back.opts.output, OutputFormat::Tar);
+    }
+
+    #[test]
+    fn multi_bucket_in_one_request() {
+        let req = BatchRequest::new(vec![
+            BatchEntry::obj("features", "f0"),
+            BatchEntry::obj("labels", "l0"),
+        ]);
+        let back = BatchRequest::from_body(&req.to_body()).unwrap();
+        assert_eq!(back.entries[0].bucket, "features");
+        assert_eq!(back.entries[1].bucket, "labels");
+    }
+
+    #[test]
+    fn malformed_body_rejected() {
+        assert!(BatchRequest::from_body(b"not json").is_none());
+        assert!(BatchRequest::from_body(b"{}").is_none());
+        assert!(BatchRequest::from_body(br#"{"in":[{"bucket":"b"}]}"#).is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let o = BatchOpts::default();
+        assert!(o.streaming);
+        assert!(!o.continue_on_err);
+        assert!(!o.colocation);
+        assert_eq!(o.output, OutputFormat::Tar);
+    }
+}

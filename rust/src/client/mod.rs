@@ -1,0 +1,9 @@
+//! Client side: the SDK (GET/PUT/GetBatch with streaming iteration) and the
+//! three data-loader flavors the paper evaluates (§4.1) — sequential shard
+//! I/O, per-sample random GET, and batched random access via GetBatch.
+
+pub mod sdk;
+pub mod loader;
+
+pub use sdk::Client;
+pub use loader::{AccessMode, DataLoader, Manifest, Sample};

@@ -1,0 +1,237 @@
+//! Client SDK (§2.5): batch retrieval as a single logical operation.
+//! Sampling stays caller-side; the SDK only moves data. Mirrors the AIStore
+//! Python SDK's `client.batch(...)` + ordered iteration pattern (Listing 1).
+
+use std::io;
+use std::time::{Duration, Instant};
+
+use crate::batch::reader::{BatchItem, BatchReader};
+use crate::batch::request::BatchRequest;
+use crate::proto::http::{BodyReader, HttpClient};
+use crate::proto::wire::{self, paths};
+
+/// Handle to a cluster via one gateway address.
+#[derive(Clone)]
+pub struct Client {
+    http: HttpClient,
+    proxy: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    #[error("http {status}: {msg}")]
+    Status { status: u16, msg: String },
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("tar: {0}")]
+    Tar(#[from] crate::tar::TarError),
+}
+
+/// Per-call latency instrumentation: the paper's measurement definition —
+/// "total time from when the client issues a request until all requested
+/// bytes are received" (§4.2.1).
+#[derive(Debug, Clone, Copy)]
+pub struct FetchStats {
+    pub total: Duration,
+    /// Time to first byte of payload (streaming benefit).
+    pub ttfb: Duration,
+    pub bytes: u64,
+    pub items: u32,
+}
+
+impl Client {
+    pub fn new(proxy_addr: &str) -> Client {
+        Client { http: HttpClient::new(true), proxy: proxy_addr.to_string() }
+    }
+
+    /// Per-request connection mode (no keep-alive) — the cold-connection
+    /// baseline for ablations.
+    pub fn without_reuse(proxy_addr: &str) -> Client {
+        Client { http: HttpClient::new(false), proxy: proxy_addr.to_string() }
+    }
+
+    /// Inject artificial RTT per request hop (models datacenter distance).
+    pub fn with_rtt(mut self, rtt: Duration) -> Client {
+        self.http = self.http.with_rtt(rtt);
+        self
+    }
+
+    pub fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), ClientError> {
+        let resp = self.http.put(&self.proxy, &wire::object_path(bucket, obj), data)?;
+        if resp.status != 200 {
+            return Err(status_err(resp));
+        }
+        let _ = resp.into_bytes();
+        Ok(())
+    }
+
+    /// Single-object GET (the paper's baseline: one request per sample).
+    pub fn get(&self, bucket: &str, obj: &str) -> Result<Vec<u8>, ClientError> {
+        let resp = self.http.get(&self.proxy, &wire::object_path(bucket, obj))?;
+        if resp.status != 200 {
+            return Err(status_err(resp));
+        }
+        Ok(resp.into_bytes()?)
+    }
+
+    /// GET one member out of a TAR shard (random access baseline over
+    /// sharded datasets — AIStore's archive API).
+    pub fn get_member(&self, bucket: &str, shard: &str, member: &str) -> Result<Vec<u8>, ClientError> {
+        let pq = format!("{}?archpath={member}", wire::object_path(bucket, shard));
+        let resp = self.http.get(&self.proxy, &pq)?;
+        if resp.status != 200 {
+            return Err(status_err(resp));
+        }
+        Ok(resp.into_bytes()?)
+    }
+
+    /// Issue a GetBatch request; returns the ordered streaming reader.
+    pub fn get_batch(&self, req: &BatchRequest) -> Result<BatchReader<BodyReader>, ClientError> {
+        let mut pq = paths::BATCH.to_string();
+        if req.opts.colocation {
+            pq.push_str(&format!("?{}=true", wire::QPARAM_COLOC));
+        }
+        let resp = self.http.request("GET", &self.proxy, &pq, &req.to_body())?;
+        if resp.status != 200 {
+            return Err(status_err(resp));
+        }
+        Ok(BatchReader::new(resp.body))
+    }
+
+    /// GetBatch, fully collected, with client-observed latency stats.
+    pub fn get_batch_timed(&self, req: &BatchRequest) -> Result<(Vec<BatchItem>, FetchStats), ClientError> {
+        let t0 = Instant::now();
+        let mut reader = self.get_batch(req)?;
+        let mut items = Vec::with_capacity(req.entries.len());
+        let mut ttfb = None;
+        let mut bytes = 0u64;
+        while let Some(item) = reader.next_item()? {
+            if ttfb.is_none() {
+                ttfb = Some(t0.elapsed());
+            }
+            bytes += item.data().map(|d| d.len() as u64).unwrap_or(0);
+            items.push(item);
+        }
+        let total = t0.elapsed();
+        let stats =
+            FetchStats { total, ttfb: ttfb.unwrap_or(total), bytes, items: items.len() as u32 };
+        Ok((items, stats))
+    }
+
+    /// Convenience: collect without stats.
+    pub fn get_batch_collect(&self, req: &BatchRequest) -> Result<Vec<BatchItem>, ClientError> {
+        Ok(self.get_batch(req)?.collect_all()?)
+    }
+
+    /// Scrape a node's Prometheus exposition.
+    pub fn metrics(&self, node_addr: &str) -> Result<String, ClientError> {
+        let resp = self.http.get(node_addr, paths::METRICS)?;
+        if resp.status != 200 {
+            return Err(status_err(resp));
+        }
+        Ok(String::from_utf8_lossy(&resp.into_bytes()?).into_owned())
+    }
+
+    pub fn proxy_addr(&self) -> &str {
+        &self.proxy
+    }
+}
+
+fn status_err(resp: crate::proto::http::ClientResponse) -> ClientError {
+    let status = resp.status;
+    let msg = resp
+        .into_bytes()
+        .ok()
+        .map(|b| String::from_utf8_lossy(&b).into_owned())
+        .unwrap_or_default();
+    ClientError::Status { status, msg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::request::BatchEntry;
+    use crate::cluster::node::Cluster;
+    use crate::config::ClusterConfig;
+
+    fn cluster() -> Cluster {
+        Cluster::start(ClusterConfig { targets: 3, http_workers: 4, ..Default::default() }).unwrap()
+    }
+
+    #[test]
+    fn sdk_object_roundtrip() {
+        let c = cluster();
+        let cl = Client::new(&c.proxy_addr());
+        cl.put("b", "k", b"v").unwrap();
+        assert_eq!(cl.get("b", "k").unwrap(), b"v");
+        match cl.get("b", "absent") {
+            Err(ClientError::Status { status: 404, .. }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sdk_member_get() {
+        let c = cluster();
+        let cl = Client::new(&c.proxy_addr());
+        let shard = crate::tar::write_archive(&[
+            crate::tar::Entry { name: "a".into(), data: vec![1; 5] },
+            crate::tar::Entry { name: "b".into(), data: vec![2; 9] },
+        ])
+        .unwrap();
+        cl.put("bk", "s.tar", &shard).unwrap();
+        assert_eq!(cl.get_member("bk", "s.tar", "b").unwrap(), vec![2; 9]);
+    }
+
+    #[test]
+    fn sdk_batch_with_stats() {
+        let c = cluster();
+        let cl = Client::new(&c.proxy_addr());
+        for i in 0..16 {
+            cl.put("b", &format!("o{i}"), &vec![i as u8; 1000]).unwrap();
+        }
+        let req =
+            BatchRequest::new((0..16).map(|i| BatchEntry::obj("b", &format!("o{i}"))).collect());
+        let (items, stats) = cl.get_batch_timed(&req).unwrap();
+        assert_eq!(items.len(), 16);
+        assert_eq!(stats.items, 16);
+        assert_eq!(stats.bytes, 16_000);
+        assert!(stats.ttfb <= stats.total);
+    }
+
+    #[test]
+    fn sdk_batch_multi_bucket_join() {
+        // §2.2: one request spanning buckets — composite samples without
+        // client-side joins.
+        let c = cluster();
+        let cl = Client::new(&c.proxy_addr());
+        cl.put("features", "x", b"feat").unwrap();
+        cl.put("labels", "x", b"lab").unwrap();
+        let req = BatchRequest::new(vec![
+            BatchEntry::obj("features", "x"),
+            BatchEntry::obj("labels", "x"),
+        ]);
+        let items = cl.get_batch_collect(&req).unwrap();
+        assert_eq!(items[0].data().unwrap(), b"feat");
+        assert_eq!(items[1].data().unwrap(), b"lab");
+    }
+
+    #[test]
+    fn sdk_metrics_scrape() {
+        let c = cluster();
+        let cl = Client::new(&c.proxy_addr());
+        cl.put("b", "o", b"x").unwrap();
+        let req = BatchRequest::new(vec![BatchEntry::obj("b", "o")]);
+        cl.get_batch_collect(&req).unwrap();
+        // some target acted as DT
+        let total_dt: f64 = c
+            .targets
+            .iter()
+            .map(|t| {
+                let text = cl.metrics(&t.info.http_addr).unwrap();
+                crate::metrics::GetBatchMetrics::parse(&text)["ais_getbatch_dt_requests_total"]
+            })
+            .sum();
+        assert_eq!(total_dt, 1.0);
+    }
+}

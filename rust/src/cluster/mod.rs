@@ -1,0 +1,10 @@
+//! Cluster assembly: the versioned cluster map (smap), HRW object placement
+//! over it, and the node runtime wiring stores, gateways, DT machinery and
+//! the P2P transport into a runnable in-process cluster.
+
+pub mod smap;
+pub mod placement;
+pub mod node;
+
+pub use node::{Cluster, ClusterSpec};
+pub use smap::{NodeInfo, Smap};

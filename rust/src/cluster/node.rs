@@ -1,0 +1,505 @@
+//! Node runtime: boots an in-process AIStore-like cluster — N target nodes
+//! (each with its own object store, DT registry, P2P endpoint and HTTP
+//! server) plus M stateless proxies — and wires the GetBatch execution flow
+//! across them. Every byte moves over real localhost TCP; nothing is
+//! shortcut in-process.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::config::ClusterConfig;
+use crate::dt::admission::{Admission, Admit};
+use crate::dt::exec::{assemble, AssembleCtx, DtExec, DtRegistry};
+use crate::gateway::proxy::{make_proxy_handler, ProxyState, SmapHolder};
+use crate::metrics::{GetBatchMetrics, Registry};
+use crate::proto::http::{Body, Handler, HttpClient, HttpServer, Request, Response};
+use crate::proto::wire::{self, paths, DtRegister, SenderActivate};
+use crate::sender::run_sender;
+use crate::store::{ObjectStore, ShardIndexCache};
+use crate::transport::{P2pServer, PeerPool};
+use crate::util::clock::{Clock, RealClock};
+use crate::util::threadpool::ThreadPool;
+
+use super::placement;
+use super::smap::{NodeInfo, Smap};
+
+/// How a cluster is shaped; thin alias over `ClusterConfig` for the API.
+pub type ClusterSpec = ClusterConfig;
+
+/// One storage target node.
+pub struct TargetNode {
+    pub info: NodeInfo,
+    pub idx: usize,
+    pub store: Arc<ObjectStore>,
+    pub shards: Arc<ShardIndexCache>,
+    pub registry: Arc<DtRegistry>,
+    pub peer_pool: Arc<PeerPool>,
+    pub metrics: Arc<GetBatchMetrics>,
+    // Keep servers alive; drop order stops accept loops first.
+    _http: HttpServer,
+    _p2p: P2pServer,
+    _bg: Arc<ThreadPool>,
+}
+
+/// One gateway node.
+pub struct ProxyNode {
+    pub info: NodeInfo,
+    pub state: Arc<ProxyState>,
+    _http: HttpServer,
+}
+
+/// A running in-process cluster.
+pub struct Cluster {
+    pub smap: Arc<Smap>,
+    pub targets: Vec<TargetNode>,
+    pub proxies: Vec<ProxyNode>,
+    pub registry: Arc<Registry>,
+    pub cfg: ClusterConfig,
+    root: PathBuf,
+    owns_root: bool,
+}
+
+impl Cluster {
+    /// Boot a cluster per `cfg`. Stores live under `cfg.root_dir` (or a
+    /// fresh temp dir, removed on drop).
+    pub fn start(cfg: ClusterConfig) -> anyhow::Result<Cluster> {
+        let (root, owns_root) = if cfg.root_dir.is_empty() {
+            let p = std::env::temp_dir().join(format!(
+                "getbatch-{}-{:x}",
+                std::process::id(),
+                crate::util::rng::mix64(std::time::SystemTime::now().elapsed().map(|d| d.as_nanos() as u64).unwrap_or(0) ^ (&cfg as *const _ as u64))
+            ));
+            (p, true)
+        } else {
+            (PathBuf::from(&cfg.root_dir), false)
+        };
+        std::fs::create_dir_all(&root)?;
+
+        let registry = Registry::new();
+        let smap_holder = SmapHolder::new();
+        let clock: Arc<dyn Clock> = Arc::new(RealClock::default());
+
+        // ---- targets -------------------------------------------------------
+        let mut targets = Vec::with_capacity(cfg.targets);
+        for i in 0..cfg.targets {
+            let id = format!("t{i}");
+            let metrics = registry.node(&id);
+            let store = Arc::new(ObjectStore::open(&root.join(&id), cfg.mountpaths)?);
+            let shards = Arc::new(ShardIndexCache::new(256));
+            let dt_registry = DtRegistry::new();
+            let peer_pool = PeerPool::new(cfg.p2p_idle_timeout);
+            let bg = Arc::new(ThreadPool::new(cfg.http_workers.max(4), &format!("{id}-bg")));
+
+            // P2P fan-in: frames go straight to the DT registry.
+            let reg2 = Arc::clone(&dt_registry);
+            let p2p = P2pServer::serve(Arc::new(move |f| reg2.dispatch(f)), &id)?;
+
+            let tstate = Arc::new(TargetState {
+                id: id.clone(),
+                idx: i,
+                smap: Arc::clone(&smap_holder),
+                store: Arc::clone(&store),
+                shards: Arc::clone(&shards),
+                registry: Arc::clone(&dt_registry),
+                peer_pool: Arc::clone(&peer_pool),
+                metrics: Arc::clone(&metrics),
+                bg: Arc::clone(&bg),
+                admission: Admission::new(cfg.getbatch.clone(), Arc::clone(&metrics), Arc::clone(&clock)),
+                cfg: cfg.clone(),
+                clock: Arc::clone(&clock),
+            });
+            let http = HttpServer::serve(make_target_handler(tstate), cfg.http_workers, &id)?;
+
+            targets.push(TargetNode {
+                info: NodeInfo {
+                    id,
+                    http_addr: http.addr.to_string(),
+                    p2p_addr: p2p.addr.to_string(),
+                },
+                idx: i,
+                store,
+                shards,
+                registry: dt_registry,
+                peer_pool,
+                metrics,
+                _http: http,
+                _p2p: p2p,
+                _bg: bg,
+            });
+        }
+
+        // ---- proxies -------------------------------------------------------
+        let mut proxies = Vec::with_capacity(cfg.proxies);
+        for i in 0..cfg.proxies {
+            let id = format!("p{i}");
+            let metrics = registry.node(&id);
+            let state = ProxyState::new(&id, Arc::clone(&smap_holder), metrics);
+            let http = HttpServer::serve(make_proxy_handler(Arc::clone(&state)), cfg.http_workers, &id)?;
+            proxies.push(ProxyNode {
+                info: NodeInfo { id, http_addr: http.addr.to_string(), p2p_addr: String::new() },
+                state,
+                _http: http,
+            });
+        }
+
+        // ---- publish membership ---------------------------------------------
+        let smap = Arc::new(Smap::new(
+            1,
+            proxies.iter().map(|p| p.info.clone()).collect(),
+            targets.iter().map(|t| t.info.clone()).collect(),
+        ));
+        smap_holder.set(Arc::clone(&smap));
+
+        Ok(Cluster { smap, targets, proxies, registry, cfg, root, owns_root })
+    }
+
+    /// Any proxy's public address (round-robin handled by caller/SDK).
+    pub fn proxy_addr(&self) -> String {
+        self.proxies[0].info.http_addr.clone()
+    }
+
+    pub fn target_addr(&self, i: usize) -> String {
+        self.targets[i].info.http_addr.clone()
+    }
+
+    /// Direct-put into a target-local store, bypassing HTTP — bulk dataset
+    /// staging for benchmarks. Placement-faithful: writes to the HRW owner.
+    pub fn put_direct(&self, bucket: &str, obj: &str, data: &[u8]) -> anyhow::Result<()> {
+        let owner = placement::owner(&self.smap, &format!("{bucket}/{obj}"));
+        self.targets[owner].store.put(bucket, obj, data)?;
+        Ok(())
+    }
+
+    pub fn root(&self) -> &PathBuf {
+        &self.root
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        if self.owns_root {
+            let _ = std::fs::remove_dir_all(&self.root);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- target --
+
+struct TargetState {
+    id: String,
+    idx: usize,
+    smap: Arc<SmapHolder>,
+    store: Arc<ObjectStore>,
+    shards: Arc<ShardIndexCache>,
+    registry: Arc<DtRegistry>,
+    peer_pool: Arc<PeerPool>,
+    metrics: Arc<GetBatchMetrics>,
+    bg: Arc<ThreadPool>,
+    admission: Admission,
+    cfg: ClusterConfig,
+    clock: Arc<dyn Clock>,
+}
+
+fn make_target_handler(st: Arc<TargetState>) -> Handler {
+    Arc::new(move |req: Request| target_route(&st, req))
+}
+
+fn target_route(st: &Arc<TargetState>, req: Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        (_, p) if p.starts_with(paths::OBJECTS) => target_object(st, req),
+        ("POST", paths::DT_REGISTER) => target_dt_register(st, req),
+        ("POST", paths::SENDER_ACTIVATE) => target_sender_activate(st, req),
+        ("GET", paths::DT_STREAM) => target_dt_stream(st, req),
+        ("GET", paths::METRICS) => Response::ok(st.metrics.render(&st.id).into_bytes()),
+        ("GET", paths::HEALTH) => Response::ok(b"ok".to_vec()),
+        _ => Response::status(404),
+    }
+}
+
+/// Local object I/O (clients arrive here via proxy redirect; GFN arrives
+/// directly with `local=true`). `archpath` extracts one shard member.
+fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
+    let (bucket, obj) = match wire::parse_object_path(&req.path) {
+        Some(x) => x,
+        None => return Response::text(400, "bad object path"),
+    };
+    match req.method.as_str() {
+        "PUT" => match st.store.put(&bucket, &obj, &req.body) {
+            Ok(()) => {
+                st.shards.invalidate(&bucket, &obj);
+                Response::ok(Vec::new())
+            }
+            Err(e) => Response::text(500, &e.to_string()),
+        },
+        "GET" => {
+            let result = match req.query_param("archpath") {
+                Some(member) => st
+                    .shards
+                    .extract(&st.store, &bucket, &obj, member)
+                    .map_err(|e| e.to_string()),
+                None => st.store.get(&bucket, &obj).map_err(|e| e.to_string()),
+            };
+            match result {
+                Ok(data) => Response::ok(data),
+                Err(e) if e.contains("not found") => Response::text(404, &e),
+                Err(e) => Response::text(500, &e),
+            }
+        }
+        "DELETE" => match st.store.delete(&bucket, &obj) {
+            Ok(()) => Response::ok(Vec::new()),
+            Err(e) => Response::text(404, &e.to_string()),
+        },
+        _ => Response::status(400),
+    }
+}
+
+/// Phase 1: allocate per-request execution state; resolve *our own* entries
+/// in the background (the DT doubles as the sender for its local items).
+fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
+    let reg = match DtRegister::from_body(&req.body) {
+        Some(r) => r,
+        None => return Response::text(400, "malformed dt-register"),
+    };
+    // Memory is a hard constraint: §2.4.3.
+    if let Admit::RejectMemory { buffered, critical } = st.admission.check_register() {
+        return Response::text(429, &format!("memory pressure: {buffered}/{critical}"));
+    }
+    st.metrics.dt_requests.inc();
+    st.metrics.dt_inflight.add(1);
+    let exec = st.registry.register(DtExec::new(reg.req_id, reg.request, reg.num_senders));
+
+    // DT-local resolution (runs concurrently with remote senders).
+    let st2 = Arc::clone(st);
+    st.bg.execute(move || {
+        let smap = match st2.smap.get() {
+            Some(s) => s,
+            None => return,
+        };
+        let mine = placement::local_entries(&smap, &exec.request, st2.idx);
+        for (idx, e) in mine {
+            // Soft throttle under load (CPU/disk pressure proxy): scale with
+            // this node's in-flight DT executions.
+            st2.admission.throttle(st2.registry.inflight() as i64);
+            match crate::sender::resolve_entry(&st2.store, &st2.shards, e) {
+                Ok(data) => exec.buf.fill(idx, data),
+                Err(reason) => exec.buf.fail(
+                    idx,
+                    if reason.starts_with("missing object") {
+                        crate::batch::error::EntryError::NotFound(reason)
+                    } else if reason.starts_with("missing member") {
+                        crate::batch::error::EntryError::MemberNotFound(reason)
+                    } else {
+                        crate::batch::error::EntryError::ReadFailure(reason)
+                    },
+                ),
+            }
+        }
+    });
+    Response::ok(Vec::new())
+}
+
+/// Phase 2 (receiver side): join the execution as a sender; resolve + push
+/// in the background, return immediately.
+fn target_sender_activate(st: &Arc<TargetState>, req: Request) -> Response {
+    let act = match SenderActivate::from_body(&req.body) {
+        Some(a) => a,
+        None => return Response::text(400, "malformed sender-activate"),
+    };
+    let st2 = Arc::clone(st);
+    st.bg.execute(move || {
+        let smap = match st2.smap.get() {
+            Some(s) => s,
+            None => return,
+        };
+        st2.admission.throttle(st2.registry.inflight() as i64);
+        let ra = None; // readahead pool shares bg; enabled in perf runs
+        run_sender(
+            &act,
+            &smap,
+            st2.idx,
+            &st2.store,
+            &st2.shards,
+            &st2.peer_pool,
+            &st2.metrics,
+            ra,
+        );
+    });
+    Response::ok(Vec::new())
+}
+
+/// Phase 3: the client (redirected here by the proxy) pulls the assembled
+/// stream. Streaming mode emits chunked TAR as slots resolve; buffered mode
+/// assembles fully, then ships with content-length.
+fn target_dt_stream(st: &Arc<TargetState>, req: Request) -> Response {
+    let req_id = match req.query_param(wire::QPARAM_REQ_ID).and_then(|s| s.parse::<u64>().ok()) {
+        Some(id) => id,
+        None => return Response::text(400, "missing req id"),
+    };
+    let exec = match st.registry.get(req_id) {
+        Some(e) => e,
+        None => return Response::text(404, "unknown execution"),
+    };
+    let smap = match st.smap.get() {
+        Some(s) => s,
+        None => return Response::text(503, "smap not ready"),
+    };
+    let ctx = AssembleCtx {
+        smap,
+        http: HttpClient::new(true),
+        self_target: st.idx,
+        cfg: st.cfg.getbatch.clone(),
+        metrics: Arc::clone(&st.metrics),
+        clock: Arc::clone(&st.clock),
+    };
+    let registry = Arc::clone(&st.registry);
+    let metrics = Arc::clone(&st.metrics);
+
+    if exec.request.opts.streaming {
+        // Chunked: overlap retrieval, assembly and consumption (§2.4.1).
+        Response::stream(move |w| {
+            let r = assemble(&exec, &ctx, w);
+            registry.remove(req_id);
+            metrics.dt_inflight.sub(1);
+            match r {
+                Ok(_) => Ok(()),
+                // Mid-stream abort: truncate the chunked stream — the client
+                // sees a hard error, matching abort-on-error semantics.
+                Err(e) => Err(std::io::Error::new(std::io::ErrorKind::Other, e.to_string())),
+            }
+        })
+    } else {
+        let mut buf = Vec::new();
+        let r = assemble(&exec, &ctx, &mut buf);
+        registry.remove(req_id);
+        metrics.dt_inflight.sub(1);
+        match r {
+            Ok(_) => Response { status: 200, headers: vec![], body: Body::Bytes(buf) },
+            Err(e) => Response::text(500, &e.to_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::request::{BatchEntry, BatchRequest};
+
+    fn small_cluster() -> Cluster {
+        Cluster::start(ClusterConfig { targets: 3, proxies: 1, mountpaths: 2, http_workers: 4, ..Default::default() })
+            .unwrap()
+    }
+
+    #[test]
+    fn boots_and_reports_smap() {
+        let c = small_cluster();
+        let cl = HttpClient::new(true);
+        let resp = cl.get(&c.proxy_addr(), paths::SMAP).unwrap();
+        assert_eq!(resp.status, 200);
+        let smap = Smap::from_body(&resp.into_bytes().unwrap()).unwrap();
+        assert_eq!(smap.targets.len(), 3);
+        assert_eq!(smap.proxies.len(), 1);
+    }
+
+    #[test]
+    fn object_put_get_via_proxy_redirect() {
+        let c = small_cluster();
+        let cl = HttpClient::new(true);
+        let addr = c.proxy_addr();
+        for i in 0..12 {
+            let pq = wire::object_path("b", &format!("o{i}"));
+            let resp = cl.put(&addr, &pq, format!("data-{i}").as_bytes()).unwrap();
+            assert_eq!(resp.status, 200, "put o{i}");
+        }
+        for i in 0..12 {
+            let pq = wire::object_path("b", &format!("o{i}"));
+            let resp = cl.get(&addr, &pq).unwrap();
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.into_bytes().unwrap(), format!("data-{i}").as_bytes());
+        }
+        // objects actually spread across targets
+        let counts: Vec<usize> =
+            c.targets.iter().map(|t| t.store.list("b").unwrap().len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 12);
+        assert!(counts.iter().filter(|&&n| n > 0).count() >= 2, "{counts:?}");
+    }
+
+    #[test]
+    fn getbatch_end_to_end_ordering() {
+        let c = small_cluster();
+        let cl = HttpClient::new(true);
+        let addr = c.proxy_addr();
+        for i in 0..24 {
+            c.put_direct("b", &format!("o{i:02}"), format!("v{i:02}").as_bytes()).unwrap();
+        }
+        let req = BatchRequest::new(
+            (0..24).rev().map(|i| BatchEntry::obj("b", &format!("o{i:02}"))).collect(),
+        );
+        let resp = cl.request("GET", &addr, paths::BATCH, &req.to_body()).unwrap();
+        assert_eq!(resp.status, 200);
+        let items = crate::batch::reader::BatchReader::new(resp.body).collect_all().unwrap();
+        assert_eq!(items.len(), 24);
+        // strict request order: o23, o22, ..., o00
+        for (k, item) in items.iter().enumerate() {
+            let i = 23 - k;
+            assert_eq!(item.name(), format!("o{i:02}"));
+            assert_eq!(item.data().unwrap(), format!("v{i:02}").as_bytes());
+        }
+    }
+
+    #[test]
+    fn getbatch_missing_aborts_by_default() {
+        let c = small_cluster();
+        let cl = HttpClient::new(true);
+        c.put_direct("b", "exists", b"x").unwrap();
+        let req = BatchRequest::new(vec![
+            BatchEntry::obj("b", "exists"),
+            BatchEntry::obj("b", "does-not-exist"),
+        ])
+        .streaming(false);
+        let resp = cl.request("GET", &c.proxy_addr(), paths::BATCH, &req.to_body()).unwrap();
+        assert_eq!(resp.status, 500, "hard abort surfaces as 500 in buffered mode");
+    }
+
+    #[test]
+    fn getbatch_coer_yields_placeholder() {
+        let c = small_cluster();
+        let cl = HttpClient::new(true);
+        c.put_direct("b", "e0", b"x").unwrap();
+        c.put_direct("b", "e2", b"z").unwrap();
+        let req = BatchRequest::new(vec![
+            BatchEntry::obj("b", "e0"),
+            BatchEntry::obj("b", "missing"),
+            BatchEntry::obj("b", "e2"),
+        ])
+        .continue_on_err(true);
+        let resp = cl.request("GET", &c.proxy_addr(), paths::BATCH, &req.to_body()).unwrap();
+        assert_eq!(resp.status, 200);
+        let items = crate::batch::reader::BatchReader::new(resp.body).collect_all().unwrap();
+        assert_eq!(items.len(), 3);
+        assert!(!items[0].is_missing());
+        assert!(items[1].is_missing());
+        assert_eq!(items[1].name(), "missing");
+        assert_eq!(items[2].data().unwrap(), b"z");
+    }
+
+    #[test]
+    fn shard_members_via_getbatch() {
+        let c = small_cluster();
+        let cl = HttpClient::new(true);
+        let entries: Vec<crate::tar::Entry> = (0..6)
+            .map(|i| crate::tar::Entry { name: format!("u{i}.wav"), data: vec![i as u8; 64] })
+            .collect();
+        let shard = crate::tar::write_archive(&entries).unwrap();
+        c.put_direct("b", "s-0.tar", &shard).unwrap();
+
+        let req = BatchRequest::new(vec![
+            BatchEntry::member("b", "s-0.tar", "u3.wav"),
+            BatchEntry::member("b", "s-0.tar", "u1.wav"),
+        ]);
+        let resp = cl.request("GET", &c.proxy_addr(), paths::BATCH, &req.to_body()).unwrap();
+        let items = crate::batch::reader::BatchReader::new(resp.body).collect_all().unwrap();
+        assert_eq!(items[0].name(), "s-0.tar/u3.wav");
+        assert_eq!(items[0].data().unwrap(), &vec![3u8; 64][..]);
+        assert_eq!(items[1].data().unwrap(), &vec![1u8; 64][..]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Object → target placement via HRW over the smap. All nodes (proxies,
+//! targets, clients) compute placement independently and agree — that's what
+//! lets senders "independently determine which request entries [they] can
+//! satisfy locally" (§2.3.1 phase 2) with no coordination.
+
+use crate::batch::request::{BatchEntry, BatchRequest};
+use crate::util::hrw;
+
+use super::smap::Smap;
+
+/// Index of the target that owns `location_key` ("bucket/objname").
+pub fn owner(smap: &Smap, location_key: &str) -> usize {
+    hrw::pick(location_key, smap.target_hashes())
+}
+
+/// Owner of a batch entry (shard members live with their shard).
+pub fn entry_owner(smap: &Smap, e: &BatchEntry) -> usize {
+    owner(smap, &e.location_key())
+}
+
+/// Ranked owner list for GFN recovery — next-best targets for the key.
+pub fn ranked(smap: &Smap, location_key: &str) -> Vec<usize> {
+    hrw::rank(location_key, smap.target_hashes())
+}
+
+/// Per-target placement weights for a request: how many entries each target
+/// owns. The colocation-aware DT selection picks the argmax (§2.4.1).
+pub fn placement_weights(smap: &Smap, req: &BatchRequest) -> Vec<u32> {
+    let mut w = vec![0u32; smap.targets.len()];
+    for e in &req.entries {
+        w[entry_owner(smap, e)] += 1;
+    }
+    w
+}
+
+/// Colocation-aware DT choice: target owning the largest entry count
+/// (ties → lowest index, deterministic).
+pub fn colocated_dt(smap: &Smap, req: &BatchRequest) -> usize {
+    let w = placement_weights(smap, req);
+    w.iter().enumerate().max_by_key(|&(i, c)| (c, std::cmp::Reverse(i))).map(|(i, _)| i).unwrap_or(0)
+}
+
+/// The entries of `req` owned by target `tidx`, with their request indices.
+pub fn local_entries<'r>(
+    smap: &Smap,
+    req: &'r BatchRequest,
+    tidx: usize,
+) -> Vec<(u32, &'r BatchEntry)> {
+    req.entries
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| entry_owner(smap, e) == tidx)
+        .map(|(i, e)| (i as u32, e))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::smap::NodeInfo;
+
+    fn smap(n: usize) -> Smap {
+        Smap::new(
+            1,
+            vec![],
+            (0..n)
+                .map(|i| NodeInfo {
+                    id: format!("t{i}"),
+                    http_addr: String::new(),
+                    p2p_addr: String::new(),
+                })
+                .collect(),
+        )
+    }
+
+    fn req(n: usize) -> BatchRequest {
+        BatchRequest::new((0..n).map(|i| BatchEntry::obj("b", &format!("o{i}"))).collect())
+    }
+
+    #[test]
+    fn partition_is_total_and_disjoint() {
+        let s = smap(5);
+        let r = req(200);
+        let mut seen = vec![false; 200];
+        for t in 0..5 {
+            for (i, _) in local_entries(&s, &r, t) {
+                assert!(!seen[i as usize], "entry {i} owned twice");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every entry owned exactly once");
+    }
+
+    #[test]
+    fn weights_sum_to_entries() {
+        let s = smap(7);
+        let r = req(300);
+        let w = placement_weights(&s, &r);
+        assert_eq!(w.iter().sum::<u32>(), 300);
+        // roughly uniform
+        for (i, &c) in w.iter().enumerate() {
+            assert!(c > 10, "target {i} starved: {c}");
+        }
+    }
+
+    #[test]
+    fn colocated_dt_is_argmax() {
+        let s = smap(4);
+        // All entries are members of ONE shard → one owner dominates.
+        let r = BatchRequest::new(
+            (0..64).map(|i| BatchEntry::member("b", "big.tar", &format!("m{i}"))).collect(),
+        );
+        let dt = colocated_dt(&s, &r);
+        assert_eq!(dt, owner(&s, "b/big.tar"));
+        let w = placement_weights(&s, &r);
+        assert_eq!(w[dt], 64);
+    }
+
+    #[test]
+    fn shard_members_colocate_with_shard() {
+        let s = smap(6);
+        let shard_owner = owner(&s, "b/s.tar");
+        for m in 0..20 {
+            let e = BatchEntry::member("b", "s.tar", &format!("m{m}"));
+            assert_eq!(entry_owner(&s, &e), shard_owner);
+        }
+    }
+
+    #[test]
+    fn ranked_first_is_owner() {
+        let s = smap(5);
+        for k in 0..30 {
+            let key = format!("b/o{k}");
+            assert_eq!(ranked(&s, &key)[0], owner(&s, &key));
+        }
+    }
+}

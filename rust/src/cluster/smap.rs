@@ -1,0 +1,127 @@
+//! The cluster map: which proxies and targets exist and where they listen.
+//! Versioned so placement decisions are taken "under the current cluster
+//! membership" (§2.3.1). Serializable for SDK bootstrap (`GET /v1/cluster/smap`).
+
+use crate::util::hrw;
+use crate::util::json::Value;
+
+/// One node's identity + endpoints.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeInfo {
+    pub id: String,
+    /// Public HTTP endpoint (host:port).
+    pub http_addr: String,
+    /// Intra-cluster P2P endpoint (targets only; empty for proxies).
+    pub p2p_addr: String,
+}
+
+impl NodeInfo {
+    fn to_json(&self) -> Value {
+        Value::obj()
+            .set("id", Value::str(&self.id))
+            .set("http", Value::str(&self.http_addr))
+            .set("p2p", Value::str(&self.p2p_addr))
+    }
+    fn from_json(v: &Value) -> Option<NodeInfo> {
+        Some(NodeInfo {
+            id: v.str_field("id")?.to_string(),
+            http_addr: v.str_field("http")?.to_string(),
+            p2p_addr: v.str_field("p2p").unwrap_or("").to_string(),
+        })
+    }
+}
+
+/// Versioned cluster map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Smap {
+    pub version: u64,
+    pub proxies: Vec<NodeInfo>,
+    pub targets: Vec<NodeInfo>,
+    /// Precomputed HRW hashes of target ids (index-aligned with `targets`).
+    target_hashes: Vec<u64>,
+}
+
+impl Smap {
+    pub fn new(version: u64, proxies: Vec<NodeInfo>, targets: Vec<NodeInfo>) -> Smap {
+        let target_hashes = targets.iter().map(|t| hrw::fnv1a(t.id.as_bytes())).collect();
+        Smap { version, proxies, targets, target_hashes }
+    }
+
+    pub fn target_hashes(&self) -> &[u64] {
+        &self.target_hashes
+    }
+
+    pub fn target_index(&self, id: &str) -> Option<usize> {
+        self.targets.iter().position(|t| t.id == id)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("version", Value::num(self.version as f64))
+            .set("proxies", Value::Arr(self.proxies.iter().map(|n| n.to_json()).collect()))
+            .set("targets", Value::Arr(self.targets.iter().map(|n| n.to_json()).collect()))
+    }
+
+    pub fn from_json(v: &Value) -> Option<Smap> {
+        let proxies = v
+            .get("proxies")?
+            .as_arr()?
+            .iter()
+            .map(NodeInfo::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        let targets = v
+            .get("targets")?
+            .as_arr()?
+            .iter()
+            .map(NodeInfo::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(Smap::new(v.u64_field("version")?, proxies, targets))
+    }
+
+    pub fn from_body(b: &[u8]) -> Option<Smap> {
+        Smap::from_json(&Value::parse(std::str::from_utf8(b).ok()?).ok()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn smap(n: usize) -> Smap {
+        let targets = (0..n)
+            .map(|i| NodeInfo {
+                id: format!("t{i}"),
+                http_addr: format!("127.0.0.1:{}", 9000 + i),
+                p2p_addr: format!("127.0.0.1:{}", 9500 + i),
+            })
+            .collect();
+        let proxies = vec![NodeInfo {
+            id: "p0".into(),
+            http_addr: "127.0.0.1:8080".into(),
+            p2p_addr: String::new(),
+        }];
+        Smap::new(1, proxies, targets)
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = smap(4);
+        let body = s.to_json().to_string();
+        let back = Smap::from_body(body.as_bytes()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.target_hashes().len(), 4);
+    }
+
+    #[test]
+    fn target_index_lookup() {
+        let s = smap(3);
+        assert_eq!(s.target_index("t2"), Some(2));
+        assert_eq!(s.target_index("zz"), None);
+    }
+
+    #[test]
+    fn hashes_follow_ids() {
+        let s = smap(2);
+        assert_eq!(s.target_hashes()[0], crate::util::hrw::fnv1a(b"t0"));
+    }
+}

@@ -1,0 +1,198 @@
+//! Configuration (§2.4.3): cluster topology knobs plus the dedicated
+//! GetBatch section governing execution under load — sender wait timeout,
+//! GFN recovery attempts, soft-error budget, read-ahead workers, and the
+//! admission-control thresholds. JSON on disk, derived defaults in code.
+
+use std::time::Duration;
+
+use crate::util::json::Value;
+
+/// The paper's dedicated GetBatch configuration section (§2.4.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetBatchConfig {
+    /// Max time the DT waits for a remote sender before initiating recovery.
+    pub sender_wait: Duration,
+    /// Get-from-neighbor recovery attempts permitted per request.
+    pub gfn_attempts: u32,
+    /// Max tolerated soft errors per request (continue-on-error budget).
+    pub max_soft_errs: u32,
+    /// Background read-ahead workers warming the page cache for upcoming
+    /// local reads.
+    pub readahead_workers: usize,
+    /// Admission control: reject new work (HTTP 429) when DT-buffered bytes
+    /// exceed this (memory is a *hard* constraint).
+    pub mem_critical_bytes: u64,
+    /// Throttling: start inserting calibrated sleeps when in-flight DT work
+    /// items exceed this watermark (CPU/disk pressure proxy).
+    pub throttle_watermark: i64,
+    /// Base throttle sleep; scales with overload factor.
+    pub throttle_base: Duration,
+}
+
+impl Default for GetBatchConfig {
+    fn default() -> Self {
+        GetBatchConfig {
+            sender_wait: Duration::from_secs(10),
+            gfn_attempts: 2,
+            max_soft_errs: 32,
+            readahead_workers: 2,
+            mem_critical_bytes: 512 << 20,
+            throttle_watermark: 64,
+            throttle_base: Duration::from_micros(200),
+        }
+    }
+}
+
+impl GetBatchConfig {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("sender_wait_ms", Value::num(self.sender_wait.as_millis() as f64))
+            .set("gfn_attempts", Value::num(self.gfn_attempts as f64))
+            .set("max_soft_errs", Value::num(self.max_soft_errs as f64))
+            .set("readahead_workers", Value::num(self.readahead_workers as f64))
+            .set("mem_critical_bytes", Value::num(self.mem_critical_bytes as f64))
+            .set("throttle_watermark", Value::num(self.throttle_watermark as f64))
+            .set("throttle_base_us", Value::num(self.throttle_base.as_micros() as f64))
+    }
+
+    pub fn from_json(v: &Value) -> GetBatchConfig {
+        let d = GetBatchConfig::default();
+        GetBatchConfig {
+            sender_wait: v
+                .u64_field("sender_wait_ms")
+                .map(Duration::from_millis)
+                .unwrap_or(d.sender_wait),
+            gfn_attempts: v.u64_field("gfn_attempts").map(|x| x as u32).unwrap_or(d.gfn_attempts),
+            max_soft_errs: v.u64_field("max_soft_errs").map(|x| x as u32).unwrap_or(d.max_soft_errs),
+            readahead_workers: v
+                .u64_field("readahead_workers")
+                .map(|x| x as usize)
+                .unwrap_or(d.readahead_workers),
+            mem_critical_bytes: v.u64_field("mem_critical_bytes").unwrap_or(d.mem_critical_bytes),
+            throttle_watermark: v
+                .u64_field("throttle_watermark")
+                .map(|x| x as i64)
+                .unwrap_or(d.throttle_watermark),
+            throttle_base: v
+                .u64_field("throttle_base_us")
+                .map(Duration::from_micros)
+                .unwrap_or(d.throttle_base),
+        }
+    }
+}
+
+/// Whole-cluster configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of target (storage) nodes.
+    pub targets: usize,
+    /// Number of proxy (gateway) nodes.
+    pub proxies: usize,
+    /// Simulated mountpaths (disks) per target.
+    pub mountpaths: usize,
+    /// HTTP worker threads per node.
+    pub http_workers: usize,
+    /// Root directory for node stores (a temp dir when empty).
+    pub root_dir: String,
+    /// Idle P2P connection reclaim timeout (§2.3.1 "idle connections
+    /// reclaimed after a configurable timeout").
+    pub p2p_idle_timeout: Duration,
+    pub getbatch: GetBatchConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            targets: 4,
+            proxies: 1,
+            mountpaths: 2,
+            http_workers: 8,
+            root_dir: String::new(),
+            p2p_idle_timeout: Duration::from_secs(30),
+            getbatch: GetBatchConfig::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("targets", Value::num(self.targets as f64))
+            .set("proxies", Value::num(self.proxies as f64))
+            .set("mountpaths", Value::num(self.mountpaths as f64))
+            .set("http_workers", Value::num(self.http_workers as f64))
+            .set("root_dir", Value::str(&self.root_dir))
+            .set("p2p_idle_timeout_ms", Value::num(self.p2p_idle_timeout.as_millis() as f64))
+            .set("getbatch", self.getbatch.to_json())
+    }
+
+    pub fn from_json(v: &Value) -> ClusterConfig {
+        let d = ClusterConfig::default();
+        ClusterConfig {
+            targets: v.u64_field("targets").map(|x| x as usize).unwrap_or(d.targets),
+            proxies: v.u64_field("proxies").map(|x| x as usize).unwrap_or(d.proxies),
+            mountpaths: v.u64_field("mountpaths").map(|x| x as usize).unwrap_or(d.mountpaths),
+            http_workers: v.u64_field("http_workers").map(|x| x as usize).unwrap_or(d.http_workers),
+            root_dir: v.str_field("root_dir").unwrap_or("").to_string(),
+            p2p_idle_timeout: v
+                .u64_field("p2p_idle_timeout_ms")
+                .map(Duration::from_millis)
+                .unwrap_or(d.p2p_idle_timeout),
+            getbatch: v.get("getbatch").map(GetBatchConfig::from_json).unwrap_or(d.getbatch),
+        }
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<ClusterConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(ClusterConfig::from_json(&Value::parse(&text)?))
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = ClusterConfig::default();
+        assert!(c.targets >= 1 && c.mountpaths >= 1);
+        assert!(c.getbatch.gfn_attempts > 0);
+        assert!(c.getbatch.mem_critical_bytes > 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ClusterConfig::default();
+        c.targets = 16;
+        c.getbatch.max_soft_errs = 5;
+        c.getbatch.sender_wait = Duration::from_millis(1234);
+        let back = ClusterConfig::from_json(&c.to_json());
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = Value::parse(r#"{"targets": 8}"#).unwrap();
+        let c = ClusterConfig::from_json(&v);
+        assert_eq!(c.targets, 8);
+        assert_eq!(c.proxies, ClusterConfig::default().proxies);
+        assert_eq!(c.getbatch, GetBatchConfig::default());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gbcfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        let c = ClusterConfig { targets: 3, ..Default::default() };
+        c.save(p.to_str().unwrap()).unwrap();
+        let back = ClusterConfig::load(p.to_str().unwrap()).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

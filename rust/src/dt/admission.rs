@@ -1,0 +1,113 @@
+//! Admission control & throttling at the DT (§2.4.3): memory pressure is a
+//! *hard* constraint — new work is rejected with HTTP 429 once DT-buffered
+//! bytes cross the critical threshold; CPU/disk pressure is *soft* — the DT
+//! inserts calibrated sleeps (backpressure) while in-flight work proceeds.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::GetBatchConfig;
+use crate::metrics::GetBatchMetrics;
+use crate::util::clock::Clock;
+
+pub struct Admission {
+    cfg: GetBatchConfig,
+    metrics: Arc<GetBatchMetrics>,
+    clock: Arc<dyn Clock>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum Admit {
+    Ok,
+    /// Reject with HTTP 429 — client backs off and retries.
+    RejectMemory { buffered: i64, critical: u64 },
+}
+
+impl Admission {
+    pub fn new(cfg: GetBatchConfig, metrics: Arc<GetBatchMetrics>, clock: Arc<dyn Clock>) -> Admission {
+        Admission { cfg, metrics, clock }
+    }
+
+    /// Hard gate at DT registration: memory critical ⇒ 429.
+    pub fn check_register(&self) -> Admit {
+        let buffered = self.metrics.dt_buffered_bytes.get();
+        if buffered >= self.cfg.mem_critical_bytes as i64 {
+            self.metrics.admission_rejects.inc();
+            return Admit::RejectMemory { buffered, critical: self.cfg.mem_critical_bytes };
+        }
+        Admit::Ok
+    }
+
+    /// Soft gate on the work loops: sleep proportionally to overload above
+    /// the watermark. Returns the slept duration (accounted as `throttle`).
+    pub fn throttle(&self, inflight_items: i64) -> Duration {
+        if inflight_items <= self.cfg.throttle_watermark {
+            return Duration::ZERO;
+        }
+        let over = (inflight_items - self.cfg.throttle_watermark) as u32;
+        // Calibrated: base × overload factor, capped at 50 ms per step so
+        // in-flight work keeps making forward progress (§2.4.3).
+        let d = (self.cfg.throttle_base * over).min(Duration::from_millis(50));
+        self.clock.sleep(d);
+        self.metrics.throttle_ns.add(d.as_nanos() as u64);
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    fn setup(mem_critical: u64, watermark: i64) -> (Admission, Arc<GetBatchMetrics>, Arc<VirtualClock>) {
+        let metrics = GetBatchMetrics::new();
+        let clock = VirtualClock::new();
+        let cfg = GetBatchConfig {
+            mem_critical_bytes: mem_critical,
+            throttle_watermark: watermark,
+            throttle_base: Duration::from_micros(100),
+            ..Default::default()
+        };
+        (Admission::new(cfg, Arc::clone(&metrics), clock.clone()), metrics, clock)
+    }
+
+    #[test]
+    fn admits_under_threshold() {
+        let (adm, m, _) = setup(1000, 10);
+        m.dt_buffered_bytes.set(999);
+        assert_eq!(adm.check_register(), Admit::Ok);
+        assert_eq!(m.admission_rejects.get(), 0);
+    }
+
+    #[test]
+    fn rejects_at_memory_critical() {
+        let (adm, m, _) = setup(1000, 10);
+        m.dt_buffered_bytes.set(1000);
+        assert!(matches!(adm.check_register(), Admit::RejectMemory { buffered: 1000, .. }));
+        assert_eq!(m.admission_rejects.get(), 1);
+    }
+
+    #[test]
+    fn no_throttle_below_watermark() {
+        let (adm, m, clock) = setup(1 << 30, 10);
+        assert_eq!(adm.throttle(10), Duration::ZERO);
+        assert_eq!(clock.now_ns(), 0);
+        assert_eq!(m.throttle_ns.get(), 0);
+    }
+
+    #[test]
+    fn throttle_scales_with_overload() {
+        let (adm, m, _clock) = setup(1 << 30, 10);
+        let d1 = adm.throttle(11); // 1 over
+        let d5 = adm.throttle(15); // 5 over
+        assert_eq!(d1, Duration::from_micros(100));
+        assert_eq!(d5, Duration::from_micros(500));
+        assert_eq!(m.throttle_ns.get(), (d1 + d5).as_nanos() as u64);
+    }
+
+    #[test]
+    fn throttle_capped() {
+        let (adm, _, _) = setup(1 << 30, 0);
+        assert_eq!(adm.throttle(1_000_000), Duration::from_millis(50));
+    }
+}

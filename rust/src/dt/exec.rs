@@ -1,0 +1,391 @@
+//! Per-request DT execution state and the ordered assembly loop (§2.3.1
+//! phase 3): waits on each request slot in order, recovers soft errors via
+//! get-from-neighbor (GFN), emits placeholders under continue-on-error, and
+//! enforces the per-request error budgets of §2.4.2–2.4.3.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::batch::error::{BatchError, EntryError};
+use crate::batch::request::{BatchEntry, BatchRequest};
+use crate::cluster::placement;
+use crate::cluster::smap::Smap;
+use crate::config::GetBatchConfig;
+use crate::metrics::GetBatchMetrics;
+use crate::proto::frame::{Frame, FrameType};
+use crate::proto::http::HttpClient;
+use crate::proto::wire;
+use crate::tar::TarWriter;
+use crate::util::clock::{Clock, Stopwatch};
+
+use super::order::{OrderBuffer, SlotWait};
+
+/// Execution state of one GetBatch request on its Designated Target.
+pub struct DtExec {
+    pub req_id: u64,
+    pub request: BatchRequest,
+    pub num_senders: u32,
+    pub buf: OrderBuffer,
+    senders_done: AtomicU32,
+}
+
+impl DtExec {
+    pub fn new(req_id: u64, request: BatchRequest, num_senders: u32) -> DtExec {
+        let n = request.entries.len();
+        DtExec { req_id, request, num_senders, buf: OrderBuffer::new(n), senders_done: AtomicU32::new(0) }
+    }
+
+    pub fn senders_done(&self) -> u32 {
+        self.senders_done.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of in-flight executions on one target; the P2P frame handler
+/// dispatches into it.
+#[derive(Default)]
+pub struct DtRegistry {
+    execs: Mutex<HashMap<u64, Arc<DtExec>>>,
+}
+
+impl DtRegistry {
+    pub fn new() -> Arc<DtRegistry> {
+        Arc::new(DtRegistry::default())
+    }
+
+    pub fn register(&self, exec: DtExec) -> Arc<DtExec> {
+        let exec = Arc::new(exec);
+        self.execs.lock().unwrap().insert(exec.req_id, Arc::clone(&exec));
+        exec
+    }
+
+    pub fn get(&self, req_id: u64) -> Option<Arc<DtExec>> {
+        self.execs.lock().unwrap().get(&req_id).cloned()
+    }
+
+    /// Release all per-request state (§2.4.2: "upon successful completion or
+    /// termination, the DT ... releases all per-request execution state").
+    pub fn remove(&self, req_id: u64) {
+        self.execs.lock().unwrap().remove(&req_id);
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.execs.lock().unwrap().len()
+    }
+
+    /// Frame dispatch from the P2P server. Frames for unknown requests are
+    /// dropped (late frames after completion/abort are benign).
+    pub fn dispatch(&self, f: Frame) {
+        let exec = match self.get(f.req_id) {
+            Some(e) => e,
+            None => return,
+        };
+        match f.ftype {
+            FrameType::Data => exec.buf.fill(f.index, f.payload),
+            FrameType::SoftErr => {
+                let reason = String::from_utf8_lossy(&f.payload).into_owned();
+                let err = if reason.starts_with("missing object") {
+                    EntryError::NotFound(reason)
+                } else if reason.starts_with("missing member") {
+                    EntryError::MemberNotFound(reason)
+                } else {
+                    EntryError::StreamFailure(reason)
+                };
+                exec.buf.fail(f.index, err);
+            }
+            FrameType::SenderDone => {
+                exec.senders_done.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Everything the assembly loop needs to reach the rest of the cluster for
+/// GFN recovery.
+pub struct AssembleCtx {
+    pub smap: Arc<Smap>,
+    pub http: HttpClient,
+    /// This DT's own target index (skipped during GFN).
+    pub self_target: usize,
+    pub cfg: GetBatchConfig,
+    pub metrics: Arc<GetBatchMetrics>,
+    pub clock: Arc<dyn Clock>,
+}
+
+/// Result summary of one assembly.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StreamOutcome {
+    pub delivered: u32,
+    pub placeholders: u32,
+    pub recovered: u32,
+    pub bytes: u64,
+}
+
+/// Try to fetch the entry directly from the next-best owners ("neighbors").
+/// Used when a sender timed out or reported a recoverable failure.
+fn gfn_recover(ctx: &AssembleCtx, entry: &BatchEntry) -> Option<Vec<u8>> {
+    let key = entry.location_key();
+    for &t in placement::ranked(&ctx.smap, &key).iter() {
+        if t == ctx.self_target {
+            continue;
+        }
+        ctx.metrics.recovery_attempts.inc();
+        let target = &ctx.smap.targets[t];
+        let mut pq = format!("{}?local=true", wire::object_path(&entry.bucket, &entry.obj));
+        if let Some(m) = &entry.archpath {
+            pq.push_str(&format!("&archpath={m}"));
+        }
+        match ctx.http.get(&target.http_addr, &pq) {
+            Ok(resp) if resp.status == 200 => match resp.into_bytes() {
+                Ok(data) => return Some(data),
+                Err(_) => ctx.metrics.recovery_failures.inc(),
+            },
+            _ => ctx.metrics.recovery_failures.inc(),
+        }
+        // Only probe a bounded number of neighbors per entry.
+        if ctx.metrics.recovery_attempts.get() % (ctx.cfg.gfn_attempts.max(1) as u64) == 0 {
+            break;
+        }
+    }
+    None
+}
+
+/// The ordered assembly loop: drain slots 0..n in request order into a TAR
+/// stream. Returns the outcome, or the hard error that aborted the request.
+///
+/// Works identically for streaming and buffered delivery — the caller
+/// decides what `out` is (the chunked HTTP body vs. an in-memory buffer).
+pub fn assemble(
+    exec: &DtExec,
+    ctx: &AssembleCtx,
+    out: &mut dyn Write,
+) -> Result<StreamOutcome, BatchError> {
+    let mut tw = TarWriter::new(out);
+    let mut outcome = StreamOutcome::default();
+    let mut soft_errs: u32 = 0;
+    let mut gfn_left: u32 = ctx.cfg.gfn_attempts;
+    let n = exec.request.entries.len() as u32;
+
+    for idx in 0..n {
+        let entry = &exec.request.entries[idx as usize];
+        // Pressure throttle: scale with resident buffered bytes (soft gate).
+        ctx.metrics.dt_buffered_bytes.set(exec.buf.buffered_bytes());
+        let sw = Stopwatch::start(&*ctx.clock);
+        let mut slot = exec.buf.wait_take(idx, ctx.cfg.sender_wait);
+        ctx.metrics.rxwait_ns.add(sw.elapsed().as_nanos() as u64);
+
+        // Recovery ladder (§2.4.2): recoverable failure or timeout → GFN.
+        if matches!(slot, SlotWait::TimedOut)
+            || matches!(&slot, SlotWait::Failed(e) if e.recoverable())
+        {
+            if gfn_left > 0 {
+                gfn_left -= 1;
+                if let Some(data) = gfn_recover(ctx, entry) {
+                    outcome.recovered += 1;
+                    slot = SlotWait::Ready(data);
+                }
+            }
+        }
+
+        match slot {
+            SlotWait::Ready(data) => {
+                outcome.bytes += data.len() as u64;
+                ctx.metrics.work_items.inc();
+                if entry.archpath.is_some() {
+                    ctx.metrics.members_extracted.inc();
+                    ctx.metrics.member_bytes.add(data.len() as u64);
+                } else {
+                    ctx.metrics.objs_delivered.inc();
+                    ctx.metrics.obj_bytes.add(data.len() as u64);
+                }
+                tw.append(&entry.output_name(), &data)
+                    .map_err(|e| BatchError::Io(std::io::Error::new(std::io::ErrorKind::Other, e.to_string())))?;
+                outcome.delivered += 1;
+            }
+            SlotWait::Failed(_) | SlotWait::TimedOut if exec.request.opts.continue_on_err => {
+                soft_errs += 1;
+                ctx.metrics.soft_errors.inc();
+                if soft_errs > ctx.cfg.max_soft_errs {
+                    ctx.metrics.hard_failures.inc();
+                    return Err(BatchError::SoftErrorBudget {
+                        count: soft_errs,
+                        limit: ctx.cfg.max_soft_errs,
+                    });
+                }
+                tw.append_missing(&entry.output_name())
+                    .map_err(|e| BatchError::Io(std::io::Error::new(std::io::ErrorKind::Other, e.to_string())))?;
+                outcome.placeholders += 1;
+            }
+            SlotWait::Failed(err) => {
+                ctx.metrics.hard_failures.inc();
+                return Err(BatchError::EntryFailed { index: idx, source: err });
+            }
+            SlotWait::TimedOut => {
+                ctx.metrics.hard_failures.inc();
+                return Err(BatchError::EntryFailed {
+                    index: idx,
+                    source: EntryError::SenderTimeout(idx),
+                });
+            }
+        }
+    }
+    tw.finish()
+        .map_err(|e| BatchError::Io(std::io::Error::new(std::io::ErrorKind::Other, e.to_string())))?;
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::request::BatchRequest;
+    use crate::cluster::smap::NodeInfo;
+    use crate::util::clock::RealClock;
+    use std::time::Duration;
+
+    fn ctx(sender_wait_ms: u64, coer_budget: u32) -> AssembleCtx {
+        let smap = Arc::new(Smap::new(
+            1,
+            vec![],
+            (0..2)
+                .map(|i| NodeInfo {
+                    id: format!("t{i}"),
+                    http_addr: "127.0.0.1:1".into(), // unreachable: GFN fails fast
+                    p2p_addr: String::new(),
+                })
+                .collect(),
+        ));
+        AssembleCtx {
+            smap,
+            http: HttpClient::new(true),
+            self_target: 0,
+            cfg: GetBatchConfig {
+                sender_wait: Duration::from_millis(sender_wait_ms),
+                max_soft_errs: coer_budget,
+                gfn_attempts: 1,
+                ..Default::default()
+            },
+            metrics: GetBatchMetrics::new(),
+            clock: RealClock::new(),
+        }
+    }
+
+    fn request(n: usize, coer: bool) -> BatchRequest {
+        BatchRequest::new((0..n).map(|i| BatchEntry::obj("b", &format!("o{i}"))).collect())
+            .continue_on_err(coer)
+    }
+
+    #[test]
+    fn assembles_in_strict_order() {
+        let exec = DtExec::new(1, request(3, false), 0);
+        exec.buf.fill(2, vec![2; 10]);
+        exec.buf.fill(0, vec![0; 10]);
+        exec.buf.fill(1, vec![1; 10]);
+        let mut out = Vec::new();
+        let o = assemble(&exec, &ctx(1000, 0), &mut out).unwrap();
+        assert_eq!(o.delivered, 3);
+        let entries = crate::tar::read_archive(&out).unwrap();
+        assert_eq!(
+            entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>(),
+            vec!["o0", "o1", "o2"]
+        );
+        assert_eq!(entries[1].data, vec![1; 10]);
+    }
+
+    #[test]
+    fn hard_error_aborts_without_coer() {
+        let exec = DtExec::new(1, request(2, false), 0);
+        exec.buf.fill(0, vec![0]);
+        exec.buf.fail(1, EntryError::NotFound("b/o1".into()));
+        let mut out = Vec::new();
+        let err = assemble(&exec, &ctx(1000, 0), &mut out).unwrap_err();
+        assert!(matches!(err, BatchError::EntryFailed { index: 1, .. }));
+    }
+
+    #[test]
+    fn coer_emits_placeholder_preserving_positions() {
+        let exec = DtExec::new(1, request(3, true), 0);
+        exec.buf.fill(0, vec![0; 4]);
+        exec.buf.fail(1, EntryError::NotFound("b/o1".into()));
+        exec.buf.fill(2, vec![2; 4]);
+        let c = ctx(1000, 5);
+        let mut out = Vec::new();
+        let o = assemble(&exec, &c, &mut out).unwrap();
+        assert_eq!(o.delivered, 2);
+        assert_eq!(o.placeholders, 1);
+        let items =
+            crate::batch::reader::BatchReader::new(std::io::Cursor::new(out)).collect_all().unwrap();
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[1].name(), "o1");
+        assert!(items[1].is_missing());
+        assert_eq!(c.metrics.soft_errors.get(), 1);
+    }
+
+    #[test]
+    fn soft_error_budget_enforced() {
+        let exec = DtExec::new(1, request(4, true), 0);
+        for i in 0..4 {
+            exec.buf.fail(i, EntryError::NotFound(format!("b/o{i}")));
+        }
+        let c = ctx(1000, 2); // budget: 2
+        let mut out = Vec::new();
+        let err = assemble(&exec, &c, &mut out).unwrap_err();
+        assert!(matches!(err, BatchError::SoftErrorBudget { count: 3, limit: 2 }));
+        assert_eq!(c.metrics.hard_failures.get(), 1);
+    }
+
+    #[test]
+    fn timeout_becomes_hard_error_without_coer() {
+        let exec = DtExec::new(1, request(1, false), 0);
+        let c = ctx(30, 0);
+        let mut out = Vec::new();
+        let err = assemble(&exec, &c, &mut out).unwrap_err();
+        assert!(matches!(
+            err,
+            BatchError::EntryFailed { index: 0, source: EntryError::SenderTimeout(_) }
+        ));
+        assert!(c.metrics.rxwait_ns.get() >= 25_000_000, "rxwait accounted");
+    }
+
+    #[test]
+    fn timeout_with_coer_yields_placeholder() {
+        let exec = DtExec::new(1, request(1, true), 0);
+        let c = ctx(30, 5);
+        let mut out = Vec::new();
+        let o = assemble(&exec, &c, &mut out).unwrap();
+        assert_eq!(o.placeholders, 1);
+    }
+
+    #[test]
+    fn registry_dispatch_routes_frames() {
+        let reg = DtRegistry::new();
+        let exec = reg.register(DtExec::new(42, request(2, true), 3));
+        reg.dispatch(Frame::data(42, 1, vec![9]));
+        reg.dispatch(Frame::soft_err(42, 0, "missing object b/o0"));
+        reg.dispatch(Frame::sender_done(42, 1));
+        reg.dispatch(Frame::data(777, 0, vec![1])); // unknown req: dropped
+        assert!(exec.buf.is_resolved(0) && exec.buf.is_resolved(1));
+        assert_eq!(exec.senders_done(), 1);
+        reg.remove(42);
+        assert_eq!(reg.inflight(), 0);
+    }
+
+    #[test]
+    fn work_item_metrics_distinguish_members() {
+        let req = BatchRequest::new(vec![
+            BatchEntry::obj("b", "whole"),
+            BatchEntry::member("b", "s.tar", "m"),
+        ]);
+        let exec = DtExec::new(1, req, 0);
+        exec.buf.fill(0, vec![1; 100]);
+        exec.buf.fill(1, vec![2; 40]);
+        let c = ctx(1000, 0);
+        let mut out = Vec::new();
+        assemble(&exec, &c, &mut out).unwrap();
+        assert_eq!(c.metrics.objs_delivered.get(), 1);
+        assert_eq!(c.metrics.obj_bytes.get(), 100);
+        assert_eq!(c.metrics.members_extracted.get(), 1);
+        assert_eq!(c.metrics.member_bytes.get(), 40);
+        assert_eq!(c.metrics.work_items.get(), 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Designated Target (DT) machinery — the coordination heart of GetBatch
+//! (§2.3): per-request execution state, the strict-order reassembly buffer,
+//! TAR assembly (streaming or buffered), soft-error recovery (GFN), and
+//! admission control.
+
+pub mod order;
+pub mod admission;
+pub mod exec;
+
+pub use exec::{DtExec, DtRegistry, StreamOutcome};
+pub use order::{OrderBuffer, SlotWait};

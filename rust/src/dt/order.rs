@@ -1,0 +1,234 @@
+//! Strict-order reassembly buffer.
+//!
+//! Senders deliver entries out of order from many nodes; the DT must emit
+//! them in exact request order (§2.2). The buffer holds one slot per request
+//! entry; producers fill arbitrary slots, the single consumer (the assembly
+//! loop) blocks on the *next* index it needs — "decoupling heterogeneous
+//! read and transfer latencies from output determinism" (§2.3.1 phase 3).
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::batch::error::EntryError;
+
+#[derive(Debug)]
+enum Slot {
+    Pending,
+    Ready(Vec<u8>),
+    Failed(EntryError),
+    /// Consumed by the assembler (payload moved out).
+    Taken,
+}
+
+/// Outcome of waiting for one slot.
+#[derive(Debug, PartialEq)]
+pub enum SlotWait {
+    Ready(Vec<u8>),
+    Failed(EntryError),
+    TimedOut,
+}
+
+pub struct OrderBuffer {
+    slots: Mutex<Vec<Slot>>,
+    cv: Condvar,
+    /// Bytes currently resident in Ready slots (DT memory accounting).
+    buffered: std::sync::atomic::AtomicI64,
+}
+
+impl OrderBuffer {
+    pub fn new(n: usize) -> OrderBuffer {
+        OrderBuffer {
+            slots: Mutex::new((0..n).map(|_| Slot::Pending).collect()),
+            cv: Condvar::new(),
+            buffered: std::sync::atomic::AtomicI64::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn buffered_bytes(&self) -> i64 {
+        self.buffered.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Producer: deliver entry payload. First write wins (recovery may race
+    /// a late sender); duplicates are dropped.
+    pub fn fill(&self, idx: u32, data: Vec<u8>) {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(s @ (Slot::Pending | Slot::Failed(_))) = slots.get_mut(idx as usize) {
+            self.buffered
+                .fetch_add(data.len() as i64, std::sync::atomic::Ordering::Relaxed);
+            *s = Slot::Ready(data);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Producer: report a per-entry failure. Never overwrites Ready/Taken.
+    pub fn fail(&self, idx: u32, err: EntryError) {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(s @ Slot::Pending) = slots.get_mut(idx as usize) {
+            *s = Slot::Failed(err);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Consumer: wait until slot `idx` resolves (or `timeout`). Moves the
+    /// payload out, releasing DT memory.
+    pub fn wait_take(&self, idx: u32, timeout: Duration) -> SlotWait {
+        let deadline = Instant::now() + timeout;
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            match &slots[idx as usize] {
+                Slot::Pending => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return SlotWait::TimedOut;
+                    }
+                    let (guard, _t) = self.cv.wait_timeout(slots, deadline - now).unwrap();
+                    slots = guard;
+                }
+                Slot::Ready(_) => {
+                    let taken = std::mem::replace(&mut slots[idx as usize], Slot::Taken);
+                    if let Slot::Ready(data) = taken {
+                        self.buffered
+                            .fetch_sub(data.len() as i64, std::sync::atomic::Ordering::Relaxed);
+                        return SlotWait::Ready(data);
+                    }
+                    unreachable!()
+                }
+                Slot::Failed(e) => {
+                    let e = e.clone();
+                    slots[idx as usize] = Slot::Taken;
+                    return SlotWait::Failed(e);
+                }
+                Slot::Taken => panic!("slot {idx} consumed twice"),
+            }
+        }
+    }
+
+    /// Non-blocking probe (tests / diagnostics).
+    pub fn is_resolved(&self, idx: u32) -> bool {
+        !matches!(self.slots.lock().unwrap()[idx as usize], Slot::Pending)
+    }
+
+    /// How many slots are resolved (ready, failed, or consumed).
+    pub fn resolved_count(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| !matches!(s, Slot::Pending))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn in_order_consumption_of_out_of_order_fills() {
+        let buf = Arc::new(OrderBuffer::new(4));
+        let b2 = Arc::clone(&buf);
+        thread::spawn(move || {
+            b2.fill(3, vec![3]);
+            b2.fill(1, vec![1]);
+            b2.fill(0, vec![0]);
+            b2.fill(2, vec![2]);
+        });
+        for i in 0..4u32 {
+            match buf.wait_take(i, Duration::from_secs(2)) {
+                SlotWait::Ready(d) => assert_eq!(d, vec![i as u8]),
+                other => panic!("slot {i}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_on_never_filled() {
+        let buf = OrderBuffer::new(1);
+        let t0 = Instant::now();
+        assert_eq!(buf.wait_take(0, Duration::from_millis(50)), SlotWait::TimedOut);
+        assert!(t0.elapsed() >= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn failure_propagates() {
+        let buf = OrderBuffer::new(2);
+        buf.fill(0, vec![9]);
+        buf.fail(1, EntryError::NotFound("b/x".into()));
+        assert!(matches!(buf.wait_take(0, Duration::from_secs(1)), SlotWait::Ready(_)));
+        assert!(matches!(
+            buf.wait_take(1, Duration::from_secs(1)),
+            SlotWait::Failed(EntryError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn recovery_can_overwrite_failure() {
+        let buf = OrderBuffer::new(1);
+        buf.fail(0, EntryError::StreamFailure("rst".into()));
+        // GFN recovery delivers the payload after the failure was recorded
+        // but before the consumer took it:
+        buf.fill(0, vec![7; 3]);
+        assert_eq!(buf.wait_take(0, Duration::from_secs(1)), SlotWait::Ready(vec![7; 3]));
+    }
+
+    #[test]
+    fn duplicate_fill_dropped() {
+        let buf = OrderBuffer::new(1);
+        buf.fill(0, vec![1]);
+        buf.fill(0, vec![2]); // late duplicate (e.g. recovery raced sender)
+        assert_eq!(buf.wait_take(0, Duration::from_secs(1)), SlotWait::Ready(vec![1]));
+        assert_eq!(buf.buffered_bytes(), 0, "accounting balanced");
+    }
+
+    #[test]
+    fn fail_does_not_clobber_ready() {
+        let buf = OrderBuffer::new(1);
+        buf.fill(0, vec![5]);
+        buf.fail(0, EntryError::SenderTimeout(0));
+        assert_eq!(buf.wait_take(0, Duration::from_secs(1)), SlotWait::Ready(vec![5]));
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let buf = OrderBuffer::new(3);
+        buf.fill(0, vec![0; 100]);
+        buf.fill(2, vec![0; 50]);
+        assert_eq!(buf.buffered_bytes(), 150);
+        buf.wait_take(0, Duration::from_secs(1));
+        assert_eq!(buf.buffered_bytes(), 50);
+        buf.fill(1, vec![0; 10]);
+        buf.wait_take(1, Duration::from_secs(1));
+        buf.wait_take(2, Duration::from_secs(1));
+        assert_eq!(buf.buffered_bytes(), 0);
+    }
+
+    #[test]
+    fn many_producers_one_consumer() {
+        let n = 256u32;
+        let buf = Arc::new(OrderBuffer::new(n as usize));
+        for chunk in 0..8u32 {
+            let b = Arc::clone(&buf);
+            thread::spawn(move || {
+                for i in (chunk..n).step_by(8) {
+                    b.fill(i, i.to_le_bytes().to_vec());
+                }
+            });
+        }
+        for i in 0..n {
+            match buf.wait_take(i, Duration::from_secs(5)) {
+                SlotWait::Ready(d) => assert_eq!(d, i.to_le_bytes().to_vec()),
+                other => panic!("slot {i}: {other:?}"),
+            }
+        }
+        assert_eq!(buf.resolved_count(), n as usize);
+    }
+}

@@ -1,0 +1,6 @@
+//! Stateless gateway (proxy) role: routes object I/O to owner targets and
+//! orchestrates the three-phase GetBatch execution flow (§2.3.1).
+
+pub mod proxy;
+
+pub use proxy::{make_proxy_handler, ProxyState};

@@ -1,0 +1,299 @@
+//! Proxy request handling (§2.3.1).
+//!
+//! Object GET/PUT: 307-redirect to the HRW owner target (the AIStore
+//! pattern — the proxy never touches data).
+//!
+//! GetBatch: (1) select the DT — by default *opaquely*, without unmarshaling
+//! the potentially large entry list (a pseudo-random pick via the request
+//! sequence number); with the `coloc` query parameter, unmarshal and pick
+//! the target owning the most entries (§2.4.1); (2) register the execution
+//! with the DT; (3) broadcast sender activation to all other targets; then
+//! redirect the client to the DT's stream endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::batch::request::BatchRequest;
+use crate::cluster::placement;
+use crate::cluster::smap::Smap;
+use crate::metrics::GetBatchMetrics;
+use crate::proto::http::{Handler, HttpClient, Request, Response};
+use crate::proto::wire::{self, paths, DtRegister, SenderActivate};
+use crate::util::rng::mix64;
+use crate::util::threadpool::scoped_map;
+
+/// Late-bound cluster map: nodes boot before the full membership is known;
+/// `set` is called once when the cluster finishes assembling.
+#[derive(Default)]
+pub struct SmapHolder(Mutex<Option<Arc<Smap>>>);
+
+impl SmapHolder {
+    pub fn new() -> Arc<SmapHolder> {
+        Arc::new(SmapHolder::default())
+    }
+    pub fn set(&self, smap: Arc<Smap>) {
+        *self.0.lock().unwrap() = Some(smap);
+    }
+    pub fn get(&self) -> Option<Arc<Smap>> {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+pub struct ProxyState {
+    pub id: String,
+    pub smap: Arc<SmapHolder>,
+    pub http: HttpClient,
+    pub metrics: Arc<GetBatchMetrics>,
+    req_seq: AtomicU64,
+}
+
+impl ProxyState {
+    pub fn new(id: &str, smap: Arc<SmapHolder>, metrics: Arc<GetBatchMetrics>) -> Arc<ProxyState> {
+        Arc::new(ProxyState {
+            id: id.to_string(),
+            smap,
+            http: HttpClient::new(true),
+            metrics,
+            req_seq: AtomicU64::new(1),
+        })
+    }
+
+    fn next_req_id(&self) -> u64 {
+        // Mixed so consecutive requests land on "random" DTs — the paper's
+        // default DT selection distributes serialization load cluster-wide.
+        // Masked to 48 bits: req ids ride JSON numbers (f64), which carry
+        // integers exactly only below 2^53.
+        mix64(self.req_seq.fetch_add(1, Ordering::Relaxed) ^ crate::util::hrw::fnv1a(self.id.as_bytes()))
+            & 0xFFFF_FFFF_FFFF
+    }
+}
+
+/// Build the HTTP handler for a proxy node.
+pub fn make_proxy_handler(st: Arc<ProxyState>) -> Handler {
+    Arc::new(move |req: Request| route(&st, req))
+}
+
+fn route(st: &ProxyState, req: Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        (_, p) if p.starts_with(paths::OBJECTS) => route_object(st, req),
+        ("GET", paths::BATCH) => route_batch(st, req),
+        ("GET", paths::SMAP) => match st.smap.get() {
+            Some(s) => Response::ok(s.to_json().to_string().into_bytes()),
+            None => Response::text(503, "smap not ready"),
+        },
+        ("GET", paths::METRICS) => Response::ok(st.metrics.render(&st.id).into_bytes()),
+        ("GET", paths::HEALTH) => Response::ok(b"ok".to_vec()),
+        _ => Response::status(404),
+    }
+}
+
+/// Object GET/PUT → redirect to the HRW owner target (per-request hop that
+/// the paper's baseline pays on every sample).
+fn route_object(st: &ProxyState, req: Request) -> Response {
+    let smap = match st.smap.get() {
+        Some(s) => s,
+        None => return Response::text(503, "smap not ready"),
+    };
+    let (bucket, obj) = match wire::parse_object_path(&req.path) {
+        Some(x) => x,
+        None => return Response::text(400, "bad object path"),
+    };
+    let owner = placement::owner(&smap, &format!("{bucket}/{obj}"));
+    let target = &smap.targets[owner];
+    let mut loc = format!("http://{}{}", target.http_addr, req.path);
+    // Preserve the query string (archpath etc.).
+    if !req.query.is_empty() {
+        let qs: Vec<String> = req.query.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        loc.push('?');
+        loc.push_str(&qs.join("&"));
+    }
+    Response::redirect(&loc)
+}
+
+/// The three-phase GetBatch flow.
+fn route_batch(st: &ProxyState, req: Request) -> Response {
+    let smap = match st.smap.get() {
+        Some(s) => s,
+        None => return Response::text(503, "smap not ready"),
+    };
+    if smap.targets.is_empty() {
+        return Response::text(503, "no targets");
+    }
+    let req_id = st.next_req_id();
+
+    // --- DT selection -----------------------------------------------------
+    // Opaque default: no unmarshal. Colocation hint: parse body, argmax of
+    // per-target placement weights.
+    let coloc = req.query_param(wire::QPARAM_COLOC).is_some();
+    let dt_idx = if coloc {
+        match BatchRequest::from_body(&req.body) {
+            Some(parsed) => placement::colocated_dt(&smap, &parsed),
+            None => return Response::text(400, "malformed batch request"),
+        }
+    } else {
+        (req_id % smap.targets.len() as u64) as usize
+    };
+    let dt = &smap.targets[dt_idx];
+
+    // Validate lazily only for the opaque path's registration forward: the
+    // DT unmarshals anyway and replies 400 if the body is bad.
+    let num_senders = (smap.targets.len() - 1) as u32;
+
+    // --- Phase 1: DT registration ------------------------------------------
+    let request = match BatchRequest::from_body(&req.body) {
+        Some(r) => r,
+        None => return Response::text(400, "malformed batch request"),
+    };
+    if request.entries.is_empty() {
+        return Response::text(400, "empty batch");
+    }
+    // Splice the client's body verbatim into the control messages instead
+    // of re-serializing the parsed entry list — saves two full JSON
+    // serializations per request on the proxy hot path (§Perf).
+    let raw = std::str::from_utf8(&req.body).unwrap_or("{}");
+    let reg_body = DtRegister::body_with_raw(req_id, num_senders, raw);
+    match st.http.request("POST", &dt.http_addr, paths::DT_REGISTER, &reg_body) {
+        Ok(resp) if resp.status == 200 => {
+            let _ = resp.into_bytes();
+        }
+        Ok(resp) if resp.status == 429 => {
+            // Admission rejection at the DT propagates to the client
+            // unchanged so it can back off and retry (§2.4.3).
+            return Response::text(429, "DT admission: memory pressure");
+        }
+        Ok(resp) => return Response::text(500, &format!("dt-register failed: {}", resp.status)),
+        Err(e) => return Response::text(500, &format!("dt-register io: {e}")),
+    }
+
+    // --- Phase 2: sender activation broadcast ------------------------------
+    let _ = request; // validated above; broadcast reuses the raw body
+    let body = SenderActivate::body_with_raw(req_id, &dt.p2p_addr, raw);
+    let others: Vec<usize> = (0..smap.targets.len()).filter(|&i| i != dt_idx).collect();
+    let failures: usize = scoped_map(&others, others.len().max(1).min(16), |_, &i| {
+        let t = &smap.targets[i];
+        match st.http.request("POST", &t.http_addr, paths::SENDER_ACTIVATE, &body) {
+            Ok(resp) if resp.status == 200 => {
+                let _ = resp.into_bytes();
+                0usize
+            }
+            _ => 1usize,
+        }
+    })
+    .into_iter()
+    .sum();
+    if failures > 0 {
+        // Activation failures degrade to DT sender-wait timeouts + GFN;
+        // surface in metrics but do not abort (§2.4.2).
+        st.metrics.soft_errors.add(failures as u64);
+    }
+
+    // --- Phase 3: redirect client to the DT stream -------------------------
+    Response::redirect(&format!(
+        "http://{}{}?{}={}",
+        dt.http_addr,
+        paths::DT_STREAM,
+        wire::QPARAM_REQ_ID,
+        req_id
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::request::BatchEntry;
+    use crate::cluster::smap::NodeInfo;
+
+    fn holder(n: usize) -> Arc<SmapHolder> {
+        let h = SmapHolder::new();
+        h.set(Arc::new(Smap::new(
+            1,
+            vec![],
+            (0..n)
+                .map(|i| NodeInfo {
+                    id: format!("t{i}"),
+                    http_addr: "127.0.0.1:1".into(),
+                    p2p_addr: "127.0.0.1:2".into(),
+                })
+                .collect(),
+        )));
+        h
+    }
+
+    fn get(path: &str, body: &[u8]) -> Request {
+        let (p, q) = match path.split_once('?') {
+            Some((p, q)) => (p.to_string(), q),
+            None => (path.to_string(), ""),
+        };
+        Request {
+            method: "GET".into(),
+            path: p,
+            query: q
+                .split('&')
+                .filter(|s| !s.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => (kv.to_string(), "true".to_string()),
+                })
+                .collect(),
+            headers: Default::default(),
+            body: body.to_vec(),
+            peer: None,
+        }
+    }
+
+    #[test]
+    fn object_get_redirects_to_owner() {
+        let st = ProxyState::new("p0", holder(4), GetBatchMetrics::new());
+        let resp = route(&st, get("/v1/objects/b/o1", &[]));
+        assert_eq!(resp.status, 307);
+        let loc = resp.headers.iter().find(|(k, _)| k == "location").unwrap().1.clone();
+        assert!(loc.contains("/v1/objects/b/o1"), "{loc}");
+    }
+
+    #[test]
+    fn malformed_batch_rejected() {
+        let st = ProxyState::new("p0", holder(2), GetBatchMetrics::new());
+        let resp = route(&st, get("/v1/batch", b"not json"));
+        assert_eq!(resp.status, 400);
+        let empty = BatchRequest::new(vec![]).to_body();
+        let resp = route(&st, get("/v1/batch", &empty));
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn smap_endpoint() {
+        let st = ProxyState::new("p0", holder(3), GetBatchMetrics::new());
+        let resp = route(&st, get("/v1/cluster/smap", &[]));
+        assert_eq!(resp.status, 200);
+        match resp.body {
+            crate::proto::http::Body::Bytes(b) => {
+                let s = Smap::from_body(&b).unwrap();
+                assert_eq!(s.targets.len(), 3);
+            }
+            _ => panic!("expected bytes"),
+        }
+    }
+
+    #[test]
+    fn smap_not_ready_is_503() {
+        let st = ProxyState::new("p0", SmapHolder::new(), GetBatchMetrics::new());
+        let body = BatchRequest::new(vec![BatchEntry::obj("b", "o")]).to_body();
+        assert_eq!(route(&st, get("/v1/batch", &body)).status, 503);
+        assert_eq!(route(&st, get("/v1/objects/b/o", &[])).status, 503);
+    }
+
+    #[test]
+    fn req_ids_unique_and_spread() {
+        let st = ProxyState::new("p0", holder(4), GetBatchMetrics::new());
+        let mut ids: Vec<u64> = (0..100).map(|_| st.next_req_id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 100);
+        // DT spread: at least 3 of 4 targets hit across 100 ids
+        let mut dts = std::collections::HashSet::new();
+        for id in ids {
+            dts.insert((id % 4) as usize);
+        }
+        assert!(dts.len() >= 3);
+    }
+}

@@ -1,0 +1,43 @@
+//! # GetBatch — distributed multi-object retrieval for ML data loading
+//!
+//! Reproduction of *GetBatch: Distributed Multi-Object Retrieval for ML Data
+//! Loading* (Aizman, Gaikwad, Żelasko — CS.DC 2026).
+//!
+//! The crate implements an AIStore-like distributed object store in which
+//! batch retrieval is a first-class primitive: a client submits one request
+//! naming N objects (standalone or TAR-shard members, spread over many
+//! nodes); the cluster assembles them — one *Designated Target* (DT)
+//! coordinates, all other nodes stream locally-owned items to it — and the
+//! DT emits a single TAR response in strict request order.
+//!
+//! Layer map (see DESIGN.md):
+//! - L3 (this crate): cluster, gateway, DT, senders, transport, client SDK,
+//!   data loaders, discrete-event simulator, benchmarking harness.
+//! - L2/L1 (python, build-time only): JAX transformer train step + Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! - `runtime`: loads those HLO artifacts through PJRT (CPU) and runs them
+//!   from the training hot path — python never executes at request time.
+
+pub mod util;
+pub mod proto;
+pub mod tar;
+pub mod store;
+pub mod cluster;
+pub mod gateway;
+pub mod dt;
+pub mod sender;
+pub mod transport;
+pub mod batch;
+pub mod client;
+pub mod config;
+pub mod metrics;
+pub mod sim;
+pub mod runtime;
+pub mod aisloader;
+pub mod testutil;
+
+pub use batch::request::{BatchEntry, BatchOpts, BatchRequest, OutputFormat};
+pub use batch::reader::{BatchItem, BatchReader};
+pub use client::sdk::Client;
+pub use cluster::node::{Cluster, ClusterSpec};
+pub use config::{ClusterConfig, GetBatchConfig};

@@ -1,0 +1,210 @@
+//! `getbatch` CLI — the launcher for the GetBatch reproduction.
+//!
+//! Subcommands:
+//!   serve     boot a live in-process cluster and keep it running
+//!   put/get   object I/O against a running cluster (`--proxy host:port`)
+//!   getbatch  batched retrieval of named objects
+//!   bench     aisloader-style throughput run on a fresh local cluster
+//!   sim       paper-scale simulator (Table 1 / Table 2 rows)
+//!   train     end-to-end training demo (AOT artifacts required)
+//!   metrics   scrape a node's Prometheus exposition
+
+use std::io::Write as _;
+use std::time::Duration;
+
+use getbatch::aisloader::{self, LoadSpec};
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::client::loader::{AccessMode, DataLoader};
+use getbatch::client::sdk::Client;
+use getbatch::cluster::node::Cluster;
+use getbatch::config::ClusterConfig;
+use getbatch::sim::model::CostModel;
+use getbatch::sim::workload;
+use getbatch::testutil::fixtures;
+use getbatch::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("put") => put(&args),
+        Some("get") => get(&args),
+        Some("getbatch") => getbatch(&args),
+        Some("bench") => bench(&args),
+        Some("sim") => sim(&args),
+        Some("train") => train(&args),
+        Some("metrics") => metrics(&args),
+        _ => {
+            eprintln!(
+                "usage: getbatch <serve|put|get|getbatch|bench|sim|train|metrics> [--flags]\n\
+                 see README.md for examples"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cluster_from(args: &Args) -> anyhow::Result<Cluster> {
+    let cfg = ClusterConfig {
+        targets: args.usize_or("targets", 4),
+        proxies: args.usize_or("proxies", 1),
+        mountpaths: args.usize_or("mountpaths", 2),
+        http_workers: args.usize_or("http-workers", 8),
+        root_dir: args.str_or("root", ""),
+        ..Default::default()
+    };
+    Ok(Cluster::start(cfg)?)
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let c = cluster_from(args)?;
+    println!("proxy: {}", c.proxy_addr());
+    for t in &c.targets {
+        println!("target {}: http={} p2p={}", t.info.id, t.info.http_addr, t.info.p2p_addr);
+    }
+    println!("serving; ctrl-c to stop");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn put(args: &Args) -> anyhow::Result<()> {
+    let client = Client::new(&args.str_or("proxy", "127.0.0.1:8080"));
+    let bucket = args.str_or("bucket", "data");
+    let obj = args.positional.first().cloned().ok_or_else(|| anyhow::anyhow!("object name"))?;
+    let file = args.str("file").ok_or_else(|| anyhow::anyhow!("--file required"))?;
+    let data = std::fs::read(file)?;
+    client.put(&bucket, &obj, &data).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("put {bucket}/{obj} ({} bytes)", data.len());
+    Ok(())
+}
+
+fn get(args: &Args) -> anyhow::Result<()> {
+    let client = Client::new(&args.str_or("proxy", "127.0.0.1:8080"));
+    let bucket = args.str_or("bucket", "data");
+    let obj = args.positional.first().cloned().ok_or_else(|| anyhow::anyhow!("object name"))?;
+    let data = client.get(&bucket, &obj).map_err(|e| anyhow::anyhow!("{e}"))?;
+    std::io::stdout().write_all(&data)?;
+    Ok(())
+}
+
+fn getbatch(args: &Args) -> anyhow::Result<()> {
+    let client = Client::new(&args.str_or("proxy", "127.0.0.1:8080"));
+    let bucket = args.str_or("bucket", "data");
+    let entries: Vec<BatchEntry> =
+        args.positional.iter().map(|o| BatchEntry::obj(&bucket, o)).collect();
+    anyhow::ensure!(!entries.is_empty(), "list object names as positional args");
+    let req = BatchRequest::new(entries)
+        .continue_on_err(args.bool("coer"))
+        .colocation(args.bool("coloc"))
+        .streaming(!args.bool("no-strm"));
+    let (items, stats) = client.get_batch_timed(&req).map_err(|e| anyhow::anyhow!("{e}"))?;
+    for it in &items {
+        eprintln!(
+            "{} {}",
+            it.name(),
+            it.data().map(|d| format!("{} bytes", d.len())).unwrap_or("<missing>".into())
+        );
+    }
+    eprintln!(
+        "batch: {} items, {} bytes, total {:.1} ms, ttfb {:.1} ms",
+        stats.items,
+        stats.bytes,
+        stats.total.as_secs_f64() * 1e3,
+        stats.ttfb.as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn bench(args: &Args) -> anyhow::Result<()> {
+    let c = cluster_from(args)?;
+    let spec = LoadSpec {
+        object_size: args.size_or("size", 10 << 10),
+        batch: args.str("batch").and_then(|b| b.parse().ok()),
+        workers: args.usize_or("workers", 8),
+        duration: Duration::from_millis(args.u64_or("ms", 2000)),
+        num_objects: args.usize_or("objects", 512),
+        seed: args.u64_or("seed", 1),
+        coloc: args.bool("coloc"),
+        no_reuse: args.bool("no-reuse"),
+    };
+    eprintln!("staging {} objects of {} ...", spec.num_objects, spec.object_size);
+    aisloader::stage_uniform(&c, "bench", &spec);
+    let r = aisloader::run(&c, "bench", &spec);
+    println!(
+        "{:<24} {:>8.3} GiB/s {:>10.0} obj/s   lat {}   errors={}",
+        r.label,
+        r.throughput.gib_per_sec(),
+        r.throughput.ops_per_sec(),
+        r.request_ms,
+        r.errors
+    );
+    Ok(())
+}
+
+fn sim(args: &Args) -> anyhow::Result<()> {
+    let m = CostModel::oci_16node();
+    match args.str_or("table", "1").as_str() {
+        "1" => {
+            let secs = args.f64_or("secs", 5.0);
+            println!("Simulated Table 1 (16-node OCI model, 80 workers, {secs}s virtual):");
+            for size in [10 << 10, 100 << 10, 1 << 20] {
+                let get = workload::run_synthetic(&m, 80, size, None, secs, 1);
+                print!(
+                    "{:>8}  GET {:>6.2} GiB/s |",
+                    getbatch::util::bytes::fmt_size(size),
+                    get.throughput.gib_per_sec()
+                );
+                for k in [32, 64, 128] {
+                    let b = workload::run_synthetic(&m, 80, size, Some(k), secs, k as u64);
+                    print!(
+                        "  B{k}: {:>6.2} GiB/s ({:.1}x)",
+                        b.throughput.gib_per_sec(),
+                        b.throughput.gib_per_sec() / get.throughput.gib_per_sec()
+                    );
+                }
+                println!();
+            }
+        }
+        "2" => {
+            println!("Simulated Table 2 (256 loaders, bursty):");
+            for mode in [AccessMode::Sequential, AccessMode::RandomGet, AccessMode::GetBatch] {
+                let r = workload::run_training(&m, mode, 256, 128, 8, 120.0, 7);
+                println!("{:<16} batch {}  per-obj {}", r.mode.name(), r.batch_ms, r.per_object_ms);
+            }
+        }
+        other => anyhow::bail!("unknown table {other}"),
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let dir = getbatch::runtime::trainer::artifacts_dir()?;
+    let rt = getbatch::runtime::pjrt::Runtime::load(&dir)?;
+    eprintln!("runtime: {} ({} params)", rt.platform(), rt.meta.n_params);
+    let c = cluster_from(args)?;
+    let manifest = fixtures::stage_shards(&c, "corpus", 8, 32, 2048.0, 11);
+    let mode = AccessMode::parse(&args.str_or("mode", "getbatch"))
+        .ok_or_else(|| anyhow::anyhow!("mode: seq|get|getbatch"))?;
+    let mut loader =
+        DataLoader::new(Client::new(&c.proxy_addr()), manifest, mode, rt.meta.batch, 5);
+    let steps = args.usize_or("steps", 50);
+    let report = getbatch::runtime::trainer::train(&rt, &mut loader, steps, 0)?;
+    println!(
+        "{}: {} steps, loss {:.3} -> {:.3}, load {} | step {}",
+        report.mode,
+        steps,
+        report.losses.first().unwrap_or(&f32::NAN),
+        getbatch::runtime::trainer::final_loss(&report.losses, 10),
+        report.load_ms,
+        report.step_ms
+    );
+    Ok(())
+}
+
+fn metrics(args: &Args) -> anyhow::Result<()> {
+    let proxy = args.str_or("proxy", "127.0.0.1:8080");
+    let client = Client::new(&proxy);
+    print!("{}", client.metrics(&proxy).map_err(|e| anyhow::anyhow!("{e}"))?);
+    Ok(())
+}

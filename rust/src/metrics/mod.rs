@@ -1,0 +1,206 @@
+//! Per-node observability (§2.4.4): counters/gauges with Prometheus text
+//! exposition. The metric names mirror the paper's: workload composition
+//! (work items, delivered objects vs shard extractions), bottleneck
+//! decomposition (`rxwait` vs `throttle`), and the error/recovery family.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn sub(&self, v: i64) {
+        self.0.fetch_sub(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The GetBatch metric family of one node (§2.4.4). Field names follow the
+/// paper's terminology.
+#[derive(Default)]
+pub struct GetBatchMetrics {
+    // -- workload composition ---------------------------------------------
+    /// Total executed work items (one per request entry).
+    pub work_items: Counter,
+    /// Whole objects delivered / bytes.
+    pub objs_delivered: Counter,
+    pub obj_bytes: Counter,
+    /// Shard-extracted members delivered / bytes.
+    pub members_extracted: Counter,
+    pub member_bytes: Counter,
+    /// GetBatch requests coordinated by this node (as DT).
+    pub dt_requests: Counter,
+    /// Entries this node served as a sender.
+    pub sender_entries: Counter,
+
+    // -- bottleneck decomposition -----------------------------------------
+    /// Cumulative ns spent waiting to receive entries from peer targets.
+    pub rxwait_ns: Counter,
+    /// Cumulative ns slept due to local pressure throttling.
+    pub throttle_ns: Counter,
+
+    // -- errors & recovery --------------------------------------------------
+    /// Hard failures: aborted requests.
+    pub hard_failures: Counter,
+    /// Admission rejections (HTTP 429).
+    pub admission_rejects: Counter,
+    /// Soft errors tolerated under continue-on-error.
+    pub soft_errors: Counter,
+    /// Get-from-neighbor recovery attempts / failures.
+    pub recovery_attempts: Counter,
+    pub recovery_failures: Counter,
+
+    // -- resources ----------------------------------------------------------
+    /// Bytes currently buffered by in-flight DT assemblies.
+    pub dt_buffered_bytes: Gauge,
+    /// In-flight GetBatch executions on this node (as DT).
+    pub dt_inflight: Gauge,
+}
+
+impl GetBatchMetrics {
+    pub fn new() -> Arc<GetBatchMetrics> {
+        Arc::new(GetBatchMetrics::default())
+    }
+
+    /// Prometheus text exposition (§2.4.4 "lightweight, per-node Prometheus
+    /// metrics").
+    pub fn render(&self, node: &str) -> String {
+        let mut out = String::with_capacity(1024);
+        {
+            let mut c = |name: &str, help: &str, v: u64| {
+                out.push_str(&format!(
+                    "# HELP ais_getbatch_{name} {help}\n# TYPE ais_getbatch_{name} counter\nais_getbatch_{name}{{node=\"{node}\"}} {v}\n"
+                ));
+            };
+            c("work_items_total", "executed work items", self.work_items.get());
+            c("objects_delivered_total", "whole objects delivered", self.objs_delivered.get());
+            c("object_bytes_total", "bytes of whole objects delivered", self.obj_bytes.get());
+            c("members_extracted_total", "archive members extracted", self.members_extracted.get());
+            c("member_bytes_total", "bytes of archive members delivered", self.member_bytes.get());
+            c("dt_requests_total", "requests coordinated as DT", self.dt_requests.get());
+            c("sender_entries_total", "entries served as sender", self.sender_entries.get());
+            c("rxwait_ns_total", "cumulative ns waiting for peer senders", self.rxwait_ns.get());
+            c("throttle_ns_total", "cumulative ns slept under local pressure", self.throttle_ns.get());
+            c("hard_failures_total", "aborted requests", self.hard_failures.get());
+            c("admission_rejects_total", "HTTP 429 admission rejections", self.admission_rejects.get());
+            c("soft_errors_total", "tolerated soft errors", self.soft_errors.get());
+            c("recovery_attempts_total", "GFN recovery attempts", self.recovery_attempts.get());
+            c("recovery_failures_total", "failed recoveries", self.recovery_failures.get());
+        }
+        let mut g = |name: &str, help: &str, v: i64| {
+            out.push_str(&format!(
+                "# HELP ais_getbatch_{name} {help}\n# TYPE ais_getbatch_{name} gauge\nais_getbatch_{name}{{node=\"{node}\"}} {v}\n"
+            ));
+        };
+        g("dt_buffered_bytes", "bytes buffered by in-flight assemblies", self.dt_buffered_bytes.get());
+        g("dt_inflight", "in-flight executions as DT", self.dt_inflight.get());
+        out
+    }
+
+    /// Parse an exposition back into name→value (used by tests and the CLI's
+    /// `metrics` subcommand when scraping live nodes).
+    pub fn parse(text: &str) -> BTreeMap<String, f64> {
+        text.lines()
+            .filter(|l| !l.starts_with('#') && !l.is_empty())
+            .filter_map(|l| {
+                let (name_labels, val) = l.rsplit_once(' ')?;
+                let name = name_labels.split('{').next()?.to_string();
+                Some((name, val.parse().ok()?))
+            })
+            .collect()
+    }
+}
+
+/// Global registry keyed by node id — the `/metrics` handler of each node
+/// renders its own entry; tests can inspect the whole cluster.
+#[derive(Default)]
+pub struct Registry {
+    nodes: Mutex<BTreeMap<String, Arc<GetBatchMetrics>>>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    pub fn node(&self, id: &str) -> Arc<GetBatchMetrics> {
+        let mut m = self.nodes.lock().unwrap();
+        Arc::clone(m.entry(id.to_string()).or_insert_with(GetBatchMetrics::new))
+    }
+
+    pub fn render_all(&self) -> String {
+        let m = self.nodes.lock().unwrap();
+        m.iter().map(|(id, met)| met.render(id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = GetBatchMetrics::default();
+        m.work_items.add(10);
+        m.work_items.inc();
+        assert_eq!(m.work_items.get(), 11);
+        m.dt_buffered_bytes.add(100);
+        m.dt_buffered_bytes.sub(40);
+        assert_eq!(m.dt_buffered_bytes.get(), 60);
+    }
+
+    #[test]
+    fn render_and_parse_roundtrip() {
+        let m = GetBatchMetrics::default();
+        m.rxwait_ns.add(123456);
+        m.throttle_ns.add(789);
+        m.soft_errors.add(3);
+        m.dt_inflight.set(2);
+        let text = m.render("t1");
+        let parsed = GetBatchMetrics::parse(&text);
+        assert_eq!(parsed["ais_getbatch_rxwait_ns_total"], 123456.0);
+        assert_eq!(parsed["ais_getbatch_throttle_ns_total"], 789.0);
+        assert_eq!(parsed["ais_getbatch_soft_errors_total"], 3.0);
+        assert_eq!(parsed["ais_getbatch_dt_inflight"], 2.0);
+        assert!(text.contains("node=\"t1\""));
+        assert!(text.contains("# TYPE ais_getbatch_work_items_total counter"));
+    }
+
+    #[test]
+    fn registry_shares_instances() {
+        let r = Registry::new();
+        r.node("a").work_items.inc();
+        r.node("a").work_items.inc();
+        assert_eq!(r.node("a").work_items.get(), 2);
+        assert_eq!(r.node("b").work_items.get(), 0);
+        let all = r.render_all();
+        assert!(all.contains("node=\"a\"") && all.contains("node=\"b\""));
+    }
+}

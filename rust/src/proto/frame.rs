@@ -1,0 +1,189 @@
+//! Target-to-target frame protocol: senders push locally-resolved entries to
+//! the Designated Target over persistent peer connections (§2.3.1 phase 2).
+//!
+//! Binary layout (little-endian), one frame per record:
+//!
+//! ```text
+//! magic  u16   0xA15B
+//! type   u8    1=DATA 2=SOFT_ERR 3=SENDER_DONE
+//! flags  u8    reserved
+//! req    u64   GetBatch execution id
+//! index  u32   request-entry index (DATA/SOFT_ERR) | #satisfied (DONE)
+//! len    u32   payload length
+//! crc    u32   CRC-32 of payload
+//! payload [len]
+//! ```
+//!
+//! CRC protects against silent corruption on the intra-cluster path; a bad
+//! CRC is classified as a *soft* error (transient stream failure, §2.4.2)
+//! so continue-on-error requests survive it.
+
+use std::io::{self, Read, Write};
+
+pub const MAGIC: u16 = 0xA15B;
+pub const HEADER_LEN: usize = 2 + 1 + 1 + 8 + 4 + 4 + 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameType {
+    /// Entry payload (whole entry — entries are bounded by object size).
+    Data = 1,
+    /// Sender could not resolve this entry (missing object/member, read
+    /// failure); payload is a UTF-8 reason.
+    SoftErr = 2,
+    /// Sender finished all entries it owns for this request; `index` holds
+    /// the count it satisfied (lets the DT cross-check completion).
+    SenderDone = 3,
+}
+
+impl FrameType {
+    fn from_u8(b: u8) -> Option<FrameType> {
+        match b {
+            1 => Some(FrameType::Data),
+            2 => Some(FrameType::SoftErr),
+            3 => Some(FrameType::SenderDone),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub ftype: FrameType,
+    pub req_id: u64,
+    pub index: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn data(req_id: u64, index: u32, payload: Vec<u8>) -> Frame {
+        Frame { ftype: FrameType::Data, req_id, index, payload }
+    }
+    pub fn soft_err(req_id: u64, index: u32, reason: &str) -> Frame {
+        Frame { ftype: FrameType::SoftErr, req_id, index, payload: reason.as_bytes().to_vec() }
+    }
+    pub fn sender_done(req_id: u64, satisfied: u32) -> Frame {
+        Frame { ftype: FrameType::SenderDone, req_id, index: satisfied, payload: Vec::new() }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FrameError {
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("bad magic {0:#06x}")]
+    BadMagic(u16),
+    #[error("unknown frame type {0}")]
+    BadType(u8),
+    #[error("crc mismatch on req {req_id} entry {index}")]
+    BadCrc { req_id: u64, index: u32 },
+}
+
+/// Serialize a frame into `out` (clears it first). Separate from the socket
+/// write so the hot path can reuse one scratch buffer per connection.
+pub fn encode_into(f: &Frame, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(HEADER_LEN + f.payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(f.ftype as u8);
+    out.push(0);
+    out.extend_from_slice(&f.req_id.to_le_bytes());
+    out.extend_from_slice(&f.index.to_le_bytes());
+    out.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32fast::hash(&f.payload).to_le_bytes());
+    out.extend_from_slice(&f.payload);
+}
+
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> Result<(), FrameError> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + f.payload.len());
+    encode_into(f, &mut buf);
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read one frame. Returns `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, FrameError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    // First byte decides EOF-vs-truncation.
+    match r.read(&mut hdr[..1])? {
+        0 => return Ok(None),
+        _ => {}
+    }
+    r.read_exact(&mut hdr[1..])?;
+    let magic = u16::from_le_bytes([hdr[0], hdr[1]]);
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let ftype = FrameType::from_u8(hdr[2]).ok_or(FrameError::BadType(hdr[2]))?;
+    let req_id = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+    let index = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+    let len = u32::from_le_bytes(hdr[16..20].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(hdr[20..24].try_into().unwrap());
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    if crc32fast::hash(&payload) != crc {
+        return Err(FrameError::BadCrc { req_id, index });
+    }
+    Ok(Some(Frame { ftype, req_id, index, payload }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let frames = vec![
+            Frame::data(7, 3, vec![1, 2, 3, 4]),
+            Frame::soft_err(7, 9, "missing object"),
+            Frame::sender_done(7, 42),
+            Frame::data(u64::MAX, u32::MAX, vec![]),
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut cur = Cursor::new(&buf);
+        for f in &frames {
+            assert_eq!(&read_frame(&mut cur).unwrap().unwrap(), f);
+        }
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::data(1, 0, vec![9; 100])).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x1;
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(FrameError::BadCrc { req_id: 1, index: 0 })
+        ));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::data(1, 0, vec![])).unwrap();
+        buf[0] = 0;
+        assert!(matches!(read_frame(&mut Cursor::new(&buf)), Err(FrameError::BadMagic(_))));
+    }
+
+    #[test]
+    fn truncated_frame_is_error_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::data(1, 0, vec![5; 50])).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(matches!(read_frame(&mut Cursor::new(&buf)), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn large_payload() {
+        let payload = vec![0xAB; 2 << 20];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::data(2, 1, payload.clone())).unwrap();
+        let f = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(f.payload, payload);
+    }
+}

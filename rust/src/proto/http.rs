@@ -1,0 +1,851 @@
+//! Minimal HTTP/1.1 implementation over blocking sockets (no hyper/tokio in
+//! the offline sandbox). Covers exactly what the GetBatch API needs:
+//!
+//! - request bodies on GET (§2.2 — the JSON entry list rides a GET body);
+//! - 307 redirects (proxy → Designated Target, §2.3.1 phase 3);
+//! - chunked transfer encoding for the DT's streaming TAR response;
+//! - 429 Too Many Requests for admission control (§2.4.3);
+//! - keep-alive with a client-side connection cache (per-request TCP setup
+//!   is precisely the overhead the paper measures — the *baseline* GET path
+//!   can disable reuse to model cold connections).
+
+use std::collections::BTreeMap;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+
+// ---------------------------------------------------------------- types --
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+    pub peer: Option<SocketAddr>,
+}
+
+impl Request {
+    pub fn header(&self, k: &str) -> Option<&str> {
+        self.headers.get(&k.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+    pub fn query_param(&self, k: &str) -> Option<&str> {
+        self.query.get(k).map(|s| s.as_str())
+    }
+}
+
+/// Response body: fully buffered, or a producer that streams via chunked
+/// transfer encoding (the DT's streaming mode).
+pub enum Body {
+    Bytes(Vec<u8>),
+    /// Producer writes the payload to the supplied sink; transfer is chunked.
+    Stream(Box<dyn FnOnce(&mut dyn Write) -> io::Result<()> + Send>),
+}
+
+impl std::fmt::Debug for Body {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Body::Bytes(b) => write!(f, "Bytes({})", b.len()),
+            Body::Stream(_) => write!(f, "Stream"),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Body,
+}
+
+impl Response {
+    pub fn ok(body: Vec<u8>) -> Response {
+        Response { status: 200, headers: Vec::new(), body: Body::Bytes(body) }
+    }
+    pub fn text(status: u16, msg: &str) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), "text/plain".into())],
+            body: Body::Bytes(msg.as_bytes().to_vec()),
+        }
+    }
+    pub fn status(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Body::Bytes(Vec::new()) }
+    }
+    /// 307 Temporary Redirect preserving method+body — proxy → DT handoff.
+    pub fn redirect(location: &str) -> Response {
+        Response {
+            status: 307,
+            headers: vec![("location".into(), location.into())],
+            body: Body::Bytes(Vec::new()),
+        }
+    }
+    pub fn stream(f: impl FnOnce(&mut dyn Write) -> io::Result<()> + Send + 'static) -> Response {
+        Response { status: 200, headers: Vec::new(), body: Body::Stream(Box::new(f)) }
+    }
+    pub fn with_header(mut self, k: &str, v: &str) -> Response {
+        self.headers.push((k.to_string(), v.to_string()));
+        self
+    }
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        307 => "Temporary Redirect",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+// --------------------------------------------------------------- parsing --
+
+fn parse_query(q: &str) -> BTreeMap<String, String> {
+    q.split('&')
+        .filter(|s| !s.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), "true".to_string()),
+        })
+        .collect()
+}
+
+/// Outcome of waiting for the next request on a keep-alive connection.
+enum NextRequest {
+    Req(Request),
+    /// Clean EOF: client closed between requests.
+    Closed,
+    /// Read timeout while idle (no bytes of the next request yet) — caller
+    /// checks the server stop flag and either retries or drops the conn.
+    IdleTimeout,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// `read_line` that retries short read-timeouts once a request has started.
+/// Safe to retry: `read_line` appends to `line`, so partial progress is kept.
+fn read_line_retry(
+    r: &mut BufReader<TcpStream>,
+    line: &mut String,
+    deadline: std::time::Instant,
+) -> io::Result<usize> {
+    loop {
+        match r.read_line(line) {
+            Ok(n) => return Ok(n),
+            Err(e) if is_timeout(&e) && std::time::Instant::now() < deadline => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Read one request from a buffered stream.
+///
+/// The socket's read timeout is short (a shutdown-poll interval); a timeout
+/// *before the first byte* of a request is reported as `IdleTimeout` so the
+/// caller can check the stop flag, while timeouts *inside* a request retry
+/// until `REQUEST_DEADLINE` — a slow client is not a dead connection.
+fn read_request(r: &mut BufReader<TcpStream>, peer: Option<SocketAddr>) -> io::Result<NextRequest> {
+    const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
+    let mut line = String::new();
+    match r.read_line(&mut line) {
+        Ok(0) => return Ok(NextRequest::Closed),
+        Ok(_) => {}
+        Err(e) if is_timeout(&e) && line.is_empty() => return Ok(NextRequest::IdleTimeout),
+        Err(e) if is_timeout(&e) => {
+            // Partial request line: fall through to a retrying read of the
+            // remainder.
+            let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
+            if !line.ends_with('\n') {
+                read_line_retry(r, &mut line, deadline)?;
+            }
+        }
+        Err(e) => return Err(e),
+    }
+    let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
+    let mut parts = line.trim_end().splitn(3, ' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad request line"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target, BTreeMap::new()),
+    };
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut hl = String::new();
+        if read_line_retry(r, &mut hl, deadline)? == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in headers"));
+        }
+        let hl = hl.trim_end();
+        if hl.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = hl.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let mut body = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in body")),
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) && std::time::Instant::now() < deadline => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(NextRequest::Req(Request { method, path, query, headers, body, peer }))
+}
+
+fn write_response(w: &mut BufWriter<&TcpStream>, resp: Response, keep_alive: bool) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", resp.status, status_text(resp.status))?;
+    for (k, v) in &resp.headers {
+        write!(w, "{}: {}\r\n", k, v)?;
+    }
+    write!(w, "connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+    match resp.body {
+        Body::Bytes(b) => {
+            write!(w, "content-length: {}\r\n\r\n", b.len())?;
+            w.write_all(&b)?;
+        }
+        Body::Stream(f) => {
+            write!(w, "transfer-encoding: chunked\r\n\r\n")?;
+            let mut cw = ChunkedWriter { w, chunk_buf: Vec::with_capacity(64 * 1024) };
+            f(&mut cw)?;
+            cw.finish()?;
+        }
+    }
+    w.flush()
+}
+
+/// Chunked-transfer encoder. Buffers small writes into ~64 KiB chunks so the
+/// TAR writer's 512-byte blocks don't become 512-byte chunks on the wire.
+struct ChunkedWriter<'a, 'b> {
+    w: &'a mut BufWriter<&'b TcpStream>,
+    chunk_buf: Vec<u8>,
+}
+
+impl ChunkedWriter<'_, '_> {
+    const FLUSH_AT: usize = 64 * 1024;
+
+    fn emit(&mut self) -> io::Result<()> {
+        if !self.chunk_buf.is_empty() {
+            write!(self.w, "{:x}\r\n", self.chunk_buf.len())?;
+            self.w.write_all(&self.chunk_buf)?;
+            self.w.write_all(b"\r\n")?;
+            self.chunk_buf.clear();
+        }
+        Ok(())
+    }
+
+    fn finish(mut self) -> io::Result<()> {
+        self.emit()?;
+        self.w.write_all(b"0\r\n\r\n")
+    }
+}
+
+impl Write for ChunkedWriter<'_, '_> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.chunk_buf.extend_from_slice(buf);
+        if self.chunk_buf.len() >= Self::FLUSH_AT {
+            self.emit()?;
+        }
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        // Flush the pending chunk to the socket — gives streaming mode real
+        // time-to-first-byte semantics.
+        self.emit()?;
+        self.w.flush()
+    }
+}
+
+// ---------------------------------------------------------------- server --
+
+pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+
+/// A running HTTP server; dropping it stops the accept loop and joins it.
+pub struct HttpServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind to `127.0.0.1:0` (ephemeral port) and serve requests.
+    ///
+    /// Connection scheduling is thread-per-connection: keep-alive means a
+    /// connection can park idle for a long time, so a fixed worker pool
+    /// would be pinned by idle connections (classic blocking-server
+    /// pitfall). Threads are cheap at this scale; `_workers` is kept for
+    /// config compatibility and bounds nothing here.
+    pub fn serve(handler: Handler, _workers: usize, name: &str) -> io::Result<HttpServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let name = name.to_string();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("{name}-accept"))
+            .spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            let h = Arc::clone(&handler);
+                            let st = Arc::clone(&stop2);
+                            if let Ok(t) = std::thread::Builder::new()
+                                .name(format!("{name}-conn"))
+                                .stack_size(256 * 1024)
+                                .spawn(move || serve_connection(stream, peer, h, st))
+                            {
+                                conns.push(t);
+                            }
+                            // opportunistic reaping of finished conn threads
+                            if conns.len() > 64 {
+                                conns.retain(|t| !t.is_finished());
+                            }
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for t in conns {
+                    let _ = t.join();
+                }
+            })
+            .expect("spawn accept loop");
+        Ok(HttpServer { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, peer: SocketAddr, handler: Handler, stop: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    // Short poll so idle keep-alive connections notice server shutdown
+    // instead of pinning a pool worker for the full client idle time.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::with_capacity(64 * 1024, stream);
+    loop {
+        let req = match read_request(&mut reader, Some(peer)) {
+            Ok(NextRequest::Req(r)) => r,
+            Ok(NextRequest::Closed) => return,
+            Ok(NextRequest::IdleTimeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        };
+        let wants_close = req.header("connection").map(|c| c.eq_ignore_ascii_case("close")).unwrap_or(false);
+        let resp = handler(req);
+        let mut w = BufWriter::with_capacity(256 * 1024, &write_half);
+        if write_response(&mut w, resp, !wants_close).is_err() {
+            return;
+        }
+        if wants_close {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- client --
+
+/// Response body reader: content-length-bounded or chunked-decoding stream
+/// over the pooled connection.
+pub struct BodyReader {
+    conn: Option<PooledConn>,
+    mode: BodyMode,
+    pool: Option<Arc<ConnPoolInner>>,
+}
+
+enum BodyMode {
+    Length { remaining: u64 },
+    Chunked { in_chunk: u64, done: bool },
+}
+
+impl Read for BodyReader {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let conn = match &mut self.conn {
+            Some(c) => c,
+            None => return Ok(0),
+        };
+        match &mut self.mode {
+            BodyMode::Length { remaining } => {
+                if *remaining == 0 {
+                    self.recycle();
+                    return Ok(0);
+                }
+                let want = buf.len().min(*remaining as usize);
+                let n = conn.reader.read(&mut buf[..want])?;
+                if n == 0 && *remaining > 0 {
+                    return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "body truncated"));
+                }
+                *remaining -= n as u64;
+                if *remaining == 0 {
+                    self.recycle();
+                }
+                Ok(n)
+            }
+            BodyMode::Chunked { in_chunk, done } => {
+                if *done {
+                    self.recycle();
+                    return Ok(0);
+                }
+                if *in_chunk == 0 {
+                    // read chunk-size line
+                    let mut line = String::new();
+                    conn.reader.read_line(&mut line)?;
+                    let size = u64::from_str_radix(line.trim(), 16)
+                        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad chunk size"))?;
+                    if size == 0 {
+                        // trailing CRLF after last chunk
+                        let mut crlf = String::new();
+                        conn.reader.read_line(&mut crlf)?;
+                        *done = true;
+                        self.recycle();
+                        return Ok(0);
+                    }
+                    *in_chunk = size;
+                }
+                let want = buf.len().min(*in_chunk as usize);
+                let n = conn.reader.read(&mut buf[..want])?;
+                if n == 0 {
+                    return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "chunk truncated"));
+                }
+                *in_chunk -= n as u64;
+                if *in_chunk == 0 {
+                    let mut crlf = [0u8; 2];
+                    conn.reader.read_exact(&mut crlf)?;
+                }
+                Ok(n)
+            }
+        }
+    }
+}
+
+impl BodyReader {
+    fn fully_consumed(&self) -> bool {
+        match &self.mode {
+            BodyMode::Length { remaining } => *remaining == 0,
+            BodyMode::Chunked { done, .. } => *done,
+        }
+    }
+
+    /// Return the connection to the pool once the body is fully read.
+    fn recycle(&mut self) {
+        if let (Some(pool), true) = (&self.pool, self.fully_consumed()) {
+            if let Some(conn) = self.conn.take() {
+                pool.put(conn);
+            }
+        }
+    }
+
+    pub fn read_all(mut self) -> io::Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.read_to_end(&mut out)?;
+        Ok(out)
+    }
+}
+
+impl Drop for BodyReader {
+    fn drop(&mut self) {
+        // Unconsumed body ⇒ connection state is mid-stream; drop the socket
+        // rather than poisoning the pool.
+        self.recycle();
+    }
+}
+
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: BodyReader,
+}
+
+impl ClientResponse {
+    pub fn header(&self, k: &str) -> Option<&str> {
+        self.headers.get(&k.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+    pub fn into_bytes(self) -> io::Result<Vec<u8>> {
+        self.body.read_all()
+    }
+}
+
+struct PooledConn {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+struct ConnPoolInner {
+    conns: Mutex<BTreeMap<String, Vec<PooledConn>>>,
+    max_per_host: usize,
+}
+
+impl ConnPoolInner {
+    fn get(&self, addr: &str) -> Option<PooledConn> {
+        self.conns.lock().unwrap().get_mut(addr).and_then(|v| v.pop())
+    }
+    fn put(&self, conn: PooledConn) {
+        let addr = match conn.stream.peer_addr() {
+            Ok(a) => a.to_string(),
+            Err(_) => return,
+        };
+        let mut m = self.conns.lock().unwrap();
+        let v = m.entry(addr).or_default();
+        if v.len() < self.max_per_host {
+            v.push(conn);
+        }
+    }
+}
+
+/// HTTP client with keep-alive connection reuse. `reuse=false` reproduces
+/// the paper's per-request connection overhead (baseline GET).
+#[derive(Clone)]
+pub struct HttpClient {
+    pool: Arc<ConnPoolInner>,
+    pub reuse: bool,
+    /// Artificial per-request RTT injected before each request — models
+    /// datacenter network round trips on localhost. Zero by default.
+    pub inject_rtt: Duration,
+}
+
+impl Default for HttpClient {
+    fn default() -> Self {
+        HttpClient::new(true)
+    }
+}
+
+impl HttpClient {
+    pub fn new(reuse: bool) -> HttpClient {
+        HttpClient {
+            pool: Arc::new(ConnPoolInner { conns: Mutex::new(BTreeMap::new()), max_per_host: 32 }),
+            reuse,
+            inject_rtt: Duration::ZERO,
+        }
+    }
+
+    pub fn with_rtt(mut self, rtt: Duration) -> HttpClient {
+        self.inject_rtt = rtt;
+        self
+    }
+
+    fn connect(&self, addr: &str) -> io::Result<(PooledConn, bool)> {
+        if self.reuse {
+            if let Some(c) = self.pool.get(addr) {
+                return Ok((c, true));
+            }
+        }
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        let reader = BufReader::with_capacity(256 * 1024, stream.try_clone()?);
+        Ok((PooledConn { reader, stream }, false))
+    }
+
+    /// Issue a request; follows up to 4 temporary redirects (preserving
+    /// method + body, per RFC 9110 §15.4.8 — the proxy→DT handoff).
+    pub fn request(
+        &self,
+        method: &str,
+        addr: &str,
+        path_and_query: &str,
+        body: &[u8],
+    ) -> io::Result<ClientResponse> {
+        let mut addr = addr.to_string();
+        let mut pq = path_and_query.to_string();
+        for _ in 0..5 {
+            let resp = self.request_once(method, &addr, &pq, body)?;
+            if resp.status == 307 {
+                let loc = resp
+                    .header("location")
+                    .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "redirect w/o location"))?
+                    .to_string();
+                // location format: http://host:port/path?query or /path
+                if let Some(rest) = loc.strip_prefix("http://") {
+                    match rest.split_once('/') {
+                        Some((host, tail)) => {
+                            addr = host.to_string();
+                            pq = format!("/{tail}");
+                        }
+                        None => {
+                            addr = rest.to_string();
+                            pq = "/".to_string();
+                        }
+                    }
+                } else {
+                    pq = loc;
+                }
+                continue;
+            }
+            return Ok(resp);
+        }
+        Err(io::Error::new(io::ErrorKind::Other, "too many redirects"))
+    }
+
+    fn request_once(
+        &self,
+        method: &str,
+        addr: &str,
+        path_and_query: &str,
+        body: &[u8],
+    ) -> io::Result<ClientResponse> {
+        // A pooled connection may have been closed server-side since its
+        // last use; retry exactly once on a fresh connection in that case.
+        match self.request_on_conn(method, addr, path_and_query, body) {
+            Ok(r) => Ok(r),
+            Err((retryable, _)) if retryable => self
+                .request_on_conn(method, addr, path_and_query, body)
+                .map_err(|(_, e)| e),
+            Err((_, e)) => Err(e),
+        }
+    }
+
+    /// Returns Err((retryable, error)): retryable = pooled conn died before
+    /// any response byte arrived.
+    fn request_on_conn(
+        &self,
+        method: &str,
+        addr: &str,
+        path_and_query: &str,
+        body: &[u8],
+    ) -> Result<ClientResponse, (bool, io::Error)> {
+        if !self.inject_rtt.is_zero() {
+            std::thread::sleep(self.inject_rtt);
+        }
+        let (mut conn, from_pool) = self.connect(addr).map_err(|e| (false, e))?;
+        let mut head = format!(
+            "{method} {path_and_query} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\n",
+            body.len()
+        );
+        if !self.reuse {
+            head.push_str("connection: close\r\n");
+        }
+        head.push_str("\r\n");
+        // Failures up to the first response byte on a pooled conn are the
+        // stale-keep-alive race — retryable on a fresh connection.
+        let stale = |e: io::Error| (from_pool, e);
+        conn.stream.write_all(head.as_bytes()).map_err(stale)?;
+        conn.stream.write_all(body).map_err(stale)?;
+        conn.stream.flush().map_err(stale)?;
+
+        // status line
+        let mut line = String::new();
+        match conn.reader.read_line(&mut line) {
+            Ok(0) => {
+                return Err(stale(io::Error::new(io::ErrorKind::UnexpectedEof, "no response")))
+            }
+            Ok(_) => {}
+            Err(e) => return Err(stale(e)),
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                (false, io::Error::new(io::ErrorKind::InvalidData, "bad status line"))
+            })?;
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut hl = String::new();
+            conn.reader.read_line(&mut hl).map_err(|e| (false, e))?;
+            let hl = hl.trim_end();
+            if hl.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = hl.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        let chunked = headers
+            .get("transfer-encoding")
+            .map(|v| v.eq_ignore_ascii_case("chunked"))
+            .unwrap_or(false);
+        let mode = if chunked {
+            BodyMode::Chunked { in_chunk: 0, done: false }
+        } else {
+            let len = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
+            BodyMode::Length { remaining: len }
+        };
+        let keep = headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("keep-alive"))
+            .unwrap_or(true)
+            && self.reuse;
+        Ok(ClientResponse {
+            status,
+            headers,
+            body: BodyReader {
+                conn: Some(conn),
+                mode,
+                pool: if keep { Some(Arc::clone(&self.pool)) } else { None },
+            },
+        })
+    }
+
+    pub fn get(&self, addr: &str, pq: &str) -> io::Result<ClientResponse> {
+        self.request("GET", addr, pq, &[])
+    }
+
+    pub fn put(&self, addr: &str, pq: &str, body: &[u8]) -> io::Result<ClientResponse> {
+        self.request("PUT", addr, pq, body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        let handler: Handler = Arc::new(|req: Request| match req.path.as_str() {
+            "/echo" => Response::ok(req.body),
+            "/q" => Response::ok(
+                req.query_param("k").unwrap_or("none").as_bytes().to_vec(),
+            ),
+            "/redir" => Response::redirect("/echo"),
+            "/busy" => Response::text(429, "back off"),
+            "/stream" => Response::stream(|w| {
+                for i in 0..10u32 {
+                    w.write_all(&i.to_le_bytes())?;
+                    w.flush()?;
+                }
+                Ok(())
+            }),
+            _ => Response::status(404),
+        });
+        HttpServer::serve(handler, 4, "test").unwrap()
+    }
+
+    #[test]
+    fn roundtrip_body() {
+        let srv = echo_server();
+        let cl = HttpClient::new(true);
+        let addr = srv.addr.to_string();
+        let resp = cl.request("GET", &addr, "/echo", b"hello body on GET").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.into_bytes().unwrap(), b"hello body on GET");
+    }
+
+    #[test]
+    fn query_params() {
+        let srv = echo_server();
+        let cl = HttpClient::new(true);
+        let resp = cl.get(&srv.addr.to_string(), "/q?k=v1&x=2").unwrap();
+        assert_eq!(resp.into_bytes().unwrap(), b"v1");
+    }
+
+    #[test]
+    fn redirect_preserves_method_and_body() {
+        let srv = echo_server();
+        let cl = HttpClient::new(true);
+        let resp = cl.request("GET", &srv.addr.to_string(), "/redir", b"payload").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.into_bytes().unwrap(), b"payload");
+    }
+
+    #[test]
+    fn status_429_passthrough() {
+        let srv = echo_server();
+        let cl = HttpClient::new(true);
+        let resp = cl.get(&srv.addr.to_string(), "/busy").unwrap();
+        assert_eq!(resp.status, 429);
+    }
+
+    #[test]
+    fn chunked_streaming_body() {
+        let srv = echo_server();
+        let cl = HttpClient::new(true);
+        let resp = cl.get(&srv.addr.to_string(), "/stream").unwrap();
+        let bytes = resp.into_bytes().unwrap();
+        assert_eq!(bytes.len(), 40);
+        let v: Vec<u32> = bytes.chunks(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(v, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn keep_alive_reuses_connection() {
+        let srv = echo_server();
+        let cl = HttpClient::new(true);
+        let addr = srv.addr.to_string();
+        for i in 0..20 {
+            let resp = cl.request("GET", &addr, "/echo", format!("r{i}").as_bytes()).unwrap();
+            assert_eq!(resp.into_bytes().unwrap(), format!("r{i}").as_bytes());
+        }
+        // pool should hold exactly one idle connection for this host
+        assert_eq!(cl.pool.conns.lock().unwrap().get(&addr).map(|v| v.len()), Some(1));
+    }
+
+    #[test]
+    fn no_reuse_mode() {
+        let srv = echo_server();
+        let cl = HttpClient::new(false);
+        let addr = srv.addr.to_string();
+        for _ in 0..3 {
+            let resp = cl.get(&addr, "/q?k=z").unwrap();
+            assert_eq!(resp.into_bytes().unwrap(), b"z");
+        }
+        assert!(cl.pool.conns.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn not_found() {
+        let srv = echo_server();
+        let cl = HttpClient::new(true);
+        let resp = cl.get(&srv.addr.to_string(), "/nope").unwrap();
+        assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let srv = echo_server();
+        let addr = srv.addr.to_string();
+        let results = crate::util::threadpool::scoped_map(
+            &(0..32).collect::<Vec<u32>>(),
+            8,
+            |_, &i| {
+                let cl = HttpClient::new(true);
+                let resp = cl.request("GET", &addr, "/echo", format!("c{i}").as_bytes()).unwrap();
+                resp.into_bytes().unwrap()
+            },
+        );
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r, format!("c{i}").as_bytes());
+        }
+    }
+}

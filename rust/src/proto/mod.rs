@@ -1,0 +1,7 @@
+//! Wire protocols: minimal HTTP/1.1 (client ⇄ proxy/target), the P2P frame
+//! protocol used between targets (sender → DT fan-in), and the GetBatch
+//! JSON request/response schema.
+
+pub mod http;
+pub mod frame;
+pub mod wire;

@@ -1,0 +1,170 @@
+//! Control-plane messages and URL layout for the GetBatch execution flow
+//! (§2.3.1): DT registration, sender activation, and the public API paths.
+
+use crate::batch::request::BatchRequest;
+use crate::util::json::Value;
+
+/// Public API paths (client ⇄ proxy/target).
+pub mod paths {
+    /// GET/PUT a single object: `/v1/objects/{bucket}/{obj...}`.
+    pub const OBJECTS: &str = "/v1/objects/";
+    /// GetBatch: GET with JSON body: `/v1/batch`.
+    pub const BATCH: &str = "/v1/batch";
+    /// Intra-cluster: DT registration (proxy → target).
+    pub const DT_REGISTER: &str = "/v1/xact/dt-register";
+    /// Intra-cluster: sender activation broadcast (proxy → targets).
+    pub const SENDER_ACTIVATE: &str = "/v1/xact/sender-activate";
+    /// DT serves the assembled stream here after redirect (client → DT).
+    pub const DT_STREAM: &str = "/v1/xact/stream";
+    /// Prometheus exposition.
+    pub const METRICS: &str = "/metrics";
+    /// Cluster map for SDK bootstrap.
+    pub const SMAP: &str = "/v1/cluster/smap";
+    /// Health check.
+    pub const HEALTH: &str = "/v1/health";
+}
+
+/// Query parameter carrying the colocation hint (§2.4.1: "clients provide a
+/// colocation hint via a query parameter" so the proxy knows to unmarshal).
+pub const QPARAM_COLOC: &str = "coloc";
+/// Query parameter carrying the execution id on intra-cluster calls.
+pub const QPARAM_REQ_ID: &str = "req";
+
+/// DT registration payload: the full batch request, forwarded verbatim by
+/// the proxy (phase 1 — the proxy does *not* unmarshal it in the default
+/// opaque-routing mode; it re-serializes only when colocation was applied).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DtRegister {
+    pub req_id: u64,
+    pub request: BatchRequest,
+    /// How many senders will be activated (so the DT knows when fan-in is
+    /// complete even if it owns zero entries).
+    pub num_senders: u32,
+}
+
+impl DtRegister {
+    /// Build the wire body splicing an already-serialized request verbatim
+    /// (proxy hot path: no re-serialization of the entry list).
+    pub fn body_with_raw(req_id: u64, num_senders: u32, raw_request: &str) -> Vec<u8> {
+        format!(
+            "{{\"num_senders\":{num_senders},\"req_id\":{req_id},\"request\":{raw_request}}}"
+        )
+        .into_bytes()
+    }
+
+    pub fn to_body(&self) -> Vec<u8> {
+        Value::obj()
+            .set("req_id", Value::num(self.req_id as f64))
+            .set("num_senders", Value::num(self.num_senders as f64))
+            .set("request", self.request.to_json())
+            .to_string()
+            .into_bytes()
+    }
+
+    pub fn from_body(b: &[u8]) -> Option<DtRegister> {
+        let v = Value::parse(std::str::from_utf8(b).ok()?).ok()?;
+        Some(DtRegister {
+            req_id: v.u64_field("req_id")?,
+            num_senders: v.u64_field("num_senders")? as u32,
+            request: BatchRequest::from_json(v.get("request")?)?,
+        })
+    }
+}
+
+/// Sender activation payload (phase 2): tells a target which execution to
+/// join and where the DT's peer endpoint is. Each sender re-derives its own
+/// slice of the entry list from placement — senders are autonomous (§2.3.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SenderActivate {
+    pub req_id: u64,
+    /// P2P address (host:port) of the DT's transport endpoint.
+    pub dt_peer: String,
+    pub request: BatchRequest,
+}
+
+impl SenderActivate {
+    /// Raw-splice variant (see `DtRegister::body_with_raw`).
+    pub fn body_with_raw(req_id: u64, dt_peer: &str, raw_request: &str) -> Vec<u8> {
+        format!(
+            "{{\"dt_peer\":\"{dt_peer}\",\"req_id\":{req_id},\"request\":{raw_request}}}"
+        )
+        .into_bytes()
+    }
+
+    pub fn to_body(&self) -> Vec<u8> {
+        Value::obj()
+            .set("req_id", Value::num(self.req_id as f64))
+            .set("dt_peer", Value::str(&self.dt_peer))
+            .set("request", self.request.to_json())
+            .to_string()
+            .into_bytes()
+    }
+
+    pub fn from_body(b: &[u8]) -> Option<SenderActivate> {
+        let v = Value::parse(std::str::from_utf8(b).ok()?).ok()?;
+        Some(SenderActivate {
+            req_id: v.u64_field("req_id")?,
+            dt_peer: v.str_field("dt_peer")?.to_string(),
+            request: BatchRequest::from_json(v.get("request")?)?,
+        })
+    }
+}
+
+/// Split an object-API path: `/v1/objects/{bucket}/{obj...}` → (bucket, obj).
+pub fn parse_object_path(path: &str) -> Option<(String, String)> {
+    let rest = path.strip_prefix(paths::OBJECTS)?;
+    let (bucket, obj) = rest.split_once('/')?;
+    if bucket.is_empty() || obj.is_empty() {
+        return None;
+    }
+    Some((bucket.to_string(), obj.to_string()))
+}
+
+pub fn object_path(bucket: &str, obj: &str) -> String {
+    format!("{}{}/{}", paths::OBJECTS, bucket, obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::request::BatchEntry;
+
+    fn req() -> BatchRequest {
+        BatchRequest::new(vec![
+            BatchEntry::obj("b", "o1"),
+            BatchEntry::member("b", "s.tar", "m1"),
+        ])
+        .continue_on_err(true)
+    }
+
+    #[test]
+    fn dt_register_roundtrip() {
+        let m = DtRegister { req_id: 99, request: req(), num_senders: 15 };
+        let back = DtRegister::from_body(&m.to_body()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn sender_activate_roundtrip() {
+        let m = SenderActivate { req_id: 7, dt_peer: "127.0.0.1:9999".into(), request: req() };
+        let back = SenderActivate::from_body(&m.to_body()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn object_path_parse() {
+        assert_eq!(
+            parse_object_path("/v1/objects/audio/shards/s-001.tar"),
+            Some(("audio".into(), "shards/s-001.tar".into()))
+        );
+        assert_eq!(parse_object_path("/v1/objects/audio"), None);
+        assert_eq!(parse_object_path("/v1/other/x/y"), None);
+        assert_eq!(object_path("b", "o/p"), "/v1/objects/b/o/p");
+    }
+
+    #[test]
+    fn malformed_control_bodies() {
+        assert!(DtRegister::from_body(b"{}").is_none());
+        assert!(SenderActivate::from_body(b"junk").is_none());
+    }
+}

@@ -1,0 +1,3 @@
+//! PJRT runtime: loads AOT HLO artifacts and runs the training step.
+pub mod pjrt;
+pub mod trainer;

@@ -1,0 +1,209 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! ``python/compile/aot.py`` and execute them on the CPU PJRT client via the
+//! `xla` crate. This is the only place the training path touches XLA —
+//! python never runs at request time.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+/// Model metadata emitted next to the artifacts (shapes, arity, config).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_param_tensors: usize,
+    pub n_params: u64,
+    pub token_capacity: usize,
+    pub pad_id: i32,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        let v = Value::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        Ok(ModelMeta {
+            vocab: v.u64_field("vocab").context("vocab")? as usize,
+            seq_len: v.u64_field("seq_len").context("seq_len")? as usize,
+            batch: v.u64_field("batch").context("batch")? as usize,
+            n_param_tensors: v.u64_field("n_param_tensors").context("n_param_tensors")? as usize,
+            n_params: v.u64_field("n_params").context("n_params")?,
+            token_capacity: v.u64_field("token_capacity").context("token_capacity")? as usize,
+            pad_id: v.u64_field("pad_id").unwrap_or(0) as i32,
+        })
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU client with the three model programs.
+pub struct Runtime {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    init: Executable,
+    collate: Executable,
+    train_step: Executable,
+    /// Serializes execute calls (the CPU client is not thread-safe for our
+    /// usage pattern; training is single-stream anyway).
+    lock: Mutex<()>,
+}
+
+fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<Executable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+    )
+    .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+    Ok(Executable { exe })
+}
+
+impl Runtime {
+    /// Load `init.hlo.txt`, `collate.hlo.txt`, `train_step.hlo.txt` from
+    /// `dir` and compile them once.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let meta = ModelMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let init = load_exe(&client, &dir.join("init.hlo.txt"))?;
+        let collate = load_exe(&client, &dir.join("collate.hlo.txt"))?;
+        let train_step = load_exe(&client, &dir.join("train_step.hlo.txt"))?;
+        Ok(Runtime { meta, client, init, collate, train_step, lock: Mutex::new(()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run(&self, exe: &Executable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let _g = self.lock.lock().unwrap();
+        let mut result = exe
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let tuple = result.decompose_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        Ok(tuple)
+    }
+
+    /// Initialize parameters from a seed → flat param tensor list.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<xla::Literal>> {
+        let seed_lit = xla::Literal::scalar(seed);
+        self.run(&self.init, &[seed_lit])
+    }
+
+    /// Collate a flat token buffer + offsets into (batch, mask) literals.
+    /// `flat` must have exactly `meta.token_capacity` elements and
+    /// `offsets` exactly `meta.batch + 1`.
+    pub fn collate(&self, flat: &[i32], offsets: &[i32]) -> Result<(xla::Literal, xla::Literal)> {
+        anyhow::ensure!(flat.len() == self.meta.token_capacity, "flat buffer size");
+        anyhow::ensure!(offsets.len() == self.meta.batch + 1, "offsets size");
+        let flat_lit = xla::Literal::vec1(flat);
+        let off_lit = xla::Literal::vec1(offsets);
+        let mut out = self.run(&self.collate, &[flat_lit, off_lit])?;
+        anyhow::ensure!(out.len() == 2, "collate arity");
+        let mask = out.pop().unwrap();
+        let batch = out.pop().unwrap();
+        Ok((batch, mask))
+    }
+
+    /// One SGD step: params + (batch, mask) → (new params, loss).
+    pub fn train_step(
+        &self,
+        params: Vec<xla::Literal>,
+        batch: xla::Literal,
+        mask: xla::Literal,
+    ) -> Result<(Vec<xla::Literal>, f32)> {
+        anyhow::ensure!(params.len() == self.meta.n_param_tensors, "param arity");
+        let mut args = params;
+        args.push(batch);
+        args.push(mask);
+        let mut out = self.run(&self.train_step, &args)?;
+        anyhow::ensure!(out.len() == self.meta.n_param_tensors + 1, "train_step arity");
+        let loss_lit = out.pop().unwrap();
+        let loss = loss_lit.to_vec::<f32>().map_err(|e| anyhow!("loss: {e}"))?[0];
+        Ok((out, loss))
+    }
+}
+
+/// Build the (flat, offsets) collate inputs from raw per-sample byte
+/// payloads fetched by the loader: byte-level tokenization (vocab 256),
+/// truncated/padded to the artifact's static capacity.
+pub fn tokens_from_samples(
+    meta: &ModelMeta,
+    samples: &[Vec<u8>],
+) -> (Vec<i32>, Vec<i32>) {
+    let mut flat = Vec::with_capacity(meta.token_capacity);
+    let mut offsets = Vec::with_capacity(meta.batch + 1);
+    offsets.push(0i32);
+    for i in 0..meta.batch {
+        let data: &[u8] = samples.get(i).map(|v| v.as_slice()).unwrap_or(&[]);
+        let room = meta.token_capacity - flat.len();
+        let take = data.len().min(room).min(meta.seq_len);
+        flat.extend(data[..take].iter().map(|&b| b as i32));
+        offsets.push(flat.len() as i32);
+    }
+    flat.resize(meta.token_capacity, 0);
+    (flat, offsets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Execution tests live in rust/tests/runtime_hlo.rs (they need the
+    // artifacts built); here we cover the pure helpers.
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 256,
+            seq_len: 8,
+            batch: 3,
+            n_param_tensors: 25,
+            n_params: 1,
+            token_capacity: 48,
+            pad_id: 0,
+        }
+    }
+
+    #[test]
+    fn tokenizer_packs_and_offsets() {
+        let m = meta();
+        let samples = vec![vec![1u8, 2, 3], vec![], vec![9; 20]];
+        let (flat, off) = tokens_from_samples(&m, &samples);
+        assert_eq!(flat.len(), m.token_capacity);
+        assert_eq!(off, vec![0, 3, 3, 11]); // 20 truncated to seq_len=8
+        assert_eq!(&flat[..3], &[1, 2, 3]);
+        assert_eq!(&flat[3..11], &[9i32; 8][..]);
+        assert_eq!(flat[11], 0); // padded tail
+    }
+
+    #[test]
+    fn tokenizer_respects_capacity() {
+        let m = meta();
+        let samples = vec![vec![7u8; 100], vec![8; 100], vec![9; 100]];
+        let (flat, off) = tokens_from_samples(&m, &samples);
+        assert_eq!(flat.len(), m.token_capacity);
+        assert!(*off.last().unwrap() as usize <= m.token_capacity);
+        // every sample truncated to seq_len
+        assert_eq!(off[1] - off[0], 8);
+    }
+
+    #[test]
+    fn meta_parse_errors_are_actionable() {
+        let dir = std::env::temp_dir().join(format!("gbmeta-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = ModelMeta::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,90 @@
+//! Training loop driver: data loader → collate HLO → train-step HLO.
+//! The §4 end-to-end analog: same model/hyperparameters, only the data
+//! access method differs between runs.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::client::loader::DataLoader;
+use crate::util::stats::{LatencyRow, Samples};
+
+use super::pjrt::{tokens_from_samples, Runtime};
+
+/// Per-run report: the loss curve plus the data-stall latency profile.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub mode: &'static str,
+    pub losses: Vec<f32>,
+    /// Data-loading latency per step (ms) — the stall the paper ties to GPU
+    /// idle cycles.
+    pub load_ms: LatencyRow,
+    /// Compute (train-step execution) per step (ms).
+    pub step_ms: LatencyRow,
+    pub total_secs: f64,
+}
+
+/// Train for `steps` steps pulling batches through `loader`.
+pub fn train(rt: &Runtime, loader: &mut DataLoader, steps: usize, seed: i32) -> Result<TrainReport> {
+    let t_start = Instant::now();
+    let mut params = rt.init_params(seed)?;
+    let mut losses = Vec::with_capacity(steps);
+    let mut load_lat = Samples::new();
+    let mut step_lat = Samples::new();
+
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        let (samples, _timing) = loader.next_batch()?;
+        let payloads: Vec<Vec<u8>> = samples.into_iter().map(|s| s.data).collect();
+        let (flat, offsets) = tokens_from_samples(&rt.meta, &payloads);
+        load_lat.add_duration(t0.elapsed());
+
+        let t1 = Instant::now();
+        let (batch, mask) = rt.collate(&flat, &offsets)?;
+        let (new_params, loss) = rt.train_step(params, batch, mask)?;
+        step_lat.add_duration(t1.elapsed());
+        params = new_params;
+        losses.push(loss);
+    }
+
+    Ok(TrainReport {
+        mode: loader.mode.name(),
+        losses,
+        load_ms: load_lat.row(),
+        step_ms: step_lat.row(),
+        total_secs: t_start.elapsed().as_secs_f64(),
+    })
+}
+
+/// Load artifacts from the conventional location, probing upwards so
+/// examples work from any working directory in the repo.
+pub fn artifacts_dir() -> Result<std::path::PathBuf> {
+    for base in [".", "..", "../.."] {
+        let p = Path::new(base).join("artifacts");
+        if p.join("meta.json").is_file() {
+            return Ok(p);
+        }
+    }
+    anyhow::bail!("artifacts/ not found — run `make artifacts` first")
+}
+
+/// Smoothed final loss (mean of the last k) for convergence assertions.
+pub fn final_loss(losses: &[f32], k: usize) -> f32 {
+    let k = k.min(losses.len()).max(1);
+    let tail = &losses[losses.len() - k..];
+    tail.iter().sum::<f32>() / k as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_loss_mean() {
+        let l = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(final_loss(&l, 2), 1.5);
+        assert_eq!(final_loss(&l, 100), 3.0);
+        assert_eq!(final_loss(&l[..1], 3), 5.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! The sender role (§2.3.1 phase 2): upon activation, a target
+//! independently determines which request entries it owns — whole objects
+//! or members of locally stored shards — reads them, and pushes the
+//! payloads to the DT over the pooled P2P transport. Senders are
+//! autonomous: no sender-to-sender coordination, delivery starts as soon as
+//! local reads complete.
+
+use std::sync::Arc;
+
+use crate::batch::request::BatchEntry;
+use crate::cluster::placement;
+use crate::cluster::smap::Smap;
+use crate::metrics::GetBatchMetrics;
+use crate::proto::frame::Frame;
+use crate::proto::wire::SenderActivate;
+use crate::store::shard::ShardError;
+use crate::store::{ObjectStore, ShardIndexCache, StoreError};
+use crate::transport::PeerPool;
+
+/// Resolve one entry from the local store.
+pub fn resolve_entry(
+    store: &ObjectStore,
+    shards: &ShardIndexCache,
+    e: &BatchEntry,
+) -> Result<Vec<u8>, String> {
+    match &e.archpath {
+        None => store.get(&e.bucket, &e.obj).map_err(|err| match err {
+            StoreError::NotFound(k) => format!("missing object {k}"),
+            StoreError::Io(io) => format!("read failure: {io}"),
+        }),
+        Some(member) => shards.extract(store, &e.bucket, &e.obj, member).map_err(|err| match err {
+            ShardError::MemberNotFound { shard, member } => {
+                format!("missing member {shard}!{member}")
+            }
+            ShardError::Store(StoreError::NotFound(k)) => format!("missing object {k}"),
+            other => format!("read failure: {other}"),
+        }),
+    }
+}
+
+/// Execute a sender activation: read every locally-owned entry and stream
+/// it to the DT, then emit SENDER_DONE. Runs on the target's background
+/// pool. Entries stream one-by-one (`send_iter`) so transmission overlaps
+/// the next disk read.
+pub fn run_sender(
+    act: &SenderActivate,
+    smap: &Smap,
+    self_target: usize,
+    store: &Arc<ObjectStore>,
+    shards: &ShardIndexCache,
+    pool: &Arc<PeerPool>,
+    metrics: &GetBatchMetrics,
+    readahead: Option<&crate::util::threadpool::ThreadPool>,
+) {
+    let mine = placement::local_entries(smap, &act.request, self_target);
+    if mine.is_empty() {
+        // Still signal DONE so the DT's completion accounting balances.
+        let _ = pool.send(&act.dt_peer, &[Frame::sender_done(act.req_id, 0)]);
+        return;
+    }
+
+    // Read-ahead workers warm the page cache for upcoming local reads
+    // (§2.4.3). Best-effort: errors surface on the real read below.
+    if let Some(ra) = readahead {
+        for (_, e) in mine.iter().skip(1).take(8) {
+            let store = Arc::clone(store);
+            let bucket = e.bucket.clone();
+            let obj = e.obj.clone();
+            ra.execute(move || {
+                // Touch the head of the file; the OS pulls pages in.
+                let _ = store.get_range(&bucket, &obj, 0, store.size(&bucket, &obj).unwrap_or(0).min(256 << 10));
+            });
+        }
+    }
+
+    let req_id = act.req_id;
+    let mut satisfied: u32 = 0;
+    let frames = mine.iter().map(|(idx, e)| match resolve_entry(store, shards, e) {
+        Ok(data) => {
+            satisfied += 1;
+            metrics.sender_entries.inc();
+            Frame::data(req_id, *idx, data)
+        }
+        Err(reason) => Frame::soft_err(req_id, *idx, &reason),
+    });
+    // Chain SENDER_DONE after the last entry on the same connection so the
+    // DT observes completion only after all data frames.
+    let mut all: Vec<Frame> = frames.collect();
+    let done = Frame::sender_done(req_id, satisfied);
+    all.push(done);
+    if pool.send(&act.dt_peer, &all).is_err() {
+        // P2P path down: the DT's sender-wait timeout + GFN recovery take
+        // over; nothing else to do here.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::request::BatchRequest;
+    use crate::cluster::smap::NodeInfo;
+    use crate::tar::{write_archive, Entry};
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn setup(name: &str) -> (Arc<ObjectStore>, ShardIndexCache, PathBuf) {
+        let base = std::env::temp_dir().join(format!("gbsend-{}-{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        (Arc::new(ObjectStore::open(&base, 2).unwrap()), ShardIndexCache::new(16), base)
+    }
+
+    #[test]
+    fn resolve_object_and_member() {
+        let (store, shards, base) = setup("resolve");
+        store.put("b", "o", b"data").unwrap();
+        let archive = write_archive(&[Entry { name: "m.wav".into(), data: vec![7; 10] }]).unwrap();
+        store.put("b", "s.tar", &archive).unwrap();
+
+        assert_eq!(resolve_entry(&store, &shards, &BatchEntry::obj("b", "o")).unwrap(), b"data");
+        assert_eq!(
+            resolve_entry(&store, &shards, &BatchEntry::member("b", "s.tar", "m.wav")).unwrap(),
+            vec![7; 10]
+        );
+        let e = resolve_entry(&store, &shards, &BatchEntry::obj("b", "nope")).unwrap_err();
+        assert!(e.starts_with("missing object"), "{e}");
+        let e =
+            resolve_entry(&store, &shards, &BatchEntry::member("b", "s.tar", "zz")).unwrap_err();
+        assert!(e.starts_with("missing member"), "{e}");
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn sender_streams_local_entries_and_done() {
+        let (store, shards, base) = setup("stream");
+        // single-target smap: this sender owns everything
+        let smap = Smap::new(
+            1,
+            vec![],
+            vec![NodeInfo { id: "t0".into(), http_addr: String::new(), p2p_addr: String::new() }],
+        );
+        for i in 0..5 {
+            store.put("b", &format!("o{i}"), format!("payload-{i}").as_bytes()).unwrap();
+        }
+        store.put("b", "gone", b"x").unwrap();
+        store.delete("b", "gone").unwrap();
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let tx = std::sync::Mutex::new(tx);
+        let p2p = crate::transport::P2pServer::serve(
+            Arc::new(move |f| {
+                let _ = tx.lock().unwrap().send(f);
+            }),
+            "dt",
+        )
+        .unwrap();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        let metrics = GetBatchMetrics::new();
+
+        let mut entries: Vec<BatchEntry> =
+            (0..5).map(|i| BatchEntry::obj("b", &format!("o{i}"))).collect();
+        entries.push(BatchEntry::obj("b", "gone"));
+        let act = SenderActivate {
+            req_id: 11,
+            dt_peer: p2p.addr.to_string(),
+            request: BatchRequest::new(entries),
+        };
+        run_sender(&act, &smap, 0, &store, &shards, &pool, &metrics, None);
+
+        let mut data = 0;
+        let mut soft = 0;
+        let mut done = 0;
+        for _ in 0..7 {
+            let f = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!(f.req_id, 11);
+            match f.ftype {
+                crate::proto::frame::FrameType::Data => {
+                    assert_eq!(
+                        f.payload,
+                        format!("payload-{}", f.index).as_bytes(),
+                        "index/payload aligned"
+                    );
+                    data += 1;
+                }
+                crate::proto::frame::FrameType::SoftErr => {
+                    assert_eq!(f.index, 5);
+                    soft += 1;
+                }
+                crate::proto::frame::FrameType::SenderDone => {
+                    assert_eq!(f.index, 5, "satisfied count");
+                    done += 1;
+                }
+            }
+        }
+        assert_eq!((data, soft, done), (5, 1, 1));
+        assert_eq!(metrics.sender_entries.get(), 5);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn sender_with_no_local_entries_sends_done_only() {
+        let (store, shards, base) = setup("empty");
+        // two targets; choose the one that owns nothing for this request
+        let smap = Smap::new(
+            1,
+            vec![],
+            (0..2)
+                .map(|i| NodeInfo {
+                    id: format!("t{i}"),
+                    http_addr: String::new(),
+                    p2p_addr: String::new(),
+                })
+                .collect(),
+        );
+        let req = BatchRequest::new(vec![BatchEntry::obj("b", "o1")]);
+        let owner = placement::entry_owner(&smap, &req.entries[0]);
+        let other = 1 - owner;
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let tx = std::sync::Mutex::new(tx);
+        let p2p = crate::transport::P2pServer::serve(
+            Arc::new(move |f| {
+                let _ = tx.lock().unwrap().send(f);
+            }),
+            "dt",
+        )
+        .unwrap();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        let metrics = GetBatchMetrics::new();
+        let act = SenderActivate { req_id: 9, dt_peer: p2p.addr.to_string(), request: req };
+        run_sender(&act, &smap, other, &store, &shards, &pool, &metrics, None);
+        let f = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(f.ftype, crate::proto::frame::FrameType::SenderDone);
+        assert_eq!(f.index, 0);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+}

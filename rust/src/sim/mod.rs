@@ -1,0 +1,5 @@
+//! Discrete-event cluster simulator (paper-scale experiments). See event.rs.
+pub mod event;
+pub mod model;
+pub mod cluster;
+pub mod workload;

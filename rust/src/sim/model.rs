@@ -1,0 +1,88 @@
+//! Cost model: the paper's OCI testbed (§3 cluster configuration) expressed
+//! as service-time constants. Absolute values are calibrated so the
+//! *baseline* GET column of Table 1 lands near the paper's numbers; the
+//! GetBatch columns then emerge from the execution model, not from fitting.
+
+/// All times in ns, bandwidths in bytes/s.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub nodes: usize,
+    pub disks_per_node: usize,
+    /// Per-IO latency of one NVMe read (queue + seek + firmware).
+    pub disk_io_ns: u64,
+    /// Per-disk sequential read bandwidth.
+    pub disk_bw: f64,
+    /// Node NIC bandwidth (100 Gbps).
+    pub nic_bw: f64,
+    /// Effective single-TCP-stream bandwidth (window/congestion bound).
+    pub stream_bw: f64,
+    /// One network round trip (client↔cluster or target↔target).
+    pub rtt_ns: u64,
+    /// Control-plane cost of one independent GET: connection handling,
+    /// HTTP parse, request scheduling at proxy + target.
+    pub per_request_cpu_ns: u64,
+    /// Per-entry cost inside a GetBatch at a *sender* (no connection setup,
+    /// no HTTP parse — just read scheduling + framing).
+    pub batch_entry_cpu_ns: u64,
+    /// Per-entry cost at the DT (ordering + TAR serialization).
+    pub dt_entry_cpu_ns: u64,
+    /// Fixed cost of one GetBatch execution (register + broadcast + state).
+    pub batch_fixed_cpu_ns: u64,
+    /// CPU worker slots per node.
+    pub cpu_slots: usize,
+    /// Heavy-tail service noise: fraction of ops hit by a straggler factor.
+    pub straggler_p: f64,
+    pub straggler_mult: f64,
+}
+
+impl CostModel {
+    /// The §3 testbed: 16 × BM.DenseIO.E5.128 (128 OCPU, 12 NVMe, 100 Gbps).
+    pub fn oci_16node() -> CostModel {
+        CostModel {
+            nodes: 16,
+            disks_per_node: 12,
+            disk_io_ns: 80_000,            // 80 µs NVMe read latency
+            disk_bw: 3.0e9,                // 3 GB/s per drive
+            nic_bw: 12.5e9,                // 100 Gbps
+            stream_bw: 0.55e9,             // single TCP stream ceiling
+            rtt_ns: 250_000,               // 0.25 ms intra-AZ RTT
+            per_request_cpu_ns: 500_000,   // ≈0.5 ms per independent GET
+            batch_entry_cpu_ns: 50_000,    // 50 µs per batched entry (sender)
+            dt_entry_cpu_ns: 60_000,       // 60 µs per entry at the DT (ordering + TAR)
+            batch_fixed_cpu_ns: 2_000_000, // register + broadcast
+            cpu_slots: 256,            // 128 OCPU / SMT
+            straggler_p: 0.02,
+            straggler_mult: 8.0,
+        }
+    }
+
+    /// Disk service time for reading `bytes` in one IO chain.
+    pub fn disk_ns(&self, bytes: u64) -> u64 {
+        self.disk_io_ns + (bytes as f64 / self.disk_bw * 1e9) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oci_constants_sane() {
+        let m = CostModel::oci_16node();
+        assert_eq!(m.nodes, 16);
+        assert_eq!(m.nodes * m.disks_per_node, 192); // the paper's 192 NVMe
+        assert!(m.stream_bw < m.nic_bw);
+        assert!(
+            m.batch_entry_cpu_ns <= m.per_request_cpu_ns / 10,
+            "batching must amortize an order of magnitude of per-request cost"
+        );
+    }
+
+    #[test]
+    fn disk_time_scales_with_size() {
+        let m = CostModel::oci_16node();
+        assert!(m.disk_ns(1 << 20) > m.disk_ns(10 << 10));
+        // 10 KiB read is latency-dominated
+        assert!(m.disk_ns(10 << 10) < 2 * m.disk_io_ns);
+    }
+}

@@ -1,0 +1,316 @@
+//! Workload drivers over the simulated cluster.
+//!
+//! - `run_synthetic` (§3): closed-loop uniform-size workers — regenerates
+//!   Table 1 / Figure 3 (sustained GiB/s per configuration).
+//! - `run_training` (§4.2): bursty synchronous loaders with log-normal
+//!   "audio-like" sample sizes — regenerates Table 2 (batch & per-object
+//!   latency percentiles) for the three access methods.
+//!
+//! Both drivers are event-driven: GetBatch executions are split into their
+//! §2.3.1 phases (register → fan-in → ordered stream out) and interleaved
+//! in global virtual-time order, so one request's long tail never blocks
+//! another's early resource acquisitions (see sim/cluster.rs).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::client::loader::AccessMode;
+use crate::util::rng::Rng;
+use crate::util::stats::{LatencyRow, Samples, Throughput};
+
+use super::cluster::{BatchPhase1, SimCluster};
+use super::model::CostModel;
+
+/// Result of one synthetic configuration run.
+#[derive(Debug, Clone)]
+pub struct SyntheticResult {
+    pub label: String,
+    pub throughput: Throughput,
+    pub batch_latency_ms: LatencyRow,
+}
+
+enum Phase {
+    Issue,
+    FanIn(Box<BatchPhase1>),
+    Out(Box<BatchPhase1>, u64),
+}
+
+struct Ev {
+    t: u64,
+    worker: usize,
+    phase: Phase,
+}
+
+/// Closed-loop synthetic benchmark: `workers` clients issue back-to-back
+/// requests for `sim_seconds` of virtual time (§3.1: 80 workers, steady
+/// state). `batch` = None → individual GET per object.
+pub fn run_synthetic(
+    m: &CostModel,
+    workers: usize,
+    object_size: u64,
+    batch: Option<usize>,
+    sim_seconds: f64,
+    seed: u64,
+) -> SyntheticResult {
+    let mut cluster = SimCluster::new(m.clone(), seed);
+    let horizon = (sim_seconds * 1e9) as u64;
+    let mut lat = Samples::new();
+    let mut bytes = 0u64;
+    let mut ops = 0u64;
+    let mut issue_at: Vec<u64> = vec![0; workers]; // per-worker request start
+    let mut heap: BinaryHeap<Reverse<(u64, usize, u8)>> = BinaryHeap::new();
+    let mut pending: Vec<Option<Ev>> = Vec::new();
+
+    // Simple indexed event store: heap carries (time, idx, tiebreak).
+    let push = |heap: &mut BinaryHeap<Reverse<(u64, usize, u8)>>,
+                    pending: &mut Vec<Option<Ev>>,
+                    ev: Ev| {
+        let idx = pending.len();
+        heap.push(Reverse((ev.t, idx, 0)));
+        pending.push(Some(ev));
+    };
+
+    for w in 0..workers {
+        push(&mut heap, &mut pending, Ev { t: 0, worker: w, phase: Phase::Issue });
+    }
+
+    while let Some(Reverse((t, idx, _))) = heap.pop() {
+        let ev = pending[idx].take().expect("event once");
+        match ev.phase {
+            Phase::Issue => {
+                if t >= horizon {
+                    continue;
+                }
+                issue_at[ev.worker] = t;
+                match batch {
+                    None => {
+                        let done = cluster.sim_get(t, object_size);
+                        lat.add((done - t) as f64 / 1e6);
+                        bytes += object_size;
+                        ops += 1;
+                        push(&mut heap, &mut pending, Ev { t: done, worker: ev.worker, phase: Phase::Issue });
+                    }
+                    Some(k) => {
+                        let p1 = cluster.gb_register(t, k);
+                        let t_reg = p1.t_reg;
+                        push(
+                            &mut heap,
+                            &mut pending,
+                            Ev { t: t_reg, worker: ev.worker, phase: Phase::FanIn(Box::new(p1)) },
+                        );
+                    }
+                }
+            }
+            Phase::FanIn(p1) => {
+                let last_arrival = cluster.gb_fanin(&p1, object_size);
+                push(
+                    &mut heap,
+                    &mut pending,
+                    Ev { t: last_arrival, worker: ev.worker, phase: Phase::Out(p1, last_arrival) },
+                );
+            }
+            Phase::Out(p1, last_arrival) => {
+                let k = batch.unwrap() as u64;
+                let done = cluster.gb_stream_out(&p1, k * object_size, last_arrival);
+                let t0 = issue_at[ev.worker];
+                lat.add((done - t0) as f64 / 1e6);
+                bytes += k * object_size;
+                ops += k;
+                push(&mut heap, &mut pending, Ev { t: done, worker: ev.worker, phase: Phase::Issue });
+            }
+        }
+    }
+
+    let label = match batch {
+        None => format!("GET {}", crate::util::bytes::fmt_size(object_size)),
+        Some(k) => format!("GetBatch({k}) {}", crate::util::bytes::fmt_size(object_size)),
+    };
+    SyntheticResult {
+        label,
+        throughput: Throughput { bytes, ops, secs: sim_seconds },
+        batch_latency_ms: lat.row(),
+    }
+}
+
+/// Result of one training-trace configuration.
+#[derive(Debug, Clone)]
+pub struct TrainingResult {
+    pub mode: AccessMode,
+    pub batch_ms: LatencyRow,
+    pub per_object_ms: LatencyRow,
+}
+
+/// Training-workload latency study (§4.2.1): `loaders` data-loader workers
+/// (4 A100 nodes × 64 = 256 in the paper) against the 16-node cluster.
+/// Bursty: each loader computes for `step_ms` between loads (synchronous
+/// training), so I/O queues are not continuously saturated.
+///
+/// Sample sizes are log-normal (median ~90 KiB — speech segments); a batch
+/// draws `batch_size` samples.
+pub fn run_training(
+    m: &CostModel,
+    mode: AccessMode,
+    loaders: usize,
+    batch_size: usize,
+    steps_per_loader: usize,
+    step_ms: f64,
+    seed: u64,
+) -> TrainingResult {
+    let mut cluster = SimCluster::new(m.clone(), seed);
+    let mut rng = Rng::new(seed ^ 0x7EA1);
+    let mut batch_lat = Samples::new();
+    let mut obj_lat = Samples::new();
+
+    // Loader state machines. A loader worker prefetches CONC samples at a
+    // time in RandomGet mode (typical DataLoader worker with a small
+    // prefetch depth); batches are fetched sample-by-sample otherwise.
+    const CONC: usize = 2;
+    struct Loader {
+        issue_t: u64,
+        remaining_steps: usize,
+        // RandomGet in-flight bookkeeping
+        samples_left: usize,
+        inflight: usize,
+        batch_done_at: u64,
+    }
+    let mut states: Vec<Loader> = (0..loaders)
+        .map(|i| Loader {
+            issue_t: (i as u64) * 1_000_000,
+            remaining_steps: steps_per_loader,
+            samples_left: 0,
+            inflight: 0,
+            batch_done_at: 0,
+        })
+        .collect();
+
+    // events: (time, loader, kind) kind 0=issue batch, 1=slot free (RandomGet)
+    let mut heap: BinaryHeap<Reverse<(u64, usize, u8)>> = BinaryHeap::new();
+    for (i, s) in states.iter().enumerate() {
+        heap.push(Reverse((s.issue_t, i, 0)));
+    }
+
+    let sample_size = |rng: &mut Rng| -> u64 {
+        rng.lognormal(90.0 * 1024.0, 0.7).max(2048.0) as u64
+    };
+
+    while let Some(Reverse((t, w, kind))) = heap.pop() {
+        match kind {
+            0 => {
+                // issue one training step's batch
+                if states[w].remaining_steps == 0 {
+                    continue;
+                }
+                states[w].remaining_steps -= 1;
+                states[w].issue_t = t;
+                match mode {
+                    AccessMode::RandomGet => {
+                        states[w].samples_left = batch_size;
+                        states[w].inflight = 0;
+                        states[w].batch_done_at = t;
+                        // kick CONC fetch slots
+                        for _ in 0..CONC.min(batch_size) {
+                            let s = sample_size(&mut rng);
+                            let done = cluster.sim_get(t, s);
+                            obj_lat.add((done - t) as f64 / 1e6);
+                            states[w].samples_left -= 1;
+                            states[w].inflight += 1;
+                            heap.push(Reverse((done, w, 1)));
+                        }
+                    }
+                    AccessMode::GetBatch => {
+                        let sizes: Vec<u64> = (0..batch_size).map(|_| sample_size(&mut rng)).collect();
+                        let mean = sizes.iter().sum::<u64>() / sizes.len() as u64;
+                        let p1 = cluster.gb_register(t, batch_size);
+                        let last = cluster.gb_fanin(&p1, mean);
+                        let done = cluster.gb_stream_out(&p1, sizes.iter().sum(), last);
+                        let per = (done - t) as f64 / 1e6 / batch_size as f64;
+                        for _ in 0..batch_size {
+                            obj_lat.add(per);
+                        }
+                        batch_lat.add((done - t) as f64 / 1e6);
+                        heap.push(Reverse((done + (step_ms * 1e6) as u64, w, 0)));
+                    }
+                    AccessMode::Sequential => {
+                        // one shard read covers the batch: a single large
+                        // object streamed from one open connection.
+                        let total: u64 = (0..batch_size).map(|_| sample_size(&mut rng)).sum();
+                        let done = cluster.sim_get(t, total);
+                        let per = (done - t) as f64 / 1e6 / batch_size as f64;
+                        for _ in 0..batch_size {
+                            obj_lat.add(per);
+                        }
+                        batch_lat.add((done - t) as f64 / 1e6);
+                        heap.push(Reverse((done + (step_ms * 1e6) as u64, w, 0)));
+                    }
+                }
+            }
+            _ => {
+                // RandomGet: a fetch slot completed at time t
+                states[w].inflight -= 1;
+                states[w].batch_done_at = states[w].batch_done_at.max(t);
+                if states[w].samples_left > 0 {
+                    let s = sample_size(&mut rng);
+                    let done = cluster.sim_get(t, s);
+                    obj_lat.add((done - t) as f64 / 1e6);
+                    states[w].samples_left -= 1;
+                    states[w].inflight += 1;
+                    heap.push(Reverse((done, w, 1)));
+                } else if states[w].inflight == 0 {
+                    // batch complete: the slowest sample gates the step (§4.2.2)
+                    let t0 = states[w].issue_t;
+                    batch_lat.add((states[w].batch_done_at - t0) as f64 / 1e6);
+                    heap.push(Reverse((states[w].batch_done_at + (step_ms * 1e6) as u64, w, 0)));
+                }
+            }
+        }
+    }
+    TrainingResult { mode, batch_ms: batch_lat.row(), per_object_ms: obj_lat.row() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_small_objects() {
+        let m = CostModel::oci_16node();
+        let get = run_synthetic(&m, 80, 10 << 10, None, 2.0, 1);
+        let b128 = run_synthetic(&m, 80, 10 << 10, Some(128), 2.0, 2);
+        let speedup = b128.throughput.gib_per_sec() / get.throughput.gib_per_sec();
+        assert!(speedup > 5.0, "10KiB batch128 speedup {speedup:.1} (paper: 15x)");
+    }
+
+    #[test]
+    fn table1_shape_large_objects_converge() {
+        let m = CostModel::oci_16node();
+        let get = run_synthetic(&m, 80, 1 << 20, None, 2.0, 3);
+        let b128 = run_synthetic(&m, 80, 1 << 20, Some(128), 2.0, 4);
+        let speedup = b128.throughput.gib_per_sec() / get.throughput.gib_per_sec();
+        assert!(speedup < 4.0, "1MiB speedup should be small, got {speedup:.1}");
+        assert!(speedup > 0.8, "1MiB GetBatch should not lose, got {speedup:.1}");
+    }
+
+    #[test]
+    fn batch_size_monotone() {
+        let m = CostModel::oci_16node();
+        let t32 = run_synthetic(&m, 80, 10 << 10, Some(32), 1.5, 5).throughput.gib_per_sec();
+        let t128 = run_synthetic(&m, 80, 10 << 10, Some(128), 1.5, 6).throughput.gib_per_sec();
+        assert!(t128 > t32, "t32={t32:.2} t128={t128:.2}");
+    }
+
+    #[test]
+    fn table2_ordering_of_methods() {
+        let m = CostModel::oci_16node();
+        let seq = run_training(&m, AccessMode::Sequential, 64, 64, 6, 100.0, 7);
+        let get = run_training(&m, AccessMode::RandomGet, 64, 64, 6, 100.0, 8);
+        let gb = run_training(&m, AccessMode::GetBatch, 64, 64, 6, 100.0, 9);
+        // medians: sequential < getbatch < random-get
+        assert!(seq.batch_ms.p50 < gb.batch_ms.p50, "seq {} gb {}", seq.batch_ms.p50, gb.batch_ms.p50);
+        assert!(gb.batch_ms.p50 < get.batch_ms.p50, "gb {} get {}", gb.batch_ms.p50, get.batch_ms.p50);
+        // tails: GetBatch well below RandomGet at P95/P99
+        assert!(gb.batch_ms.p95 < get.batch_ms.p95);
+        assert!(gb.per_object_ms.p99 < get.per_object_ms.p99);
+        // absolute tail (§4.2.2): GetBatch's worst stalls shorter than GET's
+        assert!(gb.batch_ms.p99 < get.batch_ms.p99);
+    }
+}

@@ -1,0 +1,259 @@
+//! The per-target object store: bucket/object CRUD on local mountpaths.
+//! PUTs are atomic (temp file + rename); GETs support whole-object reads,
+//! range reads (shard member pread), and streaming. This is the substrate
+//! the paper assumes from AIStore — enough of it, faithfully shaped.
+
+use std::fs::{self, File};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::mountpath::Mountpaths;
+
+#[derive(Debug, thiserror::Error)]
+pub enum StoreError {
+    #[error("object not found: {0}")]
+    NotFound(String),
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+}
+
+/// One node's store.
+pub struct ObjectStore {
+    mounts: Mountpaths,
+    tmp_seq: AtomicU64,
+    tmp_dir: PathBuf,
+    /// Injected read fault rate (failure testing); 0.0 in production.
+    pub fault_rate: std::sync::Mutex<f64>,
+    fault_rng: std::sync::Mutex<crate::util::rng::Rng>,
+}
+
+impl ObjectStore {
+    pub fn open(base: &Path, mountpaths: usize) -> Result<ObjectStore, StoreError> {
+        let mounts = Mountpaths::create(base, mountpaths)?;
+        let tmp_dir = base.join(".tmp");
+        fs::create_dir_all(&tmp_dir)?;
+        Ok(ObjectStore {
+            mounts,
+            tmp_seq: AtomicU64::new(0),
+            tmp_dir,
+            fault_rate: std::sync::Mutex::new(0.0),
+            fault_rng: std::sync::Mutex::new(crate::util::rng::Rng::new(0xFA01)),
+        })
+    }
+
+    fn maybe_fault(&self) -> Result<(), StoreError> {
+        let rate = *self.fault_rate.lock().unwrap();
+        if rate > 0.0 && self.fault_rng.lock().unwrap().bool(rate) {
+            return Err(StoreError::Io(io::Error::new(io::ErrorKind::Other, "injected EIO")));
+        }
+        Ok(())
+    }
+
+    fn path(&self, bucket: &str, obj: &str) -> PathBuf {
+        self.mounts.object_path(bucket, obj)
+    }
+
+    /// Atomic PUT: write to a temp file on the same mountpath, then rename.
+    pub fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError> {
+        let dst = self.path(bucket, obj);
+        if let Some(parent) = dst.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = self.tmp_dir.join(format!("put-{seq}.tmp"));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(data)?;
+            f.sync_data().ok(); // best-effort durability; tmpfs in CI
+        }
+        fs::rename(&tmp, &dst)?;
+        Ok(())
+    }
+
+    pub fn exists(&self, bucket: &str, obj: &str) -> bool {
+        self.path(bucket, obj).is_file()
+    }
+
+    pub fn size(&self, bucket: &str, obj: &str) -> Result<u64, StoreError> {
+        let p = self.path(bucket, obj);
+        let md = fs::metadata(&p)
+            .map_err(|_| StoreError::NotFound(format!("{bucket}/{obj}")))?;
+        Ok(md.len())
+    }
+
+    /// Whole-object read.
+    pub fn get(&self, bucket: &str, obj: &str) -> Result<Vec<u8>, StoreError> {
+        self.maybe_fault()?;
+        let p = self.path(bucket, obj);
+        fs::read(&p).map_err(|e| {
+            if e.kind() == io::ErrorKind::NotFound {
+                StoreError::NotFound(format!("{bucket}/{obj}"))
+            } else {
+                StoreError::Io(e)
+            }
+        })
+    }
+
+    /// Range read (pread) — shard member extraction reads exactly the member
+    /// payload without touching the rest of the archive.
+    pub fn get_range(&self, bucket: &str, obj: &str, offset: u64, len: u64) -> Result<Vec<u8>, StoreError> {
+        self.maybe_fault()?;
+        let p = self.path(bucket, obj);
+        let mut f = File::open(&p).map_err(|e| {
+            if e.kind() == io::ErrorKind::NotFound {
+                StoreError::NotFound(format!("{bucket}/{obj}"))
+            } else {
+                StoreError::Io(e)
+            }
+        })?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Open for streaming (sequential shard loads).
+    pub fn open_read(&self, bucket: &str, obj: &str) -> Result<File, StoreError> {
+        self.maybe_fault()?;
+        File::open(self.path(bucket, obj)).map_err(|e| {
+            if e.kind() == io::ErrorKind::NotFound {
+                StoreError::NotFound(format!("{bucket}/{obj}"))
+            } else {
+                StoreError::Io(e)
+            }
+        })
+    }
+
+    pub fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError> {
+        let p = self.path(bucket, obj);
+        fs::remove_file(&p).map_err(|e| {
+            if e.kind() == io::ErrorKind::NotFound {
+                StoreError::NotFound(format!("{bucket}/{obj}"))
+            } else {
+                StoreError::Io(e)
+            }
+        })
+    }
+
+    /// List objects of a bucket (admin/debug; walks all mountpaths).
+    pub fn list(&self, bucket: &str) -> Result<Vec<String>, StoreError> {
+        let mut out = Vec::new();
+        for root in self.mounts.all_roots() {
+            let bdir = root.join(bucket);
+            if bdir.is_dir() {
+                walk(&bdir, &bdir, &mut out)?;
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    pub fn mountpath_count(&self) -> usize {
+        self.mounts.len()
+    }
+}
+
+fn walk(base: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            walk(base, &p, out)?;
+        } else {
+            out.push(p.strip_prefix(base).unwrap().to_string_lossy().into_owned());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(name: &str) -> (ObjectStore, PathBuf) {
+        let base = std::env::temp_dir().join(format!("gbstore-{}-{}", std::process::id(), name));
+        let _ = fs::remove_dir_all(&base);
+        fs::create_dir_all(&base).unwrap();
+        (ObjectStore::open(&base, 3).unwrap(), base)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let (s, base) = store("rt");
+        s.put("b", "o1", b"hello").unwrap();
+        assert_eq!(s.get("b", "o1").unwrap(), b"hello");
+        assert!(s.exists("b", "o1"));
+        assert_eq!(s.size("b", "o1").unwrap(), 5);
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn nested_object_names() {
+        let (s, base) = store("nested");
+        s.put("b", "shards/train/s-0001.tar", b"x").unwrap();
+        assert_eq!(s.get("b", "shards/train/s-0001.tar").unwrap(), b"x");
+        assert_eq!(s.list("b").unwrap(), vec!["shards/train/s-0001.tar"]);
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn missing_is_not_found() {
+        let (s, base) = store("missing");
+        assert!(matches!(s.get("b", "nope"), Err(StoreError::NotFound(_))));
+        assert!(matches!(s.size("b", "nope"), Err(StoreError::NotFound(_))));
+        assert!(matches!(s.delete("b", "nope"), Err(StoreError::NotFound(_))));
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn overwrite_is_atomic_replace() {
+        let (s, base) = store("ow");
+        s.put("b", "o", b"v1").unwrap();
+        s.put("b", "o", b"v2-longer").unwrap();
+        assert_eq!(s.get("b", "o").unwrap(), b"v2-longer");
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn range_reads() {
+        let (s, base) = store("range");
+        s.put("b", "o", b"0123456789").unwrap();
+        assert_eq!(s.get_range("b", "o", 3, 4).unwrap(), b"3456");
+        assert_eq!(s.get_range("b", "o", 0, 0).unwrap(), b"");
+        assert!(s.get_range("b", "o", 8, 5).is_err()); // past EOF
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn delete_removes() {
+        let (s, base) = store("del");
+        s.put("b", "o", b"x").unwrap();
+        s.delete("b", "o").unwrap();
+        assert!(!s.exists("b", "o"));
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn list_multiple_buckets_disjoint() {
+        let (s, base) = store("buckets");
+        for i in 0..20 {
+            s.put("b1", &format!("o{i}"), b"x").unwrap();
+        }
+        s.put("b2", "only", b"y").unwrap();
+        assert_eq!(s.list("b1").unwrap().len(), 20);
+        assert_eq!(s.list("b2").unwrap(), vec!["only"]);
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn fault_injection_fails_reads() {
+        let (s, base) = store("fault");
+        s.put("b", "o", b"x").unwrap();
+        *s.fault_rate.lock().unwrap() = 1.0;
+        assert!(s.get("b", "o").is_err());
+        *s.fault_rate.lock().unwrap() = 0.0;
+        assert!(s.get("b", "o").is_ok());
+        fs::remove_dir_all(base).unwrap();
+    }
+}

@@ -1,0 +1,10 @@
+//! Per-node object store substrate: buckets + objects on a local filesystem
+//! spread over simulated mountpaths (disks), with TAR-shard member
+//! extraction backed by a cached shard index.
+
+pub mod engine;
+pub mod mountpath;
+pub mod shard;
+
+pub use engine::{ObjectStore, StoreError};
+pub use shard::ShardIndexCache;

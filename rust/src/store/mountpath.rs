@@ -1,0 +1,96 @@
+//! Mountpaths: AIStore spreads each target's objects over its local disks
+//! (the paper's testbed: 12 NVMe per node). Here each mountpath is a
+//! directory; objects map to mountpaths by HRW so the layout is stable and
+//! balanced, mirroring AIStore's per-disk distribution.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::hrw;
+
+#[derive(Debug, Clone)]
+pub struct Mountpaths {
+    roots: Vec<PathBuf>,
+    hashes: Vec<u64>,
+}
+
+impl Mountpaths {
+    /// Create `n` mountpath directories under `base` (mp0..mpN-1).
+    pub fn create(base: &Path, n: usize) -> std::io::Result<Mountpaths> {
+        assert!(n > 0);
+        let mut roots = Vec::with_capacity(n);
+        let mut hashes = Vec::with_capacity(n);
+        for i in 0..n {
+            let p = base.join(format!("mp{i}"));
+            std::fs::create_dir_all(&p)?;
+            hashes.push(hrw::fnv1a(format!("mp{i}").as_bytes()));
+            roots.push(p);
+        }
+        Ok(Mountpaths { roots, hashes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.roots.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.roots.is_empty()
+    }
+
+    /// The mountpath that owns `key` (bucket/objname).
+    pub fn resolve(&self, key: &str) -> &Path {
+        &self.roots[hrw::pick(key, &self.hashes)]
+    }
+
+    /// Full filesystem path for an object.
+    pub fn object_path(&self, bucket: &str, obj: &str) -> PathBuf {
+        let key = format!("{bucket}/{obj}");
+        // Objects may contain '/' — nest them as directories.
+        self.resolve(&key).join(bucket).join(obj)
+    }
+
+    pub fn all_roots(&self) -> &[PathBuf] {
+        &self.roots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("gbmp-{}-{}", std::process::id(), name));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn stable_resolution() {
+        let base = tmp("stable");
+        let mp = Mountpaths::create(&base, 4).unwrap();
+        for k in 0..50 {
+            let key = format!("b/o{k}");
+            assert_eq!(mp.resolve(&key), mp.resolve(&key));
+        }
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn spreads_over_disks() {
+        let base = tmp("spread");
+        let mp = Mountpaths::create(&base, 4).unwrap();
+        let mut used = std::collections::HashSet::new();
+        for k in 0..200 {
+            used.insert(mp.resolve(&format!("b/o{k}")).to_path_buf());
+        }
+        assert_eq!(used.len(), 4, "all mountpaths should receive objects");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn object_path_nests_bucket() {
+        let base = tmp("nest");
+        let mp = Mountpaths::create(&base, 2).unwrap();
+        let p = mp.object_path("audio", "shards/s-1.tar");
+        assert!(p.ends_with("audio/shards/s-1.tar"));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+}

@@ -1,0 +1,205 @@
+//! Shard member extraction (§2.2): senders resolve `archpath` entries by
+//! reading exactly the member's payload out of a locally stored TAR shard.
+//! A per-node LRU-ish index cache avoids re-scanning shard headers on every
+//! extraction — the paper's colocation discussion calls out "shard re-open
+//! costs" as one of the overheads batching amortizes.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::tar;
+
+use super::engine::{ObjectStore, StoreError};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ShardError {
+    #[error(transparent)]
+    Store(#[from] StoreError),
+    #[error("tar: {0}")]
+    Tar(#[from] tar::TarError),
+    #[error("member not found: {shard}!{member}")]
+    MemberNotFound { shard: String, member: String },
+}
+
+type Index = Arc<HashMap<String, (u64, u64)>>;
+
+/// Cached shard indices: shard key → member → (payload offset, size).
+pub struct ShardIndexCache {
+    cache: Mutex<HashMap<String, Index>>,
+    max_shards: usize,
+    pub hits: crate::metrics::Counter,
+    pub misses: crate::metrics::Counter,
+}
+
+impl ShardIndexCache {
+    pub fn new(max_shards: usize) -> ShardIndexCache {
+        ShardIndexCache {
+            cache: Mutex::new(HashMap::new()),
+            max_shards,
+            hits: Default::default(),
+            misses: Default::default(),
+        }
+    }
+
+    fn index(&self, store: &ObjectStore, bucket: &str, shard: &str) -> Result<Index, ShardError> {
+        let key = format!("{bucket}/{shard}");
+        if let Some(idx) = self.cache.lock().unwrap().get(&key) {
+            self.hits.inc();
+            return Ok(Arc::clone(idx));
+        }
+        self.misses.inc();
+        // Scan headers via streaming read — does not load payloads.
+        let f = store.open_read(bucket, shard)?;
+        let members = tar::scan_members(std::io::BufReader::with_capacity(256 * 1024, f))?;
+        let idx: Index =
+            Arc::new(members.into_iter().map(|m| (m.name, (m.offset, m.size))).collect());
+        let mut cache = self.cache.lock().unwrap();
+        if cache.len() >= self.max_shards {
+            // Simple clock-free eviction: drop an arbitrary entry. Shard
+            // working sets are small and re-scan is cheap; LRU bookkeeping
+            // on the hot path isn't worth it.
+            if let Some(k) = cache.keys().next().cloned() {
+                cache.remove(&k);
+            }
+        }
+        cache.insert(key, Arc::clone(&idx));
+        Ok(idx)
+    }
+
+    /// Extract one member's payload from a shard via pread.
+    pub fn extract(
+        &self,
+        store: &ObjectStore,
+        bucket: &str,
+        shard: &str,
+        member: &str,
+    ) -> Result<Vec<u8>, ShardError> {
+        let idx = self.index(store, bucket, shard)?;
+        let &(off, size) = idx.get(member).ok_or_else(|| ShardError::MemberNotFound {
+            shard: shard.to_string(),
+            member: member.to_string(),
+        })?;
+        Ok(store.get_range(bucket, shard, off, size)?)
+    }
+
+    /// List members of a shard (data-loader manifest construction).
+    pub fn members(
+        &self,
+        store: &ObjectStore,
+        bucket: &str,
+        shard: &str,
+    ) -> Result<Vec<(String, u64)>, ShardError> {
+        let idx = self.index(store, bucket, shard)?;
+        let mut v: Vec<(String, u64)> = idx.iter().map(|(k, &(_, s))| (k.clone(), s)).collect();
+        v.sort();
+        Ok(v)
+    }
+
+    /// Drop a shard's cached index (after overwrite/delete).
+    pub fn invalidate(&self, bucket: &str, shard: &str) {
+        self.cache.lock().unwrap().remove(&format!("{bucket}/{shard}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tar::Entry;
+    use std::path::PathBuf;
+
+    fn setup(name: &str) -> (ObjectStore, ShardIndexCache, PathBuf) {
+        let base = std::env::temp_dir().join(format!("gbshard-{}-{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        let store = ObjectStore::open(&base, 2).unwrap();
+        (store, ShardIndexCache::new(8), base)
+    }
+
+    fn mkshard(n: usize) -> Vec<u8> {
+        let entries: Vec<Entry> = (0..n)
+            .map(|i| Entry { name: format!("utt/{i:04}.wav"), data: vec![i as u8; 100 + i * 7] })
+            .collect();
+        tar::write_archive(&entries).unwrap()
+    }
+
+    #[test]
+    fn extract_members() {
+        let (store, cache, base) = setup("extract");
+        store.put("b", "s.tar", &mkshard(10)).unwrap();
+        for i in [0usize, 3, 9] {
+            let data = cache.extract(&store, "b", "s.tar", &format!("utt/{i:04}.wav")).unwrap();
+            assert_eq!(data, vec![i as u8; 100 + i * 7]);
+        }
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn index_cached_after_first_extract() {
+        let (store, cache, base) = setup("cachehit");
+        store.put("b", "s.tar", &mkshard(5)).unwrap();
+        cache.extract(&store, "b", "s.tar", "utt/0000.wav").unwrap();
+        cache.extract(&store, "b", "s.tar", "utt/0001.wav").unwrap();
+        cache.extract(&store, "b", "s.tar", "utt/0002.wav").unwrap();
+        assert_eq!(cache.misses.get(), 1);
+        assert_eq!(cache.hits.get(), 2);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn missing_member_error() {
+        let (store, cache, base) = setup("nomember");
+        store.put("b", "s.tar", &mkshard(2)).unwrap();
+        assert!(matches!(
+            cache.extract(&store, "b", "s.tar", "nope.wav"),
+            Err(ShardError::MemberNotFound { .. })
+        ));
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn missing_shard_error() {
+        let (store, cache, base) = setup("noshard");
+        assert!(matches!(
+            cache.extract(&store, "b", "absent.tar", "m"),
+            Err(ShardError::Store(StoreError::NotFound(_)))
+        ));
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn invalidate_after_overwrite() {
+        let (store, cache, base) = setup("inval");
+        store.put("b", "s.tar", &mkshard(3)).unwrap();
+        cache.extract(&store, "b", "s.tar", "utt/0000.wav").unwrap();
+        // Overwrite with a different shard; stale index must be dropped.
+        let entries = vec![Entry { name: "new/member.bin".into(), data: vec![7; 42] }];
+        store.put("b", "s.tar", &tar::write_archive(&entries).unwrap()).unwrap();
+        cache.invalidate("b", "s.tar");
+        let data = cache.extract(&store, "b", "s.tar", "new/member.bin").unwrap();
+        assert_eq!(data, vec![7; 42]);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn members_listing_sorted() {
+        let (store, cache, base) = setup("list");
+        store.put("b", "s.tar", &mkshard(4)).unwrap();
+        let m = cache.members(&store, "b", "s.tar").unwrap();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m[0].0, "utt/0000.wav");
+        assert_eq!(m[0].1, 100);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn eviction_bounded() {
+        let (store, _cache, base) = setup("evict");
+        let cache = ShardIndexCache::new(2);
+        for i in 0..5 {
+            store.put("b", &format!("s{i}.tar"), &mkshard(2)).unwrap();
+            cache.extract(&store, "b", &format!("s{i}.tar"), "utt/0000.wav").unwrap();
+        }
+        assert!(cache.cache.lock().unwrap().len() <= 2);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+}

@@ -1,0 +1,82 @@
+//! Shared fixtures for integration tests, benches and examples: cluster
+//! construction and synthetic dataset staging (standalone objects and TAR
+//! shards with variable "audio-like" sample sizes).
+
+use crate::client::loader::{Manifest, SampleRef};
+use crate::cluster::node::Cluster;
+use crate::config::ClusterConfig;
+use crate::tar::{write_archive, Entry};
+use crate::util::rng::Rng;
+
+/// A small live cluster for tests: `targets` targets, 1 proxy.
+pub fn cluster(targets: usize) -> Cluster {
+    Cluster::start(ClusterConfig { targets, http_workers: 8, ..Default::default() })
+        .expect("cluster start")
+}
+
+/// Stage `n` standalone objects of fixed `size` in `bucket`; returns names.
+pub fn stage_objects(c: &Cluster, bucket: &str, n: usize, size: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    let mut names = Vec::with_capacity(n);
+    let mut buf = vec![0u8; size];
+    for i in 0..n {
+        rng.fill_bytes(&mut buf);
+        let name = format!("obj-{i:06}");
+        c.put_direct(bucket, &name, &buf).expect("put");
+        names.push(name);
+    }
+    names
+}
+
+/// Stage a sharded dataset with log-normal sample sizes (speech-segment
+/// like, §4.1) and return its manifest. `median` bytes, sigma 0.6.
+pub fn stage_shards(
+    c: &Cluster,
+    bucket: &str,
+    n_shards: usize,
+    per_shard: usize,
+    median: f64,
+    seed: u64,
+) -> Manifest {
+    let mut rng = Rng::new(seed);
+    let mut manifest = Manifest::default();
+    for s in 0..n_shards {
+        let entries: Vec<Entry> = (0..per_shard)
+            .map(|i| {
+                let len = rng.lognormal(median, 0.6).clamp(64.0, 4.0 * median) as usize;
+                let mut data = vec![0u8; len];
+                rng.fill_bytes(&mut data);
+                Entry { name: format!("utt-{s:04}-{i:04}.wav"), data }
+            })
+            .collect();
+        let shard_name = format!("shards/s-{s:05}.tar");
+        c.put_direct(bucket, &shard_name, &write_archive(&entries).expect("tar")).expect("put");
+        for e in &entries {
+            manifest.samples.push(SampleRef {
+                bucket: bucket.to_string(),
+                shard: Some(shard_name.clone()),
+                name: e.name.clone(),
+                size: e.data.len() as u64,
+            });
+        }
+    }
+    manifest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_stage_consistently() {
+        let c = cluster(2);
+        let names = stage_objects(&c, "b", 8, 512, 3);
+        assert_eq!(names.len(), 8);
+        let m = stage_shards(&c, "audio", 2, 5, 4096.0, 4);
+        assert_eq!(m.len(), 10);
+        assert_eq!(m.shards().len(), 2);
+        // sizes vary (log-normal)
+        let sizes: Vec<u64> = m.samples.iter().map(|s| s.size).collect();
+        assert!(sizes.iter().max() != sizes.iter().min());
+    }
+}

@@ -1,0 +1,3 @@
+//! Test utilities: mini property-testing framework + cluster fixtures.
+pub mod prop;
+pub mod fixtures;

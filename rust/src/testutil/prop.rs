@@ -1,0 +1,135 @@
+//! Mini property-testing framework (no `proptest` offline): seeded
+//! generators + a runner that, on failure, retries with simple shrinking
+//! (halving sizes) and reports the seed for reproduction.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0x9e3779b97f4a7c15, max_shrink: 64 }
+    }
+}
+
+/// A sized generator: given an RNG and a size budget, produce a value.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng, size: usize) -> T;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. On failure, retry the same
+/// case seed at smaller sizes to find a smaller witness, then panic with
+/// the reproducing (seed, size).
+pub fn check<T: std::fmt::Debug>(
+    cfg: PropConfig,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let size = 2 + case * 4;
+        let mut rng = Rng::new(case_seed);
+        let input = gen.generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink: same seed, smaller sizes.
+            let mut best: (usize, String, String) = (size, msg, format!("{input:?}"));
+            let mut s = size / 2;
+            let mut budget = cfg.max_shrink;
+            while s >= 1 && budget > 0 {
+                budget -= 1;
+                let mut rng = Rng::new(case_seed);
+                let smaller = gen.generate(&mut rng, s);
+                if let Err(m) = prop(&smaller) {
+                    best = (s, m, format!("{smaller:?}"));
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={case_seed:#x}, size={}): {}\ninput: {}",
+                best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+// ---- common generators -----------------------------------------------------
+
+/// Vec<u8> with length up to `size`.
+pub fn bytes_gen(rng: &mut Rng, size: usize) -> Vec<u8> {
+    let n = rng.usize_below(size.max(1) + 1);
+    let mut v = vec![0u8; n];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// Printable-ish object name.
+pub fn name_gen(rng: &mut Rng, size: usize) -> String {
+    let n = 1 + rng.usize_below(size.clamp(1, 60));
+    (0..n)
+        .map(|_| {
+            let alphabet = b"abcdefghijklmnopqrstuvwxyz0123456789-_./";
+            alphabet[rng.usize_below(alphabet.len())] as char
+        })
+        .collect::<String>()
+        .trim_matches('/')
+        .replace("//", "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check(
+            PropConfig { cases: 10, ..Default::default() },
+            |rng: &mut Rng, size: usize| bytes_gen(rng, size),
+            |v| {
+                counter.set(counter.get() + 1);
+                if v.len() <= 10_000 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            PropConfig { cases: 5, ..Default::default() },
+            |_rng: &mut Rng, size: usize| size,
+            |&s| if s < 3 { Ok(()) } else { Err(format!("size {s} >= 3")) },
+        );
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        assert_eq!(bytes_gen(&mut a, 50), bytes_gen(&mut b, 50));
+        let mut a = Rng::new(10);
+        let mut b = Rng::new(10);
+        assert_eq!(name_gen(&mut a, 20), name_gen(&mut b, 20));
+    }
+}

@@ -1,0 +1,9 @@
+//! Intra-cluster P2P transport: persistent, pooled target-to-target
+//! connections carrying the frame protocol (§2.3.1: "a shared pool of
+//! persistent peer-to-peer connections that are reused across requests and
+//! operations, with idle connections reclaimed after a configurable
+//! timeout").
+
+pub mod pool;
+
+pub use pool::{P2pServer, PeerPool};

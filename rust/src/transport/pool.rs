@@ -1,0 +1,303 @@
+//! Peer connection pool + P2P frame server.
+//!
+//! Senders check a connection out of the pool, write a burst of frames, and
+//! check it back in — exclusive use while checked out, so frames of
+//! concurrent requests never interleave on one socket. Idle connections are
+//! reclaimed after `idle_timeout`, amortizing TCP setup across requests and
+//! avoiding connection storms under concurrent load (§2.3.1).
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::proto::frame::{self, Frame};
+
+struct IdleConn {
+    stream: TcpStream,
+    since: Instant,
+}
+
+/// Sender-side pool of persistent peer connections.
+pub struct PeerPool {
+    idle: Mutex<HashMap<String, Vec<IdleConn>>>,
+    idle_timeout: Duration,
+    max_per_peer: usize,
+    /// Connections established (visible to the A3 pooling ablation).
+    pub established: AtomicU64,
+    /// When true, checkin drops the connection instead of pooling —
+    /// models per-request connection setup for the ablation.
+    pub disable_reuse: AtomicBool,
+}
+
+impl PeerPool {
+    pub fn new(idle_timeout: Duration) -> Arc<PeerPool> {
+        Arc::new(PeerPool {
+            idle: Mutex::new(HashMap::new()),
+            idle_timeout,
+            max_per_peer: 16,
+            established: AtomicU64::new(0),
+            disable_reuse: AtomicBool::new(false),
+        })
+    }
+
+    fn checkout(&self, addr: &str) -> io::Result<TcpStream> {
+        if !self.disable_reuse.load(Ordering::Relaxed) {
+            let mut idle = self.idle.lock().unwrap();
+            if let Some(v) = idle.get_mut(addr) {
+                while let Some(c) = v.pop() {
+                    if c.since.elapsed() < self.idle_timeout {
+                        return Ok(c.stream);
+                    }
+                    // stale: drop (reclaim)
+                }
+            }
+        }
+        let s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        self.established.fetch_add(1, Ordering::Relaxed);
+        Ok(s)
+    }
+
+    fn checkin(&self, addr: &str, stream: TcpStream) {
+        if self.disable_reuse.load(Ordering::Relaxed) {
+            return; // drop ⇒ close
+        }
+        let mut idle = self.idle.lock().unwrap();
+        let v = idle.entry(addr.to_string()).or_default();
+        if v.len() < self.max_per_peer {
+            v.push(IdleConn { stream, since: Instant::now() });
+        }
+    }
+
+    /// Write a burst of frames to `addr` on one pooled connection.
+    /// The encode buffer is reused across frames (hot path).
+    pub fn send(&self, addr: &str, frames: &[Frame]) -> io::Result<()> {
+        let stream = self.checkout(addr)?;
+        let mut w = BufWriter::with_capacity(256 * 1024, stream);
+        let mut scratch = Vec::with_capacity(64 * 1024);
+        for f in frames {
+            frame::encode_into(f, &mut scratch);
+            w.write_all(&scratch)?;
+        }
+        w.flush()?;
+        let stream = w.into_inner().map_err(|e| e.into_error())?;
+        self.checkin(addr, stream);
+        Ok(())
+    }
+
+    /// Send frames produced lazily, flushing each as soon as it's encoded —
+    /// lets a sender overlap disk reads with transmission.
+    pub fn send_iter(
+        &self,
+        addr: &str,
+        frames: impl Iterator<Item = Frame>,
+    ) -> io::Result<()> {
+        let stream = self.checkout(addr)?;
+        let mut w = BufWriter::with_capacity(256 * 1024, stream);
+        let mut scratch = Vec::with_capacity(64 * 1024);
+        for f in frames {
+            frame::encode_into(&f, &mut scratch);
+            w.write_all(&scratch)?;
+            w.flush()?;
+        }
+        let stream = w.into_inner().map_err(|e| e.into_error())?;
+        self.checkin(addr, stream);
+        Ok(())
+    }
+
+    /// Reap idle connections past the timeout (called opportunistically).
+    pub fn reap(&self) {
+        let mut idle = self.idle.lock().unwrap();
+        for v in idle.values_mut() {
+            v.retain(|c| c.since.elapsed() < self.idle_timeout);
+        }
+        idle.retain(|_, v| !v.is_empty());
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.idle.lock().unwrap().values().map(|v| v.len()).sum()
+    }
+}
+
+/// Receiver side: accepts peer connections and dispatches every incoming
+/// frame to the handler (the DT registry). One reader thread per peer
+/// connection — connections are few (pooled) and long-lived.
+pub struct P2pServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+pub type FrameHandler = Arc<dyn Fn(Frame) + Send + Sync>;
+
+impl P2pServer {
+    pub fn serve(handler: FrameHandler, name: &str) -> io::Result<P2pServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let name = name.to_string();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("{name}-p2p"))
+            .spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = Arc::clone(&handler);
+                            let stop3 = Arc::clone(&stop2);
+                            conns.push(std::thread::spawn(move || {
+                                let _ = stream.set_nodelay(true);
+                                let _ = stream
+                                    .set_read_timeout(Some(Duration::from_millis(200)));
+                                let mut r = BufReader::with_capacity(256 * 1024, stream);
+                                loop {
+                                    match frame::read_frame(&mut r) {
+                                        Ok(Some(f)) => h(f),
+                                        Ok(None) => break, // peer closed
+                                        Err(frame::FrameError::Io(e))
+                                            if e.kind() == io::ErrorKind::WouldBlock
+                                                || e.kind() == io::ErrorKind::TimedOut =>
+                                        {
+                                            if stop3.load(Ordering::Relaxed) {
+                                                break;
+                                            }
+                                        }
+                                        Err(_) => break, // corrupt stream: drop conn
+                                    }
+                                }
+                            }));
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(P2pServer { addr, stop, accept_thread: Some(accept_thread) })
+    }
+}
+
+impl Drop for P2pServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn collector() -> (P2pServer, mpsc::Receiver<Frame>) {
+        let (tx, rx) = mpsc::channel();
+        let tx = Mutex::new(tx);
+        let srv = P2pServer::serve(
+            Arc::new(move |f| {
+                let _ = tx.lock().unwrap().send(f);
+            }),
+            "test",
+        )
+        .unwrap();
+        (srv, rx)
+    }
+
+    #[test]
+    fn frames_arrive() {
+        let (srv, rx) = collector();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        let addr = srv.addr.to_string();
+        pool.send(
+            &addr,
+            &[
+                Frame::data(1, 0, vec![1, 2, 3]),
+                Frame::soft_err(1, 1, "missing"),
+                Frame::sender_done(1, 1),
+            ],
+        )
+        .unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(rx.recv_timeout(Duration::from_secs(2)).unwrap());
+        }
+        assert_eq!(got[0].payload, vec![1, 2, 3]);
+        assert_eq!(got[2].index, 1);
+    }
+
+    #[test]
+    fn connections_reused_across_sends() {
+        let (srv, rx) = collector();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        let addr = srv.addr.to_string();
+        for i in 0..10 {
+            pool.send(&addr, &[Frame::data(i, 0, vec![0u8; 128])]).unwrap();
+            rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        }
+        assert_eq!(pool.established.load(Ordering::Relaxed), 1, "one conn for 10 sends");
+        assert_eq!(pool.idle_count(), 1);
+    }
+
+    #[test]
+    fn disable_reuse_reconnects_every_time() {
+        let (srv, rx) = collector();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        pool.disable_reuse.store(true, Ordering::Relaxed);
+        let addr = srv.addr.to_string();
+        for i in 0..5 {
+            pool.send(&addr, &[Frame::data(i, 0, vec![1])]).unwrap();
+            rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        }
+        assert_eq!(pool.established.load(Ordering::Relaxed), 5);
+        assert_eq!(pool.idle_count(), 0);
+    }
+
+    #[test]
+    fn idle_reclaim() {
+        let (srv, rx) = collector();
+        let pool = PeerPool::new(Duration::from_millis(30));
+        let addr = srv.addr.to_string();
+        pool.send(&addr, &[Frame::data(1, 0, vec![1])]).unwrap();
+        rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(pool.idle_count(), 1);
+        std::thread::sleep(Duration::from_millis(60));
+        pool.reap();
+        assert_eq!(pool.idle_count(), 0);
+        // next send re-establishes
+        pool.send(&addr, &[Frame::data(2, 0, vec![2])]).unwrap();
+        rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(pool.established.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn concurrent_senders_no_interleave() {
+        let (srv, rx) = collector();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        let addr = srv.addr.to_string();
+        let pool2 = Arc::clone(&pool);
+        crate::util::threadpool::scoped_map(&(0..8u64).collect::<Vec<_>>(), 8, |_, &i| {
+            pool2
+                .send(&addr, &[Frame::data(i, 0, vec![i as u8; 1000]), Frame::sender_done(i, 1)])
+                .unwrap();
+        });
+        let mut frames = Vec::new();
+        for _ in 0..16 {
+            frames.push(rx.recv_timeout(Duration::from_secs(2)).unwrap());
+        }
+        // every data frame intact (crc verified by read_frame already)
+        for f in frames.iter().filter(|f| f.ftype == frame::FrameType::Data) {
+            assert!(f.payload.iter().all(|&b| b == f.req_id as u8));
+        }
+    }
+}

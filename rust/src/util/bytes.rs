@@ -1,0 +1,128 @@
+//! Byte-size parsing/formatting ("10KiB", "1MiB") and a small buffer pool
+//! used on the DT assembly hot path to avoid per-item allocations.
+
+use std::sync::Mutex;
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// Parse "10KiB" / "1MiB" / "4k" / "123" into bytes.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !c.is_ascii_digit() && c != '.')?;
+    let (num, unit) = if split == 0 { return None } else { s.split_at(split) };
+    let n: f64 = num.parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "b" | "" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        "t" | "tb" | "tib" => 1 << 40,
+        _ => return None,
+    };
+    Some((n * mult as f64) as u64)
+}
+
+/// Parse with a pure-number fallback.
+pub fn parse_size_or_num(s: &str) -> Option<u64> {
+    s.trim().parse::<u64>().ok().or_else(|| parse_size(s))
+}
+
+/// Human formatting: 1536 → "1.5KiB".
+pub fn fmt_size(b: u64) -> String {
+    const UNITS: [(&str, u64); 4] = [("GiB", GIB), ("MiB", MIB), ("KiB", KIB), ("B", 1)];
+    for (name, m) in UNITS {
+        if b >= m {
+            let v = b as f64 / m as f64;
+            return if v.fract() < 0.05 || m == 1 {
+                format!("{:.0}{}", v, name)
+            } else {
+                format!("{:.1}{}", v, name)
+            };
+        }
+    }
+    "0B".to_string()
+}
+
+/// A trivial free-list of byte buffers. `get` returns a cleared buffer with
+/// at least the requested capacity; `put` recycles it. Bounded so a burst
+/// can't pin unbounded memory.
+pub struct BufPool {
+    pool: Mutex<Vec<Vec<u8>>>,
+    max_pooled: usize,
+}
+
+impl BufPool {
+    pub fn new(max_pooled: usize) -> BufPool {
+        BufPool { pool: Mutex::new(Vec::new()), max_pooled }
+    }
+
+    pub fn get(&self, cap: usize) -> Vec<u8> {
+        let mut pool = self.pool.lock().unwrap();
+        if let Some(mut b) = pool.pop() {
+            b.clear();
+            b.reserve(cap);
+            return b;
+        }
+        drop(pool);
+        Vec::with_capacity(cap)
+    }
+
+    pub fn put(&self, b: Vec<u8>) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < self.max_pooled {
+            pool.push(b);
+        }
+    }
+
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("10KiB"), Some(10 * KIB));
+        assert_eq!(parse_size("1MiB"), Some(MIB));
+        assert_eq!(parse_size("4k"), Some(4 * KIB));
+        assert_eq!(parse_size("1.5m"), Some(MIB + MIB / 2));
+        assert_eq!(parse_size_or_num("123"), Some(123));
+        assert_eq!(parse_size("zz"), None);
+        assert_eq!(parse_size(""), None);
+    }
+
+    #[test]
+    fn fmt_sizes() {
+        assert_eq!(fmt_size(10 * KIB), "10KiB");
+        assert_eq!(fmt_size(MIB), "1MiB");
+        assert_eq!(fmt_size(1536), "1.5KiB");
+        assert_eq!(fmt_size(7), "7B");
+    }
+
+    #[test]
+    fn pool_recycles() {
+        let p = BufPool::new(4);
+        let mut b = p.get(100);
+        b.extend_from_slice(&[1, 2, 3]);
+        p.put(b);
+        assert_eq!(p.pooled(), 1);
+        let b2 = p.get(10);
+        assert!(b2.is_empty()); // cleared
+        assert!(b2.capacity() >= 10);
+        assert_eq!(p.pooled(), 0);
+    }
+
+    #[test]
+    fn pool_bounded() {
+        let p = BufPool::new(2);
+        for _ in 0..5 {
+            p.put(Vec::with_capacity(8));
+        }
+        assert_eq!(p.pooled(), 2);
+    }
+}

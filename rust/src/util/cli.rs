@@ -1,0 +1,102 @@
+//! Minimal CLI argument parser (no `clap` offline): subcommand + `--flag
+//! value` / `--flag=value` / boolean `--flag` options + positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argv strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, k: &str, default: &str) -> String {
+        self.str(k).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, k: &str, default: u64) -> u64 {
+        self.str(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, k: &str, default: usize) -> usize {
+        self.u64_or(k, default as u64) as usize
+    }
+
+    pub fn f64_or(&self, k: &str, default: f64) -> f64 {
+        self.str(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, k: &str) -> bool {
+        matches!(self.str(k), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Size flag: accepts "10KiB" etc.
+    pub fn size_or(&self, k: &str, default: u64) -> u64 {
+        self.str(k).and_then(super::bytes::parse_size_or_num).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("bench pos1 --workers 8 --size=10KiB --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.u64_or("workers", 1), 8);
+        assert_eq!(a.size_or("size", 0), 10 << 10);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.u64_or("n", 42), 42);
+        assert_eq!(a.str_or("mode", "live"), "live");
+        assert!(!a.bool("flag"));
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("x --coer");
+        assert!(a.bool("coer"));
+    }
+}

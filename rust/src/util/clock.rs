@@ -1,0 +1,110 @@
+//! Time abstraction shared by the live cluster and the discrete-event
+//! simulator: real code paths take a `Clock` so latency-model tests can run
+//! on virtual time while production uses the monotonic clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Monotonic nanosecond clock.
+pub trait Clock: Send + Sync {
+    fn now_ns(&self) -> u64;
+    fn sleep(&self, d: Duration);
+}
+
+/// Wall (monotonic) clock.
+pub struct RealClock {
+    origin: Instant,
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        RealClock { origin: Instant::now() }
+    }
+}
+
+impl RealClock {
+    pub fn new() -> Arc<dyn Clock> {
+        Arc::new(RealClock::default())
+    }
+}
+
+impl Clock for RealClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Virtual clock: `sleep` advances time atomically, no real waiting. Used in
+/// throttling/admission unit tests and the simulator's cost models.
+#[derive(Default)]
+pub struct VirtualClock {
+    ns: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Arc<VirtualClock> {
+        Arc::new(VirtualClock::default())
+    }
+    pub fn advance(&self, d: Duration) {
+        self.ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::SeqCst)
+    }
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+/// Stopwatch over any `Clock`.
+pub struct Stopwatch<'a> {
+    clock: &'a dyn Clock,
+    start: u64,
+}
+
+impl<'a> Stopwatch<'a> {
+    pub fn start(clock: &'a dyn Clock) -> Stopwatch<'a> {
+        Stopwatch { clock, start: clock.now_ns() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        Duration::from_nanos(self.clock.now_ns().saturating_sub(self.start))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::default();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_sleep_advances() {
+        let c = VirtualClock::default();
+        assert_eq!(c.now_ns(), 0);
+        c.sleep(Duration::from_millis(5));
+        assert_eq!(c.now_ns(), 5_000_000);
+        c.advance(Duration::from_micros(1));
+        assert_eq!(c.now_ns(), 5_001_000);
+    }
+
+    #[test]
+    fn stopwatch_on_virtual() {
+        let c = VirtualClock::default();
+        let sw = Stopwatch::start(&c);
+        c.advance(Duration::from_millis(3));
+        assert_eq!(sw.elapsed(), Duration::from_millis(3));
+    }
+}

@@ -1,0 +1,129 @@
+//! Highest-random-weight (rendezvous) hashing — AIStore's placement scheme.
+//!
+//! Every (key, node) pair gets a pseudo-random weight; the key is owned by
+//! the node with the highest weight. Properties the cluster relies on:
+//! deterministic, uniform, and *minimally disruptive* — removing a node only
+//! remaps the keys that node owned. The proxy also uses HRW to pick the
+//! default Designated Target per request (§2.3.1 "consistent hashing").
+
+use super::rng::mix64;
+
+/// 64-bit FNV-1a — stable string hash (std's SipHash is seed-randomized per
+/// process, which would break cross-node placement agreement).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Weight of `key` on a node identified by `node_id_hash`.
+#[inline]
+pub fn weight(key_hash: u64, node_id_hash: u64) -> u64 {
+    mix64(key_hash ^ node_id_hash)
+}
+
+/// Pick the index of the highest-weight node for `key`.
+/// `node_hashes` are precomputed per-node id hashes.
+pub fn pick(key: &str, node_hashes: &[u64]) -> usize {
+    assert!(!node_hashes.is_empty(), "hrw over empty node set");
+    let kh = fnv1a(key.as_bytes());
+    let mut best = 0usize;
+    let mut best_w = 0u64;
+    for (i, &nh) in node_hashes.iter().enumerate() {
+        let w = weight(kh, nh);
+        if w > best_w {
+            best_w = w;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Rank all nodes for `key`, best first — used by get-from-neighbor (GFN)
+/// recovery to find the next-best replica location.
+pub fn rank(key: &str, node_hashes: &[u64]) -> Vec<usize> {
+    let kh = fnv1a(key.as_bytes());
+    let mut idx: Vec<usize> = (0..node_hashes.len()).collect();
+    idx.sort_by_key(|&i| std::cmp::Reverse(weight(kh, node_hashes[i])));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hashes(n: usize) -> Vec<u64> {
+        (0..n).map(|i| fnv1a(format!("t{}", i).as_bytes())).collect()
+    }
+
+    #[test]
+    fn deterministic() {
+        let h = hashes(8);
+        for k in 0..100 {
+            let key = format!("obj-{k}");
+            assert_eq!(pick(&key, &h), pick(&key, &h));
+        }
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let h = hashes(8);
+        let mut counts = vec![0usize; 8];
+        let n = 16_000;
+        for k in 0..n {
+            counts[pick(&format!("obj-{k}"), &h)] += 1;
+        }
+        let expect = n / 8;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.15,
+                "node {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn minimal_disruption_on_node_removal() {
+        let h8 = hashes(8);
+        let h7 = h8[..7].to_vec(); // remove last node
+        let n = 8000;
+        let mut moved = 0;
+        for k in 0..n {
+            let key = format!("obj-{k}");
+            let before = pick(&key, &h8);
+            let after = pick(&key, &h7);
+            if before < 7 {
+                // keys not owned by the removed node must not move
+                assert_eq!(before, after, "key {key} moved unnecessarily");
+            } else {
+                moved += 1;
+            }
+        }
+        // ~1/8 of keys lived on the removed node
+        assert!((moved as f64 - n as f64 / 8.0).abs() < n as f64 * 0.03);
+    }
+
+    #[test]
+    fn rank_starts_with_pick() {
+        let h = hashes(5);
+        for k in 0..50 {
+            let key = format!("obj-{k}");
+            let r = rank(&key, &h);
+            assert_eq!(r[0], pick(&key, &h));
+            let mut sorted = r.clone();
+            sorted.sort();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4]); // a permutation
+        }
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a("") = offset basis
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+}

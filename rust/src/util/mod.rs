@@ -1,0 +1,12 @@
+//! Foundation utilities built from scratch for the offline sandbox: JSON
+//! codec, PRNG, streaming statistics, rendezvous hashing, thread pool,
+//! virtual clock, byte-size helpers and a minimal CLI parser.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod hrw;
+pub mod threadpool;
+pub mod clock;
+pub mod bytes;
+pub mod cli;

@@ -1,0 +1,285 @@
+//! Latency / throughput statistics: exact percentile sampling and a
+//! log-bucketed histogram for high-volume paths. Powers the Table 1/2
+//! reproductions (P50/P95/P99/Avg) and the aisloader reports.
+
+use std::time::Duration;
+
+/// Reservoir of raw samples with exact percentiles. For the scales in this
+/// repo (≤ a few million samples) exact is affordable and avoids P²-style
+/// estimation error in the tails the paper cares about.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Samples {
+        Samples::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn add_duration(&mut self, d: Duration) {
+        self.add(d.as_secs_f64() * 1e3); // milliseconds, like the paper
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in [0,100], linear interpolation between closest ranks.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.last().copied().unwrap_or(f64::NAN)
+    }
+
+    /// The paper's standard row: P50 / P95 / P99 / Avg.
+    pub fn row(&mut self) -> LatencyRow {
+        LatencyRow {
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            avg: self.mean(),
+            n: self.len(),
+        }
+    }
+}
+
+/// One row of a Table-2-style latency report (values in the unit recorded,
+/// conventionally milliseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyRow {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub avg: f64,
+    pub n: usize,
+}
+
+impl LatencyRow {
+    /// §4.2.2: the P99–P50 absolute spread that governs step-time jitter.
+    pub fn spread(&self) -> f64 {
+        self.p99 - self.p50
+    }
+}
+
+impl std::fmt::Display for LatencyRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "P50={:9.1}  P95={:9.1}  P99={:9.1}  Avg={:9.1}  (n={})",
+            self.p50, self.p95, self.p99, self.avg, self.n
+        )
+    }
+}
+
+/// Log2-bucketed histogram: O(1) record, coarse percentiles; used on hot
+/// per-object paths where storing raw f64s per op would distort timing.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// bucket i counts values in [2^i, 2^(i+1)) microseconds
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: vec![0; 64], count: 0, sum: 0.0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let b = if us < 1.0 { 0 } else { (us.log2() as usize).min(63) };
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile estimate: geometric midpoint of the containing bucket.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                let lo = (1u64 << i) as f64;
+                return lo * std::f64::consts::SQRT_2;
+            }
+        }
+        f64::NAN
+    }
+}
+
+/// Throughput accounting over a measurement window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Throughput {
+    pub bytes: u64,
+    pub ops: u64,
+    pub secs: f64,
+}
+
+impl Throughput {
+    pub fn gib_per_sec(&self) -> f64 {
+        if self.secs == 0.0 {
+            return 0.0;
+        }
+        self.bytes as f64 / self.secs / (1u64 << 30) as f64
+    }
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.secs == 0.0 {
+            return 0.0;
+        }
+        self.ops as f64 / self.secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.02);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = Samples::new();
+        s.add(7.0);
+        assert_eq!(s.percentile(50.0), 7.0);
+        assert_eq!(s.percentile(99.0), 7.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Samples::new();
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Samples::new();
+        let mut b = Samples::new();
+        for i in 0..50 {
+            a.add(i as f64);
+        }
+        for i in 50..100 {
+            b.add(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 100);
+        assert!((a.percentile(50.0) - 49.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_and_spread() {
+        let mut s = Samples::new();
+        for i in 0..1000 {
+            s.add(i as f64);
+        }
+        let r = s.row();
+        assert!(r.p99 > r.p95 && r.p95 > r.p50);
+        assert!((r.spread() - (r.p99 - r.p50)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_coarse() {
+        let mut h = LogHistogram::new();
+        for _ in 0..900 {
+            h.record_us(100.0); // bucket [64,128)
+        }
+        for _ in 0..100 {
+            h.record_us(10_000.0);
+        }
+        let p50 = h.percentile_us(50.0);
+        assert!(p50 > 32.0 && p50 < 256.0, "p50={p50}");
+        let p99 = h.percentile_us(99.0);
+        assert!(p99 > 4096.0, "p99={p99}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput { bytes: 3 << 30, ops: 1500, secs: 2.0 };
+        assert!((t.gib_per_sec() - 1.5).abs() < 1e-9);
+        assert!((t.ops_per_sec() - 750.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,161 @@
+//! Fixed-size worker pool (no tokio in the offline sandbox). Each cluster
+//! node runs one pool for request handling; aisloader and the benches use
+//! `scoped_map` for fork-join fan-out.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A classic channel-fed thread pool. Jobs are `FnOnce` closures; `drop`
+/// joins all workers after draining the queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize, name: &str) -> ThreadPool {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                queued.fetch_sub(1, Ordering::Relaxed);
+                                job();
+                            }
+                            Err(_) => break, // sender dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, queued }
+    }
+
+    /// Enqueue a job. Never blocks.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.tx.as_ref().expect("pool shut down").send(Box::new(f)).expect("workers alive");
+    }
+
+    /// Jobs submitted but not yet started (approximate).
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Fork-join: run `f(i, &items[i])` on up to `par` OS threads and collect
+/// results in input order. Panics in workers propagate.
+pub fn scoped_map<T: Sync, R: Send>(
+    items: &[T],
+    par: usize,
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let par = par.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    thread::scope(|s| {
+        for _ in 0..par {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                // Each index is written exactly once; the mutex only guards
+                // the &mut aliasing, contention is one lock per item.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4, "test");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // joins
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_parallelism() {
+        // 4 workers × 50ms sleeps for 8 jobs should take ~100ms, not 400ms.
+        let pool = ThreadPool::new(4, "par");
+        let t0 = std::time::Instant::now();
+        let done = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                thread::sleep(Duration::from_millis(50));
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool);
+        let el = t0.elapsed();
+        assert_eq!(done.load(Ordering::Relaxed), 8);
+        assert!(el < Duration::from_millis(350), "elapsed {el:?}");
+    }
+
+    #[test]
+    fn scoped_map_preserves_order() {
+        let items: Vec<u64> = (0..200).collect();
+        let out = scoped_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty_and_single() {
+        let out: Vec<u32> = scoped_map(&[] as &[u32], 4, |_, &x| x);
+        assert!(out.is_empty());
+        let out = scoped_map(&[5u32], 4, |i, &x| x + i as u32);
+        assert_eq!(out, vec![5]);
+    }
+}

@@ -1,0 +1,229 @@
+//! End-to-end cluster tests: the full GetBatch execution flow over real
+//! localhost TCP, covering ordering at scale, execution options, metrics,
+//! colocation, multi-proxy routing and concurrent batches.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::client::loader::{AccessMode, DataLoader};
+use getbatch::client::sdk::Client;
+use getbatch::cluster::node::Cluster;
+use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::metrics::GetBatchMetrics;
+use getbatch::testutil::fixtures;
+use getbatch::util::threadpool::scoped_map;
+
+#[test]
+fn large_batch_strict_ordering_across_nodes() {
+    let c = fixtures::cluster(4);
+    let names = fixtures::stage_objects(&c, "b", 300, 2048, 1);
+    let client = Client::new(&c.proxy_addr());
+    // request in a scrambled order; response must match it exactly
+    let mut order: Vec<usize> = (0..300).collect();
+    let mut rng = getbatch::util::rng::Rng::new(9);
+    rng.shuffle(&mut order);
+    let entries: Vec<BatchEntry> =
+        order.iter().map(|&i| BatchEntry::obj("b", &names[i])).collect();
+    let items = client.get_batch_collect(&BatchRequest::new(entries)).unwrap();
+    assert_eq!(items.len(), 300);
+    for (k, &i) in order.iter().enumerate() {
+        assert_eq!(items[k].name(), names[i], "position {k}");
+    }
+}
+
+#[test]
+fn duplicate_entries_allowed_and_ordered() {
+    let c = fixtures::cluster(2);
+    fixtures::stage_objects(&c, "b", 4, 256, 2);
+    let client = Client::new(&c.proxy_addr());
+    let entries = vec![
+        BatchEntry::obj("b", "obj-000001"),
+        BatchEntry::obj("b", "obj-000001"),
+        BatchEntry::obj("b", "obj-000003"),
+        BatchEntry::obj("b", "obj-000001"),
+    ];
+    let items = client.get_batch_collect(&BatchRequest::new(entries)).unwrap();
+    assert_eq!(items.len(), 4);
+    assert_eq!(items[0].data(), items[1].data());
+    assert_eq!(items[0].data(), items[3].data());
+}
+
+#[test]
+fn buffered_vs_streaming_same_bytes() {
+    let c = fixtures::cluster(3);
+    let names = fixtures::stage_objects(&c, "b", 40, 1500, 3);
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> = names.iter().map(|n| BatchEntry::obj("b", n)).collect();
+    let strm = client
+        .get_batch_collect(&BatchRequest::new(entries.clone()).streaming(true))
+        .unwrap();
+    let buf = client
+        .get_batch_collect(&BatchRequest::new(entries).streaming(false))
+        .unwrap();
+    assert_eq!(strm, buf);
+}
+
+#[test]
+fn mixed_objects_and_shard_members_one_request() {
+    let c = fixtures::cluster(3);
+    fixtures::stage_objects(&c, "plain", 5, 700, 4);
+    let manifest = fixtures::stage_shards(&c, "audio", 3, 8, 1024.0, 5);
+    let client = Client::new(&c.proxy_addr());
+    let sref = &manifest.samples[7];
+    let entries = vec![
+        BatchEntry::obj("plain", "obj-000002"),
+        sref.to_entry(),
+        BatchEntry::obj("plain", "obj-000004"),
+    ];
+    let items = client.get_batch_collect(&BatchRequest::new(entries)).unwrap();
+    assert_eq!(items.len(), 3);
+    assert_eq!(items[1].data().unwrap().len() as u64, sref.size);
+}
+
+#[test]
+fn colocation_hint_reduces_cross_node_traffic() {
+    let c = fixtures::cluster(4);
+    // one shard = one owner: perfectly colocatable workload
+    let manifest = fixtures::stage_shards(&c, "audio", 1, 64, 2048.0, 6);
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> =
+        manifest.samples.iter().take(32).map(|s| s.to_entry()).collect();
+
+    let run = |coloc: bool| -> f64 {
+        let before: f64 = c
+            .targets
+            .iter()
+            .map(|t| t.metrics.sender_entries.get() as f64)
+            .sum();
+        for _ in 0..4 {
+            client
+                .get_batch_collect(
+                    &BatchRequest::new(entries.clone()).colocation(coloc),
+                )
+                .unwrap();
+        }
+        let after: f64 = c
+            .targets
+            .iter()
+            .map(|t| t.metrics.sender_entries.get() as f64)
+            .sum();
+        after - before
+    };
+    let without = run(false);
+    let with = run(true);
+    // with colocation the DT owns the shard: zero sender entries cross nodes
+    assert_eq!(with, 0.0, "colocated batches need no P2P sender traffic");
+    assert!(without > 0.0 || with == 0.0);
+}
+
+#[test]
+fn admission_control_rejects_with_429_under_memory_pressure() {
+    let cfg = ClusterConfig {
+        targets: 1,
+        getbatch: GetBatchConfig { mem_critical_bytes: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let c = Cluster::start(cfg).unwrap();
+    // Preload the gauge: the admission check reads dt_buffered_bytes.
+    c.targets[0].metrics.dt_buffered_bytes.set(10);
+    fixtures::stage_objects(&c, "b", 2, 128, 7);
+    let client = Client::new(&c.proxy_addr());
+    let err = client
+        .get_batch_collect(&BatchRequest::new(vec![BatchEntry::obj("b", "obj-000000")]))
+        .unwrap_err();
+    match err {
+        getbatch::client::sdk::ClientError::Status { status, .. } => assert_eq!(status, 429),
+        other => panic!("expected 429, got {other:?}"),
+    }
+}
+
+#[test]
+fn metrics_expose_rxwait_and_composition() {
+    let c = fixtures::cluster(3);
+    let manifest = fixtures::stage_shards(&c, "audio", 2, 10, 1024.0, 8);
+    fixtures::stage_objects(&c, "b", 10, 512, 9);
+    let client = Client::new(&c.proxy_addr());
+    let mut entries: Vec<BatchEntry> =
+        manifest.samples.iter().take(8).map(|s| s.to_entry()).collect();
+    entries.push(BatchEntry::obj("b", "obj-000001"));
+    client.get_batch_collect(&BatchRequest::new(entries)).unwrap();
+
+    let mut members = 0.0;
+    let mut objs = 0.0;
+    let mut work = 0.0;
+    for t in &c.targets {
+        let text = client.metrics(&t.info.http_addr).unwrap();
+        let m = GetBatchMetrics::parse(&text);
+        members += m["ais_getbatch_members_extracted_total"];
+        objs += m["ais_getbatch_objects_delivered_total"];
+        work += m["ais_getbatch_work_items_total"];
+    }
+    assert_eq!(members, 8.0);
+    assert_eq!(objs, 1.0);
+    assert_eq!(work, 9.0);
+}
+
+#[test]
+fn concurrent_batches_from_many_clients() {
+    let c = Arc::new(fixtures::cluster(3));
+    let names = fixtures::stage_objects(&c, "b", 64, 1024, 10);
+    let proxy = c.proxy_addr();
+    let results = scoped_map(&(0..12u64).collect::<Vec<_>>(), 12, |_, &i| {
+        let client = Client::new(&proxy);
+        let mut rng = getbatch::util::rng::Rng::new(i + 100);
+        let entries: Vec<BatchEntry> = (0..24)
+            .map(|_| BatchEntry::obj("b", &names[rng.usize_below(64)]))
+            .collect();
+        let want: Vec<String> = entries.iter().map(|e| e.output_name()).collect();
+        let items = client.get_batch_collect(&BatchRequest::new(entries)).unwrap();
+        (want, items.iter().map(|it| it.name().to_string()).collect::<Vec<_>>())
+    });
+    for (want, got) in results {
+        assert_eq!(want, got);
+    }
+    // DT load spread across targets (mixed roles, §2.3.1)
+    let dts: HashSet<usize> = c
+        .targets
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.metrics.dt_requests.get() > 0)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(dts.len() >= 2, "DT role should rotate across nodes: {dts:?}");
+}
+
+#[test]
+fn multi_proxy_cluster_routes_from_any_gateway() {
+    let c = Cluster::start(ClusterConfig { targets: 2, proxies: 3, ..Default::default() }).unwrap();
+    fixtures::stage_objects(&c, "b", 8, 256, 11);
+    for p in &c.proxies {
+        let client = Client::new(&p.info.http_addr);
+        let items = client
+            .get_batch_collect(&BatchRequest::new(vec![
+                BatchEntry::obj("b", "obj-000000"),
+                BatchEntry::obj("b", "obj-000007"),
+            ]))
+            .unwrap();
+        assert_eq!(items.len(), 2, "via proxy {}", p.info.id);
+    }
+}
+
+#[test]
+fn training_loaders_converge_on_same_data() {
+    // All three access modes must deliver identical sample *sets* given the
+    // same manifest (sampling differs, content fidelity must not).
+    let c = fixtures::cluster(3);
+    let manifest = fixtures::stage_shards(&c, "audio", 4, 8, 512.0, 12);
+    let by_name: std::collections::HashMap<String, u64> =
+        manifest.samples.iter().map(|s| (s.name.clone(), s.size)).collect();
+    for mode in [AccessMode::Sequential, AccessMode::RandomGet, AccessMode::GetBatch] {
+        let mut dl =
+            DataLoader::new(Client::new(&c.proxy_addr()), manifest.clone(), mode, 8, 13);
+        let (samples, _) = dl.next_batch().unwrap();
+        for s in &samples {
+            let want = by_name[s.name.trim_start_matches(|c: char| c != 'u')];
+            assert_eq!(s.data.len() as u64, want, "{mode:?} sample {}", s.name);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Failure-path coverage (§2.4.2): missing data, injected disk faults, GFN
+//! recovery, soft-error budgets, and late/duplicate frame handling.
+
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::client::sdk::{Client, ClientError};
+use getbatch::cluster::node::Cluster;
+use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::metrics::GetBatchMetrics;
+use getbatch::testutil::fixtures;
+
+#[test]
+fn many_missing_entries_within_budget_all_placeholders() {
+    let c = fixtures::cluster(3);
+    fixtures::stage_objects(&c, "b", 10, 256, 1);
+    let client = Client::new(&c.proxy_addr());
+    let mut entries = Vec::new();
+    for i in 0..10 {
+        entries.push(BatchEntry::obj("b", &format!("obj-{i:06}")));
+        entries.push(BatchEntry::obj("b", &format!("ghost-{i}")));
+    }
+    let items = client
+        .get_batch_collect(&BatchRequest::new(entries).continue_on_err(true))
+        .unwrap();
+    assert_eq!(items.len(), 20);
+    for (i, it) in items.iter().enumerate() {
+        assert_eq!(it.is_missing(), i % 2 == 1, "position {i}");
+    }
+}
+
+#[test]
+fn soft_error_budget_aborts_request() {
+    let cfg = ClusterConfig {
+        targets: 2,
+        getbatch: GetBatchConfig { max_soft_errs: 3, ..Default::default() },
+        ..Default::default()
+    };
+    let c = Cluster::start(cfg).unwrap();
+    fixtures::stage_objects(&c, "b", 1, 64, 2);
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> =
+        (0..8).map(|i| BatchEntry::obj("b", &format!("ghost-{i}"))).collect();
+    // budget 3 < 8 missing → hard failure despite continue_on_err
+    let err = client
+        .get_batch_collect(&BatchRequest::new(entries).continue_on_err(true).streaming(false))
+        .unwrap_err();
+    match err {
+        ClientError::Status { status, msg } => {
+            assert_eq!(status, 500);
+            assert!(msg.contains("soft-error budget"), "{msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+    let hard: f64 = c
+        .targets
+        .iter()
+        .map(|t| t.metrics.hard_failures.get() as f64)
+        .sum();
+    assert_eq!(hard, 1.0);
+}
+
+#[test]
+fn injected_read_faults_recovered_or_surfaced() {
+    let c = fixtures::cluster(3);
+    let names = fixtures::stage_objects(&c, "b", 30, 512, 3);
+    // inject 100% read failure on one target: its objects fail locally,
+    // GFN tries neighbors (who don't own replicas → also fail) → with coer
+    // the entries become placeholders, others succeed.
+    *c.targets[0].store.fault_rate.lock().unwrap() = 1.0;
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> = names.iter().map(|n| BatchEntry::obj("b", n)).collect();
+    let items = client
+        .get_batch_collect(&BatchRequest::new(entries).continue_on_err(true))
+        .unwrap();
+    assert_eq!(items.len(), 30);
+    let missing = items.iter().filter(|i| i.is_missing()).count();
+    assert!(missing > 0, "t0-owned objects should fail");
+    assert!(missing < 30, "other targets' objects should succeed");
+    // recovery was attempted for recoverable read failures
+    let attempts: u64 = c.targets.iter().map(|t| t.metrics.recovery_attempts.get()).sum();
+    assert!(attempts > 0, "GFN should have been attempted");
+}
+
+#[test]
+fn gfn_recovery_succeeds_when_neighbor_has_object() {
+    // Place a copy of the object on a *non-owner* target directly, then
+    // break the owner: GFN must find the neighbor copy.
+    let c = fixtures::cluster(3);
+    let client = Client::new(&c.proxy_addr());
+    let key = "replicated-obj";
+    c.put_direct("b", key, b"precious").unwrap();
+    let owner = getbatch::cluster::placement::owner(&c.smap, &format!("b/{key}"));
+    // copy to every other node (n-way mirror)
+    for (i, t) in c.targets.iter().enumerate() {
+        if i != owner {
+            t.store.put("b", key, b"precious").unwrap();
+        }
+    }
+    *c.targets[owner].store.fault_rate.lock().unwrap() = 1.0;
+    let items = client
+        .get_batch_collect(
+            &BatchRequest::new(vec![BatchEntry::obj("b", key)]).continue_on_err(true),
+        )
+        .unwrap();
+    assert_eq!(items.len(), 1);
+    assert_eq!(items[0].data(), Some(&b"precious"[..]), "recovered from neighbor");
+}
+
+#[test]
+fn late_frames_for_finished_requests_are_dropped() {
+    let c = fixtures::cluster(2);
+    fixtures::stage_objects(&c, "b", 4, 128, 4);
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> =
+        (0..4).map(|i| BatchEntry::obj("b", &format!("obj-{i:06}"))).collect();
+    client.get_batch_collect(&BatchRequest::new(entries)).unwrap();
+    // send a frame for a long-gone request id straight into each registry
+    for t in &c.targets {
+        t.registry.dispatch(getbatch::proto::frame::Frame::data(424242, 0, vec![1]));
+    }
+    // cluster still healthy
+    let items = client
+        .get_batch_collect(&BatchRequest::new(vec![BatchEntry::obj("b", "obj-000000")]))
+        .unwrap();
+    assert_eq!(items.len(), 1);
+}
+
+#[test]
+fn per_request_state_released_after_completion_and_abort() {
+    let c = fixtures::cluster(2);
+    fixtures::stage_objects(&c, "b", 2, 64, 5);
+    let client = Client::new(&c.proxy_addr());
+    // success
+    client
+        .get_batch_collect(&BatchRequest::new(vec![BatchEntry::obj("b", "obj-000000")]))
+        .unwrap();
+    // abort (missing, no coer, buffered so the error is clean)
+    let _ = client.get_batch_collect(
+        &BatchRequest::new(vec![BatchEntry::obj("b", "nope")]).streaming(false),
+    );
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    for t in &c.targets {
+        assert_eq!(t.registry.inflight(), 0, "state leaked on {}", t.info.id);
+    }
+}
+
+#[test]
+fn metrics_count_soft_errors_and_rejections() {
+    let c = fixtures::cluster(2);
+    fixtures::stage_objects(&c, "b", 1, 64, 6);
+    let client = Client::new(&c.proxy_addr());
+    let _ = client.get_batch_collect(
+        &BatchRequest::new(vec![
+            BatchEntry::obj("b", "obj-000000"),
+            BatchEntry::obj("b", "ghost"),
+        ])
+        .continue_on_err(true),
+    );
+    let soft: f64 = c
+        .targets
+        .iter()
+        .map(|t| {
+            GetBatchMetrics::parse(&t.metrics.render(&t.info.id))["ais_getbatch_soft_errors_total"]
+        })
+        .sum();
+    assert!(soft >= 1.0);
+}

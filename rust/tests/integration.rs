@@ -1,0 +1,142 @@
+//! Cross-module integration: TAR ⇄ store ⇄ HTTP ⇄ batch reader without a
+//! full cluster — the seams between substrates.
+
+use std::io::Write;
+use std::sync::Arc;
+use std::time::Duration;
+
+use getbatch::batch::reader::BatchReader;
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::proto::http::{Handler, HttpClient, HttpServer, Request, Response};
+use getbatch::proto::frame::{read_frame, write_frame, Frame, FrameType};
+use getbatch::store::{ObjectStore, ShardIndexCache};
+use getbatch::tar::{self, Entry, TarWriter};
+use getbatch::util::rng::Rng;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("gbint-{}-{}", std::process::id(), name));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+#[test]
+fn tar_shard_through_store_and_extraction() {
+    let dir = tmpdir("shard");
+    let store = ObjectStore::open(&dir, 3).unwrap();
+    let cache = ShardIndexCache::new(8);
+    let mut rng = Rng::new(42);
+    let entries: Vec<Entry> = (0..32)
+        .map(|i| {
+            let mut data = vec![0u8; 100 + (i * 37) % 900];
+            rng.fill_bytes(&mut data);
+            Entry { name: format!("member-{i:03}"), data }
+        })
+        .collect();
+    store.put("b", "s.tar", &tar::write_archive(&entries).unwrap()).unwrap();
+    // random-order extraction matches original payloads
+    let mut order: Vec<usize> = (0..32).collect();
+    rng.shuffle(&mut order);
+    for i in order {
+        let got = cache.extract(&store, "b", "s.tar", &format!("member-{i:03}")).unwrap();
+        assert_eq!(got, entries[i].data);
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn http_serves_tar_stream_readable_by_batch_reader() {
+    // An HTTP endpoint that streams a TAR with a placeholder inside —
+    // exactly what a DT response looks like — must round-trip through the
+    // client and BatchReader.
+    let handler: Handler = Arc::new(|_req: Request| {
+        Response::stream(|w| {
+            let mut tw = TarWriter::new(&mut *w);
+            tw.append("e0", &[1; 700]).map_err(std::io::Error::other)?;
+            tw.append_missing("e1").map_err(std::io::Error::other)?;
+            tw.append("e2", &[3; 12]).map_err(std::io::Error::other)?;
+            tw.finish().map_err(std::io::Error::other)?;
+            w.flush()
+        })
+    });
+    let srv = HttpServer::serve(handler, 2, "tarstream").unwrap();
+    let client = HttpClient::new(true);
+    let resp = client.get(&srv.addr.to_string(), "/stream").unwrap();
+    assert_eq!(resp.status, 200);
+    let items = BatchReader::new(resp.body).collect_all().unwrap();
+    assert_eq!(items.len(), 3);
+    assert!(!items[0].is_missing());
+    assert!(items[1].is_missing());
+    assert_eq!(items[2].data().unwrap(), &[3; 12]);
+}
+
+#[test]
+fn frame_protocol_over_real_sockets_preserves_payloads() {
+    use std::net::{TcpListener, TcpStream};
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut got = Vec::new();
+        while let Some(f) = read_frame(&mut s).unwrap() {
+            got.push(f);
+        }
+        got
+    });
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut rng = Rng::new(7);
+    let mut sent = Vec::new();
+    for i in 0..50u32 {
+        let mut payload = vec![0u8; (i as usize * 131) % 4096];
+        rng.fill_bytes(&mut payload);
+        let f = Frame::data(99, i, payload);
+        write_frame(&mut s, &f).unwrap();
+        sent.push(f);
+    }
+    write_frame(&mut s, &Frame::sender_done(99, 50)).unwrap();
+    drop(s);
+    let got = server.join().unwrap();
+    assert_eq!(got.len(), 51);
+    assert_eq!(&got[..50], &sent[..]);
+    assert_eq!(got[50].ftype, FrameType::SenderDone);
+}
+
+#[test]
+fn batch_request_wire_roundtrip_through_http() {
+    // GET with a JSON body (the §2.2 wire pattern) over a real socket.
+    let handler: Handler = Arc::new(|req: Request| {
+        let parsed = BatchRequest::from_body(&req.body).unwrap();
+        Response::ok(parsed.entries.len().to_string().into_bytes())
+    });
+    let srv = HttpServer::serve(handler, 2, "wire").unwrap();
+    let client = HttpClient::new(true);
+    let req = BatchRequest::new(
+        (0..257).map(|i| BatchEntry::obj("bucket", &format!("o{i}"))).collect(),
+    );
+    let resp = client.request("GET", &srv.addr.to_string(), "/v1/batch", &req.to_body()).unwrap();
+    assert_eq!(resp.into_bytes().unwrap(), b"257");
+}
+
+#[test]
+fn server_survives_abusive_clients() {
+    let handler: Handler = Arc::new(|_req| Response::ok(b"fine".to_vec()));
+    let srv = HttpServer::serve(handler, 2, "abuse").unwrap();
+    let addr = srv.addr.to_string();
+    // garbage request line
+    {
+        use std::io::Read;
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        let mut buf = [0u8; 16];
+        let _ = s.read(&mut buf); // server just drops the conn
+    }
+    // connection opened and abandoned
+    {
+        let _s = std::net::TcpStream::connect(&addr).unwrap();
+    }
+    // server still serves real clients
+    let client = HttpClient::new(false);
+    std::thread::sleep(Duration::from_millis(50));
+    let resp = client.get(&addr, "/x").unwrap();
+    assert_eq!(resp.into_bytes().unwrap(), b"fine");
+}

@@ -1,0 +1,226 @@
+//! Property-based tests over the system's core invariants, using the
+//! in-crate mini property framework (testutil::prop).
+
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::cluster::placement;
+use getbatch::cluster::smap::{NodeInfo, Smap};
+use getbatch::tar;
+use getbatch::testutil::prop::{bytes_gen, check, name_gen, PropConfig};
+use getbatch::util::json::Value;
+use getbatch::util::rng::Rng;
+use getbatch::util::stats::Samples;
+
+fn smap(n: usize) -> Smap {
+    Smap::new(
+        1,
+        vec![],
+        (0..n)
+            .map(|i| NodeInfo {
+                id: format!("t{i}"),
+                http_addr: String::new(),
+                p2p_addr: String::new(),
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn prop_tar_roundtrip_arbitrary_entries() {
+    check(
+        PropConfig { cases: 48, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let n = rng.usize_below(8) + 1;
+            (0..n)
+                .map(|i| tar::Entry {
+                    name: format!("{}-{i}", name_gen(rng, 30)),
+                    data: bytes_gen(rng, size * 40 + 1),
+                })
+                .collect::<Vec<_>>()
+        },
+        |entries| {
+            let bytes = tar::write_archive(entries).map_err(|e| e.to_string())?;
+            if bytes.len() % 512 != 0 {
+                return Err("not block aligned".into());
+            }
+            let back = tar::read_archive(&bytes).map_err(|e| e.to_string())?;
+            if &back != entries {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tar_member_index_matches_payload() {
+    check(
+        PropConfig { cases: 32, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let n = rng.usize_below(6) + 1;
+            (0..n)
+                .map(|i| tar::Entry { name: format!("m{i}"), data: bytes_gen(rng, size * 60 + 1) })
+                .collect::<Vec<_>>()
+        },
+        |entries| {
+            let bytes = tar::write_archive(entries).map_err(|e| e.to_string())?;
+            let idx = tar::index_members(&bytes).map_err(|e| e.to_string())?;
+            for e in entries {
+                let &(off, len) = idx.get(&e.name).ok_or("member missing from index")?;
+                if &bytes[off as usize..(off + len) as usize] != &e.data[..] {
+                    return Err(format!("payload mismatch for {}", e.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bool(0.5)),
+            2 => Value::Num((rng.below(1 << 40) as f64) - (1u64 << 39) as f64),
+            3 => Value::Str(name_gen(rng, 24)),
+            4 => Value::Arr((0..rng.usize_below(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Value::obj();
+                for _ in 0..rng.usize_below(4) {
+                    o = o.set(&name_gen(rng, 10), gen_value(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    check(
+        PropConfig { cases: 64, ..Default::default() },
+        |rng: &mut Rng, _size| gen_value(rng, 3),
+        |v| {
+            let text = v.to_string();
+            let back = Value::parse(&text).map_err(|e| e.to_string())?;
+            if &back != v {
+                return Err(format!("{text} reparsed differently"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_placement_partition_complete_and_disjoint() {
+    check(
+        PropConfig { cases: 32, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let nodes = rng.usize_below(15) + 1;
+            let entries: Vec<BatchEntry> = (0..size * 3 + 1)
+                .map(|_| {
+                    if rng.bool(0.4) {
+                        BatchEntry::member("b", &name_gen(rng, 16), &name_gen(rng, 12))
+                    } else {
+                        BatchEntry::obj("b", &name_gen(rng, 16))
+                    }
+                })
+                .collect();
+            (nodes, entries)
+        },
+        |(nodes, entries)| {
+            let s = smap(*nodes);
+            let req = BatchRequest::new(entries.clone());
+            let mut owned = vec![0usize; entries.len()];
+            for t in 0..*nodes {
+                for (i, _) in placement::local_entries(&s, &req, t) {
+                    owned[i as usize] += 1;
+                }
+            }
+            if owned.iter().any(|&c| c != 1) {
+                return Err(format!("ownership counts {owned:?}"));
+            }
+            // weights agree with the partition
+            let w = placement::placement_weights(&s, &req);
+            if w.iter().map(|&x| x as usize).sum::<usize>() != entries.len() {
+                return Err("weights don't sum".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batch_request_wire_roundtrip() {
+    check(
+        PropConfig { cases: 48, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let entries: Vec<BatchEntry> = (0..rng.usize_below(size + 1) + 1)
+                .map(|_| {
+                    if rng.bool(0.5) {
+                        BatchEntry::member(&name_gen(rng, 8), &name_gen(rng, 20), &name_gen(rng, 20))
+                    } else {
+                        BatchEntry::obj(&name_gen(rng, 8), &name_gen(rng, 20))
+                    }
+                })
+                .collect();
+            BatchRequest::new(entries)
+                .continue_on_err(rng.bool(0.5))
+                .streaming(rng.bool(0.5))
+        },
+        |req| {
+            let back = BatchRequest::from_body(&req.to_body()).ok_or("parse failed")?;
+            if back.entries != req.entries
+                || back.opts.continue_on_err != req.opts.continue_on_err
+                || back.opts.streaming != req.opts.streaming
+            {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_percentiles_monotone_and_bounded() {
+    check(
+        PropConfig { cases: 48, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            (0..size * 5 + 1).map(|_| rng.f64() * 1e4).collect::<Vec<f64>>()
+        },
+        |xs| {
+            let mut s = Samples::new();
+            for &x in xs {
+                s.add(x);
+            }
+            let (p50, p95, p99) = (s.percentile(50.0), s.percentile(95.0), s.percentile(99.0));
+            let (lo, hi) = (s.min(), s.max());
+            if !(lo <= p50 && p50 <= p95 && p95 <= p99 && p99 <= hi) {
+                return Err(format!("not monotone: {lo} {p50} {p95} {p99} {hi}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hrw_stability_under_node_addition() {
+    // adding a node must move only keys that now rank it first
+    check(
+        PropConfig { cases: 24, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let n = rng.usize_below(10) + 2;
+            let keys: Vec<String> = (0..size * 4 + 4).map(|_| name_gen(rng, 20)).collect();
+            (n, keys)
+        },
+        |(n, keys)| {
+            let before = smap(*n);
+            let after = smap(*n + 1);
+            for k in keys {
+                let key = format!("b/{k}");
+                let o1 = placement::owner(&before, &key);
+                let o2 = placement::owner(&after, &key);
+                if o2 != o1 && o2 != *n {
+                    return Err(format!("{key} moved {o1}->{o2} not to the new node"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

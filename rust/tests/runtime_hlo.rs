@@ -1,0 +1,122 @@
+//! Runtime ⇄ artifact integration: load the AOT HLO produced by
+//! python/compile/aot.py into the PJRT CPU client, execute init/collate/
+//! train_step, and train end-to-end on cluster-fetched data.
+//!
+//! These tests are skipped (cleanly) when artifacts/ hasn't been built:
+//! run `make artifacts` first. CI runs them via `make test`.
+
+use getbatch::client::loader::{AccessMode, DataLoader};
+use getbatch::client::sdk::Client;
+use getbatch::runtime::pjrt::{tokens_from_samples, Runtime};
+use getbatch::runtime::trainer;
+use getbatch::testutil::fixtures;
+
+fn runtime() -> Option<Runtime> {
+    let dir = trainer::artifacts_dir().ok()?;
+    Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn init_params_have_expected_arity() {
+    let rt = require_artifacts!();
+    let params = rt.init_params(0).unwrap();
+    assert_eq!(params.len(), rt.meta.n_param_tensors);
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let rt = require_artifacts!();
+    let a = rt.init_params(7).unwrap();
+    let b = rt.init_params(7).unwrap();
+    let c = rt.init_params(8).unwrap();
+    let va = a[0].to_vec::<f32>().unwrap();
+    let vb = b[0].to_vec::<f32>().unwrap();
+    let vc = c[0].to_vec::<f32>().unwrap();
+    assert_eq!(va, vb);
+    assert_ne!(va, vc);
+}
+
+#[test]
+fn collate_gathers_and_masks() {
+    let rt = require_artifacts!();
+    let samples: Vec<Vec<u8>> = (0..rt.meta.batch).map(|i| vec![(i + 1) as u8; 5 + i]).collect();
+    let (flat, offsets) = tokens_from_samples(&rt.meta, &samples);
+    let (batch, mask) = rt.collate(&flat, &offsets).unwrap();
+    let b = batch.to_vec::<i32>().unwrap();
+    let m = mask.to_vec::<f32>().unwrap();
+    assert_eq!(b.len(), rt.meta.batch * rt.meta.seq_len);
+    assert_eq!(m.len(), b.len());
+    // row 0: five 1s then padding
+    let t = rt.meta.seq_len;
+    assert_eq!(&b[..5], &[1, 1, 1, 1, 1]);
+    assert_eq!(b[5], rt.meta.pad_id);
+    assert_eq!(&m[..5], &[1.0; 5]);
+    assert_eq!(m[5], 0.0);
+    let _ = t;
+}
+
+#[test]
+fn train_step_executes_and_loss_finite() {
+    let rt = require_artifacts!();
+    let params = rt.init_params(1).unwrap();
+    let samples: Vec<Vec<u8>> =
+        (0..rt.meta.batch).map(|_| b"hello world hello world".to_vec()).collect();
+    let (flat, offsets) = tokens_from_samples(&rt.meta, &samples);
+    let (batch, mask) = rt.collate(&flat, &offsets).unwrap();
+    let (new_params, loss) = rt.train_step(params, batch, mask).unwrap();
+    assert_eq!(new_params.len(), rt.meta.n_param_tensors);
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+}
+
+#[test]
+fn training_on_repetitive_data_reduces_loss() {
+    let rt = require_artifacts!();
+    let mut params = rt.init_params(2).unwrap();
+    // memorizable pattern
+    let samples: Vec<Vec<u8>> = (0..rt.meta.batch)
+        .map(|_| b"abcabcabcabcabcabcabcabcabcabcabcabc".to_vec())
+        .collect();
+    let (flat, offsets) = tokens_from_samples(&rt.meta, &samples);
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..30 {
+        let (batch, mask) = rt.collate(&flat, &offsets).unwrap();
+        let (p, loss) = rt.train_step(params, batch, mask).unwrap();
+        params = p;
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < first * 0.7, "loss {first} -> {last}");
+}
+
+#[test]
+fn end_to_end_train_via_getbatch_cluster() {
+    let rt = require_artifacts!();
+    let c = fixtures::cluster(3);
+    let manifest = fixtures::stage_shards(&c, "corpus", 4, 16, 512.0, 33);
+    let mut loader = DataLoader::new(
+        Client::new(&c.proxy_addr()),
+        manifest,
+        AccessMode::GetBatch,
+        rt.meta.batch,
+        9,
+    );
+    let report = trainer::train(&rt, &mut loader, 8, 0).unwrap();
+    assert_eq!(report.losses.len(), 8);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    assert!(report.load_ms.n == 8 && report.step_ms.n == 8);
+}
