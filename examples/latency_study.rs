@@ -5,6 +5,7 @@
 //!
 //!     cargo run --release --example latency_study [-- --loaders 8 --steps 15]
 
+use getbatch::util::error as anyhow;
 use getbatch::client::loader::{AccessMode, DataLoader};
 use getbatch::client::sdk::Client;
 use getbatch::testutil::fixtures;

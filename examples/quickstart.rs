@@ -4,6 +4,7 @@
 //!
 //!     cargo run --release --example quickstart
 
+use getbatch::util::error as anyhow;
 use getbatch::batch::request::{BatchEntry, BatchRequest};
 use getbatch::client::sdk::Client;
 use getbatch::cluster::node::Cluster;

@@ -5,6 +5,7 @@
 //!
 //!     cargo run --release --example shard_pipeline
 
+use getbatch::util::error as anyhow;
 use getbatch::client::loader::{AccessMode, DataLoader};
 use getbatch::client::sdk::Client;
 use getbatch::metrics::GetBatchMetrics;

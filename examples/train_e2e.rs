@@ -10,6 +10,7 @@
 //!
 //! Results are recorded in EXPERIMENTS.md §E2E.
 
+use getbatch::util::error as anyhow;
 use getbatch::client::loader::{AccessMode, DataLoader};
 use getbatch::client::sdk::Client;
 use getbatch::runtime::pjrt::Runtime;

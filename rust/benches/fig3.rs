@@ -7,6 +7,7 @@
 use std::time::Duration;
 
 use getbatch::aisloader::{self, LoadSpec};
+use getbatch::config::GetBatchConfig;
 use getbatch::sim::model::CostModel;
 use getbatch::sim::workload::run_synthetic;
 use getbatch::testutil::fixtures;
@@ -55,4 +56,34 @@ fn main() {
             println!("live,{size},getbatch,{k},{t:.3},{:.2}", t / g);
         }
     }
+
+    // Memory-capped large-object series: 1 MiB objects streamed through a
+    // DT budget of 512 KiB — the regime where chunked streaming + real
+    // backpressure keeps memory bounded (labelled `live-capped`).
+    let size = 1u64 << 20;
+    let capped = fixtures::cluster_cfg(
+        4,
+        GetBatchConfig { chunk_bytes: 128 << 10, dt_buffer_bytes: 512 << 10, ..Default::default() },
+    );
+    let base = LoadSpec {
+        object_size: size,
+        workers,
+        duration: Duration::from_millis(ms),
+        num_objects: 64,
+        ..Default::default()
+    };
+    aisloader::stage_uniform(&capped, "bench", &base);
+    let get = aisloader::run(&capped, "bench", &base);
+    let g = get.throughput.gib_per_sec();
+    println!("live-capped,{size},get,1,{g:.3},1.0");
+    for &k in &[8usize, 16, 32] {
+        let r = aisloader::run(&capped, "bench", &LoadSpec { batch: Some(k), ..base.clone() });
+        let t = r.throughput.gib_per_sec();
+        println!("live-capped,{size},getbatch,{k},{t:.3},{:.2}", t / g);
+    }
+    let peak = capped.targets.iter().map(|t| t.budget.peak()).max().unwrap();
+    eprintln!(
+        "# live-capped: max DT resident {peak} B, budget {} B",
+        capped.targets[0].budget.budget()
+    );
 }

@@ -6,8 +6,9 @@ use std::time::Instant;
 
 use getbatch::batch::request::{BatchEntry, BatchRequest};
 use getbatch::client::sdk::Client;
+use getbatch::config::GetBatchConfig;
 use getbatch::dt::order::OrderBuffer;
-use getbatch::proto::frame::{encode_into, read_frame, Frame};
+use getbatch::proto::frame::{chunk_frames, encode_into, read_frame, Frame};
 use getbatch::tar::TarWriter;
 use getbatch::testutil::fixtures;
 use getbatch::util::cli::Args;
@@ -52,6 +53,26 @@ fn main() {
         read_frame(&mut cur).unwrap().unwrap();
     });
 
+    // chunked framing of a 1MiB entry (the large-object streaming path);
+    // chunks are prebuilt so the measurement is encode cost, not the
+    // allocation of a fresh source buffer per iteration
+    let big = vec![3u8; 1 << 20];
+    let big_frames = chunk_frames(1, 0, big, 256 << 10);
+    let mut scratch = Vec::new();
+    bench("frame: encode 1MiB chunked (4 x 256KiB, incl. crc)", 500 * scale, || {
+        for cf in &big_frames {
+            encode_into(cf, &mut scratch);
+        }
+    });
+    let mut chunk_wire = Vec::new();
+    for cf in &big_frames {
+        getbatch::proto::frame::write_frame(&mut chunk_wire, cf).unwrap();
+    }
+    bench("frame: decode 1MiB chunked (incl. crc)", 500 * scale, || {
+        let mut cur = std::io::Cursor::new(&chunk_wire);
+        while read_frame(&mut cur).unwrap().is_some() {}
+    });
+
     // reorder buffer: 256 out-of-order fills + ordered drain
     bench("order: 256-slot fill+drain", 2_000 * scale, || {
         let b = OrderBuffer::new(256);
@@ -89,4 +110,28 @@ fn main() {
     bench("e2e: plain GET live", 200 * scale, || {
         client.get("b", &names[0]).unwrap();
     });
+    drop(client);
+    drop(c);
+
+    // Large-object, memory-capped scenario: 8 x 1MiB per batch streamed
+    // through a DT whose enforced budget (256KiB) is 32x smaller than the
+    // batch — exercises chunked streaming + backpressure end to end.
+    let capped = fixtures::cluster_cfg(
+        4,
+        GetBatchConfig { chunk_bytes: 64 << 10, dt_buffer_bytes: 256 << 10, ..Default::default() },
+    );
+    let big_names = fixtures::stage_objects(&capped, "big", 16, 1 << 20, 2);
+    let capped_client = Client::new(&capped.proxy_addr());
+    let big_entries: Vec<BatchEntry> =
+        big_names.iter().take(8).map(|n| BatchEntry::obj("big", n)).collect();
+    bench("e2e: GetBatch(8 x 1MiB) budget=256KiB", 10 * scale, || {
+        capped_client.get_batch_collect(&BatchRequest::new(big_entries.clone())).unwrap();
+    });
+    let peak = capped.targets.iter().map(|t| t.budget.peak()).max().unwrap();
+    println!(
+        "memory-capped run: max DT resident {} B (budget {} B), overruns {}",
+        peak,
+        capped.targets[0].budget.budget(),
+        capped.targets.iter().map(|t| t.budget.overruns()).sum::<u64>()
+    );
 }

@@ -2,20 +2,31 @@
 //! (missing objects/members, transient stream failures, sender timeouts) may
 //! be tolerated under continue-on-error, surfacing as placeholders instead.
 
+use std::fmt;
+
 /// Why an individual entry failed.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EntryError {
-    #[error("object not found: {0}")]
     NotFound(String),
-    #[error("archive member not found: {0}")]
     MemberNotFound(String),
-    #[error("transient stream failure: {0}")]
     StreamFailure(String),
-    #[error("timed out waiting for sender (entry {0})")]
     SenderTimeout(u32),
-    #[error("local read failed: {0}")]
     ReadFailure(String),
 }
+
+impl fmt::Display for EntryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EntryError::NotFound(k) => write!(f, "object not found: {k}"),
+            EntryError::MemberNotFound(k) => write!(f, "archive member not found: {k}"),
+            EntryError::StreamFailure(r) => write!(f, "transient stream failure: {r}"),
+            EntryError::SenderTimeout(i) => write!(f, "timed out waiting for sender (entry {i})"),
+            EntryError::ReadFailure(r) => write!(f, "local read failed: {r}"),
+        }
+    }
+}
+
+impl std::error::Error for EntryError {}
 
 impl EntryError {
     /// All per-entry retrieval errors are classified soft; only exhausted
@@ -36,22 +47,45 @@ impl EntryError {
 }
 
 /// Request-level failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum BatchError {
-    #[error("request aborted: entry {index} failed: {source}")]
-    EntryFailed {
-        index: u32,
-        #[source]
-        source: EntryError,
-    },
-    #[error("soft-error budget exceeded ({count} > {limit})")]
+    EntryFailed { index: u32, source: EntryError },
     SoftErrorBudget { count: u32, limit: u32 },
-    #[error("admission rejected: {0}")]
     Admission(String),
-    #[error("bad request: {0}")]
     BadRequest(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for BatchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BatchError::EntryFailed { index, source } => {
+                write!(f, "request aborted: entry {index} failed: {source}")
+            }
+            BatchError::SoftErrorBudget { count, limit } => {
+                write!(f, "soft-error budget exceeded ({count} > {limit})")
+            }
+            BatchError::Admission(r) => write!(f, "admission rejected: {r}"),
+            BatchError::BadRequest(r) => write!(f, "bad request: {r}"),
+            BatchError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for BatchError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BatchError::EntryFailed { source, .. } => Some(source),
+            BatchError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for BatchError {
+    fn from(e: std::io::Error) -> BatchError {
+        BatchError::Io(e)
+    }
 }
 
 #[cfg(test)]

@@ -17,14 +17,43 @@ pub struct Client {
     proxy: String,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ClientError {
-    #[error("http {status}: {msg}")]
     Status { status: u16, msg: String },
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("tar: {0}")]
-    Tar(#[from] crate::tar::TarError),
+    Io(io::Error),
+    Tar(crate::tar::TarError),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Status { status, msg } => write!(f, "http {status}: {msg}"),
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Tar(e) => write!(f, "tar: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            ClientError::Tar(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
+}
+
+impl From<crate::tar::TarError> for ClientError {
+    fn from(e: crate::tar::TarError) -> ClientError {
+        ClientError::Tar(e)
+    }
 }
 
 /// Per-call latency instrumentation: the paper's measurement definition —

@@ -8,7 +8,8 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::config::ClusterConfig;
-use crate::dt::admission::{Admission, Admit};
+use crate::dt::admission::{Admission, Admit, MemoryBudget};
+use crate::util::error as anyhow;
 use crate::dt::exec::{assemble, AssembleCtx, DtExec, DtRegistry};
 use crate::gateway::proxy::{make_proxy_handler, ProxyState, SmapHolder};
 use crate::metrics::{GetBatchMetrics, Registry};
@@ -35,6 +36,9 @@ pub struct TargetNode {
     pub registry: Arc<DtRegistry>,
     pub peer_pool: Arc<PeerPool>,
     pub metrics: Arc<GetBatchMetrics>,
+    /// Enforced data-plane memory budget (peak/used visible for tests and
+    /// diagnostics).
+    pub budget: Arc<MemoryBudget>,
     // Keep servers alive; drop order stops accept loops first.
     _http: HttpServer,
     _p2p: P2pServer,
@@ -63,6 +67,9 @@ impl Cluster {
     /// Boot a cluster per `cfg`. Stores live under `cfg.root_dir` (or a
     /// fresh temp dir, removed on drop).
     pub fn start(cfg: ClusterConfig) -> anyhow::Result<Cluster> {
+        // Enforce knob relationships once, up front: every consumer below
+        // (budget, senders, DT-local chunking) sees consistent values.
+        let cfg = ClusterConfig { getbatch: cfg.getbatch.sanitized(), ..cfg };
         let (root, owns_root) = if cfg.root_dir.is_empty() {
             let p = std::env::temp_dir().join(format!(
                 "getbatch-{}-{:x}",
@@ -86,9 +93,21 @@ impl Cluster {
             let metrics = registry.node(&id);
             let store = Arc::new(ObjectStore::open(&root.join(&id), cfg.mountpaths)?);
             let shards = Arc::new(ShardIndexCache::new(256));
-            let dt_registry = DtRegistry::new();
+            // Registrations whose client never arrives at the stream
+            // endpoint are reaped after this TTL (generous for redirect
+            // latency, short enough not to pin the memory budget).
+            let abandon_ttl =
+                cfg.getbatch.sender_wait * 2 + std::time::Duration::from_secs(60);
+            let dt_registry = DtRegistry::with_config(abandon_ttl, Some(Arc::clone(&metrics)));
             let peer_pool = PeerPool::new(cfg.p2p_idle_timeout);
             let bg = Arc::new(ThreadPool::new(cfg.http_workers.max(4), &format!("{id}-bg")));
+            // Node-wide enforced data-plane memory budget: all of this
+            // target's in-flight DT reorder buffers reserve against it.
+            let budget = MemoryBudget::new(
+                cfg.getbatch.dt_buffer_bytes,
+                cfg.getbatch.chunk_bytes as u64,
+                Some(Arc::clone(&metrics)),
+            );
 
             // P2P fan-in: frames go straight to the DT registry.
             let reg2 = Arc::clone(&dt_registry);
@@ -105,6 +124,7 @@ impl Cluster {
                 metrics: Arc::clone(&metrics),
                 bg: Arc::clone(&bg),
                 admission: Admission::new(cfg.getbatch.clone(), Arc::clone(&metrics), Arc::clone(&clock)),
+                budget: Arc::clone(&budget),
                 cfg: cfg.clone(),
                 clock: Arc::clone(&clock),
             });
@@ -122,6 +142,7 @@ impl Cluster {
                 registry: dt_registry,
                 peer_pool,
                 metrics,
+                budget,
                 _http: http,
                 _p2p: p2p,
                 _bg: bg,
@@ -196,6 +217,7 @@ struct TargetState {
     metrics: Arc<GetBatchMetrics>,
     bg: Arc<ThreadPool>,
     admission: Admission,
+    budget: Arc<MemoryBudget>,
     cfg: ClusterConfig,
     clock: Arc<dyn Clock>,
 }
@@ -260,20 +282,33 @@ fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
         Some(r) => r,
         None => return Response::text(400, "malformed dt-register"),
     };
+    // Opportunistic reaping: registrations whose client never arrived at
+    // the stream endpoint must not pin the shared memory budget.
+    st.registry.reap_stale();
     // Memory is a hard constraint: §2.4.3.
     if let Admit::RejectMemory { buffered, critical } = st.admission.check_register() {
         return Response::text(429, &format!("memory pressure: {buffered}/{critical}"));
     }
     st.metrics.dt_requests.inc();
     st.metrics.dt_inflight.add(1);
-    let exec = st.registry.register(DtExec::new(reg.req_id, reg.request, reg.num_senders));
+    // The execution's reorder buffer reserves against the node's enforced
+    // memory budget — producers block under pressure (§2.4.3).
+    let exec = st.registry.register(DtExec::with_budget(
+        reg.req_id,
+        reg.request,
+        reg.num_senders,
+        Arc::clone(&st.budget),
+    ));
 
     // DT-local resolution (runs concurrently with remote senders).
     let st2 = Arc::clone(st);
     st.bg.execute(move || {
         let smap = match st2.smap.get() {
             Some(s) => s,
-            None => return,
+            None => {
+                exec.note_local_done();
+                return;
+            }
         };
         let mine = placement::local_entries(&smap, &exec.request, st2.idx);
         for (idx, e) in mine {
@@ -281,7 +316,10 @@ fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
             // this node's in-flight DT executions.
             st2.admission.throttle(st2.registry.inflight() as i64);
             match crate::sender::resolve_entry(&st2.store, &st2.shards, e) {
-                Ok(data) => exec.buf.fill(idx, data),
+                // Chunked like the remote-sender path, so a large DT-local
+                // entry reserves budget incrementally (bounded residency)
+                // and the assembler can start emitting it early.
+                Ok(data) => exec.buf.fill_chunked(idx, data, st2.cfg.getbatch.chunk_bytes),
                 Err(reason) => exec.buf.fail(
                     idx,
                     if reason.starts_with("missing object") {
@@ -294,6 +332,10 @@ fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
                 ),
             }
         }
+        // Completion signal: together with SENDER_DONE fan-in this lets the
+        // assembler recover still-pending slots without burning the full
+        // sender-wait timeout.
+        exec.note_local_done();
     });
     Response::ok(Vec::new())
 }
@@ -321,6 +363,7 @@ fn target_sender_activate(st: &Arc<TargetState>, req: Request) -> Response {
             &st2.shards,
             &st2.peer_pool,
             &st2.metrics,
+            &st2.cfg.getbatch,
             ra,
         );
     });
@@ -335,7 +378,9 @@ fn target_dt_stream(st: &Arc<TargetState>, req: Request) -> Response {
         Some(id) => id,
         None => return Response::text(400, "missing req id"),
     };
-    let exec = match st.registry.get(req_id) {
+    // Atomic lookup-and-claim shields this execution from the
+    // abandoned-registration reaper.
+    let exec = match st.registry.claim(req_id) {
         Some(e) => e,
         None => return Response::text(404, "unknown execution"),
     };
@@ -358,6 +403,10 @@ fn target_dt_stream(st: &Arc<TargetState>, req: Request) -> Response {
         // Chunked: overlap retrieval, assembly and consumption (§2.4.1).
         Response::stream(move |w| {
             let r = assemble(&exec, &ctx, w);
+            // Closing first lets producers still blocked on the memory
+            // budget (e.g. after an abort) bail out promptly instead of
+            // stalling their connection until the budget's patience expires.
+            exec.buf.close();
             registry.remove(req_id);
             metrics.dt_inflight.sub(1);
             match r {
@@ -370,6 +419,7 @@ fn target_dt_stream(st: &Arc<TargetState>, req: Request) -> Response {
     } else {
         let mut buf = Vec::new();
         let r = assemble(&exec, &ctx, &mut buf);
+        exec.buf.close();
         registry.remove(req_id);
         metrics.dt_inflight.sub(1);
         match r {

@@ -5,6 +5,7 @@
 
 use std::time::Duration;
 
+use crate::util::error as anyhow;
 use crate::util::json::Value;
 
 /// The paper's dedicated GetBatch configuration section (§2.4.3).
@@ -27,6 +28,20 @@ pub struct GetBatchConfig {
     pub throttle_watermark: i64,
     /// Base throttle sleep; scales with overload factor.
     pub throttle_base: Duration,
+    /// Streaming chunk size: senders split entries larger than this into
+    /// chunk frames (`proto::frame` FIRST/LAST flags) so the DT can emit an
+    /// entry before its last byte arrives and bound its memory. Smaller
+    /// chunks mean tighter memory bounds and earlier time-to-first-byte;
+    /// larger chunks mean fewer frames on the wire. Keep
+    /// `dt_buffer_bytes ≥ 2 × chunk_bytes` (see below).
+    pub chunk_bytes: usize,
+    /// DT data-plane memory budget: the *enforced* cap on bytes resident in
+    /// a target's reorder buffers. Producers (P2P dispatch, DT-local reads)
+    /// block once the budget is exhausted, which propagates as TCP
+    /// backpressure to senders; peak residency stays ≤ this value provided
+    /// it is at least `2 × chunk_bytes` (see `dt::admission::MemoryBudget`
+    /// for the exact bound and the head-of-line progress exemption).
+    pub dt_buffer_bytes: u64,
 }
 
 impl Default for GetBatchConfig {
@@ -39,11 +54,26 @@ impl Default for GetBatchConfig {
             mem_critical_bytes: 512 << 20,
             throttle_watermark: 64,
             throttle_base: Duration::from_micros(200),
+            chunk_bytes: 256 << 10,
+            dt_buffer_bytes: 256 << 20,
         }
     }
 }
 
 impl GetBatchConfig {
+    /// Clamp dependent knobs into safe relationships: the memory-budget
+    /// bound (see `dt::admission::MemoryBudget`) needs
+    /// `chunk_bytes ≤ dt_buffer_bytes / 2`. Called at cluster boot so a
+    /// misconfiguration degrades to smaller chunks instead of collapsing
+    /// the data path into patience-timeout force admissions.
+    pub fn sanitized(&self) -> GetBatchConfig {
+        let mut c = self.clone();
+        c.dt_buffer_bytes = c.dt_buffer_bytes.max(2);
+        let max_chunk = (c.dt_buffer_bytes / 2).min(usize::MAX as u64) as usize;
+        c.chunk_bytes = c.chunk_bytes.clamp(1, max_chunk);
+        c
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj()
             .set("sender_wait_ms", Value::num(self.sender_wait.as_millis() as f64))
@@ -53,6 +83,8 @@ impl GetBatchConfig {
             .set("mem_critical_bytes", Value::num(self.mem_critical_bytes as f64))
             .set("throttle_watermark", Value::num(self.throttle_watermark as f64))
             .set("throttle_base_us", Value::num(self.throttle_base.as_micros() as f64))
+            .set("chunk_bytes", Value::num(self.chunk_bytes as f64))
+            .set("dt_buffer_bytes", Value::num(self.dt_buffer_bytes as f64))
     }
 
     pub fn from_json(v: &Value) -> GetBatchConfig {
@@ -77,6 +109,8 @@ impl GetBatchConfig {
                 .u64_field("throttle_base_us")
                 .map(Duration::from_micros)
                 .unwrap_or(d.throttle_base),
+            chunk_bytes: v.u64_field("chunk_bytes").map(|x| x as usize).unwrap_or(d.chunk_bytes),
+            dt_buffer_bytes: v.u64_field("dt_buffer_bytes").unwrap_or(d.dt_buffer_bytes),
         }
     }
 }
@@ -163,6 +197,26 @@ mod tests {
         assert!(c.targets >= 1 && c.mountpaths >= 1);
         assert!(c.getbatch.gfn_attempts > 0);
         assert!(c.getbatch.mem_critical_bytes > 0);
+        // Streaming invariant: the budget must fit the head-of-line
+        // exemption chunk on top of the admission cap.
+        assert!(c.getbatch.dt_buffer_bytes >= 2 * c.getbatch.chunk_bytes as u64);
+    }
+
+    #[test]
+    fn sanitized_clamps_chunk_to_half_budget() {
+        let c = GetBatchConfig {
+            chunk_bytes: 1 << 20,
+            dt_buffer_bytes: 512 << 10,
+            ..Default::default()
+        }
+        .sanitized();
+        assert_eq!(c.chunk_bytes, 256 << 10, "chunk clamped to budget/2");
+        let ok = GetBatchConfig::default().sanitized();
+        assert_eq!(ok.chunk_bytes, GetBatchConfig::default().chunk_bytes, "defaults untouched");
+        let degenerate = GetBatchConfig { chunk_bytes: 0, dt_buffer_bytes: 0, ..Default::default() }
+            .sanitized();
+        assert!(degenerate.chunk_bytes >= 1);
+        assert!(degenerate.dt_buffer_bytes >= 2 * degenerate.chunk_bytes as u64);
     }
 
     #[test]

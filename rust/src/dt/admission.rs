@@ -1,14 +1,159 @@
-//! Admission control & throttling at the DT (§2.4.3): memory pressure is a
-//! *hard* constraint — new work is rejected with HTTP 429 once DT-buffered
-//! bytes cross the critical threshold; CPU/disk pressure is *soft* — the DT
-//! inserts calibrated sleeps (backpressure) while in-flight work proceeds.
+//! Admission control & backpressure at the DT (§2.4.3).
+//!
+//! Memory pressure is a *hard* constraint, enforced at two levels:
+//!
+//! 1. [`Admission::check_register`] — new work is rejected with HTTP 429
+//!    once DT-buffered bytes cross the critical threshold;
+//! 2. [`MemoryBudget`] — an *enforced* resident-bytes budget on the data
+//!    plane: every byte entering a DT reorder buffer must reserve against
+//!    the node's budget first, and producers block (which propagates as TCP
+//!    backpressure to senders) while the buffer is full. This replaces the
+//!    earlier "soft gate" that only wrote a gauge.
+//!
+//! CPU/disk pressure stays *soft* — the DT inserts calibrated sleeps
+//! ([`Admission::throttle`]) while in-flight work proceeds.
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::config::GetBatchConfig;
 use crate::metrics::GetBatchMetrics;
 use crate::util::clock::Clock;
+
+/// Node-wide resident-bytes budget shared by every in-flight DT execution
+/// on one target.
+///
+/// Admission rule (see `OrderBuffer::reserve` for the caller side):
+///
+/// * normal reservations are admitted only while `used + bytes <= cap`,
+///   where `cap = budget - chunk_bytes`;
+/// * the consumer's head-of-line slot may force one chunk in while it holds
+///   no resident bytes (progress exemption).
+///
+/// Because an exempt chunk is at most `chunk_bytes` and normal admissions
+/// never push `used` past `cap`, peak residency stays ≤ `budget` for a
+/// single in-flight execution (requires `budget ≥ 2 × chunk_bytes`;
+/// `config::GetBatchConfig` documents the knobs). With R concurrent
+/// executions each head may hold one exempt chunk, so the worst case is
+/// `cap + R × chunk_bytes`; the `mem_critical_bytes` 429 gate bounds R
+/// under sustained pressure. A patience timeout force-admits rather than
+/// wedging the node if a consumer stalls indefinitely; such overruns are
+/// counted.
+pub struct MemoryBudget {
+    budget: u64,
+    cap: u64,
+    state: Mutex<BudgetState>,
+    cv: Condvar,
+    patience: Duration,
+    metrics: Option<Arc<GetBatchMetrics>>,
+}
+
+struct BudgetState {
+    used: u64,
+    peak: u64,
+    overruns: u64,
+}
+
+impl MemoryBudget {
+    pub fn new(budget_bytes: u64, chunk_bytes: u64, metrics: Option<Arc<GetBatchMetrics>>) -> Arc<MemoryBudget> {
+        let budget = budget_bytes.max(1);
+        let cap = budget.saturating_sub(chunk_bytes).max(1);
+        Arc::new(MemoryBudget {
+            budget,
+            cap,
+            state: Mutex::new(BudgetState { used: 0, peak: 0, overruns: 0 }),
+            cv: Condvar::new(),
+            patience: Duration::from_secs(10),
+            metrics,
+        })
+    }
+
+    /// Configured budget (the operator-facing number).
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// How long a producer may block before being force-admitted.
+    pub fn patience(&self) -> Duration {
+        self.patience
+    }
+
+    pub fn used(&self) -> u64 {
+        self.state.lock().unwrap().used
+    }
+
+    /// High-water mark of resident bytes (test/diagnostic hook for the
+    /// "never exceeds the budget" guarantee).
+    pub fn peak(&self) -> u64 {
+        self.state.lock().unwrap().peak
+    }
+
+    /// Forced admissions after patience ran out (0 in healthy operation).
+    pub fn overruns(&self) -> u64 {
+        self.state.lock().unwrap().overruns
+    }
+
+    fn admit_locked(&self, st: &mut BudgetState, bytes: u64) {
+        st.used += bytes;
+        st.peak = st.peak.max(st.used);
+        if let Some(m) = &self.metrics {
+            m.dt_buffered_bytes.set(st.used as i64);
+        }
+    }
+
+    /// Admit `bytes` iff it fits under the cap.
+    pub fn try_reserve(&self, bytes: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.used + bytes > self.cap {
+            return false;
+        }
+        self.admit_locked(&mut st, bytes);
+        true
+    }
+
+    /// Admit `bytes` unconditionally (head-of-line exemption or patience
+    /// overrun).
+    pub fn force_reserve(&self, bytes: u64, overrun: bool) {
+        let mut st = self.state.lock().unwrap();
+        if overrun {
+            st.overruns += 1;
+            if let Some(m) = &self.metrics {
+                m.budget_overruns.inc();
+            }
+        }
+        self.admit_locked(&mut st, bytes);
+    }
+
+    /// Block briefly waiting for room (or an exemption-state change — the
+    /// caller re-checks its exemption between slices). Returns `false` once
+    /// `deadline` has passed.
+    pub fn wait_room_until(&self, deadline: Instant) -> bool {
+        let now = Instant::now();
+        if now >= deadline {
+            return false;
+        }
+        // Short slice: exemption state (the consumer's head index) changes
+        // without a budget notification, so never park for long.
+        let slice = (deadline - now).min(Duration::from_millis(5));
+        let st = self.state.lock().unwrap();
+        let t0 = Instant::now();
+        let _ = self.cv.wait_timeout(st, slice).unwrap();
+        if let Some(m) = &self.metrics {
+            m.budget_wait_ns.add(t0.elapsed().as_nanos() as u64);
+        }
+        Instant::now() < deadline
+    }
+
+    pub fn release(&self, bytes: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.used = st.used.saturating_sub(bytes);
+        if let Some(m) = &self.metrics {
+            m.dt_buffered_bytes.set(st.used as i64);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+}
 
 pub struct Admission {
     cfg: GetBatchConfig,
@@ -109,5 +254,47 @@ mod tests {
     fn throttle_capped() {
         let (adm, _, _) = setup(1 << 30, 0);
         assert_eq!(adm.throttle(1_000_000), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn budget_cap_leaves_headroom_for_exempt_chunk() {
+        let b = MemoryBudget::new(100, 30, None);
+        // cap = 70: normal admissions stop there...
+        assert!(b.try_reserve(70));
+        assert!(!b.try_reserve(1));
+        // ...so one exempt chunk (≤ 30) can never push past the budget.
+        b.force_reserve(30, false);
+        assert_eq!(b.used(), 100);
+        assert!(b.peak() <= b.budget());
+        b.release(100);
+        assert_eq!(b.used(), 0);
+        assert_eq!(b.peak(), 100, "peak is a high-water mark");
+        assert_eq!(b.overruns(), 0);
+    }
+
+    #[test]
+    fn budget_tracks_overruns_and_gauge() {
+        let metrics = GetBatchMetrics::new();
+        let b = MemoryBudget::new(64, 16, Some(Arc::clone(&metrics)));
+        assert!(b.try_reserve(40));
+        assert_eq!(metrics.dt_buffered_bytes.get(), 40);
+        b.force_reserve(10, true);
+        assert_eq!(b.overruns(), 1);
+        assert_eq!(metrics.budget_overruns.get(), 1);
+        b.release(50);
+        assert_eq!(metrics.dt_buffered_bytes.get(), 0);
+    }
+
+    #[test]
+    fn budget_wait_room_respects_deadline() {
+        let b = MemoryBudget::new(10, 2, None);
+        assert!(b.try_reserve(8)); // cap reached
+        let deadline = Instant::now() + Duration::from_millis(25);
+        let mut waited = 0;
+        while b.wait_room_until(deadline) {
+            waited += 1;
+            assert!(waited < 1000, "must terminate");
+        }
+        assert!(Instant::now() >= deadline);
     }
 }

@@ -1,12 +1,20 @@
 //! Per-request DT execution state and the ordered assembly loop (§2.3.1
-//! phase 3): waits on each request slot in order, recovers soft errors via
+//! phase 3): drains each request slot in order — streaming chunked entries
+//! through as their bytes arrive — recovers soft errors via
 //! get-from-neighbor (GFN), emits placeholders under continue-on-error, and
 //! enforces the per-request error budgets of §2.4.2–2.4.3.
+//!
+//! Completion awareness: every sender emits SENDER_DONE after its last
+//! frame and the DT's own local resolution reports completion too, so when
+//! fan-in is complete and a slot is still unresolved the assembler starts
+//! recovery *immediately* instead of burning the full `sender_wait`
+//! timeout.
 
 use std::collections::HashMap;
 use std::io::Write;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::batch::error::{BatchError, EntryError};
 use crate::batch::request::{BatchEntry, BatchRequest};
@@ -20,7 +28,13 @@ use crate::proto::wire;
 use crate::tar::TarWriter;
 use crate::util::clock::{Clock, Stopwatch};
 
-use super::order::{OrderBuffer, SlotWait};
+use super::admission::MemoryBudget;
+use super::order::{ChunkWait, OrderBuffer};
+
+/// How often the assembler re-checks out-of-band completion state while
+/// waiting on a slot (SENDER_DONE arrival also pokes the buffer, so this is
+/// a backstop, not the primary latency).
+const WAIT_QUANTUM: Duration = Duration::from_millis(15);
 
 /// Execution state of one GetBatch request on its Designated Target.
 pub struct DtExec {
@@ -29,29 +43,111 @@ pub struct DtExec {
     pub num_senders: u32,
     pub buf: OrderBuffer,
     senders_done: AtomicU32,
+    /// The DT's own local-resolution pass finished (it is a sender too).
+    local_done: AtomicBool,
+    /// When this execution was registered (staleness reaping).
+    registered_at: Instant,
+    /// A client arrived at the stream endpoint — the execution is being
+    /// consumed and must not be reaped.
+    claimed: AtomicBool,
 }
 
 impl DtExec {
     pub fn new(req_id: u64, request: BatchRequest, num_senders: u32) -> DtExec {
         let n = request.entries.len();
-        DtExec { req_id, request, num_senders, buf: OrderBuffer::new(n), senders_done: AtomicU32::new(0) }
+        DtExec {
+            req_id,
+            request,
+            num_senders,
+            buf: OrderBuffer::new(n),
+            senders_done: AtomicU32::new(0),
+            local_done: AtomicBool::new(false),
+            registered_at: Instant::now(),
+            claimed: AtomicBool::new(false),
+        }
+    }
+
+    /// Execution whose reorder buffer reserves against the node's memory
+    /// budget (production path).
+    pub fn with_budget(
+        req_id: u64,
+        request: BatchRequest,
+        num_senders: u32,
+        budget: Arc<MemoryBudget>,
+    ) -> DtExec {
+        let n = request.entries.len();
+        DtExec {
+            req_id,
+            request,
+            num_senders,
+            buf: OrderBuffer::with_budget(n, budget),
+            senders_done: AtomicU32::new(0),
+            local_done: AtomicBool::new(false),
+            registered_at: Instant::now(),
+            claimed: AtomicBool::new(false),
+        }
     }
 
     pub fn senders_done(&self) -> u32 {
         self.senders_done.load(Ordering::Relaxed)
     }
+
+    /// Mark this execution as being consumed (phase-3 client arrived).
+    pub fn claim(&self) {
+        self.claimed.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_claimed(&self) -> bool {
+        self.claimed.load(Ordering::Relaxed)
+    }
+
+    /// Mark the DT-local resolution pass complete (called by the node once
+    /// its own entries are resolved).
+    pub fn note_local_done(&self) {
+        self.local_done.store(true, Ordering::Relaxed);
+        self.buf.poke();
+    }
+
+    /// All remote senders reported DONE and the DT-local pass finished — no
+    /// further frames can resolve a pending slot.
+    pub fn fanin_complete(&self) -> bool {
+        self.local_done.load(Ordering::Relaxed)
+            && self.senders_done.load(Ordering::Relaxed) >= self.num_senders
+    }
 }
 
 /// Registry of in-flight executions on one target; the P2P frame handler
-/// dispatches into it.
-#[derive(Default)]
+/// dispatches into it. Executions whose client never arrives at the
+/// phase-3 stream endpoint are reaped after `abandon_ttl` so they cannot
+/// pin the node-wide memory budget (reaping runs opportunistically from
+/// the HTTP registration path and, throttled, from frame dispatch — the
+/// exact moments an abandoned execution would otherwise accumulate bytes).
 pub struct DtRegistry {
     execs: Mutex<HashMap<u64, Arc<DtExec>>>,
+    abandon_ttl: Duration,
+    metrics: Option<Arc<GetBatchMetrics>>,
+    created: Instant,
+    /// Millis (since `created`) of the last dispatch-path reap sweep.
+    last_reap_ms: AtomicU64,
 }
 
 impl DtRegistry {
     pub fn new() -> Arc<DtRegistry> {
-        Arc::new(DtRegistry::default())
+        // Standalone/test default: generous TTL, no gauge to settle.
+        DtRegistry::with_config(Duration::from_secs(600), None)
+    }
+
+    pub fn with_config(
+        abandon_ttl: Duration,
+        metrics: Option<Arc<GetBatchMetrics>>,
+    ) -> Arc<DtRegistry> {
+        Arc::new(DtRegistry {
+            execs: Mutex::new(HashMap::new()),
+            abandon_ttl,
+            metrics,
+            created: Instant::now(),
+            last_reap_ms: AtomicU64::new(0),
+        })
     }
 
     pub fn register(&self, exec: DtExec) -> Arc<DtExec> {
@@ -64,6 +160,18 @@ impl DtRegistry {
         self.execs.lock().unwrap().get(&req_id).cloned()
     }
 
+    /// Atomically look up *and* claim an execution for consumption. The
+    /// claim flag is set under the same lock `reap_stale` scans with, so a
+    /// stream request and the reaper can never both win the execution.
+    pub fn claim(&self, req_id: u64) -> Option<Arc<DtExec>> {
+        let execs = self.execs.lock().unwrap();
+        let exec = execs.get(&req_id).cloned();
+        if let Some(e) = &exec {
+            e.claim();
+        }
+        exec
+    }
+
     /// Release all per-request state (§2.4.2: "upon successful completion or
     /// termination, the DT ... releases all per-request execution state").
     pub fn remove(&self, req_id: u64) {
@@ -74,15 +182,92 @@ impl DtRegistry {
         self.execs.lock().unwrap().len()
     }
 
+    /// Drop executions that were registered more than `abandon_ttl` ago and
+    /// never claimed by a phase-3 stream request (client crashed or
+    /// abandoned the redirect). Closing their buffers releases any
+    /// memory-budget residency and unblocks producers promptly — otherwise
+    /// an abandoned request would pin the node-wide budget forever. The
+    /// `dt_inflight` gauge is settled here (under the configured metrics).
+    pub fn reap_stale(&self) -> usize {
+        let mut reaped = Vec::new();
+        {
+            let mut execs = self.execs.lock().unwrap();
+            execs.retain(|_, e| {
+                let stale = !e.is_claimed() && e.registered_at.elapsed() > self.abandon_ttl;
+                if stale {
+                    reaped.push(Arc::clone(e));
+                }
+                !stale
+            });
+        }
+        for e in &reaped {
+            e.buf.close();
+        }
+        if let Some(m) = &self.metrics {
+            if !reaped.is_empty() {
+                m.dt_inflight.sub(reaped.len() as i64);
+            }
+        }
+        reaped.len()
+    }
+
+    /// Throttled reap from the frame-dispatch hot path (at most one sweep
+    /// per second) — frames arriving for an abandoned execution are exactly
+    /// the traffic that would otherwise accumulate bytes against it.
+    fn maybe_reap(&self) {
+        let now_ms = self.created.elapsed().as_millis() as u64;
+        let last = self.last_reap_ms.load(Ordering::Relaxed);
+        if now_ms.saturating_sub(last) < 1000 {
+            return;
+        }
+        if self
+            .last_reap_ms
+            .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.reap_stale();
+        }
+    }
+
     /// Frame dispatch from the P2P server. Frames for unknown requests are
-    /// dropped (late frames after completion/abort are benign).
+    /// dropped (late frames after completion/abort are benign). DATA frames
+    /// route through the chunk path; producers block here under memory
+    /// pressure, which is exactly the backpressure point — the P2P reader
+    /// thread stalls and TCP flow control pushes back on the sender.
     pub fn dispatch(&self, f: Frame) {
+        self.maybe_reap();
         let exec = match self.get(f.req_id) {
             Some(e) => e,
             None => return,
         };
         match f.ftype {
-            FrameType::Data => exec.buf.fill(f.index, f.payload),
+            FrameType::Data => {
+                let (first, last) = (f.is_first(), f.is_last());
+                if first && last {
+                    // Whole entry in one frame.
+                    exec.buf.fill(f.index, f.payload);
+                } else if !first {
+                    // Middle/last chunk: payload is pure chunk bytes.
+                    exec.buf.append_chunk(f.index, 0, f.payload, false, last);
+                } else {
+                    // FIRST of a multi-chunk entry: chunk_parts validates
+                    // the 8-byte total prefix, which is then stripped
+                    // in place (drain: memmove, no second allocation on
+                    // the hot receive path).
+                    let total = f.chunk_parts().map(|(t, _)| t);
+                    match total {
+                        Some(total) => {
+                            let mut payload = f.payload;
+                            payload.drain(..8);
+                            exec.buf.append_chunk(f.index, total, payload, true, false);
+                        }
+                        None => exec.buf.fail(
+                            f.index,
+                            EntryError::StreamFailure("malformed first chunk".into()),
+                        ),
+                    }
+                }
+            }
             FrameType::SoftErr => {
                 let reason = String::from_utf8_lossy(&f.payload).into_owned();
                 let err = if reason.starts_with("missing object") {
@@ -96,6 +281,10 @@ impl DtRegistry {
             }
             FrameType::SenderDone => {
                 exec.senders_done.fetch_add(1, Ordering::Relaxed);
+                // Wake the assembler: with fan-in complete it can start
+                // recovery for still-pending slots without waiting out the
+                // sender timeout.
+                exec.buf.poke();
             }
         }
     }
@@ -124,12 +313,22 @@ pub struct StreamOutcome {
 
 /// Try to fetch the entry directly from the next-best owners ("neighbors").
 /// Used when a sender timed out or reported a recoverable failure.
+///
+/// Probing is bounded by a *local* per-entry counter capped at
+/// `cfg.gfn_attempts` — never by global metric residue, so concurrent
+/// recoveries can't starve or inflate each other's neighbor budgets.
 fn gfn_recover(ctx: &AssembleCtx, entry: &BatchEntry) -> Option<Vec<u8>> {
     let key = entry.location_key();
+    let max_probes = ctx.cfg.gfn_attempts.max(1);
+    let mut probes = 0u32;
     for &t in placement::ranked(&ctx.smap, &key).iter() {
         if t == ctx.self_target {
             continue;
         }
+        if probes >= max_probes {
+            break;
+        }
+        probes += 1;
         ctx.metrics.recovery_attempts.inc();
         let target = &ctx.smap.targets[t];
         let mut pq = format!("{}?local=true", wire::object_path(&entry.bucket, &entry.obj));
@@ -143,16 +342,108 @@ fn gfn_recover(ctx: &AssembleCtx, entry: &BatchEntry) -> Option<Vec<u8>> {
             },
             _ => ctx.metrics.recovery_failures.inc(),
         }
-        // Only probe a bounded number of neighbors per entry.
-        if ctx.metrics.recovery_attempts.get() % (ctx.cfg.gfn_attempts.max(1) as u64) == 0 {
-            break;
-        }
     }
     None
 }
 
+/// How draining one slot ended.
+enum Drained {
+    /// Entry fully streamed into the TAR (`bytes` of payload).
+    Done { bytes: u64 },
+    /// Failure before any byte of the entry was emitted.
+    Failed(EntryError),
+    /// Timed out — or fan-in completed with the slot unresolved — before
+    /// any byte was emitted.
+    TimedOut,
+    /// Failure/timeout *after* `written` of the entry's `total` bytes were
+    /// already emitted: the TAR header is committed, so only a
+    /// byte-identical splice (GFN re-fetch of the same object, resuming at
+    /// `written`) can still complete the entry. `written_crc` is the
+    /// CRC-32 of the already-emitted prefix — the splice must match it so
+    /// a same-size concurrent overwrite can't be stitched in silently.
+    Poisoned { err: EntryError, total: u64, written: u64, written_crc: u32 },
+}
+
+/// Stream one slot's bytes into the TAR as they arrive.
+fn drain_slot<W: Write>(
+    exec: &DtExec,
+    ctx: &AssembleCtx,
+    tw: &mut TarWriter<W>,
+    idx: u32,
+    entry: &BatchEntry,
+) -> Result<Drained, BatchError> {
+    let sender_wait = ctx.cfg.sender_wait;
+    // Progress-based deadline: each arriving chunk proves the sender is
+    // alive and resets the clock.
+    let mut deadline = Instant::now() + sender_wait;
+    let mut started = false;
+    let mut entry_total = 0u64;
+    let mut written = 0u64;
+    let mut written_crc = crate::util::crc32::Hasher::new();
+    loop {
+        let now = Instant::now();
+        let remaining = deadline.saturating_duration_since(now);
+        let quantum = remaining.min(WAIT_QUANTUM);
+        match exec.buf.wait_chunk(idx, quantum) {
+            ChunkWait::Chunk { bytes, total, done } => {
+                if !started {
+                    tw.begin_entry(&entry.output_name(), total).map_err(io_batch)?;
+                    started = true;
+                    entry_total = total;
+                }
+                tw.write_chunk(&bytes).map_err(io_batch)?;
+                written += bytes.len() as u64;
+                written_crc.update(&bytes);
+                if done {
+                    tw.end_entry().map_err(io_batch)?;
+                    return Ok(Drained::Done { bytes: written });
+                }
+                deadline = Instant::now() + sender_wait;
+            }
+            ChunkWait::Failed(e) => {
+                return Ok(if started {
+                    Drained::Poisoned {
+                        err: e,
+                        total: entry_total,
+                        written,
+                        written_crc: written_crc.finalize(),
+                    }
+                } else {
+                    Drained::Failed(e)
+                });
+            }
+            ChunkWait::TimedOut => {
+                if !started && exec.fanin_complete() && !exec.buf.is_resolved(idx) {
+                    // Nobody can fill this slot any more: recover now
+                    // instead of waiting out the full sender timeout.
+                    ctx.metrics.early_recoveries.inc();
+                    return Ok(Drained::TimedOut);
+                }
+                if Instant::now() >= deadline {
+                    return Ok(if started {
+                        Drained::Poisoned {
+                            err: EntryError::SenderTimeout(idx),
+                            total: entry_total,
+                            written,
+                            written_crc: written_crc.finalize(),
+                        }
+                    } else {
+                        Drained::TimedOut
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn io_batch(e: crate::tar::TarError) -> BatchError {
+    BatchError::Io(std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))
+}
+
 /// The ordered assembly loop: drain slots 0..n in request order into a TAR
-/// stream. Returns the outcome, or the hard error that aborted the request.
+/// stream, starting each entry as soon as its first bytes arrive (§2.3.1
+/// streaming). Returns the outcome, or the hard error that aborted the
+/// request.
 ///
 /// Works identically for streaming and buffered delivery — the caller
 /// decides what `out` is (the chunked HTTP body vs. an in-memory buffer).
@@ -169,70 +460,99 @@ pub fn assemble(
 
     for idx in 0..n {
         let entry = &exec.request.entries[idx as usize];
-        // Pressure throttle: scale with resident buffered bytes (soft gate).
-        ctx.metrics.dt_buffered_bytes.set(exec.buf.buffered_bytes());
         let sw = Stopwatch::start(&*ctx.clock);
-        let mut slot = exec.buf.wait_take(idx, ctx.cfg.sender_wait);
+        let drained = drain_slot(exec, ctx, &mut tw, idx, entry)?;
         ctx.metrics.rxwait_ns.add(sw.elapsed().as_nanos() as u64);
 
-        // Recovery ladder (§2.4.2): recoverable failure or timeout → GFN.
-        if matches!(slot, SlotWait::TimedOut)
-            || matches!(&slot, SlotWait::Failed(e) if e.recoverable())
-        {
-            if gfn_left > 0 {
-                gfn_left -= 1;
-                if let Some(data) = gfn_recover(ctx, entry) {
-                    outcome.recovered += 1;
-                    slot = SlotWait::Ready(data);
-                }
-            }
-        }
-
-        match slot {
-            SlotWait::Ready(data) => {
-                outcome.bytes += data.len() as u64;
-                ctx.metrics.work_items.inc();
-                if entry.archpath.is_some() {
-                    ctx.metrics.members_extracted.inc();
-                    ctx.metrics.member_bytes.add(data.len() as u64);
-                } else {
-                    ctx.metrics.objs_delivered.inc();
-                    ctx.metrics.obj_bytes.add(data.len() as u64);
-                }
-                tw.append(&entry.output_name(), &data)
-                    .map_err(|e| BatchError::Io(std::io::Error::new(std::io::ErrorKind::Other, e.to_string())))?;
+        // Reduce the streaming outcome to the recovery-ladder shape.
+        let failure: Option<EntryError> = match drained {
+            Drained::Done { bytes } => {
+                deliver_metrics(ctx, entry, bytes);
+                outcome.bytes += bytes;
                 outcome.delivered += 1;
+                continue;
             }
-            SlotWait::Failed(_) | SlotWait::TimedOut if exec.request.opts.continue_on_err => {
-                soft_errs += 1;
-                ctx.metrics.soft_errors.inc();
-                if soft_errs > ctx.cfg.max_soft_errs {
-                    ctx.metrics.hard_failures.inc();
-                    return Err(BatchError::SoftErrorBudget {
-                        count: soft_errs,
-                        limit: ctx.cfg.max_soft_errs,
-                    });
+            Drained::Poisoned { err, total, written, written_crc } => {
+                // The TAR header (with `total`) is already committed and
+                // `written` payload bytes are out. The only valid repair is
+                // a byte-identical splice: re-fetch the object via GFN and
+                // resume at `written` — this keeps a sender crash mid-entry
+                // recoverable, like it was for whole-entry frames. The
+                // fetched copy must match both the declared size and the
+                // CRC of the already-emitted prefix, or a concurrent
+                // same-size overwrite would be stitched in silently.
+                if err.recoverable() && gfn_left > 0 {
+                    gfn_left -= 1;
+                    if let Some(data) = gfn_recover(ctx, entry) {
+                        let same_version = data.len() as u64 == total
+                            && crate::util::crc32::hash(&data[..written as usize]) == written_crc;
+                        if same_version {
+                            tw.write_chunk(&data[written as usize..]).map_err(io_batch)?;
+                            tw.end_entry().map_err(io_batch)?;
+                            outcome.recovered += 1;
+                            deliver_metrics(ctx, entry, total);
+                            outcome.bytes += total;
+                            outcome.delivered += 1;
+                            continue;
+                        }
+                        // Size/content changed under us: splice would corrupt.
+                    }
                 }
-                tw.append_missing(&entry.output_name())
-                    .map_err(|e| BatchError::Io(std::io::Error::new(std::io::ErrorKind::Other, e.to_string())))?;
-                outcome.placeholders += 1;
-            }
-            SlotWait::Failed(err) => {
                 ctx.metrics.hard_failures.inc();
                 return Err(BatchError::EntryFailed { index: idx, source: err });
             }
-            SlotWait::TimedOut => {
-                ctx.metrics.hard_failures.inc();
-                return Err(BatchError::EntryFailed {
-                    index: idx,
-                    source: EntryError::SenderTimeout(idx),
-                });
+            Drained::Failed(e) => Some(e),
+            Drained::TimedOut => None,
+        };
+
+        // Recovery ladder (§2.4.2): recoverable failure or timeout → GFN.
+        let recoverable = failure.as_ref().map(|e| e.recoverable()).unwrap_or(true);
+        if recoverable && gfn_left > 0 {
+            gfn_left -= 1;
+            if let Some(data) = gfn_recover(ctx, entry) {
+                outcome.recovered += 1;
+                deliver_metrics(ctx, entry, data.len() as u64);
+                outcome.bytes += data.len() as u64;
+                tw.append(&entry.output_name(), &data).map_err(io_batch)?;
+                outcome.delivered += 1;
+                continue;
             }
         }
+
+        // Unrecovered: placeholder under continue-on-error, abort otherwise.
+        if exec.request.opts.continue_on_err {
+            soft_errs += 1;
+            ctx.metrics.soft_errors.inc();
+            if soft_errs > ctx.cfg.max_soft_errs {
+                ctx.metrics.hard_failures.inc();
+                return Err(BatchError::SoftErrorBudget {
+                    count: soft_errs,
+                    limit: ctx.cfg.max_soft_errs,
+                });
+            }
+            tw.append_missing(&entry.output_name()).map_err(io_batch)?;
+            outcome.placeholders += 1;
+        } else {
+            ctx.metrics.hard_failures.inc();
+            return Err(BatchError::EntryFailed {
+                index: idx,
+                source: failure.unwrap_or(EntryError::SenderTimeout(idx)),
+            });
+        }
     }
-    tw.finish()
-        .map_err(|e| BatchError::Io(std::io::Error::new(std::io::ErrorKind::Other, e.to_string())))?;
+    tw.finish().map_err(io_batch)?;
     Ok(outcome)
+}
+
+fn deliver_metrics(ctx: &AssembleCtx, entry: &BatchEntry, bytes: u64) {
+    ctx.metrics.work_items.inc();
+    if entry.archpath.is_some() {
+        ctx.metrics.members_extracted.inc();
+        ctx.metrics.member_bytes.add(bytes);
+    } else {
+        ctx.metrics.objs_delivered.inc();
+        ctx.metrics.obj_bytes.add(bytes);
+    }
 }
 
 #[cfg(test)]
@@ -244,10 +564,14 @@ mod tests {
     use std::time::Duration;
 
     fn ctx(sender_wait_ms: u64, coer_budget: u32) -> AssembleCtx {
+        ctx_n(sender_wait_ms, coer_budget, 2, 1)
+    }
+
+    fn ctx_n(sender_wait_ms: u64, coer_budget: u32, targets: usize, gfn: u32) -> AssembleCtx {
         let smap = Arc::new(Smap::new(
             1,
             vec![],
-            (0..2)
+            (0..targets)
                 .map(|i| NodeInfo {
                     id: format!("t{i}"),
                     http_addr: "127.0.0.1:1".into(), // unreachable: GFN fails fast
@@ -262,7 +586,7 @@ mod tests {
             cfg: GetBatchConfig {
                 sender_wait: Duration::from_millis(sender_wait_ms),
                 max_soft_errs: coer_budget,
-                gfn_attempts: 1,
+                gfn_attempts: gfn,
                 ..Default::default()
             },
             metrics: GetBatchMetrics::new(),
@@ -290,6 +614,38 @@ mod tests {
             vec!["o0", "o1", "o2"]
         );
         assert_eq!(entries[1].data, vec![1; 10]);
+    }
+
+    #[test]
+    fn assembles_chunked_entries_streamed_across_arrival() {
+        // Entry 0 arrives in chunks while the assembler is already running;
+        // output must be byte-identical and strictly ordered.
+        let exec = Arc::new(DtExec::new(1, request(2, false), 0));
+        let payload: Vec<u8> = (0..5000u32).map(|i| (i % 241) as u8).collect();
+        exec.buf.fill(1, vec![7; 32]);
+        let e2 = Arc::clone(&exec);
+        let p2 = payload.clone();
+        let t = std::thread::spawn(move || {
+            let chunks: Vec<&[u8]> = p2.chunks(1024).collect();
+            for (k, c) in chunks.iter().enumerate() {
+                std::thread::sleep(Duration::from_millis(5));
+                e2.buf.append_chunk(
+                    0,
+                    p2.len() as u64,
+                    c.to_vec(),
+                    k == 0,
+                    k == chunks.len() - 1,
+                );
+            }
+        });
+        let mut out = Vec::new();
+        let o = assemble(&exec, &ctx(1000, 0), &mut out).unwrap();
+        t.join().unwrap();
+        assert_eq!(o.delivered, 2);
+        assert_eq!(o.bytes, payload.len() as u64 + 32);
+        let entries = crate::tar::read_archive(&out).unwrap();
+        assert_eq!(entries[0].data, payload);
+        assert_eq!(entries[1].data, vec![7; 32]);
     }
 
     #[test]
@@ -357,6 +713,147 @@ mod tests {
     }
 
     #[test]
+    fn fanin_complete_skips_sender_wait() {
+        // One remote sender, already DONE; DT-local resolution finished;
+        // slot 0 unresolved. Despite a long sender_wait the assembler must
+        // recover/fail fast (well under the 10s timeout).
+        let exec = DtExec::new(1, request(1, true), 1);
+        exec.note_local_done();
+        let reg = DtRegistry::new();
+        let exec = reg.register(exec);
+        reg.dispatch(Frame::sender_done(1, 0));
+        assert!(exec.fanin_complete());
+        let c = ctx(10_000, 5);
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        let o = assemble(&exec, &c, &mut out).unwrap();
+        assert_eq!(o.placeholders, 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "early recovery must not burn sender_wait: {:?}",
+            t0.elapsed()
+        );
+        assert!(c.metrics.early_recoveries.get() >= 1);
+    }
+
+    #[test]
+    fn mid_entry_failure_is_hard_abort() {
+        // Part of entry 0 is already in the TAR stream when its slot fails:
+        // the archive position is poisoned — must abort even under coer.
+        let exec = DtExec::new(1, request(1, true), 0);
+        exec.buf.append_chunk(0, 100, vec![1; 10], true, false);
+        let exec = Arc::new(exec);
+        let e2 = Arc::clone(&exec);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            // duplicate FIRST after the consumer drained some bytes →
+            // StreamFailure on a partially consumed slot
+            e2.buf.append_chunk(0, 100, vec![2; 10], true, false);
+        });
+        let c = ctx(5000, 5);
+        let mut out = Vec::new();
+        let err = assemble(&exec, &c, &mut out).unwrap_err();
+        t.join().unwrap();
+        assert!(matches!(
+            err,
+            BatchError::EntryFailed { index: 0, source: EntryError::StreamFailure(_) }
+        ));
+        assert_eq!(c.metrics.hard_failures.get(), 1);
+    }
+
+    #[test]
+    fn mid_entry_failure_recovers_by_gfn_splice() {
+        // A sender dies after delivering 1000 of 5000 bytes; a neighbor
+        // holds a byte-identical copy. The committed TAR header must be
+        // completed by splicing the remaining bytes from the GFN fetch.
+        let payload: Vec<u8> = (0..5000u32).map(|i| (i % 193) as u8).collect();
+        let p2 = payload.clone();
+        let srv = crate::proto::http::HttpServer::serve(
+            Arc::new(move |_req| crate::proto::http::Response::ok(p2.clone())),
+            2,
+            "gfn-neighbor",
+        )
+        .unwrap();
+        let smap = Arc::new(Smap::new(
+            1,
+            vec![],
+            vec![
+                NodeInfo { id: "t0".into(), http_addr: "127.0.0.1:1".into(), p2p_addr: String::new() },
+                NodeInfo { id: "t1".into(), http_addr: srv.addr.to_string(), p2p_addr: String::new() },
+            ],
+        ));
+        let c = AssembleCtx {
+            smap,
+            http: HttpClient::new(true),
+            self_target: 0,
+            cfg: GetBatchConfig {
+                sender_wait: Duration::from_millis(5000),
+                gfn_attempts: 2,
+                ..Default::default()
+            },
+            metrics: GetBatchMetrics::new(),
+            clock: RealClock::new(),
+        };
+        let exec = Arc::new(DtExec::new(1, request(1, false), 0));
+        exec.buf.append_chunk(0, 5000, payload[..1000].to_vec(), true, false);
+        let e2 = Arc::clone(&exec);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            // Duplicate FIRST after partial consumption → mid-entry failure.
+            e2.buf.append_chunk(0, 5000, vec![9; 10], true, false);
+        });
+        let mut out = Vec::new();
+        let o = assemble(&exec, &c, &mut out).unwrap();
+        t.join().unwrap();
+        assert_eq!(o.delivered, 1);
+        assert_eq!(o.recovered, 1, "entry completed via GFN splice");
+        let entries = crate::tar::read_archive(&out).unwrap();
+        assert_eq!(entries[0].data, payload, "spliced bytes identical");
+        assert_eq!(c.metrics.hard_failures.get(), 0);
+    }
+
+    #[test]
+    fn gfn_probes_bounded_by_local_counter_not_global_residue() {
+        // 6 targets (5 neighbors), gfn_attempts = 2: exactly 2 neighbors
+        // probed per entry, regardless of pre-existing global counter
+        // residue (the old code keyed the bound off
+        // `recovery_attempts % gfn_attempts`, so residue skewed it).
+        for residue in [0u64, 1, 2, 3, 7] {
+            let c = ctx_n(10, 0, 6, 2);
+            c.metrics.recovery_attempts.add(residue);
+            let entry = BatchEntry::obj("b", "o");
+            assert!(gfn_recover(&c, &entry).is_none(), "unreachable neighbors");
+            let probed = c.metrics.recovery_attempts.get() - residue;
+            assert_eq!(probed, 2, "residue {residue}: probed {probed}");
+            assert_eq!(c.metrics.recovery_failures.get(), 2);
+        }
+    }
+
+    #[test]
+    fn reap_stale_drops_unclaimed_but_spares_claimed() {
+        let metrics = GetBatchMetrics::new();
+        metrics.dt_inflight.set(2);
+        let reg = DtRegistry::with_config(Duration::from_millis(1), Some(Arc::clone(&metrics)));
+        let abandoned = reg.register(DtExec::new(1, request(1, false), 0));
+        reg.register(DtExec::new(2, request(1, false), 0));
+        assert!(reg.claim(2).is_some(), "stream request claims atomically");
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(reg.reap_stale(), 1);
+        assert!(reg.get(1).is_none(), "abandoned execution reaped");
+        assert!(reg.get(2).is_some(), "claimed execution retained");
+        assert_eq!(metrics.dt_inflight.get(), 1, "gauge settled by the reaper");
+        // A reaped execution's buffer is closed: late producers drop fast.
+        abandoned.buf.fill(0, vec![1, 2, 3]);
+        assert!(!abandoned.buf.is_resolved(0), "late fill dropped after close");
+
+        // Fresh registrations survive a sane TTL.
+        let reg_long = DtRegistry::with_config(Duration::from_secs(60), None);
+        reg_long.register(DtExec::new(3, request(1, false), 0));
+        assert_eq!(reg_long.reap_stale(), 0);
+        assert_eq!(reg_long.inflight(), 1);
+    }
+
+    #[test]
     fn registry_dispatch_routes_frames() {
         let reg = DtRegistry::new();
         let exec = reg.register(DtExec::new(42, request(2, true), 3));
@@ -368,6 +865,20 @@ mod tests {
         assert_eq!(exec.senders_done(), 1);
         reg.remove(42);
         assert_eq!(reg.inflight(), 0);
+    }
+
+    #[test]
+    fn registry_dispatch_reassembles_chunk_frames() {
+        let reg = DtRegistry::new();
+        let exec = reg.register(DtExec::new(43, request(1, false), 1));
+        let payload: Vec<u8> = (0..3000u32).map(|i| (i % 199) as u8).collect();
+        for f in crate::proto::frame::chunk_frames(43, 0, payload.clone(), 1024) {
+            reg.dispatch(f);
+        }
+        match exec.buf.wait_take(0, Duration::from_secs(1)) {
+            crate::dt::order::SlotWait::Ready(d) => assert_eq!(d, payload),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -5,22 +5,55 @@
 //! entry; producers fill arbitrary slots, the single consumer (the assembly
 //! loop) blocks on the *next* index it needs — "decoupling heterogeneous
 //! read and transfer latencies from output determinism" (§2.3.1 phase 3).
+//!
+//! Two producer paths exist:
+//!
+//! * whole-entry `fill` — single-frame deliveries and GFN recovery;
+//! * incremental `append_chunk` — multi-chunk streaming (see
+//!   `proto::frame`). The consumer can start draining the head-of-line slot
+//!   via `wait_chunk` *before* its last chunk arrives, which is what makes
+//!   the data path genuinely streaming for entries larger than one chunk.
+//!
+//! When constructed `with_budget`, every producer byte is reserved against
+//! the node-wide [`super::admission::MemoryBudget`] before it becomes
+//! resident, and released as the consumer drains it. Producers block when
+//! the budget is exhausted — over the P2P path this propagates as TCP
+//! backpressure to the sending target (the §2.4.3 memory constraint made
+//! real, not just a metric). The head-of-line slot is exempt while it holds
+//! no resident bytes, which guarantees the consumer can always make
+//! progress (no reorder-buffer deadlock) while keeping peak residency ≤ the
+//! configured budget (see `MemoryBudget` for the bound).
 
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::batch::error::EntryError;
 
+use super::admission::MemoryBudget;
+
 #[derive(Debug)]
 enum Slot {
     Pending,
-    Ready(Vec<u8>),
+    /// Entry bytes flowing through: `data` holds resident (not yet
+    /// consumed) bytes; `received`/`consumed` track cumulative counts so
+    /// completeness survives partial drains.
+    Filling { data: Vec<u8>, total: u64, received: u64, consumed: u64 },
     Failed(EntryError),
-    /// Consumed by the assembler (payload moved out).
+    /// Fully consumed by the assembler.
     Taken,
 }
 
-/// Outcome of waiting for one slot.
+impl Slot {
+    fn resident(&self) -> u64 {
+        match self {
+            Slot::Filling { data, .. } => data.len() as u64,
+            _ => 0,
+        }
+    }
+}
+
+/// Outcome of waiting for a whole slot (whole-entry consumption).
 #[derive(Debug, PartialEq)]
 pub enum SlotWait {
     Ready(Vec<u8>),
@@ -28,11 +61,30 @@ pub enum SlotWait {
     TimedOut,
 }
 
+/// Outcome of waiting for the next bytes of a slot (streaming consumption).
+#[derive(Debug, PartialEq)]
+pub enum ChunkWait {
+    /// Some bytes of the entry. `total` is the entry's declared full length
+    /// (known from its first chunk); `done` marks the entry fully drained.
+    Chunk { bytes: Vec<u8>, total: u64, done: bool },
+    Failed(EntryError),
+    TimedOut,
+}
+
 pub struct OrderBuffer {
     slots: Mutex<Vec<Slot>>,
     cv: Condvar,
-    /// Bytes currently resident in Ready slots (DT memory accounting).
-    buffered: std::sync::atomic::AtomicI64,
+    /// Bytes currently resident in this buffer (per-request accounting; the
+    /// node-wide figure lives in the shared `MemoryBudget`).
+    buffered: AtomicI64,
+    /// The index the consumer is currently waiting on (head of line) —
+    /// drives the budget's progress exemption.
+    next_idx: AtomicU32,
+    /// Set when the consumer abandons the request (abort or completion):
+    /// late producers drop their bytes immediately instead of blocking on
+    /// the budget until its patience runs out.
+    closed: AtomicBool,
+    budget: Option<Arc<MemoryBudget>>,
 }
 
 impl OrderBuffer {
@@ -40,8 +92,18 @@ impl OrderBuffer {
         OrderBuffer {
             slots: Mutex::new((0..n).map(|_| Slot::Pending).collect()),
             cv: Condvar::new(),
-            buffered: std::sync::atomic::AtomicI64::new(0),
+            buffered: AtomicI64::new(0),
+            next_idx: AtomicU32::new(0),
+            closed: AtomicBool::new(false),
+            budget: None,
         }
+    }
+
+    /// Buffer whose producers are gated by the node-wide memory budget.
+    pub fn with_budget(n: usize, budget: Arc<MemoryBudget>) -> OrderBuffer {
+        let mut b = OrderBuffer::new(n);
+        b.budget = Some(budget);
+        b
     }
 
     pub fn len(&self) -> usize {
@@ -52,22 +114,251 @@ impl OrderBuffer {
     }
 
     pub fn buffered_bytes(&self) -> i64 {
-        self.buffered.load(std::sync::atomic::Ordering::Relaxed)
+        self.buffered.load(Ordering::Relaxed)
     }
 
-    /// Producer: deliver entry payload. First write wins (recovery may race
-    /// a late sender); duplicates are dropped.
-    pub fn fill(&self, idx: u32, data: Vec<u8>) {
-        let mut slots = self.slots.lock().unwrap();
-        if let Some(s @ (Slot::Pending | Slot::Failed(_))) = slots.get_mut(idx as usize) {
-            self.buffered
-                .fetch_add(data.len() as i64, std::sync::atomic::Ordering::Relaxed);
-            *s = Slot::Ready(data);
-            self.cv.notify_all();
+    /// Wake any waiting consumer (used when out-of-band completion state —
+    /// SENDER_DONE fan-in, DT-local resolution — changes).
+    pub fn poke(&self) {
+        let _guard = self.slots.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// The consumer is done with this buffer (request completed or
+    /// aborted): late producers drop immediately — within one budget wait
+    /// slice — instead of stalling their connection on a buffer nobody
+    /// will ever drain.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.poke();
+    }
+
+    /// Reserve `bytes` against the budget (no-op without one). Blocks under
+    /// memory pressure unless this is the head-of-line slot with nothing
+    /// resident (progress exemption — see module docs). Returns `false` —
+    /// with nothing reserved — when the slot is already consumed, so late
+    /// producers of abandoned slots never stall their connection.
+    fn reserve(&self, idx: u32, bytes: u64) -> bool {
+        let budget = match &self.budget {
+            Some(b) => b,
+            None => return true,
+        };
+        if bytes == 0 {
+            return true;
+        }
+        let deadline = Instant::now() + budget.patience();
+        loop {
+            if self.closed.load(Ordering::Relaxed) {
+                return false;
+            }
+            if budget.try_reserve(bytes) {
+                return true;
+            }
+            let (exempt, dead) = {
+                let slots = self.slots.lock().unwrap();
+                match slots.get(idx as usize) {
+                    None | Some(Slot::Taken) => (false, true),
+                    Some(s) => (
+                        idx == self.next_idx.load(Ordering::Relaxed) && s.resident() == 0,
+                        false,
+                    ),
+                }
+            };
+            if dead {
+                return false;
+            }
+            if exempt {
+                budget.force_reserve(bytes, false);
+                return true;
+            }
+            if !budget.wait_room_until(deadline) {
+                // Liveness valve: waited past the budget's patience —
+                // force-admit (counted as an overrun) rather than wedging
+                // the node.
+                budget.force_reserve(bytes, true);
+                return true;
+            }
         }
     }
 
-    /// Producer: report a per-entry failure. Never overwrites Ready/Taken.
+    /// Resident bytes leaving the buffer (consumed or discarded).
+    fn release(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        self.buffered.fetch_sub(bytes as i64, Ordering::Relaxed);
+        if let Some(budget) = &self.budget {
+            budget.release(bytes);
+        }
+    }
+
+    /// Undo a reservation whose bytes never became resident.
+    fn rollback(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        if let Some(budget) = &self.budget {
+            budget.release(bytes);
+        }
+    }
+
+    fn note_resident(&self, bytes: u64) {
+        self.buffered.fetch_add(bytes as i64, Ordering::Relaxed);
+    }
+
+    /// Producer: deliver a whole entry payload (single-frame path and GFN
+    /// recovery). First write wins (recovery may race a late sender);
+    /// duplicates are dropped.
+    pub fn fill(&self, idx: u32, data: Vec<u8>) {
+        if self.closed.load(Ordering::Relaxed) {
+            return;
+        }
+        let len = data.len() as u64;
+        if !self.reserve(idx, len) {
+            return; // slot consumed or buffer closed: drop the late payload
+        }
+        let accepted = {
+            let mut slots = self.slots.lock().unwrap();
+            match slots.get_mut(idx as usize) {
+                Some(s @ (Slot::Pending | Slot::Failed(_))) => {
+                    *s = Slot::Filling { data, total: len, received: len, consumed: 0 };
+                    self.note_resident(len);
+                    self.cv.notify_all();
+                    true
+                }
+                _ => false,
+            }
+        };
+        if !accepted {
+            self.rollback(len);
+        }
+    }
+
+    /// Producer: append one chunk of entry `idx`. A `first` chunk carries
+    /// the entry's declared `total`; a `first` chunk arriving at a partially
+    /// received (but unconsumed) slot *resets* it — that is how a sender's
+    /// stale-connection retry safely retransmits from the entry's start.
+    /// Length violations fail the slot with a recoverable stream failure.
+    pub fn append_chunk(&self, idx: u32, total: u64, bytes: Vec<u8>, first: bool, last: bool) {
+        if self.closed.load(Ordering::Relaxed) {
+            return;
+        }
+        let len = bytes.len() as u64;
+        if !self.reserve(idx, len) {
+            return; // slot consumed or buffer closed: drop the late chunk
+        }
+        // Resident bytes leaving the buffer / reserved bytes never admitted;
+        // settled after the lock is dropped.
+        let mut release_after = 0u64;
+        let mut rollback_after = 0u64;
+        {
+            let mut slots = self.slots.lock().unwrap();
+            if idx as usize >= slots.len() {
+                rollback_after = len;
+            } else {
+                let old = std::mem::replace(&mut slots[idx as usize], Slot::Pending);
+                let new = match old {
+                    s @ (Slot::Pending | Slot::Failed(_)) => {
+                        if first {
+                            self.admit_first(bytes, total, last, &mut rollback_after)
+                        } else {
+                            // Middle/last chunk with no FIRST seen (frames
+                            // lost): unusable — leave prior state for the
+                            // recovery ladder.
+                            rollback_after = len;
+                            s
+                        }
+                    }
+                    Slot::Filling { data, total: cur_total, received, consumed } => {
+                        if first {
+                            if consumed == 0 {
+                                // Retransmission from the start: replace the
+                                // stale partial bytes.
+                                release_after = data.len() as u64;
+                                self.admit_first(bytes, total, last, &mut rollback_after)
+                            } else {
+                                // Consumer already drained part of the old
+                                // stream — cannot restart safely.
+                                release_after = data.len() as u64;
+                                rollback_after = len;
+                                Slot::Failed(EntryError::StreamFailure(
+                                    "duplicate chunk stream after partial consumption".into(),
+                                ))
+                            }
+                        } else {
+                            let new_received = received + len;
+                            if new_received > cur_total || (last && new_received != cur_total) {
+                                release_after = data.len() as u64;
+                                rollback_after = len;
+                                Slot::Failed(EntryError::StreamFailure(format!(
+                                    "chunk stream length mismatch: {new_received}/{cur_total}"
+                                )))
+                            } else {
+                                let mut data = data;
+                                data.extend_from_slice(&bytes);
+                                self.note_resident(len);
+                                Slot::Filling {
+                                    data,
+                                    total: cur_total,
+                                    received: new_received,
+                                    consumed,
+                                }
+                            }
+                        }
+                    }
+                    Slot::Taken => {
+                        rollback_after = len;
+                        Slot::Taken
+                    }
+                };
+                slots[idx as usize] = new;
+                self.cv.notify_all();
+            }
+        }
+        self.release(release_after);
+        self.rollback(rollback_after);
+    }
+
+    /// Deliver a whole locally-resolved entry through the chunked path:
+    /// identical split invariant to the frame-level chunking (FIRST carries
+    /// the total, LAST ends exactly at the declared length), so budget
+    /// reservation stays incremental and the consumer can start draining
+    /// before the tail is appended. The DT-local producer uses this.
+    pub fn fill_chunked(&self, idx: u32, data: Vec<u8>, chunk_bytes: usize) {
+        let chunk = chunk_bytes.max(1);
+        if data.len() <= chunk {
+            self.fill(idx, data);
+            return;
+        }
+        let total = data.len() as u64;
+        let mut off = 0usize;
+        while off < data.len() {
+            if self.closed.load(Ordering::Relaxed) {
+                return;
+            }
+            let end = (off + chunk).min(data.len());
+            self.append_chunk(idx, total, data[off..end].to_vec(), off == 0, end == data.len());
+            off = end;
+        }
+    }
+
+    /// Build the slot state for an accepted FIRST chunk (also the reset
+    /// path). Caller must be holding the slots lock.
+    fn admit_first(&self, bytes: Vec<u8>, total: u64, last: bool, rollback: &mut u64) -> Slot {
+        let len = bytes.len() as u64;
+        if len > total || (last && len != total) {
+            *rollback += len;
+            Slot::Failed(EntryError::StreamFailure(format!(
+                "chunk stream length mismatch: {len}/{total}"
+            )))
+        } else {
+            self.note_resident(len);
+            Slot::Filling { data: bytes, total, received: len, consumed: 0 }
+        }
+    }
+
+    /// Producer: report a per-entry failure. Never overwrites delivered
+    /// bytes or consumed state.
     pub fn fail(&self, idx: u32, err: EntryError) {
         let mut slots = self.slots.lock().unwrap();
         if let Some(s @ Slot::Pending) = slots.get_mut(idx as usize) {
@@ -76,37 +367,81 @@ impl OrderBuffer {
         }
     }
 
-    /// Consumer: wait until slot `idx` resolves (or `timeout`). Moves the
-    /// payload out, releasing DT memory.
+    /// Consumer: wait until slot `idx` fully resolves (or `timeout`). Moves
+    /// the whole payload out, releasing DT memory. Whole-entry counterpart
+    /// of `wait_chunk`.
     pub fn wait_take(&self, idx: u32, timeout: Duration) -> SlotWait {
+        self.next_idx.store(idx, Ordering::Relaxed);
         let deadline = Instant::now() + timeout;
         let mut slots = self.slots.lock().unwrap();
         loop {
-            match &slots[idx as usize] {
-                Slot::Pending => {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        return SlotWait::TimedOut;
-                    }
-                    let (guard, _t) = self.cv.wait_timeout(slots, deadline - now).unwrap();
-                    slots = guard;
+            let old = std::mem::replace(&mut slots[idx as usize], Slot::Taken);
+            match old {
+                Slot::Filling { data, total, received, consumed } if received == total => {
+                    assert_eq!(consumed, 0, "slot {idx}: mixed wait_take/wait_chunk use");
+                    drop(slots);
+                    self.release(data.len() as u64);
+                    return SlotWait::Ready(data);
                 }
-                Slot::Ready(_) => {
-                    let taken = std::mem::replace(&mut slots[idx as usize], Slot::Taken);
-                    if let Slot::Ready(data) = taken {
-                        self.buffered
-                            .fetch_sub(data.len() as i64, std::sync::atomic::Ordering::Relaxed);
-                        return SlotWait::Ready(data);
-                    }
-                    unreachable!()
-                }
-                Slot::Failed(e) => {
-                    let e = e.clone();
-                    slots[idx as usize] = Slot::Taken;
-                    return SlotWait::Failed(e);
-                }
+                Slot::Failed(e) => return SlotWait::Failed(e),
                 Slot::Taken => panic!("slot {idx} consumed twice"),
+                other => {
+                    // Pending or incomplete Filling: restore and wait.
+                    slots[idx as usize] = other;
+                }
             }
+            let now = Instant::now();
+            if now >= deadline {
+                return SlotWait::TimedOut;
+            }
+            let (guard, _t) = self.cv.wait_timeout(slots, deadline - now).unwrap();
+            slots = guard;
+        }
+    }
+
+    /// Consumer: wait for the next available bytes of slot `idx`. Returns as
+    /// soon as *any* resident bytes exist (the entry need not be complete),
+    /// enabling head-of-line streaming. The final `Chunk` carries
+    /// `done = true` and transitions the slot to consumed.
+    pub fn wait_chunk(&self, idx: u32, timeout: Duration) -> ChunkWait {
+        self.next_idx.store(idx, Ordering::Relaxed);
+        let deadline = Instant::now() + timeout;
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            let old = std::mem::replace(&mut slots[idx as usize], Slot::Taken);
+            match old {
+                Slot::Filling { data, total, received, consumed } => {
+                    if !data.is_empty() {
+                        let taken = data.len() as u64;
+                        let consumed = consumed + taken;
+                        let done = received == total && consumed == total;
+                        if !done {
+                            slots[idx as usize] =
+                                Slot::Filling { data: Vec::new(), total, received, consumed };
+                        }
+                        drop(slots);
+                        self.release(taken);
+                        return ChunkWait::Chunk { bytes: data, total, done };
+                    }
+                    if received == total && consumed == total {
+                        // Zero-length entry (or already drained): done now.
+                        return ChunkWait::Chunk { bytes: Vec::new(), total, done: true };
+                    }
+                    // Incomplete and nothing resident: restore and wait.
+                    slots[idx as usize] = Slot::Filling { data, total, received, consumed };
+                }
+                Slot::Failed(e) => return ChunkWait::Failed(e),
+                Slot::Taken => panic!("slot {idx} consumed twice"),
+                Slot::Pending => {
+                    slots[idx as usize] = Slot::Pending;
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return ChunkWait::TimedOut;
+            }
+            let (guard, _t) = self.cv.wait_timeout(slots, deadline - now).unwrap();
+            slots = guard;
         }
     }
 
@@ -115,7 +450,7 @@ impl OrderBuffer {
         !matches!(self.slots.lock().unwrap()[idx as usize], Slot::Pending)
     }
 
-    /// How many slots are resolved (ready, failed, or consumed).
+    /// How many slots are resolved (receiving, failed, or consumed).
     pub fn resolved_count(&self) -> usize {
         self.slots
             .lock()
@@ -123,6 +458,19 @@ impl OrderBuffer {
             .iter()
             .filter(|s| !matches!(s, Slot::Pending))
             .count()
+    }
+}
+
+impl Drop for OrderBuffer {
+    fn drop(&mut self) {
+        // Release any still-resident bytes back to the shared budget
+        // (§2.4.2: completion/termination releases all per-request state).
+        if let Some(budget) = &self.budget {
+            let resident: u64 = self.slots.lock().unwrap().iter().map(|s| s.resident()).sum();
+            if resident > 0 {
+                budget.release(resident);
+            }
+        }
     }
 }
 
@@ -230,5 +578,173 @@ mod tests {
             }
         }
         assert_eq!(buf.resolved_count(), n as usize);
+    }
+
+    // ---- chunked-path tests -------------------------------------------------
+
+    fn drain(buf: &OrderBuffer, idx: u32) -> Result<Vec<u8>, ChunkWait> {
+        let mut out = Vec::new();
+        loop {
+            match buf.wait_chunk(idx, Duration::from_secs(2)) {
+                ChunkWait::Chunk { bytes, done, .. } => {
+                    out.extend_from_slice(&bytes);
+                    if done {
+                        return Ok(out);
+                    }
+                }
+                other => return Err(other),
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_append_and_streaming_drain() {
+        let buf = OrderBuffer::new(1);
+        buf.append_chunk(0, 10, vec![0, 1, 2, 3], true, false);
+        buf.append_chunk(0, 0, vec![4, 5, 6], false, false);
+        buf.append_chunk(0, 0, vec![7, 8, 9], false, true);
+        assert_eq!(drain(&buf, 0).unwrap(), (0..10u8).collect::<Vec<_>>());
+        assert_eq!(buf.buffered_bytes(), 0);
+    }
+
+    #[test]
+    fn consumer_drains_head_before_last_chunk_arrives() {
+        let buf = Arc::new(OrderBuffer::new(1));
+        buf.append_chunk(0, 6, vec![1, 2, 3], true, false);
+        // First wait_chunk returns the early bytes with the entry incomplete.
+        match buf.wait_chunk(0, Duration::from_secs(1)) {
+            ChunkWait::Chunk { bytes, total, done } => {
+                assert_eq!(bytes, vec![1, 2, 3]);
+                assert_eq!(total, 6);
+                assert!(!done, "entry must not be complete yet");
+            }
+            other => panic!("{other:?}"),
+        }
+        let b2 = Arc::clone(&buf);
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(30));
+            b2.append_chunk(0, 0, vec![4, 5, 6], false, true);
+        });
+        match buf.wait_chunk(0, Duration::from_secs(2)) {
+            ChunkWait::Chunk { bytes, done, .. } => {
+                assert_eq!(bytes, vec![4, 5, 6]);
+                assert!(done);
+            }
+            other => panic!("{other:?}"),
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn first_chunk_retransmit_resets_unconsumed_slot() {
+        let buf = OrderBuffer::new(1);
+        buf.append_chunk(0, 6, vec![9, 9], true, false); // attempt 1, conn died
+        buf.append_chunk(0, 6, vec![1, 2, 3], true, false); // retry from start
+        buf.append_chunk(0, 0, vec![4, 5, 6], false, true);
+        assert_eq!(drain(&buf, 0).unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(buf.buffered_bytes(), 0, "stale attempt bytes released");
+    }
+
+    #[test]
+    fn length_mismatch_fails_slot() {
+        let buf = OrderBuffer::new(1);
+        buf.append_chunk(0, 4, vec![1, 2], true, false);
+        buf.append_chunk(0, 0, vec![3], false, true); // 3 != 4 declared
+        assert!(matches!(
+            buf.wait_chunk(0, Duration::from_secs(1)),
+            ChunkWait::Failed(EntryError::StreamFailure(_))
+        ));
+        assert_eq!(buf.buffered_bytes(), 0);
+    }
+
+    #[test]
+    fn zero_length_entry_completes() {
+        let buf = OrderBuffer::new(1);
+        buf.fill(0, Vec::new());
+        match buf.wait_chunk(0, Duration::from_secs(1)) {
+            ChunkWait::Chunk { bytes, total, done } => {
+                assert!(bytes.is_empty() && total == 0 && done);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_take_blocks_until_chunked_entry_completes() {
+        let buf = Arc::new(OrderBuffer::new(1));
+        let b2 = Arc::clone(&buf);
+        let t = thread::spawn(move || {
+            b2.append_chunk(0, 4, vec![1, 2], true, false);
+            thread::sleep(Duration::from_millis(30));
+            b2.append_chunk(0, 0, vec![3, 4], false, true);
+        });
+        assert_eq!(buf.wait_take(0, Duration::from_secs(2)), SlotWait::Ready(vec![1, 2, 3, 4]));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn fill_chunked_matches_whole_fill() {
+        for (len, chunk) in [(0usize, 4usize), (4, 4), (5, 4), (100, 7), (64, 64)] {
+            let data: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+            let buf = OrderBuffer::new(1);
+            buf.fill_chunked(0, data.clone(), chunk);
+            assert_eq!(
+                buf.wait_take(0, Duration::from_secs(1)),
+                SlotWait::Ready(data),
+                "len={len} chunk={chunk}"
+            );
+        }
+    }
+
+    #[test]
+    fn close_unblocks_and_drops_late_producers() {
+        // Budget 32, chunk 8 → cap 24. Fill the cap with slot-0 chunks so a
+        // further append blocks (head slot has resident bytes → no
+        // exemption); close() must release the producer promptly.
+        let budget = MemoryBudget::new(32, 8, None);
+        let buf = Arc::new(OrderBuffer::with_budget(1, Arc::clone(&budget)));
+        buf.append_chunk(0, 64, vec![0; 8], true, false);
+        buf.append_chunk(0, 64, vec![0; 8], false, false);
+        buf.append_chunk(0, 64, vec![0; 8], false, false);
+        assert_eq!(budget.used(), 24);
+        let b2 = Arc::clone(&buf);
+        let t0 = Instant::now();
+        let t = thread::spawn(move || b2.append_chunk(0, 64, vec![0; 8], false, false));
+        thread::sleep(Duration::from_millis(20));
+        buf.close();
+        t.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(2), "producer unblocked by close");
+        assert_eq!(budget.used(), 24, "late chunk dropped without leaking a reservation");
+        assert_eq!(budget.overruns(), 0);
+        // dropping the closed buffer returns the resident bytes
+        drop(buf);
+        assert_eq!(budget.used(), 0);
+    }
+
+    #[test]
+    fn budget_blocks_producers_until_consumer_drains() {
+        // Budget of 64 bytes, chunk 16: a 4 x 48-byte batch (192 bytes
+        // total) must flow through with residency never exceeding the
+        // budget and no forced admissions.
+        let budget = MemoryBudget::new(64, 16, None);
+        let buf = Arc::new(OrderBuffer::with_budget(4, Arc::clone(&budget)));
+        let b2 = Arc::clone(&buf);
+        let producer = thread::spawn(move || {
+            for idx in 0..4u32 {
+                let data: Vec<u8> = (0..48).map(|i| (idx as u8) ^ (i as u8)).collect();
+                for (k, chunk) in data.chunks(16).enumerate() {
+                    b2.append_chunk(idx, 48, chunk.to_vec(), k == 0, k == 2);
+                }
+            }
+        });
+        for idx in 0..4u32 {
+            let got = drain(&buf, idx).unwrap();
+            let want: Vec<u8> = (0..48).map(|i| (idx as u8) ^ (i as u8)).collect();
+            assert_eq!(got, want, "slot {idx}");
+        }
+        producer.join().unwrap();
+        assert!(budget.peak() <= 64, "peak {} > budget", budget.peak());
+        assert_eq!(budget.used(), 0);
+        assert_eq!(budget.overruns(), 0, "no forced admissions needed");
     }
 }

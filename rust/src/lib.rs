@@ -10,13 +10,33 @@
 //! coordinates, all other nodes stream locally-owned items to it — and the
 //! DT emits a single TAR response in strict request order.
 //!
-//! Layer map (see DESIGN.md):
-//! - L3 (this crate): cluster, gateway, DT, senders, transport, client SDK,
-//!   data loaders, discrete-event simulator, benchmarking harness.
-//! - L2/L1 (python, build-time only): JAX transformer train step + Pallas
-//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`.
-//! - `runtime`: loads those HLO artifacts through PJRT (CPU) and runs them
-//!   from the training hot path — python never executes at request time.
+//! The data path is *chunked streaming with enforced backpressure*: senders
+//! split large entries into chunk frames (`proto::frame` FIRST/LAST flags),
+//! the DT's reorder buffer (`dt::order`) admits producer bytes against a
+//! node-wide resident-memory budget (`dt::admission::MemoryBudget` — block,
+//! don't just meter), and the assembly loop (`dt::exec`) starts emitting the
+//! head-of-line entry before its last chunk arrives. Sender fan-in
+//! completion (SENDER_DONE + DT-local done) triggers recovery early instead
+//! of burning the sender-wait timeout.
+//!
+//! Layer map (module → role):
+//! - `util` — JSON / PRNG / stats / HRW / threadpool / clock / CRC-32 /
+//!   anyhow-style errors (the offline build has no external crates).
+//! - `proto` — minimal HTTP/1.1 (+ chunked transfer), the chunked P2P frame
+//!   protocol, control-plane wire messages.
+//! - `store` — mountpath object store + TAR-shard member extraction.
+//! - `tar` — ustar codec: whole-entry and streamed-entry writers, readers.
+//! - `cluster` — smap, HRW placement, the in-process node runtime.
+//! - `gateway` — proxy: object redirect + three-phase GetBatch flow.
+//! - `dt` — Designated Target: reorder buffer, memory budget/admission,
+//!   ordered streaming assembly, GFN recovery.
+//! - `sender` / `transport` — chunked entry push over pooled, stale-probed
+//!   peer connections.
+//! - `batch` / `client` — request model, ordered reader, SDK, data loaders.
+//! - `sim` — discrete-event cluster simulator (paper-scale tables).
+//! - `runtime` — PJRT-side training step (stubbed offline; python/ holds
+//!   the AOT pipeline that produces `artifacts/*.hlo.txt`).
+//! - `aisloader` / `testutil` — load generator, fixtures, property tests.
 
 pub mod util;
 pub mod proto;

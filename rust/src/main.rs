@@ -22,6 +22,7 @@ use getbatch::sim::model::CostModel;
 use getbatch::sim::workload;
 use getbatch::testutil::fixtures;
 use getbatch::util::cli::Args;
+use getbatch::util::error as anyhow;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();

@@ -65,6 +65,15 @@ pub struct GetBatchMetrics {
     pub rxwait_ns: Counter,
     /// Cumulative ns slept due to local pressure throttling.
     pub throttle_ns: Counter,
+    /// Cumulative ns producers spent blocked on the DT memory budget.
+    pub budget_wait_ns: Counter,
+    /// Forced budget admissions after the patience timeout (liveness valve).
+    pub budget_overruns: Counter,
+    /// Chunk frames emitted by this node as a sender.
+    pub sender_chunks: Counter,
+    /// Recoveries triggered early because sender fan-in completed with the
+    /// slot still unresolved (no need to burn the full sender-wait timeout).
+    pub early_recoveries: Counter,
 
     // -- errors & recovery --------------------------------------------------
     /// Hard failures: aborted requests.
@@ -108,6 +117,10 @@ impl GetBatchMetrics {
             c("sender_entries_total", "entries served as sender", self.sender_entries.get());
             c("rxwait_ns_total", "cumulative ns waiting for peer senders", self.rxwait_ns.get());
             c("throttle_ns_total", "cumulative ns slept under local pressure", self.throttle_ns.get());
+            c("budget_wait_ns_total", "cumulative ns producers blocked on the DT memory budget", self.budget_wait_ns.get());
+            c("budget_overruns_total", "forced budget admissions after patience timeout", self.budget_overruns.get());
+            c("sender_chunks_total", "chunk frames emitted as sender", self.sender_chunks.get());
+            c("early_recoveries_total", "recoveries triggered by early fan-in completion", self.early_recoveries.get());
             c("hard_failures_total", "aborted requests", self.hard_failures.get());
             c("admission_rejects_total", "HTTP 429 admission rejections", self.admission_rejects.get());
             c("soft_errors_total", "tolerated soft errors", self.soft_errors.get());

@@ -6,7 +6,7 @@
 //! ```text
 //! magic  u16   0xA15B
 //! type   u8    1=DATA 2=SOFT_ERR 3=SENDER_DONE
-//! flags  u8    reserved
+//! flags  u8    DATA chunking flags, see below
 //! req    u64   GetBatch execution id
 //! index  u32   request-entry index (DATA/SOFT_ERR) | #satisfied (DONE)
 //! len    u32   payload length
@@ -14,18 +14,46 @@
 //! payload [len]
 //! ```
 //!
-//! CRC protects against silent corruption on the intra-cluster path; a bad
-//! CRC is classified as a *soft* error (transient stream failure, §2.4.2)
-//! so continue-on-error requests survive it.
+//! ## `flags` semantics (DATA frames only)
+//!
+//! Large entries are streamed as a *sequence of chunk frames* so the DT can
+//! start emitting an entry before its last byte arrives (§2.3.1 "streaming
+//! execution") and so DT memory stays bounded by the backpressure budget:
+//!
+//! * bit 0 — `FLAG_FIRST`: first chunk of the entry. When LAST is *not*
+//!   also set, the payload begins with an 8-byte LE prefix carrying the
+//!   entry's **total** byte length (the DT needs it up-front to emit the
+//!   TAR header), followed by the first chunk bytes. A retransmitted entry
+//!   (stale-connection retry) starts again with a FIRST chunk, which
+//!   resets any partially received unconsumed state for that slot.
+//! * bit 1 — `FLAG_LAST`: last chunk of the entry.
+//! * `FIRST|LAST`: the payload is the whole entry, no size prefix — the
+//!   frame length *is* the entry length. Small entries (≤ chunk size) take
+//!   this single-frame path.
+//! * neither bit: a middle chunk (pure payload bytes).
+//!
+//! Non-DATA frames carry `flags = 0`.
+//!
+//! Each chunk frame carries its own CRC (per-chunk CRC), so corruption is
+//! detected before a chunk is appended to the reorder buffer; a bad CRC is
+//! classified as a *soft* error (transient stream failure, §2.4.2) so
+//! continue-on-error requests survive it.
 
 use std::io::{self, Read, Write};
 
 pub const MAGIC: u16 = 0xA15B;
 pub const HEADER_LEN: usize = 2 + 1 + 1 + 8 + 4 + 4 + 4;
 
+/// First chunk of a multi-chunk entry (payload starts with the u64 total).
+pub const FLAG_FIRST: u8 = 0b01;
+/// Last chunk of a multi-chunk entry.
+pub const FLAG_LAST: u8 = 0b10;
+/// Whole entry in one frame.
+pub const FLAG_WHOLE: u8 = FLAG_FIRST | FLAG_LAST;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameType {
-    /// Entry payload (whole entry — entries are bounded by object size).
+    /// Entry payload: a whole entry or one chunk of it (see `flags`).
     Data = 1,
     /// Sender could not resolve this entry (missing object/member, read
     /// failure); payload is a UTF-8 reason.
@@ -49,33 +77,118 @@ impl FrameType {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
     pub ftype: FrameType,
+    pub flags: u8,
     pub req_id: u64,
     pub index: u32,
     pub payload: Vec<u8>,
 }
 
 impl Frame {
+    /// Whole-entry DATA frame (single-frame path).
     pub fn data(req_id: u64, index: u32, payload: Vec<u8>) -> Frame {
-        Frame { ftype: FrameType::Data, req_id, index, payload }
+        Frame { ftype: FrameType::Data, flags: FLAG_WHOLE, req_id, index, payload }
     }
+
+    /// First chunk of a multi-chunk entry: prefixes the chunk bytes with the
+    /// entry's total length so the receiver can pre-size its slot (and the
+    /// DT can emit the TAR header before the rest arrives).
+    pub fn data_first_chunk(req_id: u64, index: u32, total: u64, chunk: &[u8], last: bool) -> Frame {
+        if last {
+            // Degenerate single-chunk case: the whole-frame encoding already
+            // carries its length — no prefix needed.
+            return Frame::data(req_id, index, chunk.to_vec());
+        }
+        let mut payload = Vec::with_capacity(8 + chunk.len());
+        payload.extend_from_slice(&total.to_le_bytes());
+        payload.extend_from_slice(chunk);
+        Frame { ftype: FrameType::Data, flags: FLAG_FIRST, req_id, index, payload }
+    }
+
+    /// Middle/last chunk of a multi-chunk entry.
+    pub fn data_chunk(req_id: u64, index: u32, chunk: Vec<u8>, last: bool) -> Frame {
+        let flags = if last { FLAG_LAST } else { 0 };
+        Frame { ftype: FrameType::Data, flags, req_id, index, payload: chunk }
+    }
+
     pub fn soft_err(req_id: u64, index: u32, reason: &str) -> Frame {
-        Frame { ftype: FrameType::SoftErr, req_id, index, payload: reason.as_bytes().to_vec() }
+        Frame {
+            ftype: FrameType::SoftErr,
+            flags: 0,
+            req_id,
+            index,
+            payload: reason.as_bytes().to_vec(),
+        }
     }
+
     pub fn sender_done(req_id: u64, satisfied: u32) -> Frame {
-        Frame { ftype: FrameType::SenderDone, req_id, index: satisfied, payload: Vec::new() }
+        Frame { ftype: FrameType::SenderDone, flags: 0, req_id, index: satisfied, payload: Vec::new() }
+    }
+
+    pub fn is_first(&self) -> bool {
+        self.flags & FLAG_FIRST != 0
+    }
+
+    pub fn is_last(&self) -> bool {
+        self.flags & FLAG_LAST != 0
+    }
+
+    /// For a DATA frame, split into (declared total length, chunk bytes).
+    /// Whole-entry frames declare their own payload length; a FIRST chunk of
+    /// a multi-chunk entry decodes the 8-byte total prefix; middle/LAST
+    /// chunks declare 0. Returns `None` for a malformed first chunk.
+    pub fn chunk_parts(&self) -> Option<(u64, &[u8])> {
+        debug_assert_eq!(self.ftype, FrameType::Data);
+        if self.flags == FLAG_FIRST {
+            // FIRST of a multi-chunk entry: total-length prefix + bytes.
+            if self.payload.len() < 8 {
+                return None;
+            }
+            let total = u64::from_le_bytes(self.payload[..8].try_into().unwrap());
+            Some((total, &self.payload[8..]))
+        } else if self.is_first() {
+            // Whole entry (FIRST|LAST).
+            Some((self.payload.len() as u64, &self.payload))
+        } else {
+            // Middle/last chunk: pure payload, no declared total.
+            Some((0, &self.payload))
+        }
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FrameError {
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("bad magic {0:#06x}")]
+    Io(io::Error),
     BadMagic(u16),
-    #[error("unknown frame type {0}")]
     BadType(u8),
-    #[error("crc mismatch on req {req_id} entry {index}")]
     BadCrc { req_id: u64, index: u32 },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "io: {e}"),
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:#06x}"),
+            FrameError::BadType(t) => write!(f, "unknown frame type {t}"),
+            FrameError::BadCrc { req_id, index } => {
+                write!(f, "crc mismatch on req {req_id} entry {index}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
 }
 
 /// Serialize a frame into `out` (clears it first). Separate from the socket
@@ -85,11 +198,11 @@ pub fn encode_into(f: &Frame, out: &mut Vec<u8>) {
     out.reserve(HEADER_LEN + f.payload.len());
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(f.ftype as u8);
-    out.push(0);
+    out.push(f.flags);
     out.extend_from_slice(&f.req_id.to_le_bytes());
     out.extend_from_slice(&f.index.to_le_bytes());
     out.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&crc32fast::hash(&f.payload).to_le_bytes());
+    out.extend_from_slice(&crate::util::crc32::hash(&f.payload).to_le_bytes());
     out.extend_from_slice(&f.payload);
 }
 
@@ -114,16 +227,70 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, FrameError> {
         return Err(FrameError::BadMagic(magic));
     }
     let ftype = FrameType::from_u8(hdr[2]).ok_or(FrameError::BadType(hdr[2]))?;
+    let flags = hdr[3];
     let req_id = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
     let index = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
     let len = u32::from_le_bytes(hdr[16..20].try_into().unwrap()) as usize;
     let crc = u32::from_le_bytes(hdr[20..24].try_into().unwrap());
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
-    if crc32fast::hash(&payload) != crc {
+    if crate::util::crc32::hash(&payload) != crc {
         return Err(FrameError::BadCrc { req_id, index });
     }
-    Ok(Some(Frame { ftype, req_id, index, payload }))
+    Ok(Some(Frame { ftype, flags, req_id, index, payload }))
+}
+
+/// Number of chunk frames `chunk_frames_iter` will produce for an entry of
+/// `len` bytes.
+pub fn chunk_count(len: usize, chunk_bytes: usize) -> usize {
+    let chunk_bytes = chunk_bytes.max(1);
+    if len <= chunk_bytes {
+        1
+    } else {
+        len.div_ceil(chunk_bytes)
+    }
+}
+
+/// Lazily split an entry payload into the chunk-frame sequence a sender
+/// transmits: one whole frame when it fits in `chunk_bytes`, otherwise
+/// FIRST (with the total-length prefix) + middle + LAST chunks of at most
+/// `chunk_bytes`. Lazy so a sender streaming a large entry holds the source
+/// buffer plus *one* in-flight chunk, not a second full copy.
+pub fn chunk_frames_iter(
+    req_id: u64,
+    index: u32,
+    data: Vec<u8>,
+    chunk_bytes: usize,
+) -> impl Iterator<Item = Frame> {
+    let chunk_bytes = chunk_bytes.max(1);
+    let single = data.len() <= chunk_bytes;
+    let total = data.len() as u64;
+    let mut data = Some(data);
+    let mut off = 0usize;
+    std::iter::from_fn(move || {
+        if single {
+            return data.take().map(|d| Frame::data(req_id, index, d));
+        }
+        let d = data.as_ref()?;
+        let end = (off + chunk_bytes).min(d.len());
+        let last = end == d.len();
+        let f = if off == 0 {
+            Frame::data_first_chunk(req_id, index, total, &d[..end], last)
+        } else {
+            Frame::data_chunk(req_id, index, d[off..end].to_vec(), last)
+        };
+        off = end;
+        if last {
+            // Free the source buffer as soon as the final chunk is cut.
+            data = None;
+        }
+        Some(f)
+    })
+}
+
+/// Eager variant of [`chunk_frames_iter`] (tests / small entries).
+pub fn chunk_frames(req_id: u64, index: u32, data: Vec<u8>, chunk_bytes: usize) -> Vec<Frame> {
+    chunk_frames_iter(req_id, index, data, chunk_bytes).collect()
 }
 
 #[cfg(test)]
@@ -138,6 +305,9 @@ mod tests {
             Frame::soft_err(7, 9, "missing object"),
             Frame::sender_done(7, 42),
             Frame::data(u64::MAX, u32::MAX, vec![]),
+            Frame::data_first_chunk(8, 0, 10, &[1, 2, 3], false),
+            Frame::data_chunk(8, 0, vec![4, 5, 6], false),
+            Frame::data_chunk(8, 0, vec![7, 8, 9, 10], true),
         ];
         let mut buf = Vec::new();
         for f in &frames {
@@ -159,6 +329,29 @@ mod tests {
         assert!(matches!(
             read_frame(&mut Cursor::new(&buf)),
             Err(FrameError::BadCrc { req_id: 1, index: 0 })
+        ));
+    }
+
+    #[test]
+    fn per_chunk_crc_detects_corruption_in_any_chunk() {
+        // Encode a 3-chunk entry; flip one byte in the middle chunk's
+        // payload; the middle frame (and only it) must fail CRC.
+        let data: Vec<u8> = (0..=255u8).cycle().take(3000).collect();
+        let frames = chunk_frames(5, 2, data, 1024);
+        assert_eq!(frames.len(), 3);
+        let mut buf = Vec::new();
+        let mut offsets = Vec::new();
+        for f in &frames {
+            offsets.push(buf.len());
+            write_frame(&mut buf, f).unwrap();
+        }
+        // corrupt a payload byte of the middle frame
+        buf[offsets[1] + HEADER_LEN + 10] ^= 0xFF;
+        let mut cur = Cursor::new(&buf);
+        assert!(read_frame(&mut cur).unwrap().is_some(), "chunk 0 intact");
+        assert!(matches!(
+            read_frame(&mut cur),
+            Err(FrameError::BadCrc { req_id: 5, index: 2 })
         ));
     }
 
@@ -185,5 +378,56 @@ mod tests {
         write_frame(&mut buf, &Frame::data(2, 1, payload.clone())).unwrap();
         let f = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
         assert_eq!(f.payload, payload);
+    }
+
+    #[test]
+    fn chunking_roundtrips_byte_identical() {
+        for (len, chunk) in [(0usize, 64usize), (63, 64), (64, 64), (65, 64), (1000, 64), (4096, 1024)] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 7 % 251) as u8).collect();
+            let frames = chunk_frames(9, 4, data.clone(), chunk);
+            assert_eq!(frames.len(), chunk_count(len, chunk), "len={len} chunk={chunk}");
+            // encode/decode every frame over the wire
+            let mut buf = Vec::new();
+            for f in &frames {
+                write_frame(&mut buf, f).unwrap();
+            }
+            let mut cur = Cursor::new(&buf);
+            let mut rebuilt = Vec::new();
+            let mut declared_total = None;
+            let mut saw_last = false;
+            while let Some(f) = read_frame(&mut cur).unwrap() {
+                assert!(!saw_last, "no frames after LAST");
+                let (total, bytes) = f.chunk_parts().unwrap();
+                if f.is_first() {
+                    declared_total = Some(total);
+                }
+                rebuilt.extend_from_slice(bytes);
+                saw_last = f.is_last();
+            }
+            assert!(saw_last, "len={len}");
+            assert_eq!(declared_total, Some(data.len() as u64), "len={len}");
+            assert_eq!(rebuilt, data, "len={len} chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn whole_frame_flags_and_parts() {
+        let f = Frame::data(1, 0, vec![1, 2, 3]);
+        assert!(f.is_first() && f.is_last());
+        assert_eq!(f.chunk_parts().unwrap(), (3, &[1u8, 2, 3][..]));
+        // middle chunks carry neither flag and no declared total
+        let mid = Frame::data_chunk(1, 0, vec![7, 8], false);
+        assert!(!mid.is_first() && !mid.is_last());
+        assert_eq!(mid.chunk_parts().unwrap(), (0, &[7u8, 8][..]));
+        // last chunks carry only LAST
+        let last = Frame::data_chunk(1, 0, vec![9], true);
+        assert!(!last.is_first() && last.is_last());
+    }
+
+    #[test]
+    fn malformed_first_chunk_rejected() {
+        // FIRST (not LAST) with < 8 payload bytes cannot carry the prefix.
+        let f = Frame { ftype: FrameType::Data, flags: FLAG_FIRST, req_id: 1, index: 0, payload: vec![1, 2] };
+        assert!(f.chunk_parts().is_none());
     }
 }

@@ -1,3 +1,5 @@
 //! PJRT runtime: loads AOT HLO artifacts and runs the training step.
+//! `xla_stub` replaces the real PJRT bindings in the offline build.
 pub mod pjrt;
 pub mod trainer;
+pub mod xla_stub;

@@ -6,8 +6,10 @@
 use std::path::Path;
 use std::sync::Mutex;
 
+use crate::util::error as anyhow;
 use anyhow::{anyhow, Context, Result};
 
+use super::xla_stub as xla;
 use crate::util::json::Value;
 
 /// Model metadata emitted next to the artifacts (shapes, arity, config).

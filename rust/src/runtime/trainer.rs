@@ -5,6 +5,7 @@
 use std::path::Path;
 use std::time::Instant;
 
+use crate::util::error as anyhow;
 use anyhow::Result;
 
 use crate::client::loader::DataLoader;

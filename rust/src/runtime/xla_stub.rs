@@ -1,0 +1,111 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The sandbox image has no XLA shared libraries, so the runtime layer
+//! compiles against this API-compatible stub instead: every entry point
+//! that would touch PJRT returns an error. `Runtime::load` therefore fails
+//! cleanly and the HLO-execution tests/examples skip (they already guard on
+//! `artifacts_dir()`); nothing else in the crate depends on XLA.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `runtime/pjrt.rs` (`use super::xla_stub as xla;` → `use xla;`).
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla unavailable: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!("{what} requires the real PJRT bindings (offline stub build)")))
+}
+
+/// Host-side literal (tensor) handle.
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal
+    }
+    pub fn vec1<T>(_v: &[T]) -> Literal {
+        Literal
+    }
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::decompose_tuple")
+    }
+}
+
+/// Device buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_actionable_errors() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla unavailable"), "{e}");
+        let lit = Literal::scalar(3i32);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}

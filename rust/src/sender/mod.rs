@@ -10,8 +10,9 @@ use std::sync::Arc;
 use crate::batch::request::BatchEntry;
 use crate::cluster::placement;
 use crate::cluster::smap::Smap;
+use crate::config::GetBatchConfig;
 use crate::metrics::GetBatchMetrics;
-use crate::proto::frame::Frame;
+use crate::proto::frame::{chunk_count, chunk_frames_iter, Frame};
 use crate::proto::wire::SenderActivate;
 use crate::store::shard::ShardError;
 use crate::store::{ObjectStore, ShardIndexCache, StoreError};
@@ -40,8 +41,11 @@ pub fn resolve_entry(
 
 /// Execute a sender activation: read every locally-owned entry and stream
 /// it to the DT, then emit SENDER_DONE. Runs on the target's background
-/// pool. Entries stream one-by-one (`send_iter`) so transmission overlaps
-/// the next disk read.
+/// pool. Entries stream lazily (`send_iter`) so transmission overlaps the
+/// next disk read, and entries larger than `cfg.chunk_bytes` are split into
+/// chunk frames so the DT can emit them before their last byte arrives —
+/// and so DT-side memory backpressure (its budget stalling our socket)
+/// pauses us between chunks instead of after whole objects.
 pub fn run_sender(
     act: &SenderActivate,
     smap: &Smap,
@@ -50,6 +54,7 @@ pub fn run_sender(
     shards: &ShardIndexCache,
     pool: &Arc<PeerPool>,
     metrics: &GetBatchMetrics,
+    cfg: &GetBatchConfig,
     readahead: Option<&crate::util::threadpool::ThreadPool>,
 ) {
     let mine = placement::local_entries(smap, &act.request, self_target);
@@ -74,21 +79,29 @@ pub fn run_sender(
     }
 
     let req_id = act.req_id;
-    let mut satisfied: u32 = 0;
-    let frames = mine.iter().map(|(idx, e)| match resolve_entry(store, shards, e) {
-        Ok(data) => {
-            satisfied += 1;
-            metrics.sender_entries.inc();
-            Frame::data(req_id, *idx, data)
-        }
-        Err(reason) => Frame::soft_err(req_id, *idx, &reason),
-    });
+    let chunk_bytes = cfg.chunk_bytes.max(1);
+    let satisfied = std::cell::Cell::new(0u32);
+    let data_frames = mine.iter().flat_map(
+        |(idx, e)| -> Box<dyn Iterator<Item = Frame>> {
+            match resolve_entry(store, shards, e) {
+                Ok(data) => {
+                    satisfied.set(satisfied.get() + 1);
+                    metrics.sender_entries.inc();
+                    metrics.sender_chunks.add(chunk_count(data.len(), chunk_bytes) as u64);
+                    // Lazy chunking: at most one in-flight chunk is copied
+                    // alongside the source buffer.
+                    Box::new(chunk_frames_iter(req_id, *idx, data, chunk_bytes))
+                }
+                Err(reason) => Box::new(std::iter::once(Frame::soft_err(req_id, *idx, &reason))),
+            }
+        },
+    );
     // Chain SENDER_DONE after the last entry on the same connection so the
-    // DT observes completion only after all data frames.
-    let mut all: Vec<Frame> = frames.collect();
-    let done = Frame::sender_done(req_id, satisfied);
-    all.push(done);
-    if pool.send(&act.dt_peer, &all).is_err() {
+    // DT observes completion only after all data frames. `once_with` defers
+    // building it until the lazy entry stream has fully run, so the
+    // satisfied count is final.
+    let all = data_frames.chain(std::iter::once_with(|| Frame::sender_done(req_id, satisfied.get())));
+    if pool.send_iter(&act.dt_peer, all).is_err() {
         // P2P path down: the DT's sender-wait timeout + GFN recovery take
         // over; nothing else to do here.
     }
@@ -165,7 +178,7 @@ mod tests {
             dt_peer: p2p.addr.to_string(),
             request: BatchRequest::new(entries),
         };
-        run_sender(&act, &smap, 0, &store, &shards, &pool, &metrics, None);
+        run_sender(&act, &smap, 0, &store, &shards, &pool, &metrics, &GetBatchConfig::default(), None);
 
         let mut data = 0;
         let mut soft = 0;
@@ -194,6 +207,48 @@ mod tests {
         }
         assert_eq!((data, soft, done), (5, 1, 1));
         assert_eq!(metrics.sender_entries.get(), 5);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn large_objects_stream_as_chunks_and_reassemble() {
+        let (store, shards, base) = setup("chunks");
+        let smap = Smap::new(
+            1,
+            vec![],
+            vec![NodeInfo { id: "t0".into(), http_addr: String::new(), p2p_addr: String::new() }],
+        );
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut big = vec![0u8; 300 << 10]; // 300 KiB ≫ 32 KiB chunks
+        rng.fill_bytes(&mut big);
+        store.put("b", "big", &big).unwrap();
+        store.put("b", "small", b"tiny").unwrap();
+
+        // Receive through a real DT registry so the chunk path is exercised
+        // end-to-end: sender → frames → dispatch → reorder buffer.
+        let registry = crate::dt::exec::DtRegistry::new();
+        let entries =
+            vec![BatchEntry::obj("b", "big"), BatchEntry::obj("b", "small")];
+        let request = BatchRequest::new(entries);
+        let exec = registry.register(crate::dt::exec::DtExec::new(21, request.clone(), 1));
+        let reg2 = Arc::clone(&registry);
+        let p2p =
+            crate::transport::P2pServer::serve(Arc::new(move |f| reg2.dispatch(f)), "dt").unwrap();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        let metrics = GetBatchMetrics::new();
+        let cfg = GetBatchConfig { chunk_bytes: 32 << 10, ..Default::default() };
+        let act = SenderActivate { req_id: 21, dt_peer: p2p.addr.to_string(), request };
+        run_sender(&act, &smap, 0, &store, &shards, &pool, &metrics, &cfg, None);
+
+        match exec.buf.wait_take(0, Duration::from_secs(5)) {
+            crate::dt::order::SlotWait::Ready(d) => assert_eq!(d, big),
+            other => panic!("big: {other:?}"),
+        }
+        match exec.buf.wait_take(1, Duration::from_secs(5)) {
+            crate::dt::order::SlotWait::Ready(d) => assert_eq!(d, b"tiny"),
+            other => panic!("small: {other:?}"),
+        }
+        assert!(metrics.sender_chunks.get() >= 10, "big object split into ≥10 chunks");
         std::fs::remove_dir_all(base).unwrap();
     }
 
@@ -228,7 +283,7 @@ mod tests {
         let pool = PeerPool::new(Duration::from_secs(5));
         let metrics = GetBatchMetrics::new();
         let act = SenderActivate { req_id: 9, dt_peer: p2p.addr.to_string(), request: req };
-        run_sender(&act, &smap, other, &store, &shards, &pool, &metrics, None);
+        run_sender(&act, &smap, other, &store, &shards, &pool, &metrics, &GetBatchConfig::default(), None);
         let f = rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(f.ftype, crate::proto::frame::FrameType::SenderDone);
         assert_eq!(f.index, 0);

@@ -10,12 +10,34 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::mountpath::Mountpaths;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum StoreError {
-    #[error("object not found: {0}")]
     NotFound(String),
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
+    Io(io::Error),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::NotFound(k) => write!(f, "object not found: {k}"),
+            StoreError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for StoreError {
+    fn from(e: io::Error) -> StoreError {
+        StoreError::Io(e)
+    }
 }
 
 /// One node's store.

@@ -11,14 +11,45 @@ use crate::tar;
 
 use super::engine::{ObjectStore, StoreError};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ShardError {
-    #[error(transparent)]
-    Store(#[from] StoreError),
-    #[error("tar: {0}")]
-    Tar(#[from] tar::TarError),
-    #[error("member not found: {shard}!{member}")]
+    Store(StoreError),
+    Tar(tar::TarError),
     MemberNotFound { shard: String, member: String },
+}
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::Store(e) => write!(f, "{e}"), // transparent
+            ShardError::Tar(e) => write!(f, "tar: {e}"),
+            ShardError::MemberNotFound { shard, member } => {
+                write!(f, "member not found: {shard}!{member}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ShardError::Store(e) => e.source(),
+            ShardError::Tar(e) => Some(e),
+            ShardError::MemberNotFound { .. } => None,
+        }
+    }
+}
+
+impl From<StoreError> for ShardError {
+    fn from(e: StoreError) -> ShardError {
+        ShardError::Store(e)
+    }
+}
+
+impl From<tar::TarError> for ShardError {
+    fn from(e: tar::TarError) -> ShardError {
+        ShardError::Tar(e)
+    }
 }
 
 type Index = Arc<HashMap<String, (u64, u64)>>;

@@ -37,16 +37,43 @@ pub struct MemberInfo {
     pub size: u64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TarError {
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("name too long for ustar: {0}")]
+    Io(io::Error),
     NameTooLong(String),
-    #[error("bad header checksum at block {0}")]
     BadChecksum(u64),
-    #[error("corrupt header field: {0}")]
     BadField(&'static str),
+    /// Streaming-entry misuse: payload bytes don't match the declared size.
+    EntrySize { expected: u64, got: u64 },
+}
+
+impl std::fmt::Display for TarError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TarError::Io(e) => write!(f, "io: {e}"),
+            TarError::NameTooLong(n) => write!(f, "name too long for ustar: {n}"),
+            TarError::BadChecksum(b) => write!(f, "bad header checksum at block {b}"),
+            TarError::BadField(w) => write!(f, "corrupt header field: {w}"),
+            TarError::EntrySize { expected, got } => {
+                write!(f, "streamed entry size mismatch: expected {expected}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TarError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TarError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for TarError {
+    fn from(e: io::Error) -> TarError {
+        TarError::Io(e)
+    }
 }
 
 // ---------------------------------------------------------------- header --
@@ -128,15 +155,31 @@ pub fn padded_len(size: u64) -> u64 {
 
 /// Streaming TAR writer over any `Write`. The DT uses this to emit the
 /// response stream incrementally (streaming mode) or into a buffer.
+///
+/// Two granularities:
+/// * `append`/`append_from` — one whole entry per call;
+/// * `begin_entry` / `write_chunk` / `end_entry` — an entry whose payload
+///   arrives in pieces (the DT's chunked head-of-line streaming: the header
+///   needs the total size, which the first chunk frame declares, but the
+///   payload bytes flow through as they arrive).
 pub struct TarWriter<W: Write> {
     w: W,
     bytes_written: u64,
     finished: bool,
+    /// Open streamed entry: (bytes still expected, declared size).
+    open: Option<(u64, u64)>,
 }
 
 impl<W: Write> TarWriter<W> {
     pub fn new(w: W) -> TarWriter<W> {
-        TarWriter { w, bytes_written: 0, finished: false }
+        TarWriter { w, bytes_written: 0, finished: false, open: None }
+    }
+
+    fn check_closed(&self) -> Result<(), TarError> {
+        if let Some((remaining, size)) = self.open {
+            return Err(TarError::EntrySize { expected: size, got: size - remaining });
+        }
+        Ok(())
     }
 
     pub fn append(&mut self, name: &str, data: &[u8]) -> Result<(), TarError> {
@@ -145,6 +188,7 @@ impl<W: Write> TarWriter<W> {
 
     /// Append an entry streaming its payload from `r` (exactly `size` bytes).
     pub fn append_from<R: Read>(&mut self, name: &str, size: u64, r: &mut R) -> Result<(), TarError> {
+        self.check_closed()?;
         let h = make_header(name, size)?;
         self.w.write_all(&h)?;
         let copied = io::copy(&mut r.take(size), &mut self.w)?;
@@ -162,6 +206,51 @@ impl<W: Write> TarWriter<W> {
         Ok(())
     }
 
+    /// Open a streamed entry: emits the header now; payload follows via
+    /// `write_chunk` and must total exactly `size` bytes before
+    /// `end_entry`.
+    pub fn begin_entry(&mut self, name: &str, size: u64) -> Result<(), TarError> {
+        self.check_closed()?;
+        let h = make_header(name, size)?;
+        self.w.write_all(&h)?;
+        self.bytes_written += BLOCK as u64;
+        self.open = Some((size, size));
+        Ok(())
+    }
+
+    /// Write the next piece of the open streamed entry's payload.
+    pub fn write_chunk(&mut self, data: &[u8]) -> Result<(), TarError> {
+        let (remaining, size) = self.open.ok_or(TarError::EntrySize { expected: 0, got: 0 })?;
+        if data.len() as u64 > remaining {
+            return Err(TarError::EntrySize {
+                expected: size,
+                got: size - remaining + data.len() as u64,
+            });
+        }
+        self.w.write_all(data)?;
+        self.bytes_written += data.len() as u64;
+        self.open = Some((remaining - data.len() as u64, size));
+        Ok(())
+    }
+
+    /// Close the open streamed entry: verifies the payload ran to its
+    /// declared size and writes the block padding. (No flush here — the
+    /// chunked HTTP writer already emits at its own granularity, and a
+    /// per-entry flush would shrink wire chunks for small-object batches.)
+    pub fn end_entry(&mut self) -> Result<(), TarError> {
+        let (remaining, size) = self.open.ok_or(TarError::EntrySize { expected: 0, got: 0 })?;
+        if remaining != 0 {
+            return Err(TarError::EntrySize { expected: size, got: size - remaining });
+        }
+        let pad = (padded_len(size) - size) as usize;
+        if pad > 0 {
+            self.w.write_all(&[0u8; BLOCK][..pad])?;
+            self.bytes_written += pad as u64;
+        }
+        self.open = None;
+        Ok(())
+    }
+
     /// Append the continue-on-error placeholder for a missing entry.
     pub fn append_missing(&mut self, name: &str) -> Result<(), TarError> {
         self.append(&format!("{MISSING_PREFIX}{name}"), &[])
@@ -169,6 +258,7 @@ impl<W: Write> TarWriter<W> {
 
     /// Write the end-of-archive marker (two zero blocks) and flush.
     pub fn finish(&mut self) -> Result<(), TarError> {
+        self.check_closed()?;
         if !self.finished {
             self.w.write_all(&[0u8; BLOCK * 2])?;
             self.w.flush()?;
@@ -455,6 +545,44 @@ mod tests {
         assert_eq!(rd.next_entry().unwrap().unwrap().name, "b");
         assert!(rd.next_entry().unwrap().is_none());
         assert!(rd.next_entry().unwrap().is_none()); // idempotent
+    }
+
+    #[test]
+    fn streamed_entry_chunks_equal_whole_append() {
+        // begin/write_chunk/end must produce byte-identical output to a
+        // single append of the same payload.
+        let payload: Vec<u8> = (0..1500u32).map(|i| (i % 251) as u8).collect();
+        let mut whole = TarWriter::new(Vec::new());
+        whole.append("e", &payload).unwrap();
+        let whole = whole.into_inner().unwrap();
+
+        let mut streamed = TarWriter::new(Vec::new());
+        streamed.begin_entry("e", payload.len() as u64).unwrap();
+        for chunk in payload.chunks(64) {
+            streamed.write_chunk(chunk).unwrap();
+        }
+        streamed.end_entry().unwrap();
+        let streamed = streamed.into_inner().unwrap();
+        assert_eq!(whole, streamed);
+    }
+
+    #[test]
+    fn streamed_entry_size_violations_rejected() {
+        let mut w = TarWriter::new(Vec::new());
+        w.begin_entry("x", 4).unwrap();
+        w.write_chunk(&[1, 2]).unwrap();
+        // overflow
+        assert!(matches!(w.write_chunk(&[3, 4, 5]), Err(TarError::EntrySize { .. })));
+        // short close
+        assert!(matches!(w.end_entry(), Err(TarError::EntrySize { expected: 4, got: 2 })));
+        // appending while an entry is open is a misuse
+        assert!(matches!(w.append("y", &[]), Err(TarError::EntrySize { .. })));
+        // completing it cleanly works
+        w.write_chunk(&[3, 4]).unwrap();
+        w.end_entry().unwrap();
+        let bytes = w.into_inner().unwrap();
+        let back = read_archive(&bytes).unwrap();
+        assert_eq!(back[0].data, vec![1, 2, 3, 4]);
     }
 
     #[test]

@@ -14,6 +14,13 @@ pub fn cluster(targets: usize) -> Cluster {
         .expect("cluster start")
 }
 
+/// Like [`cluster`] but with a custom GetBatch section — used by the
+/// memory-budget / chunk-size scenarios (tests and benches).
+pub fn cluster_cfg(targets: usize, getbatch: crate::config::GetBatchConfig) -> Cluster {
+    Cluster::start(ClusterConfig { targets, http_workers: 8, getbatch, ..Default::default() })
+        .expect("cluster start")
+}
+
 /// Stage `n` standalone objects of fixed `size` in `bucket`; returns names.
 pub fn stage_objects(c: &Cluster, bucket: &str, n: usize, size: usize, seed: u64) -> Vec<String> {
     let mut rng = Rng::new(seed);

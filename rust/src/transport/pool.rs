@@ -5,9 +5,16 @@
 //! concurrent requests never interleave on one socket. Idle connections are
 //! reclaimed after `idle_timeout`, amortizing TCP setup across requests and
 //! avoiding connection storms under concurrent load (§2.3.1).
+//!
+//! Stale-connection handling: a pooled connection may have been closed by
+//! the peer since its last use (peer restart, idle reclaim on the far
+//! side). Checkout probes pooled sockets (non-blocking peek: a received FIN
+//! reads as EOF) and drops dead ones, and `send`/`send_iter` additionally
+//! retry once on a freshly established connection when a pooled socket
+//! fails mid-handshake — closing the FIN-in-flight race window.
 
 use std::collections::HashMap;
-use std::io::{self, BufReader, BufWriter, Write};
+use std::io::{self, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -19,6 +26,22 @@ use crate::proto::frame::{self, Frame};
 struct IdleConn {
     stream: TcpStream,
     since: Instant,
+}
+
+/// `true` iff a pooled connection is still usable: no FIN received and no
+/// unexpected inbound bytes (the frame protocol is strictly one-way).
+fn conn_alive(s: &TcpStream) -> bool {
+    if s.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut probe = [0u8; 1];
+    let alive = match s.peek(&mut probe) {
+        Ok(0) => false,                                           // peer closed
+        Ok(_) => false,                                           // protocol violation
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock => true,  // healthy idle
+        Err(_) => false,
+    };
+    s.set_nonblocking(false).is_ok() && alive
 }
 
 /// Sender-side pool of persistent peer connections.
@@ -44,22 +67,28 @@ impl PeerPool {
         })
     }
 
-    fn checkout(&self, addr: &str) -> io::Result<TcpStream> {
-        if !self.disable_reuse.load(Ordering::Relaxed) {
-            let mut idle = self.idle.lock().unwrap();
-            if let Some(v) = idle.get_mut(addr) {
-                while let Some(c) = v.pop() {
-                    if c.since.elapsed() < self.idle_timeout {
-                        return Ok(c.stream);
-                    }
-                    // stale: drop (reclaim)
-                }
-            }
-        }
+    fn connect_fresh(&self, addr: &str) -> io::Result<TcpStream> {
         let s = TcpStream::connect(addr)?;
         s.set_nodelay(true)?;
         self.established.fetch_add(1, Ordering::Relaxed);
         Ok(s)
+    }
+
+    /// Returns (stream, came_from_pool). Pooled candidates are probed for
+    /// liveness; stale/dead ones are discarded.
+    fn checkout(&self, addr: &str) -> io::Result<(TcpStream, bool)> {
+        if !self.disable_reuse.load(Ordering::Relaxed) {
+            let mut idle = self.idle.lock().unwrap();
+            if let Some(v) = idle.get_mut(addr) {
+                while let Some(c) = v.pop() {
+                    if c.since.elapsed() < self.idle_timeout && conn_alive(&c.stream) {
+                        return Ok((c.stream, true));
+                    }
+                    // stale or dead: drop (reclaim)
+                }
+            }
+        }
+        Ok((self.connect_fresh(addr)?, false))
     }
 
     fn checkin(&self, addr: &str, stream: TcpStream) {
@@ -73,38 +102,68 @@ impl PeerPool {
         }
     }
 
-    /// Write a burst of frames to `addr` on one pooled connection.
+    /// Write a burst of frames to `addr` on one pooled connection. A dead
+    /// pooled socket is replaced by a fresh connection, but only while
+    /// nothing of this burst has been delivered — frames are not idempotent
+    /// (a duplicated SENDER_DONE would double-count fan-in completion), so
+    /// a mid-burst failure is surfaced instead of blindly resent; the DT's
+    /// sender-wait + GFN ladder owns recovery from partial bursts.
     /// The encode buffer is reused across frames (hot path).
     pub fn send(&self, addr: &str, frames: &[Frame]) -> io::Result<()> {
-        let stream = self.checkout(addr)?;
-        let mut w = BufWriter::with_capacity(256 * 1024, stream);
+        let (mut stream, mut from_pool) = self.checkout(addr)?;
         let mut scratch = Vec::with_capacity(64 * 1024);
+        let mut sent_any = false;
         for f in frames {
             frame::encode_into(f, &mut scratch);
-            w.write_all(&scratch)?;
+            match stream.write_all(&scratch) {
+                Ok(()) => {}
+                Err(e) => {
+                    if sent_any || !from_pool {
+                        return Err(e);
+                    }
+                    // Stale pooled socket caught on the first write: retry
+                    // the same frame on a fresh connection.
+                    stream = self.connect_fresh(addr)?;
+                    from_pool = false;
+                    stream.write_all(&scratch)?;
+                }
+            }
+            sent_any = true;
         }
-        w.flush()?;
-        let stream = w.into_inner().map_err(|e| e.into_error())?;
         self.checkin(addr, stream);
         Ok(())
     }
 
-    /// Send frames produced lazily, flushing each as soon as it's encoded —
-    /// lets a sender overlap disk reads with transmission.
+    /// Send frames produced lazily, transmitting each as soon as it's
+    /// encoded — lets a sender overlap disk reads with transmission. A dead
+    /// pooled connection is replaced by a fresh one if the failure hits
+    /// before anything was delivered (after that, recovery is the DT's
+    /// job — sender-wait timeout + GFN).
     pub fn send_iter(
         &self,
         addr: &str,
         frames: impl Iterator<Item = Frame>,
     ) -> io::Result<()> {
-        let stream = self.checkout(addr)?;
-        let mut w = BufWriter::with_capacity(256 * 1024, stream);
+        let (mut stream, mut from_pool) = self.checkout(addr)?;
         let mut scratch = Vec::with_capacity(64 * 1024);
+        let mut sent_any = false;
         for f in frames {
             frame::encode_into(&f, &mut scratch);
-            w.write_all(&scratch)?;
-            w.flush()?;
+            match stream.write_all(&scratch) {
+                Ok(()) => {}
+                Err(e) => {
+                    if sent_any || !from_pool {
+                        return Err(e);
+                    }
+                    // Stale pooled socket detected on first write: retry the
+                    // same frame on a fresh connection.
+                    stream = self.connect_fresh(addr)?;
+                    from_pool = false;
+                    stream.write_all(&scratch)?;
+                }
+            }
+            sent_any = true;
         }
-        let stream = w.into_inner().map_err(|e| e.into_error())?;
         self.checkin(addr, stream);
         Ok(())
     }
@@ -123,9 +182,39 @@ impl PeerPool {
     }
 }
 
+/// Socket reader that retries short poll timeouts internally, so a frame
+/// read can never desynchronize mid-frame: the 200 ms socket timeout is a
+/// shutdown-poll interval, not a protocol deadline. (Previously a timeout
+/// between the header's first byte and its tail made the reader restart at
+/// the wrong offset — BadMagic — and drop the connection.)
+struct PatientReader {
+    stream: TcpStream,
+    stop: Arc<AtomicBool>,
+}
+
+impl Read for PatientReader {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            match self.stream.read(buf) {
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    if self.stop.load(Ordering::Relaxed) {
+                        return Err(e); // shutdown requested
+                    }
+                }
+                r => return r,
+            }
+        }
+    }
+}
+
 /// Receiver side: accepts peer connections and dispatches every incoming
 /// frame to the handler (the DT registry). One reader thread per peer
-/// connection — connections are few (pooled) and long-lived.
+/// connection — connections are few (pooled) and long-lived. The handler
+/// may block (memory-budget backpressure): the stalled reader thread stops
+/// draining the socket and TCP flow control pushes back on the sender.
 pub struct P2pServer {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -153,22 +242,20 @@ impl P2pServer {
                             let stop3 = Arc::clone(&stop2);
                             conns.push(std::thread::spawn(move || {
                                 let _ = stream.set_nodelay(true);
+                                // Poll interval so idle connections notice
+                                // shutdown; PatientReader retries these
+                                // timeouts, keeping frame reads atomic.
                                 let _ = stream
                                     .set_read_timeout(Some(Duration::from_millis(200)));
-                                let mut r = BufReader::with_capacity(256 * 1024, stream);
+                                let mut r = BufReader::with_capacity(
+                                    256 * 1024,
+                                    PatientReader { stream, stop: stop3 },
+                                );
                                 loop {
                                     match frame::read_frame(&mut r) {
                                         Ok(Some(f)) => h(f),
                                         Ok(None) => break, // peer closed
-                                        Err(frame::FrameError::Io(e))
-                                            if e.kind() == io::ErrorKind::WouldBlock
-                                                || e.kind() == io::ErrorKind::TimedOut =>
-                                        {
-                                            if stop3.load(Ordering::Relaxed) {
-                                                break;
-                                            }
-                                        }
-                                        Err(_) => break, // corrupt stream: drop conn
+                                        Err(_) => break,   // shutdown or corrupt stream
                                     }
                                 }
                             }));
@@ -199,6 +286,7 @@ impl Drop for P2pServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::proto::frame::read_frame;
     use std::sync::mpsc;
 
     fn collector() -> (P2pServer, mpsc::Receiver<Frame>) {
@@ -234,6 +322,30 @@ mod tests {
         }
         assert_eq!(got[0].payload, vec![1, 2, 3]);
         assert_eq!(got[2].index, 1);
+    }
+
+    #[test]
+    fn chunked_frames_arrive_in_order() {
+        let (srv, rx) = collector();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        let addr = srv.addr.to_string();
+        let payload: Vec<u8> = (0..10_000u32).map(|i| (i % 233) as u8).collect();
+        let frames = frame::chunk_frames(4, 2, payload.clone(), 1 << 10);
+        assert!(frames.len() > 2, "multi-chunk");
+        pool.send_iter(&addr, frames.into_iter()).unwrap();
+        let mut rebuilt = Vec::new();
+        loop {
+            let f = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            let (total, bytes) = f.chunk_parts().unwrap();
+            if f.is_first() {
+                assert_eq!(total, payload.len() as u64);
+            }
+            rebuilt.extend_from_slice(bytes);
+            if f.is_last() {
+                break;
+            }
+        }
+        assert_eq!(rebuilt, payload);
     }
 
     #[test]
@@ -278,6 +390,67 @@ mod tests {
         pool.send(&addr, &[Frame::data(2, 0, vec![2])]).unwrap();
         rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(pool.established.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn stale_pooled_connection_replaced_by_fresh_one() {
+        // A raw server that reads one frame per connection and then kills
+        // the socket — the pooled connection the client holds is dead on
+        // its next checkout; send() must succeed via a fresh connection.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            for _ in 0..2 {
+                let (mut s, _) = listener.accept().unwrap();
+                got.push(read_frame(&mut s).unwrap().unwrap());
+                // socket dropped here: server-side kill between sends
+            }
+            got
+        });
+
+        let pool = PeerPool::new(Duration::from_secs(30));
+        pool.send(&addr, &[Frame::data(1, 0, vec![1; 64])]).unwrap();
+        // Give the server's FIN time to reach our pooled socket.
+        std::thread::sleep(Duration::from_millis(100));
+        pool.send(&addr, &[Frame::data(2, 0, vec![2; 64])]).unwrap();
+
+        let got = server.join().unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].req_id, 1);
+        assert_eq!(got[1].req_id, 2);
+        assert_eq!(pool.established.load(Ordering::Relaxed), 2, "second send reconnected");
+    }
+
+    #[test]
+    fn send_iter_survives_stale_pooled_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let mut bursts = Vec::new();
+            for want in [1usize, 3] {
+                let (mut s, _) = listener.accept().unwrap();
+                let mut frames = Vec::new();
+                for _ in 0..want {
+                    frames.push(read_frame(&mut s).unwrap().unwrap());
+                }
+                bursts.push(frames);
+            }
+            bursts
+        });
+
+        let pool = PeerPool::new(Duration::from_secs(30));
+        pool.send_iter(&addr, std::iter::once(Frame::data(1, 0, vec![1]))).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let frames = vec![
+            Frame::data(2, 0, vec![2; 2048]),
+            Frame::data(2, 1, vec![3; 2048]),
+            Frame::sender_done(2, 2),
+        ];
+        pool.send_iter(&addr, frames.into_iter()).unwrap();
+        let bursts = server.join().unwrap();
+        assert_eq!(bursts[1].len(), 3);
+        assert_eq!(bursts[1][2].ftype, frame::FrameType::SenderDone);
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! CRC-32 (IEEE 802.3, the zlib/`crc32fast` polynomial) — dependency-free
+//! replacement for the `crc32fast` crate in the offline build. Slice-by-8
+//! table lookup: ~1 byte/cycle, plenty for the frame-protocol checksum on
+//! the intra-cluster path (the socket, not the CRC, is the bottleneck).
+
+const POLY: u32 = 0xEDB8_8320; // reflected 0x04C11DB7
+
+/// 8 tables x 256 entries, built at first use.
+fn tables() -> &'static [[u32; 256]; 8] {
+    use std::sync::OnceLock;
+    static TABLES: OnceLock<Box<[[u32; 256]; 8]>> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut t = Box::new([[0u32; 256]; 8]);
+        for i in 0..256u32 {
+            let mut c = i;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { (c >> 1) ^ POLY } else { c >> 1 };
+            }
+            t[0][i as usize] = c;
+        }
+        for i in 0..256 {
+            let mut c = t[0][i];
+            for k in 1..8 {
+                c = t[0][(c & 0xFF) as usize] ^ (c >> 8);
+                t[k][i] = c;
+            }
+        }
+        t
+    })
+}
+
+/// Streaming CRC-32 state (matches `crc32fast::Hasher` usage).
+#[derive(Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Hasher::new()
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { state: !0 }
+    }
+
+    pub fn update(&mut self, mut buf: &[u8]) {
+        let t = tables();
+        let mut crc = self.state;
+        while buf.len() >= 8 {
+            let lo = crc ^ u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+            crc = t[7][(lo & 0xFF) as usize]
+                ^ t[6][((lo >> 8) & 0xFF) as usize]
+                ^ t[5][((lo >> 16) & 0xFF) as usize]
+                ^ t[4][(lo >> 24) as usize]
+                ^ t[3][buf[4] as usize]
+                ^ t[2][buf[5] as usize]
+                ^ t[1][buf[6] as usize]
+                ^ t[0][buf[7] as usize];
+            buf = &buf[8..];
+        }
+        for &b in buf {
+            crc = t[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+        }
+        self.state = crc;
+    }
+
+    pub fn finalize(self) -> u32 {
+        !self.state
+    }
+}
+
+/// One-shot hash of a buffer (drop-in for `crc32fast::hash`).
+pub fn hash(buf: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(buf);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard CRC-32 test vectors (zlib-compatible).
+        assert_eq!(hash(b""), 0x0000_0000);
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data: Vec<u8> = (0..1024u32).map(|i| (i * 31 % 251) as u8).collect();
+        let whole = hash(&data);
+        for split in [0, 1, 7, 8, 9, 500, 1023, 1024] {
+            let mut h = Hasher::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finalize(), whole, "split={split}");
+        }
+    }
+
+    #[test]
+    fn sensitive_to_single_bit() {
+        let a = vec![0u8; 100];
+        let mut b = a.clone();
+        b[50] ^= 1;
+        assert_ne!(hash(&a), hash(&b));
+    }
+}

@@ -1,0 +1,175 @@
+//! Minimal `anyhow`-compatible error type for the offline build (no crates).
+//!
+//! Implements the slice of the `anyhow` API this repo uses: `Error` (boxed
+//! dynamic error with a context chain), `Result<T>`, the `anyhow!`/`bail!`/
+//! `ensure!` macros and the `Context` extension trait on `Result`/`Option`.
+//! Files that used the real crate just alias it:
+//!
+//! ```ignore
+//! use crate::util::error as anyhow;   // or `use getbatch::util::error as anyhow;`
+//! ```
+
+use std::fmt;
+
+/// Boxed error with optional layered context messages (outermost first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// A free-standing message error (what `anyhow!` produces).
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap an underlying error without extra context.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+
+    fn wrap(msg: String, source: Box<dyn std::error::Error + Send + Sync + 'static>) -> Error {
+        Error { msg, source: Some(source) }
+    }
+
+    /// Add a context layer (mirrors `anyhow::Error::context`).
+    pub fn context(self, msg: impl fmt::Display) -> Error {
+        Error { msg: format!("{msg}: {}", self.msg), source: self.source }
+    }
+
+    pub fn source_ref(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow-style Debug: message, then the cause chain.
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source_ref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like real `anyhow`, `Error` does NOT implement std::error::Error —
+// that's what makes the blanket From<E> below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.map_err(|e| Error::wrap(format!("{msg}: {e}"), Box::new(e)))
+    }
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::wrap(format!("{}: {e}", f()), Box::new(e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...{}...", args)` → `Error`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` → early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "...")` → bail unless `cond`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+// Re-export the macros as module items so `use ... as anyhow;` callers can
+// write `anyhow::anyhow!`, `anyhow::bail!`, `anyhow::ensure!` path-style.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io;
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io::Error::new(io::ErrorKind::Other, "boom"))?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("boom"));
+        assert!(e.source_ref().is_some());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert!(inner(20).unwrap_err().to_string().contains("too big"));
+        assert!(inner(5).unwrap_err().to_string().contains("right out"));
+
+        let r: Result<u32, io::Error> = Err(io::Error::new(io::ErrorKind::NotFound, "nf"));
+        let e = Context::context(r, "reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config:"), "{e}");
+
+        let o: Option<u32> = None;
+        assert!(Context::context(o, "missing field").is_err());
+    }
+
+    #[test]
+    fn debug_prints_chain() {
+        let r: Result<(), io::Error> = Err(io::Error::new(io::ErrorKind::Other, "root"));
+        let e = Context::context(r, "outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by"), "{dbg}");
+    }
+}

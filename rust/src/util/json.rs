@@ -23,12 +23,19 @@ pub enum Value {
 }
 
 /// Parse error with byte offset for diagnostics.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Value {
     pub fn parse(s: &str) -> Result<Value, ParseError> {

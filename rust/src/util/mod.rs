@@ -1,7 +1,10 @@
 //! Foundation utilities built from scratch for the offline sandbox: JSON
 //! codec, PRNG, streaming statistics, rendezvous hashing, thread pool,
-//! virtual clock, byte-size helpers and a minimal CLI parser.
+//! virtual clock, byte-size helpers, a minimal CLI parser, CRC-32, and the
+//! `anyhow`-style error type (the build has no external crates).
 
+pub mod crc32;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

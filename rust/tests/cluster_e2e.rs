@@ -118,6 +118,54 @@ fn colocation_hint_reduces_cross_node_traffic() {
 }
 
 #[test]
+fn streaming_batch_larger_than_dt_memory_budget_is_correct_and_bounded() {
+    // The §2.3.1 streaming claim made falsifiable: total payload (3 MiB)
+    // exceeds the DT's enforced memory budget (256 KiB) many times over.
+    // The batch must still assemble byte-identically in strict order, and
+    // no target's resident bytes may ever exceed the budget.
+    let gb = GetBatchConfig {
+        chunk_bytes: 64 << 10,
+        dt_buffer_bytes: 256 << 10,
+        ..Default::default()
+    };
+    let c = fixtures::cluster_cfg(3, gb);
+    let mut rng = getbatch::util::rng::Rng::new(0xB16);
+    let mut want = Vec::new();
+    for i in 0..6 {
+        let mut data = vec![0u8; 512 << 10];
+        rng.fill_bytes(&mut data);
+        c.put_direct("b", &format!("big-{i}"), &data).unwrap();
+        want.push(data);
+    }
+
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> =
+        (0..6).map(|i| BatchEntry::obj("b", &format!("big-{i}"))).collect();
+    let items = client
+        .get_batch_collect(&BatchRequest::new(entries).streaming(true))
+        .unwrap();
+
+    assert_eq!(items.len(), 6);
+    for (i, item) in items.iter().enumerate() {
+        assert_eq!(item.name(), format!("big-{i}"), "strict order at position {i}");
+        assert_eq!(item.data().unwrap(), &want[i][..], "entry {i} byte-identical");
+    }
+    for t in &c.targets {
+        assert!(
+            t.budget.peak() <= t.budget.budget(),
+            "target {}: peak resident {} exceeded budget {}",
+            t.info.id,
+            t.budget.peak(),
+            t.budget.budget()
+        );
+        assert_eq!(t.budget.overruns(), 0, "target {}: forced admissions", t.info.id);
+    }
+    // The budget actually bit on the DT (3 MiB streamed through 256 KiB).
+    let peak_max = c.targets.iter().map(|t| t.budget.peak()).max().unwrap();
+    assert!(peak_max > 0, "some DT buffered bytes");
+}
+
+#[test]
 fn admission_control_rejects_with_429_under_memory_pressure() {
     let cfg = ClusterConfig {
         targets: 1,

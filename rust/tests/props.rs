@@ -200,6 +200,150 @@ fn prop_percentiles_monotone_and_bounded() {
 }
 
 #[test]
+fn prop_order_buffer_interleaved_chunk_fills_reassemble_exactly() {
+    // Many producer threads, each owning a disjoint set of slots, deliver
+    // their entries as chunk sequences of arbitrary sizes (some as whole
+    // fills); the consumer streams slots 0..n in order. Whatever the
+    // interleaving, every payload must reassemble byte-identical and in
+    // strict slot order, and the buffer must end drained.
+    use getbatch::dt::order::{ChunkWait, OrderBuffer};
+    use std::sync::Arc;
+
+    check(
+        PropConfig { cases: 24, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let n_slots = rng.usize_below(12) + 1;
+            let n_producers = rng.usize_below(4) + 1;
+            let payloads: Vec<Vec<u8>> = (0..n_slots)
+                .map(|_| bytes_gen(rng, size * 200 + 1))
+                .collect();
+            // per-slot chunk size (1..=len+1 → some single-chunk, some many)
+            let chunk_sizes: Vec<usize> = payloads
+                .iter()
+                .map(|p| rng.usize_below(p.len() + 1) + 1)
+                .collect();
+            (n_producers, payloads, chunk_sizes)
+        },
+        |(n_producers, payloads, chunk_sizes)| {
+            let buf = Arc::new(OrderBuffer::new(payloads.len()));
+            std::thread::scope(|s| {
+                for p in 0..*n_producers {
+                    let buf = Arc::clone(&buf);
+                    let payloads = &payloads;
+                    let chunk_sizes = &chunk_sizes;
+                    s.spawn(move || {
+                        for idx in (p..payloads.len()).step_by(*n_producers) {
+                            let data = &payloads[idx];
+                            let cs = chunk_sizes[idx];
+                            if data.len() <= cs {
+                                buf.fill(idx as u32, data.clone());
+                            } else {
+                                let total = data.len() as u64;
+                                let mut off = 0;
+                                while off < data.len() {
+                                    let end = (off + cs).min(data.len());
+                                    buf.append_chunk(
+                                        idx as u32,
+                                        total,
+                                        data[off..end].to_vec(),
+                                        off == 0,
+                                        end == data.len(),
+                                    );
+                                    off = end;
+                                }
+                            }
+                        }
+                    });
+                }
+                // consumer: strict-order streaming drain
+                for (idx, want) in payloads.iter().enumerate() {
+                    let mut got = Vec::new();
+                    loop {
+                        match buf.wait_chunk(idx as u32, std::time::Duration::from_secs(5)) {
+                            ChunkWait::Chunk { bytes, total, done } => {
+                                if total != want.len() as u64 {
+                                    return Err(format!(
+                                        "slot {idx}: declared {total} != {}",
+                                        want.len()
+                                    ));
+                                }
+                                got.extend_from_slice(&bytes);
+                                if done {
+                                    break;
+                                }
+                            }
+                            other => return Err(format!("slot {idx}: {other:?}")),
+                        }
+                    }
+                    if &got != want {
+                        return Err(format!(
+                            "slot {idx}: reassembly mismatch ({} vs {} bytes)",
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                }
+                Ok(())
+            })?;
+            if buf.buffered_bytes() != 0 {
+                return Err(format!("residual bytes: {}", buf.buffered_bytes()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunk_frames_roundtrip_any_chunk_size() {
+    // Frame-level chunking: any (payload, chunk size) must encode to a
+    // frame sequence that decodes back byte-identically, with per-chunk CRC
+    // verified on the way (read_frame checks it).
+    use getbatch::proto::frame::{chunk_frames, read_frame, write_frame};
+
+    check(
+        PropConfig { cases: 40, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let payload = bytes_gen(rng, size * 120 + 1);
+            let chunk = rng.usize_below(payload.len() + 2) + 1;
+            (payload, chunk)
+        },
+        |(payload, chunk)| {
+            let frames = chunk_frames(3, 9, payload.clone(), *chunk);
+            let mut wire = Vec::new();
+            for f in &frames {
+                write_frame(&mut wire, f).map_err(|e| e.to_string())?;
+            }
+            let mut cur = std::io::Cursor::new(&wire);
+            let mut rebuilt = Vec::new();
+            let mut declared = None;
+            let mut last_seen = false;
+            while let Some(f) = read_frame(&mut cur).map_err(|e| e.to_string())? {
+                if last_seen {
+                    return Err("frame after LAST".into());
+                }
+                let (total, bytes) =
+                    f.chunk_parts().ok_or("malformed first chunk")?;
+                if f.is_first() {
+                    declared = Some(total);
+                }
+                rebuilt.extend_from_slice(bytes);
+                last_seen = f.is_last();
+            }
+            if !last_seen {
+                return Err("no LAST frame".into());
+            }
+            if declared != Some(payload.len() as u64) {
+                return Err(format!("declared {declared:?} != {}", payload.len()));
+            }
+            if &rebuilt != payload {
+                return Err("payload mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_hrw_stability_under_node_addition() {
     // adding a node must move only keys that now rank it first
     check(
