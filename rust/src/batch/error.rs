@@ -2,8 +2,6 @@
 //! (missing objects/members, transient stream failures, sender timeouts) may
 //! be tolerated under continue-on-error, surfacing as placeholders instead.
 
-use std::fmt;
-
 /// Why an individual entry failed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EntryError {
@@ -14,19 +12,17 @@ pub enum EntryError {
     ReadFailure(String),
 }
 
-impl fmt::Display for EntryError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            EntryError::NotFound(k) => write!(f, "object not found: {k}"),
-            EntryError::MemberNotFound(k) => write!(f, "archive member not found: {k}"),
-            EntryError::StreamFailure(r) => write!(f, "transient stream failure: {r}"),
-            EntryError::SenderTimeout(i) => write!(f, "timed out waiting for sender (entry {i})"),
-            EntryError::ReadFailure(r) => write!(f, "local read failed: {r}"),
+crate::impl_error! {
+    EntryError {
+        display {
+            EntryError::NotFound(k) => "object not found: {k}",
+            EntryError::MemberNotFound(k) => "archive member not found: {k}",
+            EntryError::StreamFailure(r) => "transient stream failure: {r}",
+            EntryError::SenderTimeout(i) => "timed out waiting for sender (entry {i})",
+            EntryError::ReadFailure(r) => "local read failed: {r}",
         }
     }
 }
-
-impl std::error::Error for EntryError {}
 
 impl EntryError {
     /// All per-entry retrieval errors are classified soft; only exhausted
@@ -56,35 +52,24 @@ pub enum BatchError {
     Io(std::io::Error),
 }
 
-impl fmt::Display for BatchError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            BatchError::EntryFailed { index, source } => {
-                write!(f, "request aborted: entry {index} failed: {source}")
-            }
-            BatchError::SoftErrorBudget { count, limit } => {
-                write!(f, "soft-error budget exceeded ({count} > {limit})")
-            }
-            BatchError::Admission(r) => write!(f, "admission rejected: {r}"),
-            BatchError::BadRequest(r) => write!(f, "bad request: {r}"),
-            BatchError::Io(e) => write!(f, "io: {e}"),
+crate::impl_error! {
+    BatchError {
+        display {
+            BatchError::EntryFailed { index, source } =>
+                "request aborted: entry {index} failed: {source}",
+            BatchError::SoftErrorBudget { count, limit } =>
+                "soft-error budget exceeded ({count} > {limit})",
+            BatchError::Admission(r) => "admission rejected: {r}",
+            BatchError::BadRequest(r) => "bad request: {r}",
+            BatchError::Io(e) => "io: {e}",
         }
-    }
-}
-
-impl std::error::Error for BatchError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            BatchError::EntryFailed { source, .. } => Some(source),
-            BatchError::Io(e) => Some(e),
-            _ => None,
+        source {
+            BatchError::EntryFailed { source, .. } => source,
+            BatchError::Io(e) => e,
         }
-    }
-}
-
-impl From<std::io::Error> for BatchError {
-    fn from(e: std::io::Error) -> BatchError {
-        BatchError::Io(e)
+        from {
+            std::io::Error => Io,
+        }
     }
 }
 

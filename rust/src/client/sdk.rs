@@ -24,35 +24,21 @@ pub enum ClientError {
     Tar(crate::tar::TarError),
 }
 
-impl std::fmt::Display for ClientError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ClientError::Status { status, msg } => write!(f, "http {status}: {msg}"),
-            ClientError::Io(e) => write!(f, "io: {e}"),
-            ClientError::Tar(e) => write!(f, "tar: {e}"),
+crate::impl_error! {
+    ClientError {
+        display {
+            ClientError::Status { status, msg } => "http {status}: {msg}",
+            ClientError::Io(e) => "io: {e}",
+            ClientError::Tar(e) => "tar: {e}",
         }
-    }
-}
-
-impl std::error::Error for ClientError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            ClientError::Io(e) => Some(e),
-            ClientError::Tar(e) => Some(e),
-            _ => None,
+        source {
+            ClientError::Io(e) => e,
+            ClientError::Tar(e) => e,
         }
-    }
-}
-
-impl From<io::Error> for ClientError {
-    fn from(e: io::Error) -> ClientError {
-        ClientError::Io(e)
-    }
-}
-
-impl From<crate::tar::TarError> for ClientError {
-    fn from(e: crate::tar::TarError) -> ClientError {
-        ClientError::Tar(e)
+        from {
+            io::Error => Io,
+            crate::tar::TarError => Tar,
+        }
     }
 }
 

@@ -102,10 +102,13 @@ impl Cluster {
             let peer_pool = PeerPool::new(cfg.p2p_idle_timeout);
             let bg = Arc::new(ThreadPool::new(cfg.http_workers.max(4), &format!("{id}-bg")));
             // Node-wide enforced data-plane memory budget: all of this
-            // target's in-flight DT reorder buffers reserve against it.
-            let budget = MemoryBudget::new(
+            // target's in-flight DT reorder buffers (and ranged GFN
+            // recovery) reserve against it. Patience is the configured
+            // producer-blocking window before a forced admission.
+            let budget = MemoryBudget::with_patience(
                 cfg.getbatch.dt_buffer_bytes,
                 cfg.getbatch.chunk_bytes as u64,
+                cfg.getbatch.budget_patience,
                 Some(Arc::clone(&metrics)),
             );
 
@@ -240,6 +243,12 @@ fn target_route(st: &Arc<TargetState>, req: Request) -> Response {
 
 /// Local object I/O (clients arrive here via proxy redirect; GFN arrives
 /// directly with `local=true`). `archpath` extracts one shard member.
+///
+/// GETs are fully streamed: the entry is opened as an
+/// [`EntryReader`](crate::store::EntryReader) and copied to the socket in
+/// `chunk_bytes` pieces — the handler never materializes an object.
+/// `Range: bytes=S-E` is honored with a 206 + `content-range` response (the
+/// transport ranged GFN recovery rides on).
 fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
     let (bucket, obj) = match wire::parse_object_path(&req.path) {
         Some(x) => x,
@@ -254,17 +263,35 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
             Err(e) => Response::text(500, &e.to_string()),
         },
         "GET" => {
-            let result = match req.query_param("archpath") {
+            let opened = match req.query_param("archpath") {
                 Some(member) => st
                     .shards
                     .extract(&st.store, &bucket, &obj, member)
                     .map_err(|e| e.to_string()),
-                None => st.store.get(&bucket, &obj).map_err(|e| e.to_string()),
+                None => st.store.open_entry(&bucket, &obj).map_err(|e| e.to_string()),
             };
-            match result {
-                Ok(data) => Response::ok(data),
-                Err(e) if e.contains("not found") => Response::text(404, &e),
-                Err(e) => Response::text(500, &e),
+            let mut reader = match opened {
+                Ok(r) => r,
+                Err(e) if e.contains("not found") => return Response::text(404, &e),
+                Err(e) => return Response::text(500, &e),
+            };
+            let len = reader.len();
+            let chunk = st.cfg.getbatch.chunk_bytes.max(1);
+            match crate::proto::http::resolve_range(req.header("range"), len) {
+                crate::proto::http::RangeSpec::Whole => {
+                    Response::stream(move |w| stream_entry(reader, len, chunk, w))
+                }
+                crate::proto::http::RangeSpec::Slice { start, end } => {
+                    if let Err(e) = reader.seek_to(start) {
+                        return Response::text(500, &e.to_string());
+                    }
+                    let span = end - start;
+                    Response::stream(move |w| stream_entry(reader, span, chunk, w))
+                        .into_partial(start, end, len)
+                }
+                crate::proto::http::RangeSpec::Unsatisfiable => {
+                    crate::proto::http::range_unsatisfiable(len)
+                }
             }
         }
         "DELETE" => match st.store.delete(&bucket, &obj) {
@@ -273,6 +300,32 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
         },
         _ => Response::status(400),
     }
+}
+
+/// Copy `span` bytes from an entry reader to an HTTP body sink in
+/// chunk-sized pieces (bounded residency on the serving side too).
+fn stream_entry(
+    mut reader: crate::store::EntryReader,
+    span: u64,
+    chunk: usize,
+    w: &mut dyn std::io::Write,
+) -> std::io::Result<()> {
+    let mut remaining = span;
+    while remaining > 0 {
+        let want = remaining.min(chunk as u64) as usize;
+        let piece = reader
+            .read_chunk(want)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))?;
+        if piece.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "entry ended before its declared length",
+            ));
+        }
+        w.write_all(&piece)?;
+        remaining -= piece.len() as u64;
+    }
+    Ok(())
 }
 
 /// Phase 1: allocate per-request execution state; resolve *our own* entries
@@ -285,9 +338,19 @@ fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
     // Opportunistic reaping: registrations whose client never arrived at
     // the stream endpoint must not pin the shared memory budget.
     st.registry.reap_stale();
-    // Memory is a hard constraint: §2.4.3.
-    if let Admit::RejectMemory { buffered, critical } = st.admission.check_register() {
-        return Response::text(429, &format!("memory pressure: {buffered}/{critical}"));
+    // Memory is a hard constraint: §2.4.3. Both the buffered-bytes gate and
+    // the budget-overrun gate surface as 429 (client backs off + retries).
+    match st.admission.check_register() {
+        Admit::Ok => {}
+        Admit::RejectMemory { buffered, critical } => {
+            return Response::text(429, &format!("memory pressure: {buffered}/{critical}"));
+        }
+        Admit::RejectOverrun { overruns, limit } => {
+            return Response::text(
+                429,
+                &format!("memory budget overrunning: {overruns} forced admissions (limit {limit})"),
+            );
+        }
     }
     st.metrics.dt_requests.inc();
     st.metrics.dt_inflight.add(1);
@@ -316,10 +379,14 @@ fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
             // this node's in-flight DT executions.
             st2.admission.throttle(st2.registry.inflight() as i64);
             match crate::sender::resolve_entry(&st2.store, &st2.shards, e) {
-                // Chunked like the remote-sender path, so a large DT-local
-                // entry reserves budget incrementally (bounded residency)
-                // and the assembler can start emitting it early.
-                Ok(data) => exec.buf.fill_chunked(idx, data, st2.cfg.getbatch.chunk_bytes),
+                // Streamed like the remote-sender path: chunks are read off
+                // the EntryReader one at a time and reserve budget
+                // incrementally, so a large DT-local entry never has more
+                // than one chunk resident outside the reorder buffer and
+                // the assembler can start emitting it early.
+                Ok(reader) => {
+                    stream_local_entry(&exec.buf, idx, reader, st2.cfg.getbatch.chunk_bytes)
+                }
                 Err(reason) => exec.buf.fail(
                     idx,
                     if reason.starts_with("missing object") {
@@ -338,6 +405,43 @@ fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
         exec.note_local_done();
     });
     Response::ok(Vec::new())
+}
+
+/// Deliver one DT-local entry into the reorder buffer straight off its
+/// [`EntryReader`](crate::store::EntryReader), one chunk at a time — the
+/// DT-local twin of the sender's streaming read path. A mid-stream read
+/// failure fails the slot (recoverable; the assembler's ranged GFN takes
+/// over, splicing if bytes were already consumed).
+fn stream_local_entry(
+    buf: &crate::dt::order::OrderBuffer,
+    idx: u32,
+    mut reader: crate::store::EntryReader,
+    chunk_bytes: usize,
+) {
+    use crate::batch::error::EntryError;
+    let chunk = chunk_bytes.max(1);
+    let total = reader.len();
+    if total <= chunk as u64 {
+        match reader.read_chunk(chunk) {
+            Ok(bytes) => buf.fill(idx, bytes),
+            Err(e) => buf.fail(idx, EntryError::ReadFailure(format!("local read: {e}"))),
+        }
+        return;
+    }
+    let mut off = 0u64;
+    while off < total {
+        match reader.read_chunk(chunk) {
+            Ok(bytes) => {
+                let first = off == 0;
+                off += bytes.len() as u64;
+                buf.append_chunk(idx, total, bytes, first, off >= total);
+            }
+            Err(e) => {
+                buf.fail(idx, EntryError::ReadFailure(format!("local read: {e}")));
+                return;
+            }
+        }
+    }
 }
 
 /// Phase 2 (receiver side): join the execution as a sender; resolve + push
@@ -395,6 +499,7 @@ fn target_dt_stream(st: &Arc<TargetState>, req: Request) -> Response {
         cfg: st.cfg.getbatch.clone(),
         metrics: Arc::clone(&st.metrics),
         clock: Arc::clone(&st.clock),
+        budget: Some(Arc::clone(&st.budget)),
     };
     let registry = Arc::clone(&st.registry);
     let metrics = Arc::clone(&st.metrics);

@@ -42,6 +42,17 @@ pub struct GetBatchConfig {
     /// it is at least `2 × chunk_bytes` (see `dt::admission::MemoryBudget`
     /// for the exact bound and the head-of-line progress exemption).
     pub dt_buffer_bytes: u64,
+    /// How long a producer may block on a full memory budget before being
+    /// force-admitted (the liveness valve; each forced admission is counted
+    /// as a budget *overrun*). Ranged GFN recovery does NOT pay this per
+    /// chunk — as the head-of-line consumer it takes the progress exemption
+    /// after a brief grace (see `MemoryBudget::reserve_for_recovery`).
+    pub budget_patience: Duration,
+    /// Admission control: reject new registrations (HTTP 429) when at least
+    /// this many budget overruns happened since the previous registration —
+    /// overruns mean the data plane is already past its memory cap, so new
+    /// work would only deepen the hole. `0` disables the overrun gate.
+    pub budget_overrun_limit: u32,
 }
 
 impl Default for GetBatchConfig {
@@ -56,6 +67,8 @@ impl Default for GetBatchConfig {
             throttle_base: Duration::from_micros(200),
             chunk_bytes: 256 << 10,
             dt_buffer_bytes: 256 << 20,
+            budget_patience: Duration::from_secs(10),
+            budget_overrun_limit: 4,
         }
     }
 }
@@ -85,6 +98,8 @@ impl GetBatchConfig {
             .set("throttle_base_us", Value::num(self.throttle_base.as_micros() as f64))
             .set("chunk_bytes", Value::num(self.chunk_bytes as f64))
             .set("dt_buffer_bytes", Value::num(self.dt_buffer_bytes as f64))
+            .set("budget_patience_ms", Value::num(self.budget_patience.as_millis() as f64))
+            .set("budget_overrun_limit", Value::num(self.budget_overrun_limit as f64))
     }
 
     pub fn from_json(v: &Value) -> GetBatchConfig {
@@ -111,6 +126,14 @@ impl GetBatchConfig {
                 .unwrap_or(d.throttle_base),
             chunk_bytes: v.u64_field("chunk_bytes").map(|x| x as usize).unwrap_or(d.chunk_bytes),
             dt_buffer_bytes: v.u64_field("dt_buffer_bytes").unwrap_or(d.dt_buffer_bytes),
+            budget_patience: v
+                .u64_field("budget_patience_ms")
+                .map(Duration::from_millis)
+                .unwrap_or(d.budget_patience),
+            budget_overrun_limit: v
+                .u64_field("budget_overrun_limit")
+                .map(|x| x as u32)
+                .unwrap_or(d.budget_overrun_limit),
         }
     }
 }
@@ -225,6 +248,8 @@ mod tests {
         c.targets = 16;
         c.getbatch.max_soft_errs = 5;
         c.getbatch.sender_wait = Duration::from_millis(1234);
+        c.getbatch.budget_patience = Duration::from_millis(2500);
+        c.getbatch.budget_overrun_limit = 9;
         let back = ClusterConfig::from_json(&c.to_json());
         assert_eq!(back, c);
     }

@@ -55,7 +55,23 @@ struct BudgetState {
 }
 
 impl MemoryBudget {
+    /// Default patience (see [`MemoryBudget::with_patience`] /
+    /// `GetBatchConfig::budget_patience` for the configurable path).
+    pub const DEFAULT_PATIENCE: Duration = Duration::from_secs(10);
+
     pub fn new(budget_bytes: u64, chunk_bytes: u64, metrics: Option<Arc<GetBatchMetrics>>) -> Arc<MemoryBudget> {
+        MemoryBudget::with_patience(budget_bytes, chunk_bytes, MemoryBudget::DEFAULT_PATIENCE, metrics)
+    }
+
+    /// Budget with an explicit producer patience — how long a producer may
+    /// block on a full budget before being force-admitted (the
+    /// `budget_patience_ms` config knob).
+    pub fn with_patience(
+        budget_bytes: u64,
+        chunk_bytes: u64,
+        patience: Duration,
+        metrics: Option<Arc<GetBatchMetrics>>,
+    ) -> Arc<MemoryBudget> {
         let budget = budget_bytes.max(1);
         let cap = budget.saturating_sub(chunk_bytes).max(1);
         Arc::new(MemoryBudget {
@@ -63,7 +79,7 @@ impl MemoryBudget {
             cap,
             state: Mutex::new(BudgetState { used: 0, peak: 0, overruns: 0 }),
             cv: Condvar::new(),
-            patience: Duration::from_secs(10),
+            patience,
             metrics,
         })
     }
@@ -144,6 +160,29 @@ impl MemoryBudget {
         Instant::now() < deadline
     }
 
+    /// Consumer-side reservation for GFN recovery chunks. Recovery *is* the
+    /// head-of-line consumer: the resident bytes saturating the budget may
+    /// belong to later slots of the very request being recovered, and those
+    /// can only drain after recovery completes — so blocking here (let
+    /// alone a patience window per chunk) would stall or even wedge the
+    /// node. Give room a brief chance, then take the head-of-line exemption
+    /// (`force_reserve`, *not* counted as an overrun). Residency per
+    /// recovery is a single chunk held only while it is written through, so
+    /// the peak bound matches the producer-side exemption
+    /// (`cap + R × chunk_bytes` for R concurrent heads).
+    pub fn reserve_for_recovery(&self, bytes: u64) {
+        if bytes == 0 || self.try_reserve(bytes) {
+            return;
+        }
+        let deadline = Instant::now() + Duration::from_millis(50);
+        while self.wait_room_until(deadline) {
+            if self.try_reserve(bytes) {
+                return;
+            }
+        }
+        self.force_reserve(bytes, false);
+    }
+
     pub fn release(&self, bytes: u64) {
         let mut st = self.state.lock().unwrap();
         st.used = st.used.saturating_sub(bytes);
@@ -159,6 +198,9 @@ pub struct Admission {
     cfg: GetBatchConfig,
     metrics: Arc<GetBatchMetrics>,
     clock: Arc<dyn Clock>,
+    /// `budget_overruns` counter value observed at the last registration
+    /// check — the overrun gate rejects on the *delta* since then.
+    overruns_seen: std::sync::atomic::AtomicU64,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -166,19 +208,37 @@ pub enum Admit {
     Ok,
     /// Reject with HTTP 429 — client backs off and retries.
     RejectMemory { buffered: i64, critical: u64 },
+    /// Reject with HTTP 429: the data plane force-admitted (overran) its
+    /// memory budget since the last registration — producers are waiting
+    /// out the budget patience, so new work would only deepen the hole.
+    RejectOverrun { overruns: u64, limit: u64 },
 }
 
 impl Admission {
     pub fn new(cfg: GetBatchConfig, metrics: Arc<GetBatchMetrics>, clock: Arc<dyn Clock>) -> Admission {
-        Admission { cfg, metrics, clock }
+        Admission { cfg, metrics, clock, overruns_seen: std::sync::atomic::AtomicU64::new(0) }
     }
 
-    /// Hard gate at DT registration: memory critical ⇒ 429.
+    /// Hard gate at DT registration: memory critical ⇒ 429; a burst of
+    /// budget overruns (≥ `budget_overrun_limit` forced admissions since
+    /// the previous registration) ⇒ 429 too (`budget_overrun_limit = 0`
+    /// disables the overrun gate).
     pub fn check_register(&self) -> Admit {
         let buffered = self.metrics.dt_buffered_bytes.get();
         if buffered >= self.cfg.mem_critical_bytes as i64 {
             self.metrics.admission_rejects.inc();
             return Admit::RejectMemory { buffered, critical: self.cfg.mem_critical_bytes };
+        }
+        let limit = self.cfg.budget_overrun_limit as u64;
+        if limit > 0 {
+            use std::sync::atomic::Ordering;
+            let total = self.metrics.budget_overruns.get();
+            let seen = self.overruns_seen.swap(total, Ordering::Relaxed);
+            let fresh = total.saturating_sub(seen);
+            if fresh >= limit {
+                self.metrics.admission_rejects.inc();
+                return Admit::RejectOverrun { overruns: fresh, limit };
+            }
         }
         Admit::Ok
     }
@@ -230,6 +290,57 @@ mod tests {
         m.dt_buffered_bytes.set(1000);
         assert!(matches!(adm.check_register(), Admit::RejectMemory { buffered: 1000, .. }));
         assert_eq!(m.admission_rejects.get(), 1);
+    }
+
+    #[test]
+    fn overrun_burst_rejects_then_readmits() {
+        let (adm, m, _) = setup(1 << 30, 10); // memory gate never fires
+        // default limit is small but nonzero; drive a burst past it
+        let limit = GetBatchConfig::default().budget_overrun_limit as u64;
+        assert!(limit > 0, "overrun gate enabled by default");
+        m.budget_overruns.add(limit);
+        assert!(matches!(adm.check_register(), Admit::RejectOverrun { .. }));
+        assert_eq!(m.admission_rejects.get(), 1);
+        // burst consumed: the next registration is admitted again
+        assert_eq!(adm.check_register(), Admit::Ok);
+        // below-limit trickle never rejects
+        m.budget_overruns.add(limit - 1);
+        assert_eq!(adm.check_register(), Admit::Ok);
+    }
+
+    #[test]
+    fn overrun_gate_disabled_at_zero_limit() {
+        let metrics = GetBatchMetrics::new();
+        let cfg = GetBatchConfig {
+            mem_critical_bytes: 1 << 30,
+            budget_overrun_limit: 0,
+            ..Default::default()
+        };
+        let adm = Admission::new(cfg, Arc::clone(&metrics), VirtualClock::new());
+        metrics.budget_overruns.add(1_000);
+        assert_eq!(adm.check_register(), Admit::Ok);
+    }
+
+    #[test]
+    fn configurable_patience_and_recovery_reservation() {
+        // Patience flows from the constructor (producer side)...
+        let b = MemoryBudget::with_patience(10, 2, Duration::from_millis(30), None);
+        assert_eq!(b.patience(), Duration::from_millis(30));
+        assert!(b.try_reserve(8)); // cap reached
+        // ...but recovery never pays patience per chunk: it takes the
+        // head-of-line exemption after a brief grace, and that is NOT an
+        // overrun — the blocking bytes may be this very request's later
+        // slots, which only drain once recovery finishes.
+        let t0 = Instant::now();
+        b.reserve_for_recovery(4);
+        assert!(t0.elapsed() < Duration::from_secs(2), "no patience-long stall");
+        assert_eq!(b.used(), 12);
+        assert_eq!(b.overruns(), 0, "head-of-line exemption, not an overrun");
+        b.release(12);
+        // with room available the reservation is immediate and clean
+        b.reserve_for_recovery(4);
+        assert_eq!(b.used(), 4);
+        assert_eq!(b.overruns(), 0);
     }
 
     #[test]

@@ -300,6 +300,11 @@ pub struct AssembleCtx {
     pub cfg: GetBatchConfig,
     pub metrics: Arc<GetBatchMetrics>,
     pub clock: Arc<dyn Clock>,
+    /// The node's data-plane memory budget: ranged GFN recovery reserves
+    /// each fetched chunk against it while the chunk is resident, so a
+    /// recovered multi-GiB entry respects the same cap as the live path.
+    /// `None` in standalone/unit-test assembly.
+    pub budget: Option<Arc<MemoryBudget>>,
 }
 
 /// Result summary of one assembly.
@@ -311,16 +316,115 @@ pub struct StreamOutcome {
     pub bytes: u64,
 }
 
-/// Try to fetch the entry directly from the next-best owners ("neighbors").
-/// Used when a sender timed out or reported a recoverable failure.
+/// One neighbor's ranged object fetch: pulls the object in `chunk`-sized
+/// slices via HTTP Range requests, learning the total length from the first
+/// response's `content-range`. Nothing larger than one chunk is ever
+/// resident on the recovery path.
+struct RangedFetch<'a> {
+    http: &'a HttpClient,
+    addr: &'a str,
+    pq: &'a str,
+    chunk: u64,
+    /// Total object length, known after the first response.
+    total: Option<u64>,
+    offset: u64,
+}
+
+impl RangedFetch<'_> {
+    /// Fetch the next chunk. `Ok(None)` once the whole object was pulled
+    /// (`total` is set by then); `Err` describes a neighbor failure.
+    fn next_chunk(&mut self) -> Result<Option<Vec<u8>>, String> {
+        if let Some(t) = self.total {
+            if self.offset >= t {
+                return Ok(None);
+            }
+        }
+        let resp = self
+            .http
+            .get_range(self.addr, self.pq, self.offset, self.chunk)
+            .map_err(|e| format!("range fetch: {e}"))?;
+        if resp.status != 206 {
+            return Err(format!("range fetch: http {}", resp.status));
+        }
+        let total = resp
+            .header("content-range")
+            .and_then(crate::proto::http::content_range_total)
+            .ok_or_else(|| "range fetch: missing content-range".to_string())?;
+        match self.total {
+            Some(t) if t != total => {
+                return Err(format!("object resized mid-recovery: {t} -> {total}"))
+            }
+            None => self.total = Some(total),
+            _ => {}
+        }
+        if self.offset >= total {
+            return Ok(None);
+        }
+        let bytes = resp.into_bytes().map_err(|e| format!("range body: {e}"))?;
+        if bytes.is_empty() {
+            return Err(format!("range fetch: empty chunk at {}/{total}", self.offset));
+        }
+        if self.offset + bytes.len() as u64 > total {
+            return Err("range fetch: over-long chunk".to_string());
+        }
+        self.offset += bytes.len() as u64;
+        Ok(Some(bytes))
+    }
+}
+
+/// Outcome of a streamed GFN recovery.
+enum GfnOutcome {
+    /// Entry completed into the TAR (header, payload and padding are out).
+    Recovered { total: u64 },
+    /// Nothing was emitted beyond what the caller had already committed —
+    /// the recovery ladder may fall through to a placeholder.
+    Clean,
+    /// Bytes were committed to the TAR but no neighbor could complete the
+    /// entry: the archive position is poisoned — hard abort.
+    Poisoned,
+}
+
+/// Streamed get-from-neighbor recovery (§2.4.2), fetching the entry in
+/// ranged chunks that reserve against the DT memory budget — recovery of a
+/// large entry respects the same cap as the live path.
+///
+/// With `committed = Some((total, written, prefix_crc))` the TAR header is
+/// already out along with `written` payload bytes: only a byte-identical
+/// splice can finish the entry, so each candidate neighbor's copy is
+/// re-fetched from byte 0 — the prefix chunks are CRC-verified against
+/// `prefix_crc` and discarded, the remainder streams into the TAR. With
+/// `committed = None` the header is emitted as soon as the first neighbor
+/// chunk reveals the total; if that neighbor dies mid-stream, the next one
+/// continues through the same splice path.
 ///
 /// Probing is bounded by a *local* per-entry counter capped at
 /// `cfg.gfn_attempts` — never by global metric residue, so concurrent
 /// recoveries can't starve or inflate each other's neighbor budgets.
-fn gfn_recover(ctx: &AssembleCtx, entry: &BatchEntry) -> Option<Vec<u8>> {
+fn gfn_recover<W: Write>(
+    ctx: &AssembleCtx,
+    entry: &BatchEntry,
+    tw: &mut TarWriter<W>,
+    committed: Option<(u64, u64, u32)>,
+) -> Result<GfnOutcome, BatchError> {
     let key = entry.location_key();
+    let name = entry.output_name();
     let max_probes = ctx.cfg.gfn_attempts.max(1);
     let mut probes = 0u32;
+    let mut pq = format!("{}?local=true", wire::object_path(&entry.bucket, &entry.obj));
+    if let Some(m) = &entry.archpath {
+        pq.push_str(&format!("&archpath={m}"));
+    }
+
+    // Splice state shared across neighbor attempts: once the header is out,
+    // `total` is fixed and `written`/`run_crc` describe the emitted prefix
+    // every further candidate must match byte-for-byte.
+    let mut header_total: Option<u64> = committed.map(|(t, _, _)| t);
+    let mut written: u64 = committed.map(|(_, w, _)| w).unwrap_or(0);
+    let mut run_crc = match committed {
+        Some((_, _, crc)) => crate::util::crc32::Hasher::resume(crc),
+        None => crate::util::crc32::Hasher::new(),
+    };
+
     for &t in placement::ranked(&ctx.smap, &key).iter() {
         if t == ctx.self_target {
             continue;
@@ -330,20 +434,106 @@ fn gfn_recover(ctx: &AssembleCtx, entry: &BatchEntry) -> Option<Vec<u8>> {
         }
         probes += 1;
         ctx.metrics.recovery_attempts.inc();
-        let target = &ctx.smap.targets[t];
-        let mut pq = format!("{}?local=true", wire::object_path(&entry.bucket, &entry.obj));
-        if let Some(m) = &entry.archpath {
-            pq.push_str(&format!("&archpath={m}"));
-        }
-        match ctx.http.get(&target.http_addr, &pq) {
-            Ok(resp) if resp.status == 200 => match resp.into_bytes() {
-                Ok(data) => return Some(data),
-                Err(_) => ctx.metrics.recovery_failures.inc(),
-            },
-            _ => ctx.metrics.recovery_failures.inc(),
+        let addr = &ctx.smap.targets[t].http_addr;
+        match gfn_try_neighbor(ctx, addr, &pq, &name, tw, &mut header_total, &mut written, &mut run_crc)? {
+            Ok(()) => return Ok(GfnOutcome::Recovered { total: header_total.unwrap_or(0) }),
+            Err(_reason) => ctx.metrics.recovery_failures.inc(),
         }
     }
-    None
+    Ok(if header_total.is_none() { GfnOutcome::Clean } else { GfnOutcome::Poisoned })
+}
+
+/// Attempt to complete the entry from one neighbor. Outer `Err` is a local
+/// TAR/output failure (aborts the request); inner `Err` is a neighbor
+/// failure (try the next one). Mutates the shared splice state as bytes are
+/// committed.
+#[allow(clippy::too_many_arguments)]
+fn gfn_try_neighbor<W: Write>(
+    ctx: &AssembleCtx,
+    addr: &str,
+    pq: &str,
+    name: &str,
+    tw: &mut TarWriter<W>,
+    header_total: &mut Option<u64>,
+    written: &mut u64,
+    run_crc: &mut crate::util::crc32::Hasher,
+) -> Result<Result<(), String>, BatchError> {
+    let chunk = ctx.cfg.chunk_bytes.max(1) as u64;
+    let mut fetch =
+        RangedFetch { http: &ctx.http, addr, pq, chunk, total: None, offset: 0 };
+    // Prefix verification state: the first `*written` neighbor bytes must
+    // reproduce the CRC of what this DT already emitted.
+    let target_prefix = *written;
+    let mut check = crate::util::crc32::Hasher::new();
+    let mut verified: u64 = 0;
+    loop {
+        // Reserve the chunk's worst case against the node budget while it is
+        // resident (fetched, checked, written through), then release.
+        if let Some(b) = &ctx.budget {
+            b.reserve_for_recovery(chunk);
+        }
+        let step = fetch.next_chunk();
+        let outcome = (|| -> Result<Result<bool, String>, BatchError> {
+            let bytes = match step {
+                Ok(Some(bytes)) => bytes,
+                Ok(None) => return Ok(Ok(true)), // neighbor EOF
+                Err(e) => return Ok(Err(e)),
+            };
+            let total = fetch.total.expect("total known after a successful chunk");
+            if let Some(t) = *header_total {
+                if t != total {
+                    return Ok(Err(format!("size mismatch: neighbor has {total}, committed {t}")));
+                }
+            }
+            // Split prefix-verification bytes from fresh payload.
+            let mut payload: &[u8] = &bytes;
+            if verified < target_prefix {
+                let take = ((target_prefix - verified) as usize).min(payload.len());
+                check.update(&payload[..take]);
+                verified += take as u64;
+                payload = &payload[take..];
+                if verified == target_prefix
+                    && check.clone().finalize() != run_crc.clone().finalize()
+                {
+                    return Ok(Err("prefix mismatch (object changed under recovery)".into()));
+                }
+            }
+            if !payload.is_empty() {
+                if header_total.is_none() {
+                    tw.begin_entry(name, total).map_err(io_batch)?;
+                    *header_total = Some(total);
+                }
+                tw.write_chunk(payload).map_err(io_batch)?;
+                run_crc.update(payload);
+                *written += payload.len() as u64;
+            }
+            Ok(Ok(false))
+        })();
+        if let Some(b) = &ctx.budget {
+            b.release(chunk);
+        }
+        match outcome? {
+            Ok(true) => break,  // EOF — settle below
+            Ok(false) => {}     // chunk processed, keep pulling
+            Err(e) => return Ok(Err(e)),
+        }
+    }
+    // Neighbor EOF: the object must have covered the verified prefix and the
+    // full declared length.
+    let total = match fetch.total {
+        Some(t) => t,
+        None => return Ok(Err("neighbor served no data".into())),
+    };
+    if verified < target_prefix || *written < total {
+        return Ok(Err(format!("short object: {}/{total}", *written)));
+    }
+    if header_total.is_none() {
+        // Zero-length entry (or empty-after-prefix): header not yet out.
+        tw.begin_entry(name, total).map_err(io_batch)?;
+        *header_total = Some(total);
+    }
+    tw.end_entry().map_err(io_batch)?;
+    Ok(Ok(()))
 }
 
 /// How draining one slot ended.
@@ -475,27 +665,23 @@ pub fn assemble(
             Drained::Poisoned { err, total, written, written_crc } => {
                 // The TAR header (with `total`) is already committed and
                 // `written` payload bytes are out. The only valid repair is
-                // a byte-identical splice: re-fetch the object via GFN and
-                // resume at `written` — this keeps a sender crash mid-entry
-                // recoverable, like it was for whole-entry frames. The
-                // fetched copy must match both the declared size and the
-                // CRC of the already-emitted prefix, or a concurrent
-                // same-size overwrite would be stitched in silently.
+                // a byte-identical splice: re-fetch the object via ranged
+                // GFN and resume at `written` — this keeps a sender crash
+                // mid-entry recoverable, like it was for whole-entry
+                // frames. The fetched copy must match both the declared
+                // size and the CRC of the already-emitted prefix, or a
+                // concurrent same-size overwrite would be stitched in
+                // silently.
                 if err.recoverable() && gfn_left > 0 {
                     gfn_left -= 1;
-                    if let Some(data) = gfn_recover(ctx, entry) {
-                        let same_version = data.len() as u64 == total
-                            && crate::util::crc32::hash(&data[..written as usize]) == written_crc;
-                        if same_version {
-                            tw.write_chunk(&data[written as usize..]).map_err(io_batch)?;
-                            tw.end_entry().map_err(io_batch)?;
-                            outcome.recovered += 1;
-                            deliver_metrics(ctx, entry, total);
-                            outcome.bytes += total;
-                            outcome.delivered += 1;
-                            continue;
-                        }
-                        // Size/content changed under us: splice would corrupt.
+                    if let GfnOutcome::Recovered { .. } =
+                        gfn_recover(ctx, entry, &mut tw, Some((total, written, written_crc)))?
+                    {
+                        outcome.recovered += 1;
+                        deliver_metrics(ctx, entry, total);
+                        outcome.bytes += total;
+                        outcome.delivered += 1;
+                        continue;
                     }
                 }
                 ctx.metrics.hard_failures.inc();
@@ -505,17 +691,29 @@ pub fn assemble(
             Drained::TimedOut => None,
         };
 
-        // Recovery ladder (§2.4.2): recoverable failure or timeout → GFN.
+        // Recovery ladder (§2.4.2): recoverable failure or timeout → GFN,
+        // streamed in ranged chunks under the DT budget.
         let recoverable = failure.as_ref().map(|e| e.recoverable()).unwrap_or(true);
         if recoverable && gfn_left > 0 {
             gfn_left -= 1;
-            if let Some(data) = gfn_recover(ctx, entry) {
-                outcome.recovered += 1;
-                deliver_metrics(ctx, entry, data.len() as u64);
-                outcome.bytes += data.len() as u64;
-                tw.append(&entry.output_name(), &data).map_err(io_batch)?;
-                outcome.delivered += 1;
-                continue;
+            match gfn_recover(ctx, entry, &mut tw, None)? {
+                GfnOutcome::Recovered { total } => {
+                    outcome.recovered += 1;
+                    deliver_metrics(ctx, entry, total);
+                    outcome.bytes += total;
+                    outcome.delivered += 1;
+                    continue;
+                }
+                GfnOutcome::Clean => {}
+                GfnOutcome::Poisoned => {
+                    // A neighbor died mid-stream after the header went out
+                    // and no other neighbor could splice the remainder.
+                    ctx.metrics.hard_failures.inc();
+                    return Err(BatchError::EntryFailed {
+                        index: idx,
+                        source: failure.unwrap_or(EntryError::SenderTimeout(idx)),
+                    });
+                }
             }
         }
 
@@ -591,7 +789,21 @@ mod tests {
             },
             metrics: GetBatchMetrics::new(),
             clock: RealClock::new(),
+            budget: None,
         }
+    }
+
+    /// Neighbor stub speaking the shared internal Range contract — what
+    /// every real target's object endpoint speaks after this refactor.
+    fn range_server(payload: Vec<u8>) -> crate::proto::http::HttpServer {
+        crate::proto::http::HttpServer::serve(
+            Arc::new(move |req: crate::proto::http::Request| {
+                crate::proto::http::serve_ranged_bytes(&req, &payload)
+            }),
+            2,
+            "gfn-neighbor",
+        )
+        .unwrap()
     }
 
     fn request(n: usize, coer: bool) -> BatchRequest {
@@ -762,18 +974,117 @@ mod tests {
     }
 
     #[test]
-    fn mid_entry_failure_recovers_by_gfn_splice() {
-        // A sender dies after delivering 1000 of 5000 bytes; a neighbor
-        // holds a byte-identical copy. The committed TAR header must be
-        // completed by splicing the remaining bytes from the GFN fetch.
-        let payload: Vec<u8> = (0..5000u32).map(|i| (i % 193) as u8).collect();
-        let p2 = payload.clone();
-        let srv = crate::proto::http::HttpServer::serve(
-            Arc::new(move |_req| crate::proto::http::Response::ok(p2.clone())),
-            2,
-            "gfn-neighbor",
-        )
-        .unwrap();
+    fn mid_entry_failure_recovers_by_ranged_gfn_splice() {
+        // A sender dies after delivering 100 KiB of a 500 KiB entry; a
+        // neighbor holds a byte-identical copy. The committed TAR header
+        // must be completed by splicing the remaining bytes from *ranged*
+        // GFN fetches, and recovery residency must respect a DT budget far
+        // smaller than the entry.
+        let payload: Vec<u8> = (0..500 * 1024u32).map(|i| (i % 193) as u8).collect();
+        let srv = range_server(payload.clone());
+        let smap = Arc::new(Smap::new(
+            1,
+            vec![],
+            vec![
+                NodeInfo { id: "t0".into(), http_addr: "127.0.0.1:1".into(), p2p_addr: String::new() },
+                NodeInfo { id: "t1".into(), http_addr: srv.addr.to_string(), p2p_addr: String::new() },
+            ],
+        ));
+        let chunk = 16 << 10;
+        let budget = MemoryBudget::new(64 << 10, chunk as u64, None);
+        let c = AssembleCtx {
+            smap,
+            http: HttpClient::new(true),
+            self_target: 0,
+            cfg: GetBatchConfig {
+                sender_wait: Duration::from_millis(5000),
+                gfn_attempts: 2,
+                chunk_bytes: chunk,
+                ..Default::default()
+            },
+            metrics: GetBatchMetrics::new(),
+            clock: RealClock::new(),
+            budget: Some(Arc::clone(&budget)),
+        };
+        let exec = Arc::new(DtExec::new(1, request(1, false), 0));
+        let total = payload.len() as u64;
+        exec.buf.append_chunk(0, total, payload[..100 * 1024].to_vec(), true, false);
+        let e2 = Arc::clone(&exec);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            // Duplicate FIRST after partial consumption → mid-entry failure
+            // (the kill-sender-mid-entry signal at the buffer level).
+            e2.buf.append_chunk(0, total, vec![9; 10], true, false);
+        });
+        let mut out = Vec::new();
+        let o = assemble(&exec, &c, &mut out).unwrap();
+        t.join().unwrap();
+        assert_eq!(o.delivered, 1);
+        assert_eq!(o.recovered, 1, "entry completed via ranged GFN splice");
+        let entries = crate::tar::read_archive(&out).unwrap();
+        assert_eq!(entries[0].data, payload, "spliced bytes identical");
+        assert_eq!(c.metrics.hard_failures.get(), 0);
+        // Recovery never held more than one chunk against the budget.
+        assert!(
+            budget.peak() <= budget.budget(),
+            "recovery residency {} exceeded budget {}",
+            budget.peak(),
+            budget.budget()
+        );
+        assert_eq!(budget.used(), 0, "all recovery reservations released");
+        assert_eq!(budget.overruns(), 0, "no forced admissions needed");
+    }
+
+    #[test]
+    fn fresh_recovery_streams_in_ranged_chunks_under_budget() {
+        // Slot fails recoverably before any byte is emitted: recovery must
+        // stream the whole entry from a neighbor via ranged fetches —
+        // learning the total from the first content-range — while reserving
+        // at most one chunk against the DT budget.
+        let payload: Vec<u8> = (0..300 * 1024u32).map(|i| (i % 241) as u8).collect();
+        let srv = range_server(payload.clone());
+        let smap = Arc::new(Smap::new(
+            1,
+            vec![],
+            vec![
+                NodeInfo { id: "t0".into(), http_addr: "127.0.0.1:1".into(), p2p_addr: String::new() },
+                NodeInfo { id: "t1".into(), http_addr: srv.addr.to_string(), p2p_addr: String::new() },
+            ],
+        ));
+        let chunk = 16 << 10;
+        let budget = MemoryBudget::new(64 << 10, chunk as u64, None);
+        let c = AssembleCtx {
+            smap,
+            http: HttpClient::new(true),
+            self_target: 0,
+            cfg: GetBatchConfig {
+                sender_wait: Duration::from_millis(1000),
+                gfn_attempts: 2,
+                chunk_bytes: chunk,
+                ..Default::default()
+            },
+            metrics: GetBatchMetrics::new(),
+            clock: RealClock::new(),
+            budget: Some(Arc::clone(&budget)),
+        };
+        let exec = DtExec::new(1, request(1, false), 0);
+        exec.buf.fail(0, EntryError::StreamFailure("conn reset".into()));
+        let mut out = Vec::new();
+        let o = assemble(&exec, &c, &mut out).unwrap();
+        assert_eq!(o.delivered, 1);
+        assert_eq!(o.recovered, 1);
+        assert_eq!(o.bytes, payload.len() as u64);
+        let entries = crate::tar::read_archive(&out).unwrap();
+        assert_eq!(entries[0].data, payload, "recovered bytes identical");
+        assert!(budget.peak() <= budget.budget(), "peak {} > budget", budget.peak());
+        assert_eq!(budget.used(), 0);
+    }
+
+    #[test]
+    fn recovery_of_zero_length_entry_via_ranged_probe() {
+        // The ranged probe of an empty object still learns total = 0 from
+        // content-range and emits a valid zero-length TAR entry.
+        let srv = range_server(Vec::new());
         let smap = Arc::new(Smap::new(
             1,
             vec![],
@@ -786,30 +1097,18 @@ mod tests {
             smap,
             http: HttpClient::new(true),
             self_target: 0,
-            cfg: GetBatchConfig {
-                sender_wait: Duration::from_millis(5000),
-                gfn_attempts: 2,
-                ..Default::default()
-            },
+            cfg: GetBatchConfig { gfn_attempts: 2, ..Default::default() },
             metrics: GetBatchMetrics::new(),
             clock: RealClock::new(),
+            budget: None,
         };
-        let exec = Arc::new(DtExec::new(1, request(1, false), 0));
-        exec.buf.append_chunk(0, 5000, payload[..1000].to_vec(), true, false);
-        let e2 = Arc::clone(&exec);
-        let t = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(40));
-            // Duplicate FIRST after partial consumption → mid-entry failure.
-            e2.buf.append_chunk(0, 5000, vec![9; 10], true, false);
-        });
+        let exec = DtExec::new(1, request(1, false), 0);
+        exec.buf.fail(0, EntryError::ReadFailure("eio".into()));
         let mut out = Vec::new();
         let o = assemble(&exec, &c, &mut out).unwrap();
-        t.join().unwrap();
-        assert_eq!(o.delivered, 1);
-        assert_eq!(o.recovered, 1, "entry completed via GFN splice");
+        assert_eq!((o.delivered, o.recovered, o.bytes), (1, 1, 0));
         let entries = crate::tar::read_archive(&out).unwrap();
-        assert_eq!(entries[0].data, payload, "spliced bytes identical");
-        assert_eq!(c.metrics.hard_failures.get(), 0);
+        assert_eq!(entries[0].data, Vec::<u8>::new());
     }
 
     #[test]
@@ -822,7 +1121,11 @@ mod tests {
             let c = ctx_n(10, 0, 6, 2);
             c.metrics.recovery_attempts.add(residue);
             let entry = BatchEntry::obj("b", "o");
-            assert!(gfn_recover(&c, &entry).is_none(), "unreachable neighbors");
+            let mut tw = TarWriter::new(Vec::new());
+            assert!(
+                matches!(gfn_recover(&c, &entry, &mut tw, None).unwrap(), GfnOutcome::Clean),
+                "unreachable neighbors"
+            );
             let probed = c.metrics.recovery_attempts.get() - residue;
             assert_eq!(probed, 2, "residue {residue}: probed {probed}");
             assert_eq!(c.metrics.recovery_failures.get(), 2);

@@ -319,29 +319,6 @@ impl OrderBuffer {
         self.rollback(rollback_after);
     }
 
-    /// Deliver a whole locally-resolved entry through the chunked path:
-    /// identical split invariant to the frame-level chunking (FIRST carries
-    /// the total, LAST ends exactly at the declared length), so budget
-    /// reservation stays incremental and the consumer can start draining
-    /// before the tail is appended. The DT-local producer uses this.
-    pub fn fill_chunked(&self, idx: u32, data: Vec<u8>, chunk_bytes: usize) {
-        let chunk = chunk_bytes.max(1);
-        if data.len() <= chunk {
-            self.fill(idx, data);
-            return;
-        }
-        let total = data.len() as u64;
-        let mut off = 0usize;
-        while off < data.len() {
-            if self.closed.load(Ordering::Relaxed) {
-                return;
-            }
-            let end = (off + chunk).min(data.len());
-            self.append_chunk(idx, total, data[off..end].to_vec(), off == 0, end == data.len());
-            off = end;
-        }
-    }
-
     /// Build the slot state for an accepted FIRST chunk (also the reset
     /// path). Caller must be holding the slots lock.
     fn admit_first(&self, bytes: Vec<u8>, total: u64, last: bool, rollback: &mut u64) -> Slot {
@@ -357,14 +334,33 @@ impl OrderBuffer {
         }
     }
 
-    /// Producer: report a per-entry failure. Never overwrites delivered
-    /// bytes or consumed state.
+    /// Producer: report a per-entry failure. Never overwrites a *fully
+    /// received* entry; a pending slot fails outright, and an incomplete
+    /// chunk stream fails too (its resident bytes are released) — that is
+    /// how a sender's mid-entry SOFT_ERR (streaming read failure) surfaces
+    /// promptly instead of waiting out the sender timeout. If the consumer
+    /// already drained part of the stream, the failure routes it to the
+    /// ranged GFN splice.
     pub fn fail(&self, idx: u32, err: EntryError) {
-        let mut slots = self.slots.lock().unwrap();
-        if let Some(s @ Slot::Pending) = slots.get_mut(idx as usize) {
-            *s = Slot::Failed(err);
-            self.cv.notify_all();
+        let mut release_after = 0u64;
+        {
+            let mut slots = self.slots.lock().unwrap();
+            if let Some(slot) = slots.get_mut(idx as usize) {
+                let fail_it = match slot {
+                    Slot::Pending => true,
+                    Slot::Filling { data, total, received, .. } if *received < *total => {
+                        release_after = data.len() as u64;
+                        true
+                    }
+                    _ => false,
+                };
+                if fail_it {
+                    *slot = Slot::Failed(err);
+                    self.cv.notify_all();
+                }
+            }
         }
+        self.release(release_after);
     }
 
     /// Consumer: wait until slot `idx` fully resolves (or `timeout`). Moves
@@ -658,6 +654,22 @@ mod tests {
     }
 
     #[test]
+    fn fail_aborts_incomplete_chunk_stream_and_releases_bytes() {
+        // Sender dies mid-entry and reports SOFT_ERR: the partially received
+        // stream must fail now (not at the sender timeout) and return its
+        // resident bytes.
+        let buf = OrderBuffer::new(1);
+        buf.append_chunk(0, 100, vec![1; 10], true, false);
+        assert_eq!(buf.buffered_bytes(), 10);
+        buf.fail(0, EntryError::StreamFailure("sender read failed".into()));
+        assert!(matches!(
+            buf.wait_chunk(0, Duration::from_secs(1)),
+            ChunkWait::Failed(EntryError::StreamFailure(_))
+        ));
+        assert_eq!(buf.buffered_bytes(), 0, "resident bytes released on stream failure");
+    }
+
+    #[test]
     fn zero_length_entry_completes() {
         let buf = OrderBuffer::new(1);
         buf.fill(0, Vec::new());
@@ -683,11 +695,23 @@ mod tests {
     }
 
     #[test]
-    fn fill_chunked_matches_whole_fill() {
+    fn append_chunk_sequences_match_whole_fill() {
+        // The manual FIRST/middle/LAST split every producer performs must be
+        // indistinguishable from a whole-entry fill to the consumer.
         for (len, chunk) in [(0usize, 4usize), (4, 4), (5, 4), (100, 7), (64, 64)] {
             let data: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
             let buf = OrderBuffer::new(1);
-            buf.fill_chunked(0, data.clone(), chunk);
+            if data.len() <= chunk {
+                buf.fill(0, data.clone());
+            } else {
+                let total = data.len() as u64;
+                let mut off = 0usize;
+                while off < data.len() {
+                    let end = (off + chunk).min(data.len());
+                    buf.append_chunk(0, total, data[off..end].to_vec(), off == 0, end == data.len());
+                    off = end;
+                }
+            }
             assert_eq!(
                 buf.wait_take(0, Duration::from_secs(1)),
                 SlotWait::Ready(data),

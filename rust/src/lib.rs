@@ -10,21 +10,44 @@
 //! coordinates, all other nodes stream locally-owned items to it — and the
 //! DT emits a single TAR response in strict request order.
 //!
-//! The data path is *chunked streaming with enforced backpressure*: senders
-//! split large entries into chunk frames (`proto::frame` FIRST/LAST flags),
-//! the DT's reorder buffer (`dt::order`) admits producer bytes against a
-//! node-wide resident-memory budget (`dt::admission::MemoryBudget` — block,
-//! don't just meter), and the assembly loop (`dt::exec`) starts emitting the
-//! head-of-line entry before its last chunk arrives. Sender fan-in
-//! completion (SENDER_DONE + DT-local done) triggers recovery early instead
-//! of burning the sender-wait timeout.
+//! The data path is *chunked streaming with enforced backpressure, end to
+//! end* — the read side streams just like the emit side:
+//!
+//! 1. **Read** — every producer of entry bytes opens a
+//!    [`store::EntryReader`] (`store::engine::ObjectStore::open_entry` for
+//!    whole objects, a range-bounded reader over the member span for shard
+//!    extraction) and pulls `chunk_bytes` pieces; no call path materializes
+//!    a full entry.
+//! 2. **Send** — senders cut chunk frames (`proto::frame` FIRST/LAST
+//!    flags) straight off the reader, so sender residency is O(chunk), not
+//!    O(object).
+//! 3. **Buffer** — the DT's reorder buffer (`dt::order`) admits producer
+//!    bytes against a node-wide resident-memory budget
+//!    (`dt::admission::MemoryBudget` — block, don't just meter; blocked
+//!    producers stall their socket, which TCP turns into sender
+//!    backpressure).
+//! 4. **Emit** — the assembly loop (`dt::exec`) starts streaming the
+//!    head-of-line entry into the TAR before its last chunk arrives.
+//! 5. **Recover** — GFN recovery fetches neighbor copies in HTTP *Range*
+//!    chunks (`proto::http` 206 + `content-range`), each reserved against
+//!    the same DT budget; a sender that dies mid-entry is repaired by a
+//!    CRC-verified byte-identical splice. Sender fan-in completion
+//!    (SENDER_DONE + DT-local done) triggers recovery early instead of
+//!    burning the sender-wait timeout.
+//!
+//! Two knobs bound memory end to end: `chunk_bytes` caps any single
+//! producer-side buffer (sender, HTTP object handler, DT-local read,
+//! recovery chunk), and `dt_buffer_bytes` caps the bytes resident across a
+//! target's reorder buffers. See the README's "streaming read path" section
+//! for the full walk-through.
 //!
 //! Layer map (module → role):
 //! - `util` — JSON / PRNG / stats / HRW / threadpool / clock / CRC-32 /
 //!   anyhow-style errors (the offline build has no external crates).
 //! - `proto` — minimal HTTP/1.1 (+ chunked transfer), the chunked P2P frame
 //!   protocol, control-plane wire messages.
-//! - `store` — mountpath object store + TAR-shard member extraction.
+//! - `store` — mountpath object store, the streaming `EntryReader` seam,
+//!   and TAR-shard member extraction (range-bounded readers).
 //! - `tar` — ustar codec: whole-entry and streamed-entry writers, readers.
 //! - `cluster` — smap, HRW placement, the in-process node runtime.
 //! - `gateway` — proxy: object redirect + three-phase GetBatch flow.

@@ -37,6 +37,10 @@ impl Gauge {
     pub fn sub(&self, v: i64) {
         self.0.fetch_sub(v, Ordering::Relaxed);
     }
+    /// Ratchet the gauge up to `v` (high-water marks, e.g. peak buffers).
+    pub fn set_max(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -91,6 +95,11 @@ pub struct GetBatchMetrics {
     pub dt_buffered_bytes: Gauge,
     /// In-flight GetBatch executions on this node (as DT).
     pub dt_inflight: Gauge,
+    /// High-water mark of the largest single entry buffer this node
+    /// materialized as a sender — with streaming reads this stays O(chunk)
+    /// even for multi-GiB entries (the peak-residency guarantee made
+    /// observable).
+    pub sender_peak_buffer: Gauge,
 }
 
 impl GetBatchMetrics {
@@ -134,6 +143,7 @@ impl GetBatchMetrics {
         };
         g("dt_buffered_bytes", "bytes buffered by in-flight assemblies", self.dt_buffered_bytes.get());
         g("dt_inflight", "in-flight executions as DT", self.dt_inflight.get());
+        g("sender_peak_buffer", "largest single sender-side entry buffer", self.sender_peak_buffer.get());
         out
     }
 

@@ -163,31 +163,20 @@ pub enum FrameError {
     BadCrc { req_id: u64, index: u32 },
 }
 
-impl std::fmt::Display for FrameError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            FrameError::Io(e) => write!(f, "io: {e}"),
-            FrameError::BadMagic(m) => write!(f, "bad magic {m:#06x}"),
-            FrameError::BadType(t) => write!(f, "unknown frame type {t}"),
-            FrameError::BadCrc { req_id, index } => {
-                write!(f, "crc mismatch on req {req_id} entry {index}")
-            }
+crate::impl_error! {
+    FrameError {
+        display {
+            FrameError::Io(e) => "io: {e}",
+            FrameError::BadMagic(m) => "bad magic {m:#06x}",
+            FrameError::BadType(t) => "unknown frame type {t}",
+            FrameError::BadCrc { req_id, index } => "crc mismatch on req {req_id} entry {index}",
         }
-    }
-}
-
-impl std::error::Error for FrameError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            FrameError::Io(e) => Some(e),
-            _ => None,
+        source {
+            FrameError::Io(e) => e,
         }
-    }
-}
-
-impl From<io::Error> for FrameError {
-    fn from(e: io::Error) -> FrameError {
-        FrameError::Io(e)
+        from {
+            io::Error => Io,
+        }
     }
 }
 
@@ -240,8 +229,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, FrameError> {
     Ok(Some(Frame { ftype, flags, req_id, index, payload }))
 }
 
-/// Number of chunk frames `chunk_frames_iter` will produce for an entry of
-/// `len` bytes.
+/// Number of chunk frames an entry of `len` bytes splits into.
 pub fn chunk_count(len: usize, chunk_bytes: usize) -> usize {
     let chunk_bytes = chunk_bytes.max(1);
     if len <= chunk_bytes {
@@ -251,46 +239,31 @@ pub fn chunk_count(len: usize, chunk_bytes: usize) -> usize {
     }
 }
 
-/// Lazily split an entry payload into the chunk-frame sequence a sender
-/// transmits: one whole frame when it fits in `chunk_bytes`, otherwise
-/// FIRST (with the total-length prefix) + middle + LAST chunks of at most
-/// `chunk_bytes`. Lazy so a sender streaming a large entry holds the source
-/// buffer plus *one* in-flight chunk, not a second full copy.
-pub fn chunk_frames_iter(
-    req_id: u64,
-    index: u32,
-    data: Vec<u8>,
-    chunk_bytes: usize,
-) -> impl Iterator<Item = Frame> {
-    let chunk_bytes = chunk_bytes.max(1);
-    let single = data.len() <= chunk_bytes;
-    let total = data.len() as u64;
-    let mut data = Some(data);
-    let mut off = 0usize;
-    std::iter::from_fn(move || {
-        if single {
-            return data.take().map(|d| Frame::data(req_id, index, d));
-        }
-        let d = data.as_ref()?;
-        let end = (off + chunk_bytes).min(d.len());
-        let last = end == d.len();
-        let f = if off == 0 {
-            Frame::data_first_chunk(req_id, index, total, &d[..end], last)
-        } else {
-            Frame::data_chunk(req_id, index, d[off..end].to_vec(), last)
-        };
-        off = end;
-        if last {
-            // Free the source buffer as soon as the final chunk is cut.
-            data = None;
-        }
-        Some(f)
-    })
-}
-
-/// Eager variant of [`chunk_frames_iter`] (tests / small entries).
+/// Split an in-memory payload into its chunk-frame sequence: one whole
+/// frame when it fits in `chunk_bytes`, otherwise FIRST (with the
+/// total-length prefix) + middle + LAST chunks of at most `chunk_bytes`.
+/// Test/bench utility — the production sender cuts frames straight off a
+/// streaming `store::EntryReader` (`sender::run_sender`) and never holds a
+/// whole entry.
 pub fn chunk_frames(req_id: u64, index: u32, data: Vec<u8>, chunk_bytes: usize) -> Vec<Frame> {
-    chunk_frames_iter(req_id, index, data, chunk_bytes).collect()
+    let chunk_bytes = chunk_bytes.max(1);
+    if data.len() <= chunk_bytes {
+        return vec![Frame::data(req_id, index, data)];
+    }
+    let total = data.len() as u64;
+    let mut frames = Vec::with_capacity(chunk_count(data.len(), chunk_bytes));
+    let mut off = 0usize;
+    while off < data.len() {
+        let end = (off + chunk_bytes).min(data.len());
+        let last = end == data.len();
+        frames.push(if off == 0 {
+            Frame::data_first_chunk(req_id, index, total, &data[..end], last)
+        } else {
+            Frame::data_chunk(req_id, index, data[off..end].to_vec(), last)
+        });
+        off = end;
+    }
+    frames
 }
 
 #[cfg(test)]

@@ -93,19 +93,120 @@ impl Response {
         self.headers.push((k.to_string(), v.to_string()));
         self
     }
+    /// Mark a response as 206 Partial Content for the half-open slice
+    /// `[start, end)` of a `len`-byte resource (internal Range contract —
+    /// see [`resolve_range`]).
+    pub fn into_partial(mut self, start: u64, end: u64, len: u64) -> Response {
+        self.status = 206;
+        self.with_header("content-range", &content_range_value(start, end, len))
+    }
 }
 
 fn status_text(code: u16) -> &'static str {
     match code {
         200 => "OK",
+        206 => "Partial Content",
         307 => "Temporary Redirect",
         400 => "Bad Request",
         404 => "Not Found",
         409 => "Conflict",
+        416 => "Range Not Satisfiable",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
+    }
+}
+
+// ---------------------------------------------------------------- ranges --
+
+/// Outcome of resolving a `Range` request header against a resource length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RangeSpec {
+    /// No (or unsupported) range — serve the whole resource with 200.
+    Whole,
+    /// Serve the half-open byte slice `[start, end)` with 206 and a
+    /// `content-range: bytes start-(end-1)/len` header.
+    Slice { start: u64, end: u64 },
+    /// Start lies beyond the resource — serve 416 with
+    /// `content-range: bytes */len`.
+    Unsatisfiable,
+}
+
+/// Server side of the crate's internal Range support: resolve a
+/// `Range: bytes=S-E` header against a `len`-byte resource. `E` is
+/// inclusive per RFC 9110; an open-ended `bytes=S-` runs to the end. The
+/// forms the cluster never sends (multi-range, suffix `bytes=-N`, other
+/// units) degrade to [`RangeSpec::Whole`]. Internal departure from the RFC:
+/// `start == len` yields an *empty* 206 slice rather than 416, so a ranged
+/// probe of a zero-length object still learns its total from
+/// `content-range`.
+pub fn resolve_range(header: Option<&str>, len: u64) -> RangeSpec {
+    let spec = match header.and_then(|h| h.trim().strip_prefix("bytes=")) {
+        Some(s) => s,
+        None => return RangeSpec::Whole,
+    };
+    if spec.contains(',') {
+        return RangeSpec::Whole;
+    }
+    let (s, e) = match spec.split_once('-') {
+        Some(x) => x,
+        None => return RangeSpec::Whole,
+    };
+    let start: u64 = match s.trim().parse() {
+        Ok(v) => v,
+        Err(_) => return RangeSpec::Whole, // includes the suffix form "-N"
+    };
+    if start > len {
+        return RangeSpec::Unsatisfiable;
+    }
+    let end = match e.trim() {
+        "" => len,
+        t => match t.parse::<u64>() {
+            Ok(v) => v.saturating_add(1).min(len),
+            Err(_) => return RangeSpec::Whole,
+        },
+    };
+    if end < start {
+        return RangeSpec::Unsatisfiable;
+    }
+    RangeSpec::Slice { start, end }
+}
+
+/// Format the `content-range` value for a [`RangeSpec::Slice`]. The empty
+/// slice renders a last-byte position one below `start` (internal contract;
+/// only the `/{len}` total is parsed back).
+pub fn content_range_value(start: u64, end: u64, len: u64) -> String {
+    format!("bytes {}-{}/{}", start, end as i64 - 1, len)
+}
+
+/// Parse the total length out of a `content-range: bytes S-E/total` value —
+/// how a ranged client (GFN recovery) learns an object's full size from its
+/// first chunk response.
+pub fn content_range_total(v: &str) -> Option<u64> {
+    v.rsplit_once('/')?.1.trim().parse().ok()
+}
+
+/// The 416 response advertising the resource's total length (internal
+/// Range contract).
+pub fn range_unsatisfiable(len: u64) -> Response {
+    Response::text(416, &format!("range unsatisfiable for {len}-byte resource"))
+        .with_header("content-range", &format!("bytes */{len}"))
+}
+
+/// Serve an in-memory payload honoring an optional `Range` header per the
+/// internal contract — the single definition test stubs and simple handlers
+/// share (the production object endpoint streams the same contract from an
+/// `EntryReader` instead of a buffer).
+pub fn serve_ranged_bytes(req: &Request, payload: &[u8]) -> Response {
+    let len = payload.len() as u64;
+    match resolve_range(req.header("range"), len) {
+        RangeSpec::Whole => Response::ok(payload.to_vec()),
+        RangeSpec::Slice { start, end } => {
+            Response::ok(payload[start as usize..end as usize].to_vec())
+                .into_partial(start, end, len)
+        }
+        RangeSpec::Unsatisfiable => range_unsatisfiable(len),
     }
 }
 
@@ -588,10 +689,23 @@ impl HttpClient {
         path_and_query: &str,
         body: &[u8],
     ) -> io::Result<ClientResponse> {
+        self.request_with_headers(method, addr, path_and_query, &[], body)
+    }
+
+    /// [`HttpClient::request`] with extra request headers (e.g. `range`).
+    /// Headers are preserved across redirects.
+    pub fn request_with_headers(
+        &self,
+        method: &str,
+        addr: &str,
+        path_and_query: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> io::Result<ClientResponse> {
         let mut addr = addr.to_string();
         let mut pq = path_and_query.to_string();
         for _ in 0..5 {
-            let resp = self.request_once(method, &addr, &pq, body)?;
+            let resp = self.request_once(method, &addr, &pq, headers, body)?;
             if resp.status == 307 {
                 let loc = resp
                     .header("location")
@@ -624,14 +738,15 @@ impl HttpClient {
         method: &str,
         addr: &str,
         path_and_query: &str,
+        headers: &[(&str, &str)],
         body: &[u8],
     ) -> io::Result<ClientResponse> {
         // A pooled connection may have been closed server-side since its
         // last use; retry exactly once on a fresh connection in that case.
-        match self.request_on_conn(method, addr, path_and_query, body) {
+        match self.request_on_conn(method, addr, path_and_query, headers, body) {
             Ok(r) => Ok(r),
             Err((retryable, _)) if retryable => self
-                .request_on_conn(method, addr, path_and_query, body)
+                .request_on_conn(method, addr, path_and_query, headers, body)
                 .map_err(|(_, e)| e),
             Err((_, e)) => Err(e),
         }
@@ -644,6 +759,7 @@ impl HttpClient {
         method: &str,
         addr: &str,
         path_and_query: &str,
+        headers: &[(&str, &str)],
         body: &[u8],
     ) -> Result<ClientResponse, (bool, io::Error)> {
         if !self.inject_rtt.is_zero() {
@@ -654,6 +770,9 @@ impl HttpClient {
             "{method} {path_and_query} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\n",
             body.len()
         );
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
         if !self.reuse {
             head.push_str("connection: close\r\n");
         }
@@ -723,6 +842,16 @@ impl HttpClient {
         self.request("GET", addr, pq, &[])
     }
 
+    /// Ranged GET: ask for `len` bytes starting at `offset` via a `Range`
+    /// header. Cluster-internal servers answer 206 with a
+    /// `content-range: bytes S-E/total` header (see [`content_range_total`])
+    /// — this is how GFN recovery pulls a large entry in `chunk_bytes`
+    /// pieces instead of materializing it.
+    pub fn get_range(&self, addr: &str, pq: &str, offset: u64, len: u64) -> io::Result<ClientResponse> {
+        let range = format!("bytes={}-{}", offset, offset + len.max(1) - 1);
+        self.request_with_headers("GET", addr, pq, &[("range", &range)], &[])
+    }
+
     pub fn put(&self, addr: &str, pq: &str, body: &[u8]) -> io::Result<ClientResponse> {
         self.request("PUT", addr, pq, body)
     }
@@ -747,6 +876,11 @@ mod tests {
                 }
                 Ok(())
             }),
+            "/ranged" => {
+                // Canonical internal Range contract over a fixed resource.
+                let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+                serve_ranged_bytes(&req, &data)
+            }
             _ => Response::status(404),
         });
         HttpServer::serve(handler, 4, "test").unwrap()
@@ -821,6 +955,72 @@ mod tests {
             assert_eq!(resp.into_bytes().unwrap(), b"z");
         }
         assert!(cl.pool.conns.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn resolve_range_contract() {
+        assert_eq!(resolve_range(None, 100), RangeSpec::Whole);
+        assert_eq!(resolve_range(Some("bytes=0-9"), 100), RangeSpec::Slice { start: 0, end: 10 });
+        assert_eq!(resolve_range(Some("bytes=90-"), 100), RangeSpec::Slice { start: 90, end: 100 });
+        // end clamped to the resource
+        assert_eq!(resolve_range(Some("bytes=90-500"), 100), RangeSpec::Slice { start: 90, end: 100 });
+        // empty slice at EOF is allowed (zero-length probe learns the total)
+        assert_eq!(resolve_range(Some("bytes=0-9"), 0), RangeSpec::Slice { start: 0, end: 0 });
+        assert_eq!(resolve_range(Some("bytes=100-"), 100), RangeSpec::Slice { start: 100, end: 100 });
+        assert_eq!(resolve_range(Some("bytes=101-"), 100), RangeSpec::Unsatisfiable);
+        // unsupported forms degrade to Whole
+        assert_eq!(resolve_range(Some("bytes=-5"), 100), RangeSpec::Whole);
+        assert_eq!(resolve_range(Some("bytes=0-1,5-9"), 100), RangeSpec::Whole);
+        assert_eq!(resolve_range(Some("items=0-1"), 100), RangeSpec::Whole);
+    }
+
+    #[test]
+    fn content_range_helpers_roundtrip() {
+        assert_eq!(content_range_value(0, 10, 100), "bytes 0-9/100");
+        assert_eq!(content_range_value(0, 0, 0), "bytes 0--1/0");
+        assert_eq!(content_range_total("bytes 0-9/100"), Some(100));
+        assert_eq!(content_range_total("bytes 0--1/0"), Some(0));
+        assert_eq!(content_range_total("garbage"), None);
+    }
+
+    #[test]
+    fn range_request_roundtrip() {
+        let srv = echo_server();
+        let cl = HttpClient::new(true);
+        let addr = srv.addr.to_string();
+        let want: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+
+        // whole resource without a Range header
+        let resp = cl.get(&addr, "/ranged").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.into_bytes().unwrap(), want);
+
+        // chunked ranged reads rebuild the resource byte-identically and
+        // learn the total from the first content-range
+        let mut rebuilt = Vec::new();
+        let mut total = None;
+        let mut off = 0u64;
+        loop {
+            let resp = cl.get_range(&addr, "/ranged", off, 64).unwrap();
+            assert_eq!(resp.status, 206);
+            let t = content_range_total(resp.header("content-range").unwrap()).unwrap();
+            total.get_or_insert(t);
+            assert_eq!(total, Some(t));
+            let bytes = resp.into_bytes().unwrap();
+            assert!(bytes.len() <= 64);
+            off += bytes.len() as u64;
+            rebuilt.extend_from_slice(&bytes);
+            if off >= t {
+                break;
+            }
+        }
+        assert_eq!(total, Some(1000));
+        assert_eq!(rebuilt, want);
+
+        // past-EOF start → 416 with the total still advertised
+        let resp = cl.get_range(&addr, "/ranged", 5000, 64).unwrap();
+        assert_eq!(resp.status, 416);
+        assert_eq!(content_range_total(resp.header("content-range").unwrap()), Some(1000));
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! autonomous: no sender-to-sender coordination, delivery starts as soon as
 //! local reads complete.
 
+use std::cell::Cell;
 use std::sync::Arc;
 
 use crate::batch::request::BatchEntry;
@@ -12,20 +13,22 @@ use crate::cluster::placement;
 use crate::cluster::smap::Smap;
 use crate::config::GetBatchConfig;
 use crate::metrics::GetBatchMetrics;
-use crate::proto::frame::{chunk_count, chunk_frames_iter, Frame};
+use crate::proto::frame::{chunk_count, Frame};
 use crate::proto::wire::SenderActivate;
 use crate::store::shard::ShardError;
-use crate::store::{ObjectStore, ShardIndexCache, StoreError};
+use crate::store::{EntryReader, ObjectStore, ShardIndexCache, StoreError};
 use crate::transport::PeerPool;
 
-/// Resolve one entry from the local store.
+/// Resolve one entry from the local store as a streaming [`EntryReader`] —
+/// whole object or a range-bounded shard member. Nothing is materialized
+/// here; the caller pulls `chunk_bytes` pieces.
 pub fn resolve_entry(
     store: &ObjectStore,
     shards: &ShardIndexCache,
     e: &BatchEntry,
-) -> Result<Vec<u8>, String> {
+) -> Result<EntryReader, String> {
     match &e.archpath {
-        None => store.get(&e.bucket, &e.obj).map_err(|err| match err {
+        None => store.open_entry(&e.bucket, &e.obj).map_err(|err| match err {
             StoreError::NotFound(k) => format!("missing object {k}"),
             StoreError::Io(io) => format!("read failure: {io}"),
         }),
@@ -39,13 +42,88 @@ pub fn resolve_entry(
     }
 }
 
-/// Execute a sender activation: read every locally-owned entry and stream
-/// it to the DT, then emit SENDER_DONE. Runs on the target's background
-/// pool. Entries stream lazily (`send_iter`) so transmission overlaps the
-/// next disk read, and entries larger than `cfg.chunk_bytes` are split into
-/// chunk frames so the DT can emit them before their last byte arrives —
-/// and so DT-side memory backpressure (its budget stalling our socket)
-/// pauses us between chunks instead of after whole objects.
+/// Lazily turn an [`EntryReader`] into the chunk-frame sequence a sender
+/// transmits, reading at most `chunk_bytes` from disk per step — sender
+/// residency is O(chunk), not O(entry). A read failure *after* the FIRST
+/// frame went out surfaces as a SOFT_ERR frame: the DT fails the slot
+/// promptly and, if bytes were already consumed there, repairs it via the
+/// ranged GFN splice.
+fn reader_frames<'a>(
+    req_id: u64,
+    index: u32,
+    reader: EntryReader,
+    chunk_bytes: usize,
+    metrics: &'a GetBatchMetrics,
+) -> impl Iterator<Item = Frame> + 'a {
+    let chunk_bytes = chunk_bytes.max(1);
+    let total = reader.len();
+    let single = total <= chunk_bytes as u64;
+    let mut reader = Some(reader);
+    let mut off: u64 = 0;
+    std::iter::from_fn(move || {
+        let rdr = reader.as_mut()?;
+        if single {
+            let f = match rdr.read_chunk(chunk_bytes) {
+                Ok(bytes) => Frame::data(req_id, index, bytes),
+                Err(e) => Frame::soft_err(req_id, index, &format!("read failure: {e}")),
+            };
+            reader = None;
+            metrics.sender_peak_buffer.set_max(f.payload.len() as i64);
+            return Some(f);
+        }
+        let first = off == 0;
+        match rdr.read_chunk(chunk_bytes) {
+            Ok(bytes) => {
+                metrics.sender_peak_buffer.set_max(bytes.len() as i64);
+                off += bytes.len() as u64;
+                let last = off >= total;
+                if last {
+                    reader = None;
+                }
+                Some(if first {
+                    Frame::data_first_chunk(req_id, index, total, &bytes, last)
+                } else {
+                    Frame::data_chunk(req_id, index, bytes, last)
+                })
+            }
+            Err(e) => {
+                reader = None;
+                Some(Frame::soft_err(req_id, index, &format!("read failure: {e}")))
+            }
+        }
+    })
+}
+
+/// The frame sequence for one resolved entry (or its SOFT_ERR). Bumps the
+/// per-entry sender metrics as a side effect.
+fn entry_frames<'a>(
+    req_id: u64,
+    index: u32,
+    resolved: Result<EntryReader, String>,
+    chunk_bytes: usize,
+    metrics: &'a GetBatchMetrics,
+    satisfied: &'a Cell<u32>,
+) -> Box<dyn Iterator<Item = Frame> + 'a> {
+    match resolved {
+        Ok(reader) => {
+            satisfied.set(satisfied.get() + 1);
+            metrics.sender_entries.inc();
+            metrics.sender_chunks.add(chunk_count(reader.len() as usize, chunk_bytes) as u64);
+            Box::new(reader_frames(req_id, index, reader, chunk_bytes, metrics))
+        }
+        Err(reason) => Box::new(std::iter::once(Frame::soft_err(req_id, index, &reason))),
+    }
+}
+
+/// Execute a sender activation: stream every locally-owned entry to the DT,
+/// then emit SENDER_DONE. Runs on the target's background pool. Entries
+/// stream lazily (`send_iter`) so transmission overlaps the next disk read;
+/// entries larger than `cfg.chunk_bytes` are split into chunk frames read
+/// straight off an [`EntryReader`], so the DT can emit them before their
+/// last byte arrives, sender residency stays O(chunk) instead of O(object),
+/// and DT-side memory backpressure (its budget stalling our socket) pauses
+/// us between chunks *and between disk reads* instead of after whole
+/// objects.
 pub fn run_sender(
     act: &SenderActivate,
     smap: &Smap,
@@ -80,22 +158,15 @@ pub fn run_sender(
 
     let req_id = act.req_id;
     let chunk_bytes = cfg.chunk_bytes.max(1);
-    let satisfied = std::cell::Cell::new(0u32);
-    let data_frames = mine.iter().flat_map(
-        |(idx, e)| -> Box<dyn Iterator<Item = Frame>> {
-            match resolve_entry(store, shards, e) {
-                Ok(data) => {
-                    satisfied.set(satisfied.get() + 1);
-                    metrics.sender_entries.inc();
-                    metrics.sender_chunks.add(chunk_count(data.len(), chunk_bytes) as u64);
-                    // Lazy chunking: at most one in-flight chunk is copied
-                    // alongside the source buffer.
-                    Box::new(chunk_frames_iter(req_id, *idx, data, chunk_bytes))
-                }
-                Err(reason) => Box::new(std::iter::once(Frame::soft_err(req_id, *idx, &reason))),
-            }
-        },
-    );
+    let satisfied = Cell::new(0u32);
+    // Fully lazy: each entry is opened as a streaming reader when its first
+    // frame is cut, and each chunk is read from disk only when transmitted —
+    // sender residency is O(chunk_bytes) regardless of entry size.
+    let data_frames = mine
+        .iter()
+        .flat_map(|(idx, e)| {
+            entry_frames(req_id, *idx, resolve_entry(store, shards, e), chunk_bytes, metrics, &satisfied)
+        });
     // Chain SENDER_DONE after the last entry on the same connection so the
     // DT observes completion only after all data frames. `once_with` defers
     // building it until the lazy entry stream has fully run, so the
@@ -130,9 +201,14 @@ mod tests {
         let archive = write_archive(&[Entry { name: "m.wav".into(), data: vec![7; 10] }]).unwrap();
         store.put("b", "s.tar", &archive).unwrap();
 
-        assert_eq!(resolve_entry(&store, &shards, &BatchEntry::obj("b", "o")).unwrap(), b"data");
+        let r = resolve_entry(&store, &shards, &BatchEntry::obj("b", "o")).unwrap();
+        assert_eq!(r.len(), 4, "length known before any byte is read");
+        assert_eq!(r.read_all().unwrap(), b"data");
         assert_eq!(
-            resolve_entry(&store, &shards, &BatchEntry::member("b", "s.tar", "m.wav")).unwrap(),
+            resolve_entry(&store, &shards, &BatchEntry::member("b", "s.tar", "m.wav"))
+                .unwrap()
+                .read_all()
+                .unwrap(),
             vec![7; 10]
         );
         let e = resolve_entry(&store, &shards, &BatchEntry::obj("b", "nope")).unwrap_err();
@@ -249,6 +325,14 @@ mod tests {
             other => panic!("small: {other:?}"),
         }
         assert!(metrics.sender_chunks.get() >= 10, "big object split into ≥10 chunks");
+        // Streaming reads: the sender never materialized more than ~one
+        // chunk of the 300 KiB entry at a time.
+        let peak = metrics.sender_peak_buffer.get();
+        assert!(peak > 0, "peak buffer recorded");
+        assert!(
+            peak <= 2 * (32 << 10),
+            "sender residency {peak} exceeded 2x chunk_bytes"
+        );
         std::fs::remove_dir_all(base).unwrap();
     }
 

@@ -16,27 +16,110 @@ pub enum StoreError {
     Io(io::Error),
 }
 
-impl std::fmt::Display for StoreError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            StoreError::NotFound(k) => write!(f, "object not found: {k}"),
-            StoreError::Io(e) => write!(f, "io: {e}"),
+crate::impl_error! {
+    StoreError {
+        display {
+            StoreError::NotFound(k) => "object not found: {k}",
+            StoreError::Io(e) => "io: {e}",
+        }
+        source {
+            StoreError::Io(e) => e,
+        }
+        from {
+            io::Error => Io,
         }
     }
 }
 
-impl std::error::Error for StoreError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            StoreError::Io(e) => Some(e),
-            _ => None,
+/// A seekable, length-known streaming source over one entry's bytes — the
+/// read-side seam of the streaming data path. Producers (senders, the HTTP
+/// object handler, DT-local resolution) pull `chunk_bytes`-sized pieces
+/// instead of materializing whole objects, so read-side residency is
+/// O(chunk), not O(entry). The entry may be a whole object
+/// ([`ObjectStore::open_entry`]) or a byte span inside one (shard member
+/// extraction via [`ObjectStore::open_entry_range`]); a future remote
+/// backend plugs in at exactly this seam.
+pub struct EntryReader {
+    file: File,
+    /// Absolute file offset where the entry begins.
+    base: u64,
+    /// Entry length in bytes.
+    len: u64,
+    /// Cursor relative to `base` (bytes already consumed).
+    pos: u64,
+}
+
+impl EntryReader {
+    fn new(mut file: File, base: u64, len: u64) -> Result<EntryReader, StoreError> {
+        if base > 0 {
+            file.seek(SeekFrom::Start(base))?;
         }
+        Ok(EntryReader { file, base, len, pos: 0 })
+    }
+
+    /// Declared entry length (known up front — the TAR header and the
+    /// FIRST chunk frame both need it before the payload streams).
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> u64 {
+        self.len - self.pos
+    }
+
+    /// Current cursor (bytes consumed so far).
+    pub fn pos(&self) -> u64 {
+        self.pos
+    }
+
+    /// Reposition the cursor (clamped to the entry length) — ranged reads
+    /// and GFN splice resume use this.
+    pub fn seek_to(&mut self, pos: u64) -> Result<(), StoreError> {
+        let pos = pos.min(self.len);
+        self.file.seek(SeekFrom::Start(self.base + pos))?;
+        self.pos = pos;
+        Ok(())
+    }
+
+    /// Read the next `min(max, remaining)` bytes. Returns an empty vec at
+    /// the end of the entry; errors if the file ends before the declared
+    /// length (concurrent truncation).
+    pub fn read_chunk(&mut self, max: usize) -> Result<Vec<u8>, StoreError> {
+        let want = self.remaining().min(max.max(1) as u64) as usize;
+        let mut buf = vec![0u8; want];
+        Read::read_exact(self, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Drain the rest of the entry into one buffer (tests and small-object
+    /// conveniences; the streaming paths use `read_chunk`).
+    pub fn read_all(mut self) -> Result<Vec<u8>, StoreError> {
+        let mut out = Vec::with_capacity(self.remaining() as usize);
+        Read::read_to_end(&mut self, &mut out)?;
+        Ok(out)
     }
 }
 
-impl From<io::Error> for StoreError {
-    fn from(e: io::Error) -> StoreError {
-        StoreError::Io(e)
+impl Read for EntryReader {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let want = self.remaining().min(buf.len() as u64) as usize;
+        if want == 0 {
+            return Ok(0);
+        }
+        let n = self.file.read(&mut buf[..want])?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("entry truncated at {}/{}", self.pos, self.len),
+            ));
+        }
+        self.pos += n as u64;
+        Ok(n)
     }
 }
 
@@ -104,35 +187,56 @@ impl ObjectStore {
         Ok(md.len())
     }
 
-    /// Whole-object read.
+    /// Whole-object read (convenience over [`ObjectStore::open_entry`] —
+    /// the streaming paths use the reader directly).
     pub fn get(&self, bucket: &str, obj: &str) -> Result<Vec<u8>, StoreError> {
-        self.maybe_fault()?;
-        let p = self.path(bucket, obj);
-        fs::read(&p).map_err(|e| {
-            if e.kind() == io::ErrorKind::NotFound {
-                StoreError::NotFound(format!("{bucket}/{obj}"))
-            } else {
-                StoreError::Io(e)
-            }
-        })
+        self.open_entry(bucket, obj)?.read_all()
     }
 
-    /// Range read (pread) — shard member extraction reads exactly the member
-    /// payload without touching the rest of the archive.
+    /// Range read (pread) — convenience over
+    /// [`ObjectStore::open_entry_range`].
     pub fn get_range(&self, bucket: &str, obj: &str, offset: u64, len: u64) -> Result<Vec<u8>, StoreError> {
+        self.open_entry_range(bucket, obj, offset, len)?.read_all()
+    }
+
+    /// Open a whole object as a streaming [`EntryReader`].
+    pub fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
+        let (file, size) = self.open_with_size(bucket, obj)?;
+        EntryReader::new(file, 0, size)
+    }
+
+    /// Open a byte span of an object as a streaming [`EntryReader`] — shard
+    /// member extraction reads exactly the member's payload without touching
+    /// the rest of the archive. The span must lie inside the object.
+    pub fn open_entry_range(
+        &self,
+        bucket: &str,
+        obj: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<EntryReader, StoreError> {
+        let (file, size) = self.open_with_size(bucket, obj)?;
+        if offset.saturating_add(len) > size {
+            return Err(StoreError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("range {offset}+{len} past EOF ({size}) in {bucket}/{obj}"),
+            )));
+        }
+        EntryReader::new(file, offset, len)
+    }
+
+    fn open_with_size(&self, bucket: &str, obj: &str) -> Result<(File, u64), StoreError> {
         self.maybe_fault()?;
         let p = self.path(bucket, obj);
-        let mut f = File::open(&p).map_err(|e| {
+        let f = File::open(&p).map_err(|e| {
             if e.kind() == io::ErrorKind::NotFound {
                 StoreError::NotFound(format!("{bucket}/{obj}"))
             } else {
                 StoreError::Io(e)
             }
         })?;
-        f.seek(SeekFrom::Start(offset))?;
-        let mut buf = vec![0u8; len as usize];
-        f.read_exact(&mut buf)?;
-        Ok(buf)
+        let size = f.metadata()?.len();
+        Ok((f, size))
     }
 
     /// Open for streaming (sequential shard loads).
@@ -265,6 +369,53 @@ mod tests {
         s.put("b2", "only", b"y").unwrap();
         assert_eq!(s.list("b1").unwrap().len(), 20);
         assert_eq!(s.list("b2").unwrap(), vec!["only"]);
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn entry_reader_streams_in_chunks() {
+        let (s, base) = store("rdr");
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        s.put("b", "o", &data).unwrap();
+        let mut r = s.open_entry("b", "o").unwrap();
+        assert_eq!(r.len(), data.len() as u64);
+        assert!(!r.is_empty());
+        let mut rebuilt = Vec::new();
+        loop {
+            let c = r.read_chunk(1024).unwrap();
+            if c.is_empty() {
+                break;
+            }
+            assert!(c.len() <= 1024);
+            rebuilt.extend_from_slice(&c);
+        }
+        assert_eq!(rebuilt, data);
+        assert_eq!(r.remaining(), 0);
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn entry_reader_seek_and_range() {
+        let (s, base) = store("seek");
+        s.put("b", "o", b"0123456789").unwrap();
+        // whole-object reader repositioned mid-entry
+        let mut r = s.open_entry("b", "o").unwrap();
+        r.seek_to(6).unwrap();
+        assert_eq!(r.remaining(), 4);
+        assert_eq!(r.read_chunk(64).unwrap(), b"6789");
+        // range-bounded reader sees only its span
+        let mut r = s.open_entry_range("b", "o", 3, 4).unwrap();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.read_chunk(2).unwrap(), b"34");
+        assert_eq!(r.read_chunk(64).unwrap(), b"56");
+        assert_eq!(r.read_chunk(64).unwrap(), b"");
+        // span past EOF rejected at open
+        assert!(s.open_entry_range("b", "o", 8, 5).is_err());
+        // zero-length entries stream cleanly
+        s.put("b", "empty", b"").unwrap();
+        let r = s.open_entry("b", "empty").unwrap();
+        assert!(r.is_empty());
+        assert_eq!(r.read_all().unwrap(), b"");
         fs::remove_dir_all(base).unwrap();
     }
 

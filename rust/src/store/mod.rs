@@ -6,5 +6,5 @@ pub mod engine;
 pub mod mountpath;
 pub mod shard;
 
-pub use engine::{ObjectStore, StoreError};
+pub use engine::{EntryReader, ObjectStore, StoreError};
 pub use shard::ShardIndexCache;

@@ -9,7 +9,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::tar;
 
-use super::engine::{ObjectStore, StoreError};
+use super::engine::{EntryReader, ObjectStore, StoreError};
 
 #[derive(Debug)]
 pub enum ShardError {
@@ -18,37 +18,21 @@ pub enum ShardError {
     MemberNotFound { shard: String, member: String },
 }
 
-impl std::fmt::Display for ShardError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ShardError::Store(e) => write!(f, "{e}"), // transparent
-            ShardError::Tar(e) => write!(f, "tar: {e}"),
-            ShardError::MemberNotFound { shard, member } => {
-                write!(f, "member not found: {shard}!{member}")
-            }
+crate::impl_error! {
+    ShardError {
+        display {
+            ShardError::Store(e) => "{e}", // transparent
+            ShardError::Tar(e) => "tar: {e}",
+            ShardError::MemberNotFound { shard, member } => "member not found: {shard}!{member}",
         }
-    }
-}
-
-impl std::error::Error for ShardError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            ShardError::Store(e) => e.source(),
-            ShardError::Tar(e) => Some(e),
-            ShardError::MemberNotFound { .. } => None,
+        source {
+            ShardError::Store(e) => e,
+            ShardError::Tar(e) => e,
         }
-    }
-}
-
-impl From<StoreError> for ShardError {
-    fn from(e: StoreError) -> ShardError {
-        ShardError::Store(e)
-    }
-}
-
-impl From<tar::TarError> for ShardError {
-    fn from(e: tar::TarError) -> ShardError {
-        ShardError::Tar(e)
+        from {
+            StoreError => Store,
+            tar::TarError => Tar,
+        }
     }
 }
 
@@ -97,20 +81,22 @@ impl ShardIndexCache {
         Ok(idx)
     }
 
-    /// Extract one member's payload from a shard via pread.
+    /// Open one member's payload as a range-bounded streaming
+    /// [`EntryReader`] over the shard file — extraction never materializes
+    /// the member; consumers pull it in `chunk_bytes` pieces.
     pub fn extract(
         &self,
         store: &ObjectStore,
         bucket: &str,
         shard: &str,
         member: &str,
-    ) -> Result<Vec<u8>, ShardError> {
+    ) -> Result<EntryReader, ShardError> {
         let idx = self.index(store, bucket, shard)?;
         let &(off, size) = idx.get(member).ok_or_else(|| ShardError::MemberNotFound {
             shard: shard.to_string(),
             member: member.to_string(),
         })?;
-        Ok(store.get_range(bucket, shard, off, size)?)
+        Ok(store.open_entry_range(bucket, shard, off, size)?)
     }
 
     /// List members of a shard (data-loader manifest construction).
@@ -158,8 +144,9 @@ mod tests {
         let (store, cache, base) = setup("extract");
         store.put("b", "s.tar", &mkshard(10)).unwrap();
         for i in [0usize, 3, 9] {
-            let data = cache.extract(&store, "b", "s.tar", &format!("utt/{i:04}.wav")).unwrap();
-            assert_eq!(data, vec![i as u8; 100 + i * 7]);
+            let r = cache.extract(&store, "b", "s.tar", &format!("utt/{i:04}.wav")).unwrap();
+            assert_eq!(r.len(), (100 + i * 7) as u64, "length known before streaming");
+            assert_eq!(r.read_all().unwrap(), vec![i as u8; 100 + i * 7]);
         }
         std::fs::remove_dir_all(base).unwrap();
     }
@@ -206,7 +193,7 @@ mod tests {
         let entries = vec![Entry { name: "new/member.bin".into(), data: vec![7; 42] }];
         store.put("b", "s.tar", &tar::write_archive(&entries).unwrap()).unwrap();
         cache.invalidate("b", "s.tar");
-        let data = cache.extract(&store, "b", "s.tar", "new/member.bin").unwrap();
+        let data = cache.extract(&store, "b", "s.tar", "new/member.bin").unwrap().read_all().unwrap();
         assert_eq!(data, vec![7; 42]);
         std::fs::remove_dir_all(base).unwrap();
     }

@@ -47,32 +47,22 @@ pub enum TarError {
     EntrySize { expected: u64, got: u64 },
 }
 
-impl std::fmt::Display for TarError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            TarError::Io(e) => write!(f, "io: {e}"),
-            TarError::NameTooLong(n) => write!(f, "name too long for ustar: {n}"),
-            TarError::BadChecksum(b) => write!(f, "bad header checksum at block {b}"),
-            TarError::BadField(w) => write!(f, "corrupt header field: {w}"),
-            TarError::EntrySize { expected, got } => {
-                write!(f, "streamed entry size mismatch: expected {expected}, got {got}")
-            }
+crate::impl_error! {
+    TarError {
+        display {
+            TarError::Io(e) => "io: {e}",
+            TarError::NameTooLong(n) => "name too long for ustar: {n}",
+            TarError::BadChecksum(b) => "bad header checksum at block {b}",
+            TarError::BadField(w) => "corrupt header field: {w}",
+            TarError::EntrySize { expected, got } =>
+                "streamed entry size mismatch: expected {expected}, got {got}",
         }
-    }
-}
-
-impl std::error::Error for TarError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            TarError::Io(e) => Some(e),
-            _ => None,
+        source {
+            TarError::Io(e) => e,
         }
-    }
-}
-
-impl From<io::Error> for TarError {
-    fn from(e: io::Error) -> TarError {
-        TarError::Io(e)
+        from {
+            io::Error => Io,
+        }
     }
 }
 

@@ -70,6 +70,14 @@ impl Hasher {
     pub fn finalize(self) -> u32 {
         !self.state
     }
+
+    /// Rebuild a streaming state from a previously `finalize`d CRC, so a
+    /// checksum can be extended across a splice boundary (the DT's ranged
+    /// GFN recovery resumes the emitted-prefix CRC this way).
+    /// `Hasher::resume(h.finalize())` continues exactly where `h` left off.
+    pub fn resume(crc: u32) -> Hasher {
+        Hasher { state: !crc }
+    }
 }
 
 /// One-shot hash of a buffer (drop-in for `crc32fast::hash`).
@@ -101,6 +109,18 @@ mod tests {
             h.update(&data[..split]);
             h.update(&data[split..]);
             assert_eq!(h.finalize(), whole, "split={split}");
+        }
+    }
+
+    #[test]
+    fn resume_continues_finalized_state() {
+        let data: Vec<u8> = (0..777u32).map(|i| (i * 13 % 251) as u8).collect();
+        for split in [0, 1, 100, 776, 777] {
+            let mut a = Hasher::new();
+            a.update(&data[..split]);
+            let mut b = Hasher::resume(a.finalize());
+            b.update(&data[split..]);
+            assert_eq!(b.finalize(), hash(&data), "split={split}");
         }
     }
 

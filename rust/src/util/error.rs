@@ -128,6 +128,74 @@ macro_rules! ensure {
 // write `anyhow::anyhow!`, `anyhow::bail!`, `anyhow::ensure!` path-style.
 pub use crate::{anyhow, bail, ensure};
 
+/// Declarative replacement for the hand-rolled `Display`/`Error::source`/
+/// `From` impl blocks that every error enum in this crate used to carry
+/// (the offline stand-in for `thiserror`). The enum itself stays a plain
+/// `enum` with its own docs; this macro generates the three impls from a
+/// compact spec:
+///
+/// ```ignore
+/// impl_error! {
+///     StoreError {
+///         display {
+///             StoreError::NotFound(k) => "object not found: {k}",
+///             StoreError::Io(e) => "io: {e}",
+///         }
+///         source {
+///             StoreError::Io(e) => e,
+///         }
+///         from {
+///             std::io::Error => Io,
+///         }
+///     }
+/// }
+/// ```
+///
+/// * `display` — one arm per variant; the format literal captures the arm's
+///   pattern bindings (`{k}`-style inline captures).
+/// * `source` (optional) — arms whose bound value is the underlying error;
+///   unlisted variants yield `None`.
+/// * `from` (optional) — `SourceType => Variant` pairs generating
+///   single-field `From` conversions.
+#[macro_export]
+macro_rules! impl_error {
+    (
+        $name:ident {
+            display { $( $dpat:pat => $dfmt:literal ),+ $(,)? }
+            $( source { $( $spat:pat => $sexpr:expr ),* $(,)? } )?
+            $( from { $( $fty:ty => $fvar:ident ),* $(,)? } )?
+        }
+    ) => {
+        impl ::std::fmt::Display for $name {
+            fn fmt(&self, f: &mut ::std::fmt::Formatter<'_>) -> ::std::fmt::Result {
+                match self {
+                    $( $dpat => write!(f, $dfmt), )+
+                }
+            }
+        }
+
+        impl ::std::error::Error for $name {
+            #[allow(unused_variables, unreachable_patterns, clippy::match_single_binding)]
+            fn source(&self) -> Option<&(dyn ::std::error::Error + 'static)> {
+                match self {
+                    $( $( $spat => Some($sexpr), )* )?
+                    _ => None,
+                }
+            }
+        }
+
+        $( $(
+            impl ::std::convert::From<$fty> for $name {
+                fn from(e: $fty) -> $name {
+                    $name::$fvar(e)
+                }
+            }
+        )* )?
+    };
+}
+
+pub use crate::impl_error;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +231,38 @@ mod tests {
 
         let o: Option<u32> = None;
         assert!(Context::context(o, "missing field").is_err());
+    }
+
+    #[test]
+    fn impl_error_macro_generates_all_three_impls() {
+        #[derive(Debug)]
+        enum DemoError {
+            Missing(String),
+            Io(io::Error),
+            Span { from: u64, to: u64 },
+        }
+        crate::impl_error! {
+            DemoError {
+                display {
+                    DemoError::Missing(k) => "missing: {k}",
+                    DemoError::Io(e) => "io: {e}",
+                    DemoError::Span { from, to } => "bad span {from}..{to}",
+                }
+                source {
+                    DemoError::Io(e) => e,
+                }
+                from {
+                    io::Error => Io,
+                }
+            }
+        }
+        let m = DemoError::Missing("x".into());
+        assert_eq!(m.to_string(), "missing: x");
+        assert_eq!(DemoError::Span { from: 3, to: 9 }.to_string(), "bad span 3..9");
+        let io_err: DemoError = io::Error::new(io::ErrorKind::Other, "boom").into();
+        assert!(io_err.to_string().contains("boom"));
+        assert!(std::error::Error::source(&io_err).is_some());
+        assert!(std::error::Error::source(&m).is_none());
     }
 
     #[test]

@@ -38,7 +38,8 @@ fn tar_shard_through_store_and_extraction() {
     let mut order: Vec<usize> = (0..32).collect();
     rng.shuffle(&mut order);
     for i in order {
-        let got = cache.extract(&store, "b", "s.tar", &format!("member-{i:03}")).unwrap();
+        let got =
+            cache.extract(&store, "b", "s.tar", &format!("member-{i:03}")).unwrap().read_all().unwrap();
         assert_eq!(got, entries[i].data);
     }
     std::fs::remove_dir_all(dir).unwrap();
