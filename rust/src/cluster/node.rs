@@ -16,7 +16,7 @@ use crate::metrics::{GetBatchMetrics, Registry};
 use crate::proto::http::{Body, Handler, HttpClient, HttpServer, Request, Response};
 use crate::proto::wire::{self, paths, DtRegister, SenderActivate};
 use crate::sender::run_sender;
-use crate::store::{ObjectStore, ShardIndexCache};
+use crate::store::{Backend, CachedBackend, ChunkCache, ObjectStore, RemoteBackend, ShardIndexCache};
 use crate::transport::{P2pServer, PeerPool};
 use crate::util::clock::{Clock, RealClock};
 use crate::util::threadpool::ThreadPool;
@@ -33,6 +33,9 @@ pub struct TargetNode {
     pub idx: usize,
     pub store: Arc<ObjectStore>,
     pub shards: Arc<ShardIndexCache>,
+    /// The node's read-through chunk cache (shared by every cached bucket
+    /// stack routed on this target).
+    pub cache: Arc<ChunkCache>,
     pub registry: Arc<DtRegistry>,
     pub peer_pool: Arc<PeerPool>,
     pub metrics: Arc<GetBatchMetrics>,
@@ -93,6 +96,24 @@ impl Cluster {
             let metrics = registry.node(&id);
             let store = Arc::new(ObjectStore::open(&root.join(&id), cfg.mountpaths)?);
             let shards = Arc::new(ShardIndexCache::new(256));
+            // Tiered store wiring: one chunk cache per target; every bucket
+            // with an explicit spec gets its backend stack installed on the
+            // router (local is the implicit default).
+            let cache = Arc::new(ChunkCache::new(
+                cfg.getbatch.cache_bytes,
+                cfg.getbatch.chunk_bytes,
+                Some(Arc::clone(&metrics)),
+            ));
+            for spec in &cfg.getbatch.buckets {
+                match bucket_stack(spec, &store, &cache, &cfg.getbatch, &metrics) {
+                    Ok(Some(stack)) => store.route_bucket(&spec.name, stack),
+                    Ok(None) => {}
+                    // Misrouting a bucket silently (e.g. serving an empty
+                    // local dir where remote data was meant) is worse than
+                    // refusing to boot.
+                    Err(e) => return Err(anyhow::Error::msg(format!("bucket '{}': {e}", spec.name))),
+                }
+            }
             // Registrations whose client never arrives at the stream
             // endpoint are reaped after this TTL (generous for redirect
             // latency, short enough not to pin the memory budget).
@@ -142,6 +163,7 @@ impl Cluster {
                 idx: i,
                 store,
                 shards,
+                cache,
                 registry: dt_registry,
                 peer_pool,
                 metrics,
@@ -186,17 +208,76 @@ impl Cluster {
         self.targets[i].info.http_addr.clone()
     }
 
-    /// Direct-put into a target-local store, bypassing HTTP — bulk dataset
-    /// staging for benchmarks. Placement-faithful: writes to the HRW owner.
+    /// Direct-put into a target-local store, bypassing HTTP *and* bucket
+    /// routing — bulk dataset staging for benchmarks. Placement-faithful:
+    /// writes to the HRW owner's local tier.
     pub fn put_direct(&self, bucket: &str, obj: &str, data: &[u8]) -> anyhow::Result<()> {
         let owner = placement::owner(&self.smap, &format!("{bucket}/{obj}"));
-        self.targets[owner].store.put(bucket, obj, data)?;
+        self.targets[owner].store.local().put(bucket, obj, data)?;
         Ok(())
+    }
+
+    /// Route `bucket` on **every** target to a remote backend at `addr` (a
+    /// target or proxy of another cluster), optionally fronted by each
+    /// target's chunk cache — how endpoints only known at runtime
+    /// (ephemeral ports) are attached after boot; config-time routing uses
+    /// `GetBatchConfig::buckets`.
+    pub fn route_remote_bucket(&self, bucket: &str, addr: &str, cached: bool) {
+        for t in &self.targets {
+            self.route_remote_bucket_on(t.idx, bucket, addr, cached);
+        }
+    }
+
+    /// [`Cluster::route_remote_bucket`] for a single target — asymmetric
+    /// topologies (e.g. one node keeping a local replica of a bucket the
+    /// others front remotely).
+    pub fn route_remote_bucket_on(&self, target: usize, bucket: &str, addr: &str, cached: bool) {
+        let t = &self.targets[target];
+        let remote: Arc<dyn Backend> =
+            Arc::new(RemoteBackend::new(addr, Some(Arc::clone(&t.metrics))));
+        let stack: Arc<dyn Backend> = if cached && self.cfg.getbatch.cache_bytes > 0 {
+            Arc::new(CachedBackend::new(
+                remote,
+                Arc::clone(&t.cache),
+                self.cfg.getbatch.readahead_chunks,
+            ))
+        } else {
+            remote
+        };
+        t.store.route_bucket(bucket, stack);
     }
 
     pub fn root(&self) -> &PathBuf {
         &self.root
     }
+}
+
+/// Build the backend stack a [`crate::config::BucketSpec`] describes:
+/// `Ok(None)` when the spec reduces to the default (plain local,
+/// uncached), `Err` when the spec is invalid — a misconfigured bucket
+/// must refuse to boot, not silently serve the wrong tier.
+fn bucket_stack(
+    spec: &crate::config::BucketSpec,
+    store: &Arc<ObjectStore>,
+    cache: &Arc<ChunkCache>,
+    gb: &crate::config::GetBatchConfig,
+    metrics: &Arc<GetBatchMetrics>,
+) -> Result<Option<Arc<dyn Backend>>, String> {
+    let base: Arc<dyn Backend> = match spec.backend.as_str() {
+        "remote" if !spec.remote_addr.is_empty() => {
+            Arc::new(RemoteBackend::new(&spec.remote_addr, Some(Arc::clone(metrics))))
+        }
+        "remote" => return Err("backend \"remote\" requires remote_addr".into()),
+        "local" | "" => Arc::clone(store.local()) as Arc<dyn Backend>,
+        other => return Err(format!("unknown backend \"{other}\" (expected local|remote)")),
+    };
+    Ok(if spec.cache && gb.cache_bytes > 0 {
+        Some(Arc::new(CachedBackend::new(base, Arc::clone(cache), gb.readahead_chunks)))
+    } else if spec.backend == "remote" {
+        Some(base)
+    } else {
+        None
+    })
 }
 
 impl Drop for Cluster {
@@ -235,6 +316,18 @@ fn target_route(st: &Arc<TargetState>, req: Request) -> Response {
         ("POST", paths::DT_REGISTER) => target_dt_register(st, req),
         ("POST", paths::SENDER_ACTIVATE) => target_sender_activate(st, req),
         ("GET", paths::DT_STREAM) => target_dt_stream(st, req),
+        // Serves this node's *local* slice only — deliberately not routed
+        // through the bucket's backend stack, so a proxy fan-out over a
+        // remote-routed bucket cannot recurse or list the remote endpoint
+        // once per target (the remote backend's `list` targets the proxy /
+        // storage node that owns the data).
+        ("GET", paths::LIST) => match req.query_param("bucket") {
+            Some(bucket) => match st.store.local().list(bucket) {
+                Ok(names) => Response::ok(names.join("\n").into_bytes()),
+                Err(e) => Response::text(500, &e.to_string()),
+            },
+            None => Response::text(400, "missing bucket"),
+        },
         ("GET", paths::METRICS) => Response::ok(st.metrics.render(&st.id).into_bytes()),
         ("GET", paths::HEALTH) => Response::ok(b"ok".to_vec()),
         _ => Response::status(404),
@@ -263,6 +356,7 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
             Err(e) => Response::text(500, &e.to_string()),
         },
         "GET" => {
+            use crate::proto::http::RangeSpec;
             let opened = match req.query_param("archpath") {
                 Some(member) => st
                     .shards
@@ -277,11 +371,21 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
             };
             let len = reader.len();
             let chunk = st.cfg.getbatch.chunk_bytes.max(1);
-            match crate::proto::http::resolve_range(req.header("range"), len) {
-                crate::proto::http::RangeSpec::Whole => {
+            let range = crate::proto::http::resolve_range(req.header("range"), len);
+            // Whole-object GETs and range-start-0 slices (metadata probes,
+            // a recovery's first chunk) advertise the PUT-time CRC-32
+            // sidecar; later per-chunk ranged GETs skip the lookup — for a
+            // remote-routed bucket it would cost one remote probe per
+            // chunk. Member extraction has no per-member sidecar (the hash
+            // covers the whole shard).
+            let want_crc = req.query_param("archpath").is_none()
+                && matches!(range, RangeSpec::Whole | RangeSpec::Slice { start: 0, .. });
+            let crc = if want_crc { st.store.content_crc(&bucket, &obj) } else { None };
+            let resp = match range {
+                RangeSpec::Whole => {
                     Response::stream(move |w| stream_entry(reader, len, chunk, w))
                 }
-                crate::proto::http::RangeSpec::Slice { start, end } => {
+                RangeSpec::Slice { start, end } => {
                     if let Err(e) = reader.seek_to(start) {
                         return Response::text(500, &e.to_string());
                     }
@@ -289,9 +393,11 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
                     Response::stream(move |w| stream_entry(reader, span, chunk, w))
                         .into_partial(start, end, len)
                 }
-                crate::proto::http::RangeSpec::Unsatisfiable => {
-                    crate::proto::http::range_unsatisfiable(len)
-                }
+                RangeSpec::Unsatisfiable => crate::proto::http::range_unsatisfiable(len),
+            };
+            match crc {
+                Some(c) => resp.with_header(wire::HDR_OBJ_CRC, &format!("{c:08x}")),
+                None => resp,
             }
         }
         "DELETE" => match st.store.delete(&bucket, &obj) {

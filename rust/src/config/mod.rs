@@ -8,6 +8,44 @@ use std::time::Duration;
 use crate::util::error as anyhow;
 use crate::util::json::Value;
 
+/// Per-bucket storage routing: which backend stack serves a bucket's
+/// objects on every target. The default (no spec) is the node's local
+/// mountpath backend, uncached.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BucketSpec {
+    /// Bucket name.
+    pub name: String,
+    /// Backend kind: `"local"` or `"remote"`.
+    pub backend: String,
+    /// `host:port` of the node (or proxy) fronting a remote bucket; unused
+    /// for local. Buckets whose endpoints are only known at runtime
+    /// (ephemeral ports) are routed via `Cluster::route_remote_bucket`
+    /// instead.
+    pub remote_addr: String,
+    /// Route reads through the node's read-through chunk cache
+    /// (`cache_bytes` capacity, `readahead_chunks` sequential read-ahead).
+    pub cache: bool,
+}
+
+impl BucketSpec {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("name", Value::str(&self.name))
+            .set("backend", Value::str(&self.backend))
+            .set("remote_addr", Value::str(&self.remote_addr))
+            .set("cache", Value::Bool(self.cache))
+    }
+
+    pub fn from_json(v: &Value) -> Option<BucketSpec> {
+        Some(BucketSpec {
+            name: v.str_field("name")?.to_string(),
+            backend: v.str_field("backend").unwrap_or("local").to_string(),
+            remote_addr: v.str_field("remote_addr").unwrap_or("").to_string(),
+            cache: v.bool_field("cache").unwrap_or(false),
+        })
+    }
+}
+
 /// The paper's dedicated GetBatch configuration section (§2.4.3).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GetBatchConfig {
@@ -53,6 +91,17 @@ pub struct GetBatchConfig {
     /// overruns mean the data plane is already past its memory cap, so new
     /// work would only deepen the hole. `0` disables the overrun gate.
     pub budget_overrun_limit: u32,
+    /// Capacity of each target's read-through chunk cache, in bytes. The
+    /// cache serves `chunk_bytes`-aligned object chunks with strict LRU
+    /// eviction; `0` disables caching even for buckets that request it.
+    pub cache_bytes: u64,
+    /// Sequential read-ahead: on a cache miss, also fetch this many
+    /// *following* chunks through one ranged read of the inner backend
+    /// (clamped so one fill never exceeds `dt_buffer_bytes`).
+    pub readahead_chunks: usize,
+    /// Per-bucket backend routing (see [`BucketSpec`]); buckets not listed
+    /// are served by the node's local backend, uncached.
+    pub buckets: Vec<BucketSpec>,
 }
 
 impl Default for GetBatchConfig {
@@ -69,6 +118,9 @@ impl Default for GetBatchConfig {
             dt_buffer_bytes: 256 << 20,
             budget_patience: Duration::from_secs(10),
             budget_overrun_limit: 4,
+            cache_bytes: 64 << 20,
+            readahead_chunks: 2,
+            buckets: Vec::new(),
         }
     }
 }
@@ -84,6 +136,10 @@ impl GetBatchConfig {
         c.dt_buffer_bytes = c.dt_buffer_bytes.max(2);
         let max_chunk = (c.dt_buffer_bytes / 2).min(usize::MAX as u64) as usize;
         c.chunk_bytes = c.chunk_bytes.clamp(1, max_chunk);
+        // One read-ahead fill spans (readahead_chunks + 1) chunks; clamp it
+        // so a single fill can never out-size the node's data-plane budget.
+        let max_ra = (c.dt_buffer_bytes / c.chunk_bytes as u64).saturating_sub(1) as usize;
+        c.readahead_chunks = c.readahead_chunks.min(max_ra);
         c
     }
 
@@ -100,6 +156,9 @@ impl GetBatchConfig {
             .set("dt_buffer_bytes", Value::num(self.dt_buffer_bytes as f64))
             .set("budget_patience_ms", Value::num(self.budget_patience.as_millis() as f64))
             .set("budget_overrun_limit", Value::num(self.budget_overrun_limit as f64))
+            .set("cache_bytes", Value::num(self.cache_bytes as f64))
+            .set("readahead_chunks", Value::num(self.readahead_chunks as f64))
+            .set("buckets", Value::Arr(self.buckets.iter().map(BucketSpec::to_json).collect()))
     }
 
     pub fn from_json(v: &Value) -> GetBatchConfig {
@@ -134,6 +193,16 @@ impl GetBatchConfig {
                 .u64_field("budget_overrun_limit")
                 .map(|x| x as u32)
                 .unwrap_or(d.budget_overrun_limit),
+            cache_bytes: v.u64_field("cache_bytes").unwrap_or(d.cache_bytes),
+            readahead_chunks: v
+                .u64_field("readahead_chunks")
+                .map(|x| x as usize)
+                .unwrap_or(d.readahead_chunks),
+            buckets: v
+                .get("buckets")
+                .and_then(|b| b.as_arr())
+                .map(|specs| specs.iter().filter_map(BucketSpec::from_json).collect())
+                .unwrap_or(d.buckets),
         }
     }
 }
@@ -250,8 +319,38 @@ mod tests {
         c.getbatch.sender_wait = Duration::from_millis(1234);
         c.getbatch.budget_patience = Duration::from_millis(2500);
         c.getbatch.budget_overrun_limit = 9;
+        c.getbatch.cache_bytes = 8 << 20;
+        c.getbatch.readahead_chunks = 5;
+        c.getbatch.buckets = vec![
+            BucketSpec {
+                name: "hot".into(),
+                backend: "remote".into(),
+                remote_addr: "10.0.0.7:8080".into(),
+                cache: true,
+            },
+            BucketSpec {
+                name: "cold".into(),
+                backend: "local".into(),
+                remote_addr: String::new(),
+                cache: false,
+            },
+        ];
         let back = ClusterConfig::from_json(&c.to_json());
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn sanitized_clamps_readahead_to_budget() {
+        let c = GetBatchConfig {
+            chunk_bytes: 64 << 10,
+            dt_buffer_bytes: 256 << 10, // 4 chunks
+            readahead_chunks: 64,
+            ..Default::default()
+        }
+        .sanitized();
+        assert_eq!(c.readahead_chunks, 3, "fill of ra+1 chunks fits the budget");
+        let ok = GetBatchConfig::default().sanitized();
+        assert_eq!(ok.readahead_chunks, GetBatchConfig::default().readahead_chunks);
     }
 
     #[test]

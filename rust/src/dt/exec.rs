@@ -328,6 +328,9 @@ struct RangedFetch<'a> {
     /// Total object length, known after the first response.
     total: Option<u64>,
     offset: u64,
+    /// Stored CRC-32 sidecar advertised by the neighbor (captured off the
+    /// first response carrying the header).
+    crc: Option<u32>,
 }
 
 impl RangedFetch<'_> {
@@ -345,6 +348,11 @@ impl RangedFetch<'_> {
             .map_err(|e| format!("range fetch: {e}"))?;
         if resp.status != 206 {
             return Err(format!("range fetch: http {}", resp.status));
+        }
+        if self.crc.is_none() {
+            self.crc = resp
+                .header(wire::HDR_OBJ_CRC)
+                .and_then(|h| u32::from_str_radix(h.trim(), 16).ok());
         }
         let total = resp
             .header("content-range")
@@ -390,12 +398,16 @@ enum GfnOutcome {
 ///
 /// With `committed = Some((total, written, prefix_crc))` the TAR header is
 /// already out along with `written` payload bytes: only a byte-identical
-/// splice can finish the entry, so each candidate neighbor's copy is
-/// re-fetched from byte 0 — the prefix chunks are CRC-verified against
-/// `prefix_crc` and discarded, the remainder streams into the TAR. With
-/// `committed = None` the header is emitted as soon as the first neighbor
-/// chunk reveals the total; if that neighbor dies mid-stream, the next one
-/// continues through the same splice path.
+/// splice can finish the entry. When the candidate neighbor stores a
+/// PUT-time CRC-32 sidecar, the ranged fetch starts directly at the splice
+/// offset and the combined CRC (emitted prefix resumed via `prefix_crc`,
+/// extended by the spliced suffix) is verified against the stored hash at
+/// EOF; without a sidecar the copy is re-fetched from byte 0 — the prefix
+/// chunks are CRC-verified against `prefix_crc` and discarded, the
+/// remainder streams into the TAR. With `committed = None` the header is
+/// emitted as soon as the first neighbor chunk reveals the total; if that
+/// neighbor dies mid-stream, the next one continues through the same
+/// splice path.
 ///
 /// Probing is bounded by a *local* per-entry counter capped at
 /// `cfg.gfn_attempts` — never by global metric residue, so concurrent
@@ -443,6 +455,29 @@ fn gfn_recover<W: Write>(
     Ok(if header_total.is_none() { GfnOutcome::Clean } else { GfnOutcome::Poisoned })
 }
 
+/// 1-byte ranged probe of a neighbor's object: learns its total length
+/// and, when the neighbor stores a PUT-time CRC-32 sidecar
+/// ([`wire::HDR_OBJ_CRC`]), its whole-object hash — without pulling data.
+fn probe_neighbor_meta(
+    http: &HttpClient,
+    addr: &str,
+    pq: &str,
+) -> Result<(u64, Option<u32>), String> {
+    let resp = http.get_range(addr, pq, 0, 1).map_err(|e| format!("probe: {e}"))?;
+    if resp.status != 206 {
+        return Err(format!("probe: http {}", resp.status));
+    }
+    let total = resp
+        .header("content-range")
+        .and_then(crate::proto::http::content_range_total)
+        .ok_or_else(|| "probe: missing content-range".to_string())?;
+    let crc = resp
+        .header(wire::HDR_OBJ_CRC)
+        .and_then(|h| u32::from_str_radix(h.trim(), 16).ok());
+    let _ = resp.into_bytes(); // drain ≤ 1 byte; recycles the connection
+    Ok((total, crc))
+}
+
 /// Attempt to complete the entry from one neighbor. Outer `Err` is a local
 /// TAR/output failure (aborts the request); inner `Err` is a neighbor
 /// failure (try the next one). Mutates the shared splice state as bytes are
@@ -459,13 +494,40 @@ fn gfn_try_neighbor<W: Write>(
     run_crc: &mut crate::util::crc32::Hasher,
 ) -> Result<Result<(), String>, BatchError> {
     let chunk = ctx.cfg.chunk_bytes.max(1) as u64;
-    let mut fetch =
-        RangedFetch { http: &ctx.http, addr, pq, chunk, total: None, offset: 0 };
-    // Prefix verification state: the first `*written` neighbor bytes must
-    // reproduce the CRC of what this DT already emitted.
     let target_prefix = *written;
+    let mut expect_crc: Option<u32> = None;
+    let mut fetch =
+        RangedFetch { http: &ctx.http, addr, pq, chunk, total: None, offset: 0, crc: None };
+    if target_prefix > 0 {
+        // Splice fast path: when the probe reveals a stored whole-object
+        // hash, skip the prefix re-download entirely — start the ranged
+        // fetch at the splice offset and verify the *combined* CRC (the
+        // already-emitted prefix extended by the spliced suffix) against
+        // the stored hash at EOF. Without a sidecar (e.g. shard members),
+        // fall back to re-fetching and CRC-checking the prefix.
+        match probe_neighbor_meta(&ctx.http, addr, pq) {
+            Err(e) => return Ok(Err(e)),
+            Ok((total, Some(stored))) => {
+                if let Some(t) = *header_total {
+                    if t != total {
+                        return Ok(Err(format!(
+                            "size mismatch: neighbor has {total}, committed {t}"
+                        )));
+                    }
+                }
+                fetch.total = Some(total);
+                fetch.offset = target_prefix;
+                expect_crc = Some(stored);
+            }
+            Ok((_, None)) => {}
+        }
+    }
+    // Prefix verification state (re-download path only): the first
+    // `target_prefix` neighbor bytes must reproduce the CRC of what this DT
+    // already emitted. On the fast path the fetch starts past the prefix,
+    // which counts as verified — the stored-hash check at EOF covers it.
     let mut check = crate::util::crc32::Hasher::new();
-    let mut verified: u64 = 0;
+    let mut verified: u64 = fetch.offset;
     loop {
         // Reserve the chunk's worst case against the node budget while it is
         // resident (fetched, checked, written through), then release.
@@ -526,6 +588,14 @@ fn gfn_try_neighbor<W: Write>(
     };
     if verified < target_prefix || *written < total {
         return Ok(Err(format!("short object: {}/{total}", *written)));
+    }
+    // Stored-hash verification: whichever path ran, when the neighbor
+    // advertises a PUT-time sidecar the fully emitted entry must hash to
+    // it — a concurrent overwrite (or a bad splice) fails closed here.
+    if let Some(stored) = expect_crc.or(fetch.crc) {
+        if run_crc.clone().finalize() != stored {
+            return Ok(Err("entry crc mismatch vs stored sidecar hash".into()));
+        }
     }
     if header_total.is_none() {
         // Zero-length entry (or empty-after-prefix): header not yet out.
@@ -804,6 +874,134 @@ mod tests {
             "gfn-neighbor",
         )
         .unwrap()
+    }
+
+    /// Range stub that also advertises the payload's CRC-32 sidecar (like a
+    /// real target after a PUT) and records every served `(start, len)` —
+    /// observability for the splice fast path.
+    #[allow(clippy::type_complexity)]
+    fn crc_range_server(
+        payload: Vec<u8>,
+    ) -> (crate::proto::http::HttpServer, Arc<Mutex<Vec<(u64, u64)>>>) {
+        use crate::proto::http::{resolve_range, serve_ranged_bytes, RangeSpec};
+        let log: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let crc = crate::util::crc32::hash(&payload);
+        let log2 = Arc::clone(&log);
+        let srv = crate::proto::http::HttpServer::serve(
+            Arc::new(move |req: crate::proto::http::Request| {
+                match resolve_range(req.header("range"), payload.len() as u64) {
+                    RangeSpec::Slice { start, end } => {
+                        log2.lock().unwrap().push((start, end - start))
+                    }
+                    _ => log2.lock().unwrap().push((0, payload.len() as u64)),
+                }
+                serve_ranged_bytes(&req, &payload)
+                    .with_header(wire::HDR_OBJ_CRC, &format!("{crc:08x}"))
+            }),
+            2,
+            "gfn-crc-neighbor",
+        )
+        .unwrap();
+        (srv, log)
+    }
+
+    fn splice_ctx(neighbor_addr: &str, chunk: usize) -> AssembleCtx {
+        let smap = Arc::new(Smap::new(
+            1,
+            vec![],
+            vec![
+                NodeInfo {
+                    id: "t0".into(),
+                    http_addr: "127.0.0.1:1".into(),
+                    p2p_addr: String::new(),
+                },
+                NodeInfo {
+                    id: "t1".into(),
+                    http_addr: neighbor_addr.to_string(),
+                    p2p_addr: String::new(),
+                },
+            ],
+        ));
+        AssembleCtx {
+            smap,
+            http: HttpClient::new(true),
+            self_target: 0,
+            cfg: GetBatchConfig {
+                sender_wait: Duration::from_millis(5000),
+                gfn_attempts: 2,
+                chunk_bytes: chunk,
+                ..Default::default()
+            },
+            metrics: GetBatchMetrics::new(),
+            clock: RealClock::new(),
+            budget: None,
+        }
+    }
+
+    #[test]
+    fn splice_with_stored_hash_skips_prefix_redownload() {
+        // A sender dies after 400 KiB of a 500 KiB entry were emitted; the
+        // neighbor advertises a stored CRC-32 sidecar. The splice must
+        // start its ranged fetch at the splice offset — not byte 0 — and
+        // verify the combined CRC against the stored hash.
+        let payload: Vec<u8> = (0..500 * 1024u32).map(|i| (i % 197) as u8).collect();
+        let (srv, log) = crc_range_server(payload.clone());
+        let chunk = 16 << 10;
+        let c = splice_ctx(&srv.addr.to_string(), chunk);
+        let exec = Arc::new(DtExec::new(1, request(1, false), 0));
+        let total = payload.len() as u64;
+        let prefix = 400 * 1024usize;
+        exec.buf.append_chunk(0, total, payload[..prefix].to_vec(), true, false);
+        let e2 = Arc::clone(&exec);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            // Duplicate FIRST after partial consumption → mid-entry failure.
+            e2.buf.append_chunk(0, total, vec![9; 10], true, false);
+        });
+        let mut out = Vec::new();
+        let o = assemble(&exec, &c, &mut out).unwrap();
+        t.join().unwrap();
+        assert_eq!((o.delivered, o.recovered), (1, 1));
+        let entries = crate::tar::read_archive(&out).unwrap();
+        assert_eq!(entries[0].data, payload, "spliced bytes identical");
+        let log = log.lock().unwrap();
+        assert!(
+            log.iter().any(|&(s, _)| s == prefix as u64),
+            "fetch resumed at the splice offset: {log:?}"
+        );
+        // Everything beyond the 1-byte probe must be suffix data — the
+        // 400 KiB prefix was NOT re-downloaded.
+        let data_bytes: u64 = log.iter().map(|&(_, l)| l).filter(|&l| l > 1).sum();
+        assert!(
+            data_bytes <= (total - prefix as u64) + chunk as u64,
+            "prefix re-downloaded: {data_bytes} payload bytes served ({log:?})"
+        );
+    }
+
+    #[test]
+    fn splice_hash_mismatch_fails_closed() {
+        // The DT emitted a prefix that does NOT match the neighbor's stored
+        // object (concurrent overwrite). The stored-hash check at EOF must
+        // reject the splice, and with no other neighbor the committed entry
+        // position hard-aborts the request.
+        let payload: Vec<u8> = (0..300 * 1024u32).map(|i| (i % 211) as u8).collect();
+        let (srv, _log) = crc_range_server(payload.clone());
+        let c = splice_ctx(&srv.addr.to_string(), 16 << 10);
+        let exec = Arc::new(DtExec::new(1, request(1, false), 0));
+        let total = payload.len() as u64;
+        let mut bad_prefix = payload[..100 * 1024].to_vec();
+        bad_prefix[0] ^= 0x1;
+        exec.buf.append_chunk(0, total, bad_prefix, true, false);
+        let e2 = Arc::clone(&exec);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            e2.buf.append_chunk(0, total, vec![9; 10], true, false);
+        });
+        let mut out = Vec::new();
+        let err = assemble(&exec, &c, &mut out).unwrap_err();
+        t.join().unwrap();
+        assert!(matches!(err, BatchError::EntryFailed { index: 0, .. }));
+        assert_eq!(c.metrics.hard_failures.get(), 1);
     }
 
     fn request(n: usize, coer: bool) -> BatchRequest {

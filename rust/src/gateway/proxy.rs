@@ -81,10 +81,45 @@ fn route(st: &ProxyState, req: Request) -> Response {
             Some(s) => Response::ok(s.to_json().to_string().into_bytes()),
             None => Response::text(503, "smap not ready"),
         },
+        ("GET", paths::LIST) => route_list(st, req),
         ("GET", paths::METRICS) => Response::ok(st.metrics.render(&st.id).into_bytes()),
         ("GET", paths::HEALTH) => Response::ok(b"ok".to_vec()),
         _ => Response::status(404),
     }
+}
+
+/// Bucket listing: fan out to every target (each holds its HRW slice of
+/// the namespace) and merge — lets a remote store backend pointed at a
+/// proxy list a whole cluster-backed bucket.
+fn route_list(st: &ProxyState, req: Request) -> Response {
+    let smap = match st.smap.get() {
+        Some(s) => s,
+        None => return Response::text(503, "smap not ready"),
+    };
+    let bucket = match req.query_param("bucket") {
+        Some(b) => b,
+        None => return Response::text(400, "missing bucket"),
+    };
+    let mut names: Vec<String> = Vec::new();
+    for t in &smap.targets {
+        let pq = format!("{}?bucket={bucket}", paths::LIST);
+        match st.http.get(&t.http_addr, &pq) {
+            Ok(resp) if resp.status == 200 => match resp.into_bytes() {
+                Ok(body) => names.extend(
+                    String::from_utf8_lossy(&body)
+                        .lines()
+                        .filter(|l| !l.is_empty())
+                        .map(|l| l.to_string()),
+                ),
+                Err(e) => return Response::text(502, &format!("list {}: {e}", t.id)),
+            },
+            Ok(resp) => return Response::text(502, &format!("list {}: http {}", t.id, resp.status)),
+            Err(e) => return Response::text(502, &format!("list {}: {e}", t.id)),
+        }
+    }
+    names.sort();
+    names.dedup();
+    Response::ok(names.join("\n").into_bytes())
 }
 
 /// Object GET/PUT → redirect to the HRW owner target (per-request hop that

@@ -14,10 +14,14 @@
 //! end* — the read side streams just like the emit side:
 //!
 //! 1. **Read** — every producer of entry bytes opens a
-//!    [`store::EntryReader`] (`store::engine::ObjectStore::open_entry` for
-//!    whole objects, a range-bounded reader over the member span for shard
-//!    extraction) and pulls `chunk_bytes` pieces; no call path materializes
-//!    a full entry.
+//!    [`store::EntryReader`] (`ObjectStore::open_entry` for whole objects,
+//!    a range-bounded reader over the member span for shard extraction)
+//!    and pulls `chunk_bytes` pieces; no call path materializes a full
+//!    entry. The store is *tiered*: `ObjectStore` is a bucket → backend
+//!    router over the `store::Backend` trait — local mountpaths
+//!    (`store::local`), remote nodes over HTTP Range (`store::remote`),
+//!    and a read-through LRU chunk cache with sequential read-ahead
+//!    (`store::cache`) composable in front of either.
 //! 2. **Send** — senders cut chunk frames (`proto::frame` FIRST/LAST
 //!    flags) straight off the reader, so sender residency is O(chunk), not
 //!    O(object).
@@ -31,9 +35,12 @@
 //! 5. **Recover** — GFN recovery fetches neighbor copies in HTTP *Range*
 //!    chunks (`proto::http` 206 + `content-range`), each reserved against
 //!    the same DT budget; a sender that dies mid-entry is repaired by a
-//!    CRC-verified byte-identical splice. Sender fan-in completion
-//!    (SENDER_DONE + DT-local done) triggers recovery early instead of
-//!    burning the sender-wait timeout.
+//!    CRC-verified byte-identical splice. When the neighbor stores a
+//!    PUT-time CRC-32 sidecar, the splice skips the prefix re-download:
+//!    the ranged fetch resumes at the splice offset and the combined
+//!    entry CRC is checked against the stored hash. Sender fan-in
+//!    completion (SENDER_DONE + DT-local done) triggers recovery early
+//!    instead of burning the sender-wait timeout.
 //!
 //! Two knobs bound memory end to end: `chunk_bytes` caps any single
 //! producer-side buffer (sender, HTTP object handler, DT-local read,
@@ -46,8 +53,10 @@
 //!   anyhow-style errors (the offline build has no external crates).
 //! - `proto` — minimal HTTP/1.1 (+ chunked transfer), the chunked P2P frame
 //!   protocol, control-plane wire messages.
-//! - `store` — mountpath object store, the streaming `EntryReader` seam,
-//!   and TAR-shard member extraction (range-bounded readers).
+//! - `store` — the tiered store: the `Backend` trait, the `ObjectStore`
+//!   bucket router, local mountpath / remote HTTP / cached tiers, the
+//!   streaming `EntryReader` seam, PUT-time CRC-32 sidecars, and TAR-shard
+//!   member extraction (range-bounded readers on any tier).
 //! - `tar` — ustar codec: whole-entry and streamed-entry writers, readers.
 //! - `cluster` — smap, HRW placement, the in-process node runtime.
 //! - `gateway` — proxy: object redirect + three-phase GetBatch flow.

@@ -90,6 +90,15 @@ pub struct GetBatchMetrics {
     pub recovery_attempts: Counter,
     pub recovery_failures: Counter,
 
+    // -- storage tiers ------------------------------------------------------
+    /// Read-through chunk cache: hits / misses / LRU evictions.
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub cache_evictions: Counter,
+    /// Remote-backend requests issued / payload bytes fetched over HTTP.
+    pub remote_fetches: Counter,
+    pub remote_fetch_bytes: Counter,
+
     // -- resources ----------------------------------------------------------
     /// Bytes currently buffered by in-flight DT assemblies.
     pub dt_buffered_bytes: Gauge,
@@ -100,6 +109,8 @@ pub struct GetBatchMetrics {
     /// even for multi-GiB entries (the peak-residency guarantee made
     /// observable).
     pub sender_peak_buffer: Gauge,
+    /// Bytes currently resident in the node's read-through chunk cache.
+    pub cache_resident_bytes: Gauge,
 }
 
 impl GetBatchMetrics {
@@ -135,6 +146,11 @@ impl GetBatchMetrics {
             c("soft_errors_total", "tolerated soft errors", self.soft_errors.get());
             c("recovery_attempts_total", "GFN recovery attempts", self.recovery_attempts.get());
             c("recovery_failures_total", "failed recoveries", self.recovery_failures.get());
+            c("cache_hits_total", "chunk cache hits", self.cache_hits.get());
+            c("cache_misses_total", "chunk cache misses", self.cache_misses.get());
+            c("cache_evictions_total", "chunk cache LRU evictions", self.cache_evictions.get());
+            c("remote_fetches_total", "remote-backend requests issued", self.remote_fetches.get());
+            c("remote_fetch_bytes_total", "payload bytes fetched from remote backends", self.remote_fetch_bytes.get());
         }
         let mut g = |name: &str, help: &str, v: i64| {
             out.push_str(&format!(
@@ -144,6 +160,7 @@ impl GetBatchMetrics {
         g("dt_buffered_bytes", "bytes buffered by in-flight assemblies", self.dt_buffered_bytes.get());
         g("dt_inflight", "in-flight executions as DT", self.dt_inflight.get());
         g("sender_peak_buffer", "largest single sender-side entry buffer", self.sender_peak_buffer.get());
+        g("cache_resident_bytes", "bytes resident in the chunk cache", self.cache_resident_bytes.get());
         out
     }
 

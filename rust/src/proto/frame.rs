@@ -180,19 +180,41 @@ crate::impl_error! {
     }
 }
 
+/// Frame identity without an owned payload — the borrowed-payload encode
+/// path ([`encode_head_into`]) the sender hot loop uses to cut chunk
+/// frames out of one reusable buffer instead of materializing a `Frame`
+/// (and a fresh payload `Vec`) per chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHead {
+    pub ftype: FrameType,
+    pub flags: u8,
+    pub req_id: u64,
+    pub index: u32,
+}
+
+/// Serialize a frame from its head and a borrowed payload into `out`
+/// (clears it first). Wire-identical to [`encode_into`].
+pub fn encode_head_into(head: FrameHead, payload: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(head.ftype as u8);
+    out.push(head.flags);
+    out.extend_from_slice(&head.req_id.to_le_bytes());
+    out.extend_from_slice(&head.index.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crate::util::crc32::hash(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
 /// Serialize a frame into `out` (clears it first). Separate from the socket
 /// write so the hot path can reuse one scratch buffer per connection.
 pub fn encode_into(f: &Frame, out: &mut Vec<u8>) {
-    out.clear();
-    out.reserve(HEADER_LEN + f.payload.len());
-    out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.push(f.ftype as u8);
-    out.push(f.flags);
-    out.extend_from_slice(&f.req_id.to_le_bytes());
-    out.extend_from_slice(&f.index.to_le_bytes());
-    out.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&crate::util::crc32::hash(&f.payload).to_le_bytes());
-    out.extend_from_slice(&f.payload);
+    encode_head_into(
+        FrameHead { ftype: f.ftype, flags: f.flags, req_id: f.req_id, index: f.index },
+        &f.payload,
+        out,
+    );
 }
 
 pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> Result<(), FrameError> {
@@ -291,6 +313,28 @@ mod tests {
             assert_eq!(&read_frame(&mut cur).unwrap().unwrap(), f);
         }
         assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn borrowed_encode_is_wire_identical() {
+        let frames = vec![
+            Frame::data(7, 3, vec![1, 2, 3, 4]),
+            Frame::data_first_chunk(8, 0, 10, &[1, 2, 3], false),
+            Frame::data_chunk(8, 0, vec![7, 8, 9, 10], true),
+            Frame::soft_err(7, 9, "missing object"),
+            Frame::sender_done(7, 42),
+        ];
+        let (mut owned, mut borrowed) = (Vec::new(), Vec::new());
+        for f in &frames {
+            encode_into(f, &mut owned);
+            encode_head_into(
+                FrameHead { ftype: f.ftype, flags: f.flags, req_id: f.req_id, index: f.index },
+                &f.payload,
+                &mut borrowed,
+            );
+            assert_eq!(owned, borrowed);
+            assert_eq!(&read_frame(&mut Cursor::new(&borrowed)).unwrap().unwrap(), f);
+        }
     }
 
     #[test]

@@ -22,7 +22,16 @@ pub mod paths {
     pub const SMAP: &str = "/v1/cluster/smap";
     /// Health check.
     pub const HEALTH: &str = "/v1/health";
+    /// List a bucket's objects: `/v1/list?bucket={bucket}`. Targets serve
+    /// their local subset; proxies fan out and merge. The remote store
+    /// backend's `list` rides this.
+    pub const LIST: &str = "/v1/list";
 }
+
+/// Response header carrying an object's PUT-time CRC-32 sidecar (8 hex
+/// chars) on object GETs — how the remote backend and GFN splice recovery
+/// learn a stored content hash without an extra round trip.
+pub const HDR_OBJ_CRC: &str = "x-getbatch-crc32";
 
 /// Query parameter carrying the colocation hint (§2.4.1: "clients provide a
 /// colocation hint via a query parameter" so the proxy knows to unmarshal).

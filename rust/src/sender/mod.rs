@@ -5,7 +5,6 @@
 //! autonomous: no sender-to-sender coordination, delivery starts as soon as
 //! local reads complete.
 
-use std::cell::Cell;
 use std::sync::Arc;
 
 use crate::batch::request::BatchEntry;
@@ -13,7 +12,7 @@ use crate::cluster::placement;
 use crate::cluster::smap::Smap;
 use crate::config::GetBatchConfig;
 use crate::metrics::GetBatchMetrics;
-use crate::proto::frame::{chunk_count, Frame};
+use crate::proto::frame::{Frame, FrameHead, FrameType, FLAG_FIRST, FLAG_LAST, FLAG_WHOLE};
 use crate::proto::wire::SenderActivate;
 use crate::store::shard::ShardError;
 use crate::store::{EntryReader, ObjectStore, ShardIndexCache, StoreError};
@@ -42,82 +41,119 @@ pub fn resolve_entry(
     }
 }
 
-/// Lazily turn an [`EntryReader`] into the chunk-frame sequence a sender
-/// transmits, reading at most `chunk_bytes` from disk per step — sender
-/// residency is O(chunk), not O(entry). A read failure *after* the FIRST
-/// frame went out surfaces as a SOFT_ERR frame: the DT fails the slot
-/// promptly and, if bytes were already consumed there, repairs it via the
-/// ranged GFN splice.
-fn reader_frames<'a>(
+/// The sender hot loop as a `PeerPool::send_stream` producer: one entry
+/// open at a time, each chunk read straight off its [`EntryReader`] into
+/// the *reused* payload buffer (`EntryReader::read_chunk_into`) — sender
+/// residency is O(chunk) and the loop allocates no per-chunk `Vec`. A read
+/// failure *after* the FIRST frame went out surfaces as a SOFT_ERR frame:
+/// the DT fails the slot promptly and, if bytes were already consumed
+/// there, repairs it via the ranged GFN splice.
+struct SenderStream<'a> {
     req_id: u64,
-    index: u32,
-    reader: EntryReader,
     chunk_bytes: usize,
+    mine: Vec<(u32, &'a BatchEntry)>,
+    next_entry: usize,
+    /// The entry currently being streamed.
+    current: Option<(u32, EntryReader)>,
+    satisfied: u32,
+    done_sent: bool,
+    store: &'a ObjectStore,
+    shards: &'a ShardIndexCache,
     metrics: &'a GetBatchMetrics,
-) -> impl Iterator<Item = Frame> + 'a {
-    let chunk_bytes = chunk_bytes.max(1);
-    let total = reader.len();
-    let single = total <= chunk_bytes as u64;
-    let mut reader = Some(reader);
-    let mut off: u64 = 0;
-    std::iter::from_fn(move || {
-        let rdr = reader.as_mut()?;
-        if single {
-            let f = match rdr.read_chunk(chunk_bytes) {
-                Ok(bytes) => Frame::data(req_id, index, bytes),
-                Err(e) => Frame::soft_err(req_id, index, &format!("read failure: {e}")),
-            };
-            reader = None;
-            metrics.sender_peak_buffer.set_max(f.payload.len() as i64);
-            return Some(f);
-        }
-        let first = off == 0;
-        match rdr.read_chunk(chunk_bytes) {
-            Ok(bytes) => {
-                metrics.sender_peak_buffer.set_max(bytes.len() as i64);
-                off += bytes.len() as u64;
-                let last = off >= total;
-                if last {
-                    reader = None;
-                }
-                Some(if first {
-                    Frame::data_first_chunk(req_id, index, total, &bytes, last)
-                } else {
-                    Frame::data_chunk(req_id, index, bytes, last)
-                })
-            }
-            Err(e) => {
-                reader = None;
-                Some(Frame::soft_err(req_id, index, &format!("read failure: {e}")))
-            }
-        }
-    })
 }
 
-/// The frame sequence for one resolved entry (or its SOFT_ERR). Bumps the
-/// per-entry sender metrics as a side effect.
-fn entry_frames<'a>(
-    req_id: u64,
-    index: u32,
-    resolved: Result<EntryReader, String>,
-    chunk_bytes: usize,
-    metrics: &'a GetBatchMetrics,
-    satisfied: &'a Cell<u32>,
-) -> Box<dyn Iterator<Item = Frame> + 'a> {
-    match resolved {
-        Ok(reader) => {
-            satisfied.set(satisfied.get() + 1);
-            metrics.sender_entries.inc();
-            metrics.sender_chunks.add(chunk_count(reader.len() as usize, chunk_bytes) as u64);
-            Box::new(reader_frames(req_id, index, reader, chunk_bytes, metrics))
+impl SenderStream<'_> {
+    /// Produce the next frame into `payload`; `None` ends the burst (after
+    /// SENDER_DONE went out).
+    fn next_frame(&mut self, payload: &mut Vec<u8>) -> Option<FrameHead> {
+        loop {
+            if self.done_sent {
+                return None;
+            }
+            if let Some((idx, reader)) = self.current.as_mut() {
+                let idx = *idx;
+                let total = reader.len();
+                let first = reader.pos() == 0;
+                let multi = total > self.chunk_bytes as u64;
+                if first && multi {
+                    // FIRST chunk of a multi-chunk entry carries the 8-byte
+                    // total prefix ahead of the chunk bytes.
+                    payload.extend_from_slice(&total.to_le_bytes());
+                }
+                match reader.read_chunk_into(payload, self.chunk_bytes) {
+                    Ok(_) => {
+                        let last = reader.remaining() == 0;
+                        if last {
+                            self.current = None;
+                        }
+                        self.metrics.sender_chunks.inc();
+                        self.metrics.sender_peak_buffer.set_max(payload.len() as i64);
+                        let flags = if !multi {
+                            FLAG_WHOLE
+                        } else if first {
+                            FLAG_FIRST
+                        } else if last {
+                            FLAG_LAST
+                        } else {
+                            0
+                        };
+                        return Some(FrameHead {
+                            ftype: FrameType::Data,
+                            flags,
+                            req_id: self.req_id,
+                            index: idx,
+                        });
+                    }
+                    Err(e) => {
+                        self.current = None;
+                        payload.clear();
+                        payload.extend_from_slice(format!("read failure: {e}").as_bytes());
+                        return Some(FrameHead {
+                            ftype: FrameType::SoftErr,
+                            flags: 0,
+                            req_id: self.req_id,
+                            index: idx,
+                        });
+                    }
+                }
+            }
+            if self.next_entry >= self.mine.len() {
+                // SENDER_DONE rides the same connection after the last data
+                // frame, carrying the final satisfied count.
+                self.done_sent = true;
+                return Some(FrameHead {
+                    ftype: FrameType::SenderDone,
+                    flags: 0,
+                    req_id: self.req_id,
+                    index: self.satisfied,
+                });
+            }
+            let (idx, e) = self.mine[self.next_entry];
+            self.next_entry += 1;
+            match resolve_entry(self.store, self.shards, e) {
+                Ok(reader) => {
+                    self.satisfied += 1;
+                    self.metrics.sender_entries.inc();
+                    self.current = Some((idx, reader));
+                    // loop around to cut its first chunk
+                }
+                Err(reason) => {
+                    payload.extend_from_slice(reason.as_bytes());
+                    return Some(FrameHead {
+                        ftype: FrameType::SoftErr,
+                        flags: 0,
+                        req_id: self.req_id,
+                        index: idx,
+                    });
+                }
+            }
         }
-        Err(reason) => Box::new(std::iter::once(Frame::soft_err(req_id, index, &reason))),
     }
 }
 
 /// Execute a sender activation: stream every locally-owned entry to the DT,
 /// then emit SENDER_DONE. Runs on the target's background pool. Entries
-/// stream lazily (`send_iter`) so transmission overlaps the next disk read;
+/// stream lazily (`send_stream`) so transmission overlaps the next read;
 /// entries larger than `cfg.chunk_bytes` are split into chunk frames read
 /// straight off an [`EntryReader`], so the DT can emit them before their
 /// last byte arrives, sender residency stays O(chunk) instead of O(object),
@@ -156,23 +192,24 @@ pub fn run_sender(
         }
     }
 
-    let req_id = act.req_id;
-    let chunk_bytes = cfg.chunk_bytes.max(1);
-    let satisfied = Cell::new(0u32);
     // Fully lazy: each entry is opened as a streaming reader when its first
     // frame is cut, and each chunk is read from disk only when transmitted —
-    // sender residency is O(chunk_bytes) regardless of entry size.
-    let data_frames = mine
-        .iter()
-        .flat_map(|(idx, e)| {
-            entry_frames(req_id, *idx, resolve_entry(store, shards, e), chunk_bytes, metrics, &satisfied)
-        });
-    // Chain SENDER_DONE after the last entry on the same connection so the
-    // DT observes completion only after all data frames. `once_with` defers
-    // building it until the lazy entry stream has fully run, so the
-    // satisfied count is final.
-    let all = data_frames.chain(std::iter::once_with(|| Frame::sender_done(req_id, satisfied.get())));
-    if pool.send_iter(&act.dt_peer, all).is_err() {
+    // sender residency is O(chunk_bytes) regardless of entry size, and the
+    // lending `send_stream` path reuses one payload buffer for every chunk
+    // frame of the burst (no per-chunk allocation).
+    let mut stream = SenderStream {
+        req_id: act.req_id,
+        chunk_bytes: cfg.chunk_bytes.max(1),
+        mine,
+        next_entry: 0,
+        current: None,
+        satisfied: 0,
+        done_sent: false,
+        store: store.as_ref(),
+        shards,
+        metrics,
+    };
+    if pool.send_stream(&act.dt_peer, |payload| stream.next_frame(payload)).is_err() {
         // P2P path down: the DT's sender-wait timeout + GFN recovery take
         // over; nothing else to do here.
     }

@@ -1,0 +1,464 @@
+//! The caching tier: a read-through chunk cache that sits between any
+//! [`Backend`] and the [`EntryReader`] handed to senders / DT-local
+//! resolution / GFN — the tf.data-style "caching + prefetching between
+//! storage and consumer" layer that makes a remote-backed bucket fast.
+//!
+//! Objects are cached as `chunk_bytes`-aligned chunks keyed by
+//! `(bucket, object, chunk index)`, so shard members extracted from the
+//! same archive share cached chunks, and a partially read object costs
+//! only the chunks actually touched. Capacity is bytes
+//! (`GetBatchConfig::cache_bytes`) with strict LRU eviction. On a miss the
+//! cache reads the missing chunk *plus the next `readahead_chunks` chunks*
+//! through one sequential ranged read of the inner backend (sequential
+//! read-ahead — the access pattern of TAR assembly), inserting them
+//! chunk-by-chunk so transient residency beyond the cache's own accounting
+//! stays O(chunk_bytes).
+
+use std::collections::{BTreeMap, HashMap};
+use std::io;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::GetBatchMetrics;
+
+use super::engine::{Backend, ChunkSource, EntryReader, StoreError};
+
+type ChunkKey = (String, String, u64);
+
+struct CacheSlot {
+    data: Arc<Vec<u8>>,
+    /// LRU stamp; also the key into `CacheState::lru`.
+    seq: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    map: HashMap<ChunkKey, CacheSlot>,
+    /// Recency order: oldest stamp first.
+    lru: BTreeMap<u64, ChunkKey>,
+    /// Object lengths learned at open time — warm opens (and fully cached
+    /// objects whose backend is unreachable) skip the inner `size` probe.
+    lens: HashMap<(String, String), u64>,
+    bytes: u64,
+    seq: u64,
+}
+
+/// Shared per-node chunk cache (one per target; every cached bucket stack
+/// on the node draws from the same byte budget).
+pub struct ChunkCache {
+    capacity: u64,
+    chunk_bytes: usize,
+    state: Mutex<CacheState>,
+    metrics: Option<Arc<GetBatchMetrics>>,
+    pub hits: crate::metrics::Counter,
+    pub misses: crate::metrics::Counter,
+    pub evictions: crate::metrics::Counter,
+}
+
+impl ChunkCache {
+    pub fn new(
+        capacity: u64,
+        chunk_bytes: usize,
+        metrics: Option<Arc<GetBatchMetrics>>,
+    ) -> ChunkCache {
+        ChunkCache {
+            capacity,
+            chunk_bytes: chunk_bytes.max(1),
+            state: Mutex::new(CacheState::default()),
+            metrics,
+            hits: Default::default(),
+            misses: Default::default(),
+            evictions: Default::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn chunk_bytes(&self) -> usize {
+        self.chunk_bytes
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.lock().unwrap().bytes
+    }
+
+    fn get(&self, bucket: &str, obj: &str, idx: u64) -> Option<Arc<Vec<u8>>> {
+        let mut st = self.state.lock().unwrap();
+        let key = (bucket.to_string(), obj.to_string(), idx);
+        if let Some(slot) = st.map.get(&key) {
+            let (old, data) = (slot.seq, Arc::clone(&slot.data));
+            st.lru.remove(&old);
+            st.seq += 1;
+            let seq = st.seq;
+            st.lru.insert(seq, key.clone());
+            st.map.get_mut(&key).expect("slot present").seq = seq;
+            self.hits.inc();
+            if let Some(m) = &self.metrics {
+                m.cache_hits.inc();
+            }
+            Some(data)
+        } else {
+            self.misses.inc();
+            if let Some(m) = &self.metrics {
+                m.cache_misses.inc();
+            }
+            None
+        }
+    }
+
+    fn insert(&self, bucket: &str, obj: &str, idx: u64, data: Arc<Vec<u8>>) {
+        let len = data.len() as u64;
+        if len > self.capacity {
+            return; // larger than the whole cache: not cacheable
+        }
+        let mut st = self.state.lock().unwrap();
+        let key = (bucket.to_string(), obj.to_string(), idx);
+        if let Some(old) = st.map.remove(&key) {
+            st.lru.remove(&old.seq);
+            st.bytes -= old.data.len() as u64;
+        }
+        // Strict LRU eviction down to capacity.
+        while st.bytes + len > self.capacity {
+            let (&oldest, _) = st.lru.iter().next().expect("bytes > 0 implies lru non-empty");
+            let victim = st.lru.remove(&oldest).expect("oldest present");
+            let slot = st.map.remove(&victim).expect("lru and map in sync");
+            st.bytes -= slot.data.len() as u64;
+            self.evictions.inc();
+            if let Some(m) = &self.metrics {
+                m.cache_evictions.inc();
+            }
+        }
+        st.seq += 1;
+        let seq = st.seq;
+        st.lru.insert(seq, key.clone());
+        st.bytes += len;
+        st.map.insert(key, CacheSlot { data, seq });
+        if let Some(m) = &self.metrics {
+            m.cache_resident_bytes.set(st.bytes as i64);
+        }
+    }
+
+    /// Object length learned by a previous open, if still valid.
+    fn len_of(&self, bucket: &str, obj: &str) -> Option<u64> {
+        self.state.lock().unwrap().lens.get(&(bucket.to_string(), obj.to_string())).copied()
+    }
+
+    fn remember_len(&self, bucket: &str, obj: &str, len: u64) {
+        self.state.lock().unwrap().lens.insert((bucket.to_string(), obj.to_string()), len);
+    }
+
+    /// Drop every cached chunk of one object (after PUT/DELETE).
+    pub fn invalidate_object(&self, bucket: &str, obj: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.lens.remove(&(bucket.to_string(), obj.to_string()));
+        let victims: Vec<ChunkKey> = st
+            .map
+            .keys()
+            .filter(|(b, o, _)| b == bucket && o == obj)
+            .cloned()
+            .collect();
+        for key in victims {
+            if let Some(slot) = st.map.remove(&key) {
+                st.lru.remove(&slot.seq);
+                st.bytes -= slot.data.len() as u64;
+            }
+        }
+        if let Some(m) = &self.metrics {
+            m.cache_resident_bytes.set(st.bytes as i64);
+        }
+    }
+}
+
+/// A [`Backend`] decorator routing all reads through a [`ChunkCache`];
+/// writes and deletes pass through and invalidate. Wrap a
+/// [`RemoteBackend`](super::remote::RemoteBackend) to hide network latency,
+/// or a local backend to serve a hot working set from memory.
+pub struct CachedBackend {
+    inner: Arc<dyn Backend>,
+    cache: Arc<ChunkCache>,
+    readahead_chunks: usize,
+}
+
+impl CachedBackend {
+    pub fn new(
+        inner: Arc<dyn Backend>,
+        cache: Arc<ChunkCache>,
+        readahead_chunks: usize,
+    ) -> CachedBackend {
+        CachedBackend { inner, cache, readahead_chunks }
+    }
+
+    fn source(&self, bucket: &str, obj: &str, base: u64, obj_len: u64) -> CacheSource {
+        CacheSource {
+            inner: Arc::clone(&self.inner),
+            cache: Arc::clone(&self.cache),
+            bucket: bucket.to_string(),
+            obj: obj.to_string(),
+            base,
+            obj_len,
+            readahead_chunks: self.readahead_chunks,
+        }
+    }
+}
+
+impl CachedBackend {
+    /// The object's length: from the cache's remembered lengths when warm
+    /// (no inner round trip — a fully cached object stays readable even if
+    /// the inner backend is unreachable), read through on first open.
+    fn object_len(&self, bucket: &str, obj: &str) -> Result<u64, StoreError> {
+        if let Some(len) = self.cache.len_of(bucket, obj) {
+            return Ok(len);
+        }
+        let len = self.inner.size(bucket, obj)?;
+        self.cache.remember_len(bucket, obj, len);
+        Ok(len)
+    }
+}
+
+impl Backend for CachedBackend {
+    fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
+        let len = self.object_len(bucket, obj)?;
+        Ok(EntryReader::from_source(Box::new(self.source(bucket, obj, 0, len)), len))
+    }
+
+    fn open_entry_range(
+        &self,
+        bucket: &str,
+        obj: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<EntryReader, StoreError> {
+        let total = self.object_len(bucket, obj)?;
+        if offset.saturating_add(len) > total {
+            return Err(StoreError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("range {offset}+{len} past EOF ({total}) in {bucket}/{obj}"),
+            )));
+        }
+        Ok(EntryReader::from_source(Box::new(self.source(bucket, obj, offset, total)), len))
+    }
+
+    fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError> {
+        let r = self.inner.put(bucket, obj, data);
+        self.cache.invalidate_object(bucket, obj);
+        r
+    }
+
+    fn exists(&self, bucket: &str, obj: &str) -> bool {
+        self.inner.exists(bucket, obj)
+    }
+
+    fn size(&self, bucket: &str, obj: &str) -> Result<u64, StoreError> {
+        self.inner.size(bucket, obj)
+    }
+
+    fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError> {
+        let r = self.inner.delete(bucket, obj);
+        self.cache.invalidate_object(bucket, obj);
+        r
+    }
+
+    fn list(&self, bucket: &str) -> Result<Vec<String>, StoreError> {
+        self.inner.list(bucket)
+    }
+
+    fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32> {
+        self.inner.content_crc(bucket, obj)
+    }
+}
+
+/// Source serving entry bytes from object-aligned cached chunks,
+/// read-through to the inner backend on a miss.
+struct CacheSource {
+    inner: Arc<dyn Backend>,
+    cache: Arc<ChunkCache>,
+    bucket: String,
+    obj: String,
+    /// Entry span start within the object (0 for whole objects).
+    base: u64,
+    /// Full object length (chunk alignment is object-relative so shard
+    /// members share chunks).
+    obj_len: u64,
+    readahead_chunks: usize,
+}
+
+impl CacheSource {
+    /// Read-through fill on a miss: one sequential inner read covering the
+    /// missing chunk plus up to `readahead_chunks` successors, inserted
+    /// chunk-by-chunk (transient residency stays O(chunk_bytes)).
+    fn fill(&self, idx: u64) -> Result<Arc<Vec<u8>>, StoreError> {
+        let cb = self.cache.chunk_bytes() as u64;
+        let last_idx = if self.obj_len == 0 { 0 } else { (self.obj_len - 1) / cb };
+        let end_idx = idx.saturating_add(self.readahead_chunks as u64).min(last_idx);
+        let start = idx * cb;
+        let span = (self.obj_len.min((end_idx + 1) * cb)) - start;
+        let mut reader = self.inner.open_entry_range(&self.bucket, &self.obj, start, span)?;
+        let mut first: Option<Arc<Vec<u8>>> = None;
+        for i in idx..=end_idx {
+            let piece = Arc::new(reader.read_chunk(cb as usize)?);
+            self.cache.insert(&self.bucket, &self.obj, i, Arc::clone(&piece));
+            if i == idx {
+                first = Some(piece);
+            }
+        }
+        Ok(first.expect("loop covers idx"))
+    }
+}
+
+impl ChunkSource for CacheSource {
+    fn read_at(&mut self, pos: u64, buf: &mut [u8]) -> io::Result<usize> {
+        let off = self.base + pos;
+        if off >= self.obj_len || buf.is_empty() {
+            return Ok(0);
+        }
+        let cb = self.cache.chunk_bytes() as u64;
+        let idx = off / cb;
+        let chunk = match self.cache.get(&self.bucket, &self.obj, idx) {
+            Some(c) => c,
+            None => self.fill(idx).map_err(io::Error::from)?,
+        };
+        let within = (off - idx * cb) as usize;
+        if within >= chunk.len() {
+            return Ok(0); // object shrank under the cache: reader surfaces EOF
+        }
+        let n = buf.len().min(chunk.len() - within);
+        buf[..n].copy_from_slice(&chunk[within..within + n]);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::local::LocalBackend;
+    use std::path::PathBuf;
+
+    fn setup(name: &str, cache_bytes: u64, chunk: usize, ra: usize) -> (CachedBackend, Arc<ChunkCache>, Arc<LocalBackend>, PathBuf) {
+        let base = std::env::temp_dir().join(format!("gbcache-{}-{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        let local = Arc::new(LocalBackend::open(&base, 2).unwrap());
+        let cache = Arc::new(ChunkCache::new(cache_bytes, chunk, None));
+        let cached = CachedBackend::new(
+            Arc::clone(&local) as Arc<dyn Backend>,
+            Arc::clone(&cache),
+            ra,
+        );
+        (cached, cache, local, base)
+    }
+
+    fn payload(n: usize, seed: u32) -> Vec<u8> {
+        (0..n as u32).map(|i| ((i.wrapping_mul(31).wrapping_add(seed)) % 251) as u8).collect()
+    }
+
+    #[test]
+    fn cold_miss_then_warm_hit_byte_identical() {
+        let (cached, cache, _local, base) = setup("warm", 1 << 20, 4 << 10, 0);
+        let data = payload(50_000, 7);
+        cached.put("b", "o", &data).unwrap();
+        let cold = cached.open_entry("b", "o").unwrap().read_all().unwrap();
+        assert_eq!(cold, data);
+        let cold_misses = cache.misses.get();
+        assert!(cold_misses > 0);
+        let warm = cached.open_entry("b", "o").unwrap().read_all().unwrap();
+        assert_eq!(warm, data);
+        assert_eq!(cache.misses.get(), cold_misses, "warm read misses nothing");
+        assert!(cache.hits.get() >= cold_misses, "every chunk re-served from cache");
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn lru_evicts_under_byte_pressure() {
+        // 4 KiB chunks, 16 KiB cache → 4 resident chunks. Reading 10
+        // distinct 4 KiB objects must evict, stay ≤ capacity, and still
+        // serve every object byte-identically.
+        let (cached, cache, _local, base) = setup("lru", 16 << 10, 4 << 10, 0);
+        for i in 0..10 {
+            cached.put("b", &format!("o{i}"), &payload(4 << 10, i)).unwrap();
+        }
+        for i in 0..10 {
+            let got = cached.open_entry("b", &format!("o{i}")).unwrap().read_all().unwrap();
+            assert_eq!(got, payload(4 << 10, i), "o{i} byte-identical through the cache");
+        }
+        assert!(cache.resident_bytes() <= cache.capacity());
+        assert!(cache.evictions.get() >= 6, "evictions: {}", cache.evictions.get());
+        // LRU order: the most recently read object is still resident.
+        let before = cache.misses.get();
+        let _ = cached.open_entry("b", "o9").unwrap().read_all().unwrap();
+        assert_eq!(cache.misses.get(), before, "hottest object still cached");
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn readahead_prefetches_sequential_chunks() {
+        // 8 chunks of 4 KiB; readahead 3 → the first touch fills chunks
+        // 0..=3 in one inner read; touching chunk 1 next is a pure hit.
+        let (cached, cache, _local, base) = setup("ra", 1 << 20, 4 << 10, 3);
+        let data = payload(32 << 10, 3);
+        cached.put("b", "o", &data).unwrap();
+        let mut r = cached.open_entry("b", "o").unwrap();
+        let first = r.read_chunk(4 << 10).unwrap();
+        assert_eq!(first, &data[..4 << 10]);
+        assert_eq!(cache.misses.get(), 1, "single miss triggers the fill");
+        assert_eq!(cache.resident_bytes(), 4 * (4 << 10), "3 chunks prefetched");
+        let second = r.read_chunk(4 << 10).unwrap();
+        assert_eq!(second, &data[4 << 10..8 << 10]);
+        assert_eq!(cache.misses.get(), 1, "read-ahead made chunk 1 a hit");
+        assert!(cache.hits.get() >= 1);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn warm_object_readable_without_inner_backend() {
+        let (cached, _cache, local, base) = setup("warmlen", 1 << 20, 4 << 10, 1);
+        let data = payload(12 << 10, 4);
+        cached.put("b", "o", &data).unwrap();
+        assert_eq!(cached.open_entry("b", "o").unwrap().read_all().unwrap(), data);
+        // Remove the object behind the cache's back: a fully warm object
+        // must still open (remembered length) and serve every byte from
+        // cached chunks, with zero inner round trips.
+        local.delete("b", "o").unwrap();
+        assert_eq!(cached.open_entry("b", "o").unwrap().read_all().unwrap(), data);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn put_invalidates_cached_chunks() {
+        let (cached, cache, _local, base) = setup("inval", 1 << 20, 4 << 10, 1);
+        cached.put("b", "o", &payload(12 << 10, 1)).unwrap();
+        let _ = cached.open_entry("b", "o").unwrap().read_all().unwrap();
+        assert!(cache.resident_bytes() > 0);
+        let fresh = payload(12 << 10, 2);
+        cached.put("b", "o", &fresh).unwrap();
+        assert_eq!(cache.resident_bytes(), 0, "overwrite dropped stale chunks");
+        assert_eq!(cached.open_entry("b", "o").unwrap().read_all().unwrap(), fresh);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn ranged_members_share_object_chunks() {
+        // Two spans of the same object: the second lands on chunks the
+        // first already cached (object-aligned keys).
+        let (cached, cache, _local, base) = setup("spans", 1 << 20, 4 << 10, 0);
+        let data = payload(16 << 10, 9);
+        cached.put("b", "o", &data).unwrap();
+        let a = cached.open_entry_range("b", "o", 0, 8 << 10).unwrap().read_all().unwrap();
+        assert_eq!(a, &data[..8 << 10]);
+        let miss_after_a = cache.misses.get();
+        let b = cached.open_entry_range("b", "o", 1024, 4096).unwrap().read_all().unwrap();
+        assert_eq!(b, &data[1024..1024 + 4096]);
+        assert_eq!(cache.misses.get(), miss_after_a, "overlapping span fully cached");
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn zero_length_objects_pass_through() {
+        let (cached, _cache, _local, base) = setup("zero", 1 << 20, 4 << 10, 2);
+        cached.put("b", "empty", b"").unwrap();
+        let r = cached.open_entry("b", "empty").unwrap();
+        assert!(r.is_empty());
+        assert_eq!(r.read_all().unwrap(), b"");
+        std::fs::remove_dir_all(base).unwrap();
+    }
+}

@@ -1,14 +1,23 @@
-//! The per-target object store: bucket/object CRUD on local mountpaths.
-//! PUTs are atomic (temp file + rename); GETs support whole-object reads,
-//! range reads (shard member pread), and streaming. This is the substrate
-//! the paper assumes from AIStore — enough of it, faithfully shaped.
+//! The storage-layer seam: the [`Backend`] trait every tier implements
+//! (local disk, remote HTTP, read-through cache), the streaming
+//! [`EntryReader`] all read paths consume, and the [`ObjectStore`] router
+//! that maps buckets onto backend stacks.
+//!
+//! `ObjectStore` used to *be* the local-disk store; that implementation now
+//! lives in [`super::local::LocalBackend`] and this type is reduced to
+//! routing: every bucket resolves to a backend stack (the per-node local
+//! backend by default; remote and cached stacks are installed per bucket
+//! from `GetBatchConfig` or at runtime). Call sites — senders, DT-local
+//! resolution, the HTTP object handler, shard extraction, GFN recovery —
+//! are unchanged: they keep asking the store for readers and the router
+//! hands them whichever tier owns the bucket.
 
-use std::fs::{self, File};
-use std::io::{self, Read, Seek, SeekFrom, Write};
-use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::HashMap;
+use std::io::{self, Read};
+use std::path::Path;
+use std::sync::{Arc, RwLock};
 
-use super::mountpath::Mountpaths;
+use super::local::LocalBackend;
 
 #[derive(Debug)]
 pub enum StoreError {
@@ -31,30 +40,76 @@ crate::impl_error! {
     }
 }
 
+impl From<StoreError> for io::Error {
+    fn from(e: StoreError) -> io::Error {
+        match e {
+            StoreError::NotFound(k) => {
+                io::Error::new(io::ErrorKind::NotFound, format!("object not found: {k}"))
+            }
+            StoreError::Io(e) => e,
+        }
+    }
+}
+
+/// What a tier must provide to serve a bucket (§2.2's store substrate,
+/// generalized): streaming entry readers plus object CRUD. Every
+/// implementation is positionable behind every other — the read-through
+/// cache wraps a local or remote backend, the remote backend fronts
+/// another node's whole stack over HTTP.
+pub trait Backend: Send + Sync {
+    /// Open a whole object as a streaming [`EntryReader`].
+    fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError>;
+    /// Open a byte span of an object as a streaming [`EntryReader`] (shard
+    /// member extraction). The span must lie inside the object.
+    fn open_entry_range(
+        &self,
+        bucket: &str,
+        obj: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<EntryReader, StoreError>;
+    fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError>;
+    fn exists(&self, bucket: &str, obj: &str) -> bool;
+    fn size(&self, bucket: &str, obj: &str) -> Result<u64, StoreError>;
+    fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError>;
+    fn list(&self, bucket: &str) -> Result<Vec<String>, StoreError>;
+    /// The object's PUT-time CRC-32 sidecar, when one is stored — GFN
+    /// splice recovery uses it to verify an already-emitted prefix without
+    /// re-downloading it. `None` when absent or unsupported by the tier.
+    fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32>;
+}
+
+/// The byte source behind an [`EntryReader`]: positioned reads over one
+/// entry's span. `pos` is entry-relative (0 = first byte of the entry);
+/// implementations may optimize the sequential case (the file source keeps
+/// the OS cursor, the remote source keeps a streaming HTTP body open) and
+/// only pay for repositioning on an actual seek.
+pub trait ChunkSource: Send {
+    /// Read up to `buf.len()` bytes at entry-relative `pos`. Returns 0 only
+    /// at (or past) the end of the source's bytes.
+    fn read_at(&mut self, pos: u64, buf: &mut [u8]) -> io::Result<usize>;
+}
+
 /// A seekable, length-known streaming source over one entry's bytes — the
 /// read-side seam of the streaming data path. Producers (senders, the HTTP
 /// object handler, DT-local resolution) pull `chunk_bytes`-sized pieces
 /// instead of materializing whole objects, so read-side residency is
-/// O(chunk), not O(entry). The entry may be a whole object
-/// ([`ObjectStore::open_entry`]) or a byte span inside one (shard member
-/// extraction via [`ObjectStore::open_entry_range`]); a future remote
-/// backend plugs in at exactly this seam.
+/// O(chunk), not O(entry). The entry may be a whole object, a byte span
+/// inside one (shard member extraction), a remote object pulled over HTTP
+/// Range requests, or a cached-chunk view — the tier decides by handing the
+/// reader its [`ChunkSource`].
 pub struct EntryReader {
-    file: File,
-    /// Absolute file offset where the entry begins.
-    base: u64,
+    src: Box<dyn ChunkSource>,
     /// Entry length in bytes.
     len: u64,
-    /// Cursor relative to `base` (bytes already consumed).
+    /// Cursor relative to the entry start (bytes already consumed).
     pos: u64,
 }
 
 impl EntryReader {
-    fn new(mut file: File, base: u64, len: u64) -> Result<EntryReader, StoreError> {
-        if base > 0 {
-            file.seek(SeekFrom::Start(base))?;
-        }
-        Ok(EntryReader { file, base, len, pos: 0 })
+    /// Reader over an arbitrary source with a known length.
+    pub fn from_source(src: Box<dyn ChunkSource>, len: u64) -> EntryReader {
+        EntryReader { src, len, pos: 0 }
     }
 
     /// Declared entry length (known up front — the TAR header and the
@@ -78,22 +133,34 @@ impl EntryReader {
     }
 
     /// Reposition the cursor (clamped to the entry length) — ranged reads
-    /// and GFN splice resume use this.
+    /// and GFN splice resume use this. The source pays for the
+    /// discontinuity lazily on the next read.
     pub fn seek_to(&mut self, pos: u64) -> Result<(), StoreError> {
-        let pos = pos.min(self.len);
-        self.file.seek(SeekFrom::Start(self.base + pos))?;
-        self.pos = pos;
+        self.pos = pos.min(self.len);
         Ok(())
     }
 
     /// Read the next `min(max, remaining)` bytes. Returns an empty vec at
-    /// the end of the entry; errors if the file ends before the declared
+    /// the end of the entry; errors if the source ends before the declared
     /// length (concurrent truncation).
     pub fn read_chunk(&mut self, max: usize) -> Result<Vec<u8>, StoreError> {
-        let want = self.remaining().min(max.max(1) as u64) as usize;
-        let mut buf = vec![0u8; want];
-        Read::read_exact(self, &mut buf)?;
+        let mut buf = Vec::new();
+        self.read_chunk_into(&mut buf, max)?;
         Ok(buf)
+    }
+
+    /// [`EntryReader::read_chunk`] into a caller-owned buffer: appends the
+    /// next `min(max, remaining)` bytes to `buf`, returning the count
+    /// (append — not replace — so a frame prefix already in the buffer is
+    /// preserved; callers clear between frames). The sender hot loop reuses
+    /// one buffer across every chunk frame of a burst instead of allocating
+    /// a fresh `Vec` per chunk.
+    pub fn read_chunk_into(&mut self, buf: &mut Vec<u8>, max: usize) -> Result<usize, StoreError> {
+        let want = self.remaining().min(max.max(1) as u64) as usize;
+        let start = buf.len();
+        buf.resize(start + want, 0);
+        Read::read_exact(self, &mut buf[start..])?;
+        Ok(want)
     }
 
     /// Drain the rest of the entry into one buffer (tests and small-object
@@ -111,7 +178,7 @@ impl Read for EntryReader {
         if want == 0 {
             return Ok(0);
         }
-        let n = self.file.read(&mut buf[..want])?;
+        let n = self.src.read_at(self.pos, &mut buf[..want])?;
         if n == 0 {
             return Err(io::Error::new(
                 io::ErrorKind::UnexpectedEof,
@@ -123,68 +190,65 @@ impl Read for EntryReader {
     }
 }
 
-/// One node's store.
+/// One node's store: a thin router from bucket to backend stack. The
+/// per-node [`LocalBackend`] serves every bucket that has no explicit
+/// route; remote and cache-fronted stacks are installed per bucket (from
+/// `GetBatchConfig` at boot, or at runtime once late-bound addresses are
+/// known).
 pub struct ObjectStore {
-    mounts: Mountpaths,
-    tmp_seq: AtomicU64,
-    tmp_dir: PathBuf,
-    /// Injected read fault rate (failure testing); 0.0 in production.
-    pub fault_rate: std::sync::Mutex<f64>,
-    fault_rng: std::sync::Mutex<crate::util::rng::Rng>,
+    local: Arc<LocalBackend>,
+    routes: RwLock<HashMap<String, Arc<dyn Backend>>>,
 }
 
 impl ObjectStore {
+    /// Open a store whose default (and initially only) tier is the local
+    /// mountpath backend under `base`.
     pub fn open(base: &Path, mountpaths: usize) -> Result<ObjectStore, StoreError> {
-        let mounts = Mountpaths::create(base, mountpaths)?;
-        let tmp_dir = base.join(".tmp");
-        fs::create_dir_all(&tmp_dir)?;
         Ok(ObjectStore {
-            mounts,
-            tmp_seq: AtomicU64::new(0),
-            tmp_dir,
-            fault_rate: std::sync::Mutex::new(0.0),
-            fault_rng: std::sync::Mutex::new(crate::util::rng::Rng::new(0xFA01)),
+            local: Arc::new(LocalBackend::open(base, mountpaths)?),
+            routes: RwLock::new(HashMap::new()),
         })
     }
 
-    fn maybe_fault(&self) -> Result<(), StoreError> {
-        let rate = *self.fault_rate.lock().unwrap();
-        if rate > 0.0 && self.fault_rng.lock().unwrap().bool(rate) {
-            return Err(StoreError::Io(io::Error::new(io::ErrorKind::Other, "injected EIO")));
+    /// The node's local-disk tier (bulk staging, replica planting, fault
+    /// injection — paths that must bypass bucket routing).
+    pub fn local(&self) -> &Arc<LocalBackend> {
+        &self.local
+    }
+
+    /// Install (or replace) the backend stack serving `bucket`.
+    pub fn route_bucket(&self, bucket: &str, backend: Arc<dyn Backend>) {
+        self.routes.write().unwrap().insert(bucket.to_string(), backend);
+    }
+
+    /// Remove a bucket's explicit route (falls back to the local tier).
+    pub fn unroute_bucket(&self, bucket: &str) {
+        self.routes.write().unwrap().remove(bucket);
+    }
+
+    /// The backend stack serving `bucket`.
+    pub fn backend_for(&self, bucket: &str) -> Arc<dyn Backend> {
+        if let Some(b) = self.routes.read().unwrap().get(bucket) {
+            return Arc::clone(b);
         }
-        Ok(())
+        Arc::clone(&self.local) as Arc<dyn Backend>
     }
 
-    fn path(&self, bucket: &str, obj: &str) -> PathBuf {
-        self.mounts.object_path(bucket, obj)
+    /// Injected read-fault rate on the local tier (failure testing).
+    pub fn set_fault_rate(&self, rate: f64) {
+        self.local.set_fault_rate(rate);
     }
 
-    /// Atomic PUT: write to a temp file on the same mountpath, then rename.
     pub fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError> {
-        let dst = self.path(bucket, obj);
-        if let Some(parent) = dst.parent() {
-            fs::create_dir_all(parent)?;
-        }
-        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
-        let tmp = self.tmp_dir.join(format!("put-{seq}.tmp"));
-        {
-            let mut f = File::create(&tmp)?;
-            f.write_all(data)?;
-            f.sync_data().ok(); // best-effort durability; tmpfs in CI
-        }
-        fs::rename(&tmp, &dst)?;
-        Ok(())
+        self.backend_for(bucket).put(bucket, obj, data)
     }
 
     pub fn exists(&self, bucket: &str, obj: &str) -> bool {
-        self.path(bucket, obj).is_file()
+        self.backend_for(bucket).exists(bucket, obj)
     }
 
     pub fn size(&self, bucket: &str, obj: &str) -> Result<u64, StoreError> {
-        let p = self.path(bucket, obj);
-        let md = fs::metadata(&p)
-            .map_err(|_| StoreError::NotFound(format!("{bucket}/{obj}")))?;
-        Ok(md.len())
+        self.backend_for(bucket).size(bucket, obj)
     }
 
     /// Whole-object read (convenience over [`ObjectStore::open_entry`] —
@@ -193,21 +257,25 @@ impl ObjectStore {
         self.open_entry(bucket, obj)?.read_all()
     }
 
-    /// Range read (pread) — convenience over
-    /// [`ObjectStore::open_entry_range`].
-    pub fn get_range(&self, bucket: &str, obj: &str, offset: u64, len: u64) -> Result<Vec<u8>, StoreError> {
+    /// Range read — convenience over [`ObjectStore::open_entry_range`].
+    pub fn get_range(
+        &self,
+        bucket: &str,
+        obj: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<Vec<u8>, StoreError> {
         self.open_entry_range(bucket, obj, offset, len)?.read_all()
     }
 
     /// Open a whole object as a streaming [`EntryReader`].
     pub fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
-        let (file, size) = self.open_with_size(bucket, obj)?;
-        EntryReader::new(file, 0, size)
+        self.backend_for(bucket).open_entry(bucket, obj)
     }
 
     /// Open a byte span of an object as a streaming [`EntryReader`] — shard
-    /// member extraction reads exactly the member's payload without touching
-    /// the rest of the archive. The span must lie inside the object.
+    /// member extraction reads exactly the member's payload without
+    /// touching the rest of the archive.
     pub fn open_entry_range(
         &self,
         bucket: &str,
@@ -215,87 +283,39 @@ impl ObjectStore {
         offset: u64,
         len: u64,
     ) -> Result<EntryReader, StoreError> {
-        let (file, size) = self.open_with_size(bucket, obj)?;
-        if offset.saturating_add(len) > size {
-            return Err(StoreError::Io(io::Error::new(
-                io::ErrorKind::UnexpectedEof,
-                format!("range {offset}+{len} past EOF ({size}) in {bucket}/{obj}"),
-            )));
-        }
-        EntryReader::new(file, offset, len)
+        self.backend_for(bucket).open_entry_range(bucket, obj, offset, len)
     }
 
-    fn open_with_size(&self, bucket: &str, obj: &str) -> Result<(File, u64), StoreError> {
-        self.maybe_fault()?;
-        let p = self.path(bucket, obj);
-        let f = File::open(&p).map_err(|e| {
-            if e.kind() == io::ErrorKind::NotFound {
-                StoreError::NotFound(format!("{bucket}/{obj}"))
-            } else {
-                StoreError::Io(e)
-            }
-        })?;
-        let size = f.metadata()?.len();
-        Ok((f, size))
-    }
-
-    /// Open for streaming (sequential shard loads).
-    pub fn open_read(&self, bucket: &str, obj: &str) -> Result<File, StoreError> {
-        self.maybe_fault()?;
-        File::open(self.path(bucket, obj)).map_err(|e| {
-            if e.kind() == io::ErrorKind::NotFound {
-                StoreError::NotFound(format!("{bucket}/{obj}"))
-            } else {
-                StoreError::Io(e)
-            }
-        })
+    /// Open for sequential streaming (shard index scans) — the whole
+    /// object as a reader, whatever tier serves the bucket.
+    pub fn open_read(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
+        self.open_entry(bucket, obj)
     }
 
     pub fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError> {
-        let p = self.path(bucket, obj);
-        fs::remove_file(&p).map_err(|e| {
-            if e.kind() == io::ErrorKind::NotFound {
-                StoreError::NotFound(format!("{bucket}/{obj}"))
-            } else {
-                StoreError::Io(e)
-            }
-        })
+        self.backend_for(bucket).delete(bucket, obj)
     }
 
-    /// List objects of a bucket (admin/debug; walks all mountpaths).
+    /// List objects of a bucket (admin/debug).
     pub fn list(&self, bucket: &str) -> Result<Vec<String>, StoreError> {
-        let mut out = Vec::new();
-        for root in self.mounts.all_roots() {
-            let bdir = root.join(bucket);
-            if bdir.is_dir() {
-                walk(&bdir, &bdir, &mut out)?;
-            }
-        }
-        out.sort();
-        Ok(out)
+        self.backend_for(bucket).list(bucket)
+    }
+
+    /// The object's PUT-time CRC-32 sidecar, if stored.
+    pub fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32> {
+        self.backend_for(bucket).content_crc(bucket, obj)
     }
 
     pub fn mountpath_count(&self) -> usize {
-        self.mounts.len()
+        self.local.mountpath_count()
     }
-}
-
-fn walk(base: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
-    for entry in fs::read_dir(dir)? {
-        let entry = entry?;
-        let p = entry.path();
-        if p.is_dir() {
-            walk(base, &p, out)?;
-        } else {
-            out.push(p.strip_prefix(base).unwrap().to_string_lossy().into_owned());
-        }
-    }
-    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::fs;
+    use std::path::PathBuf;
 
     fn store(name: &str) -> (ObjectStore, PathBuf) {
         let base = std::env::temp_dir().join(format!("gbstore-{}-{}", std::process::id(), name));
@@ -420,13 +440,66 @@ mod tests {
     }
 
     #[test]
+    fn read_chunk_into_reuses_one_buffer() {
+        let (s, base) = store("into");
+        let data: Vec<u8> = (0..5000u32).map(|i| (i % 241) as u8).collect();
+        s.put("b", "o", &data).unwrap();
+        let mut r = s.open_entry("b", "o").unwrap();
+        let mut buf = Vec::new();
+        let mut rebuilt = Vec::new();
+        loop {
+            buf.clear();
+            let n = r.read_chunk_into(&mut buf, 512).unwrap();
+            assert_eq!(n, buf.len());
+            if n == 0 {
+                break;
+            }
+            rebuilt.extend_from_slice(&buf);
+        }
+        assert_eq!(rebuilt, data);
+        // append semantics: a non-empty buffer keeps its prefix
+        let mut r = s.open_entry("b", "o").unwrap();
+        buf.clear();
+        buf.extend_from_slice(b"PFX");
+        let n = r.read_chunk_into(&mut buf, 4).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(&buf[..3], b"PFX");
+        assert_eq!(&buf[3..], &data[..4]);
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
     fn fault_injection_fails_reads() {
         let (s, base) = store("fault");
         s.put("b", "o", b"x").unwrap();
-        *s.fault_rate.lock().unwrap() = 1.0;
+        s.set_fault_rate(1.0);
         assert!(s.get("b", "o").is_err());
-        *s.fault_rate.lock().unwrap() = 0.0;
+        s.set_fault_rate(0.0);
         assert!(s.get("b", "o").is_ok());
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn router_dispatches_per_bucket() {
+        // A second LocalBackend standing in for a "remote" tier: routed
+        // buckets hit it, unrouted buckets keep hitting the default tier.
+        let (s, base) = store("router");
+        let other_base = base.join("other-tier");
+        fs::create_dir_all(&other_base).unwrap();
+        let other = Arc::new(LocalBackend::open(&other_base, 1).unwrap());
+        other.put("routed", "o", b"from-other-tier").unwrap();
+        s.put("plain", "o", b"from-default").unwrap();
+
+        s.route_bucket("routed", Arc::clone(&other) as Arc<dyn Backend>);
+        assert_eq!(s.get("routed", "o").unwrap(), b"from-other-tier");
+        assert_eq!(s.get("plain", "o").unwrap(), b"from-default");
+        // writes route too
+        s.put("routed", "w", b"write-through").unwrap();
+        assert_eq!(other.get("routed", "w").unwrap(), b"write-through");
+        assert!(!s.local().exists("routed", "w"), "default tier untouched");
+        // dropping the route falls back to the local tier
+        s.unroute_bucket("routed");
+        assert!(matches!(s.get("routed", "w"), Err(StoreError::NotFound(_))));
         fs::remove_dir_all(base).unwrap();
     }
 }

@@ -1,0 +1,307 @@
+//! The local-disk tier: bucket/object CRUD on local mountpaths — the
+//! monolithic `ObjectStore` of earlier revisions, extracted behind the
+//! [`Backend`] trait. PUTs are atomic (temp file + rename) and leave a
+//! CRC-32 sidecar next to the object so recovery paths can verify content
+//! identity without re-reading it; GETs hand out streaming entry readers
+//! (whole object or shard-member span).
+
+use std::fs::{self, File};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::engine::{Backend, ChunkSource, EntryReader, StoreError};
+use super::mountpath::Mountpaths;
+
+/// Sidecar suffix carrying an object's PUT-time CRC-32 (8 hex chars).
+/// Sidecars are internal: hidden from `list`, replaced on overwrite,
+/// removed on delete.
+const CRC_SUFFIX: &str = ".#crc32";
+
+/// Positioned reads over one entry's span of a local file. Keeps the OS
+/// cursor aligned with the last read so the sequential hot path never pays
+/// for a redundant seek.
+struct FileSource {
+    file: File,
+    /// Absolute file offset where the entry begins.
+    base: u64,
+    /// Entry-relative position the OS cursor currently sits at.
+    cursor: u64,
+}
+
+impl ChunkSource for FileSource {
+    fn read_at(&mut self, pos: u64, buf: &mut [u8]) -> io::Result<usize> {
+        if pos != self.cursor {
+            self.file.seek(SeekFrom::Start(self.base + pos))?;
+            self.cursor = pos;
+        }
+        let n = self.file.read(buf)?;
+        self.cursor += n as u64;
+        Ok(n)
+    }
+}
+
+/// One node's local mountpath store (see module docs).
+pub struct LocalBackend {
+    mounts: Mountpaths,
+    tmp_seq: AtomicU64,
+    tmp_dir: PathBuf,
+    /// Injected read fault rate (failure testing); 0.0 in production.
+    fault_rate: std::sync::Mutex<f64>,
+    fault_rng: std::sync::Mutex<crate::util::rng::Rng>,
+}
+
+impl LocalBackend {
+    pub fn open(base: &Path, mountpaths: usize) -> Result<LocalBackend, StoreError> {
+        let mounts = Mountpaths::create(base, mountpaths)?;
+        let tmp_dir = base.join(".tmp");
+        fs::create_dir_all(&tmp_dir)?;
+        Ok(LocalBackend {
+            mounts,
+            tmp_seq: AtomicU64::new(0),
+            tmp_dir,
+            fault_rate: std::sync::Mutex::new(0.0),
+            fault_rng: std::sync::Mutex::new(crate::util::rng::Rng::new(0xFA01)),
+        })
+    }
+
+    /// Injected read fault rate (failure testing); 0.0 disables.
+    pub fn set_fault_rate(&self, rate: f64) {
+        *self.fault_rate.lock().unwrap() = rate;
+    }
+
+    fn maybe_fault(&self) -> Result<(), StoreError> {
+        let rate = *self.fault_rate.lock().unwrap();
+        if rate > 0.0 && self.fault_rng.lock().unwrap().bool(rate) {
+            return Err(StoreError::Io(io::Error::new(io::ErrorKind::Other, "injected EIO")));
+        }
+        Ok(())
+    }
+
+    fn path(&self, bucket: &str, obj: &str) -> PathBuf {
+        self.mounts.object_path(bucket, obj)
+    }
+
+    fn sidecar_path(&self, bucket: &str, obj: &str) -> PathBuf {
+        self.mounts.object_path(bucket, &format!("{obj}{CRC_SUFFIX}"))
+    }
+
+    /// Whole-object read convenience (tests/staging; streaming paths use
+    /// [`Backend::open_entry`]).
+    pub fn get(&self, bucket: &str, obj: &str) -> Result<Vec<u8>, StoreError> {
+        self.open_entry(bucket, obj)?.read_all()
+    }
+
+    fn open_with_size(&self, bucket: &str, obj: &str) -> Result<(File, u64), StoreError> {
+        self.maybe_fault()?;
+        let p = self.path(bucket, obj);
+        let f = File::open(&p).map_err(|e| {
+            if e.kind() == io::ErrorKind::NotFound {
+                StoreError::NotFound(format!("{bucket}/{obj}"))
+            } else {
+                StoreError::Io(e)
+            }
+        })?;
+        let size = f.metadata()?.len();
+        Ok((f, size))
+    }
+
+    fn reader(file: File, base: u64, len: u64) -> Result<EntryReader, StoreError> {
+        let mut src = FileSource { file, base, cursor: 0 };
+        if base > 0 {
+            src.file.seek(SeekFrom::Start(base))?;
+        }
+        Ok(EntryReader::from_source(Box::new(src), len))
+    }
+
+    pub fn mountpath_count(&self) -> usize {
+        self.mounts.len()
+    }
+}
+
+impl Backend for LocalBackend {
+    /// Atomic PUT: write to a temp file on the same filesystem, then
+    /// rename. The CRC-32 sidecar is written (atomically, tmp + rename)
+    /// only *after* the object rename succeeded, so a failed PUT leaves
+    /// the previous object/sidecar pair intact; if the sidecar itself
+    /// cannot be written, any stale one is removed — recovery then sees
+    /// "no hash" rather than a wrong hash and falls back to prefix
+    /// verification instead of failing closed.
+    fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError> {
+        let dst = self.path(bucket, obj);
+        if let Some(parent) = dst.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = self.tmp_dir.join(format!("put-{seq}.tmp"));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(data)?;
+            f.sync_data().ok(); // best-effort durability; tmpfs in CI
+        }
+        fs::rename(&tmp, &dst)?;
+        let side = self.sidecar_path(bucket, obj);
+        let write_sidecar = || -> io::Result<()> {
+            if let Some(parent) = side.parent() {
+                fs::create_dir_all(parent)?;
+            }
+            let stmp = self.tmp_dir.join(format!("crc-{seq}.tmp"));
+            fs::write(&stmp, format!("{:08x}", crate::util::crc32::hash(data)))?;
+            fs::rename(&stmp, &side)?;
+            Ok(())
+        };
+        if write_sidecar().is_err() {
+            let _ = fs::remove_file(&side); // never advertise a stale hash
+        }
+        Ok(())
+    }
+
+    fn exists(&self, bucket: &str, obj: &str) -> bool {
+        self.path(bucket, obj).is_file()
+    }
+
+    fn size(&self, bucket: &str, obj: &str) -> Result<u64, StoreError> {
+        let p = self.path(bucket, obj);
+        // Only a true NotFound maps to NotFound — permission and I/O errors
+        // must surface as Io so callers don't misclassify them (and, e.g.,
+        // GFN doesn't treat a sick disk as a clean miss).
+        let md = fs::metadata(&p).map_err(|e| {
+            if e.kind() == io::ErrorKind::NotFound {
+                StoreError::NotFound(format!("{bucket}/{obj}"))
+            } else {
+                StoreError::Io(e)
+            }
+        })?;
+        Ok(md.len())
+    }
+
+    fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
+        let (file, size) = self.open_with_size(bucket, obj)?;
+        Self::reader(file, 0, size)
+    }
+
+    fn open_entry_range(
+        &self,
+        bucket: &str,
+        obj: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<EntryReader, StoreError> {
+        let (file, size) = self.open_with_size(bucket, obj)?;
+        if offset.saturating_add(len) > size {
+            return Err(StoreError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("range {offset}+{len} past EOF ({size}) in {bucket}/{obj}"),
+            )));
+        }
+        Self::reader(file, offset, len)
+    }
+
+    fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError> {
+        let p = self.path(bucket, obj);
+        fs::remove_file(&p).map_err(|e| {
+            if e.kind() == io::ErrorKind::NotFound {
+                StoreError::NotFound(format!("{bucket}/{obj}"))
+            } else {
+                StoreError::Io(e)
+            }
+        })?;
+        let _ = fs::remove_file(self.sidecar_path(bucket, obj));
+        Ok(())
+    }
+
+    /// List objects of a bucket (admin/debug; walks all mountpaths,
+    /// skipping internal CRC sidecars).
+    fn list(&self, bucket: &str) -> Result<Vec<String>, StoreError> {
+        let mut out = Vec::new();
+        for root in self.mounts.all_roots() {
+            let bdir = root.join(bucket);
+            if bdir.is_dir() {
+                walk(&bdir, &bdir, &mut out)?;
+            }
+        }
+        out.retain(|n| !n.ends_with(CRC_SUFFIX));
+        out.sort();
+        Ok(out)
+    }
+
+    fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32> {
+        let text = fs::read_to_string(self.sidecar_path(bucket, obj)).ok()?;
+        u32::from_str_radix(text.trim(), 16).ok()
+    }
+}
+
+fn walk(base: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            walk(base, &p, out)?;
+        } else {
+            out.push(p.strip_prefix(base).unwrap().to_string_lossy().into_owned());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend(name: &str) -> (LocalBackend, PathBuf) {
+        let base = std::env::temp_dir().join(format!("gblocal-{}-{}", std::process::id(), name));
+        let _ = fs::remove_dir_all(&base);
+        fs::create_dir_all(&base).unwrap();
+        (LocalBackend::open(&base, 3).unwrap(), base)
+    }
+
+    #[test]
+    fn crc_sidecar_written_and_replaced() {
+        let (b, base) = backend("crc");
+        b.put("b", "o", b"hello").unwrap();
+        assert_eq!(b.content_crc("b", "o"), Some(crate::util::crc32::hash(b"hello")));
+        b.put("b", "o", b"other-bytes").unwrap();
+        assert_eq!(b.content_crc("b", "o"), Some(crate::util::crc32::hash(b"other-bytes")));
+        assert_eq!(b.content_crc("b", "nope"), None);
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn sidecars_hidden_from_list_and_removed_on_delete() {
+        let (b, base) = backend("side");
+        b.put("b", "a", b"1").unwrap();
+        b.put("b", "dir/nested", b"2").unwrap();
+        assert_eq!(b.list("b").unwrap(), vec!["a", "dir/nested"]);
+        b.delete("b", "a").unwrap();
+        assert_eq!(b.content_crc("b", "a"), None, "sidecar removed with object");
+        assert_eq!(b.list("b").unwrap(), vec!["dir/nested"]);
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn size_maps_only_true_notfound_to_notfound() {
+        let base = std::env::temp_dir()
+            .join(format!("gblocal-{}-sizemap", std::process::id()));
+        let _ = fs::remove_dir_all(&base);
+        fs::create_dir_all(&base).unwrap();
+        // Single mountpath so the colliding paths share a root.
+        let b = LocalBackend::open(&base, 1).unwrap();
+        assert!(matches!(b.size("b", "absent"), Err(StoreError::NotFound(_))));
+        // A path through a *file* component fails with ENOTDIR — an I/O
+        // error, not a clean miss; it must not be reported as NotFound.
+        b.put("b", "o", b"x").unwrap();
+        assert!(matches!(b.size("b", "o/sub"), Err(StoreError::Io(_))));
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn fault_injection_on_reads() {
+        let (b, base) = backend("fault");
+        b.put("b", "o", b"x").unwrap();
+        b.set_fault_rate(1.0);
+        assert!(b.open_entry("b", "o").is_err());
+        b.set_fault_rate(0.0);
+        assert_eq!(b.get("b", "o").unwrap(), b"x");
+        fs::remove_dir_all(base).unwrap();
+    }
+}

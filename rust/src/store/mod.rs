@@ -1,10 +1,19 @@
-//! Per-node object store substrate: buckets + objects on a local filesystem
-//! spread over simulated mountpaths (disks), with TAR-shard member
-//! extraction backed by a cached shard index.
+//! Per-node storage substrate, tiered: the [`Backend`] trait every tier
+//! implements, the local mountpath backend, a remote HTTP backend (objects
+//! living on another node / S3-like endpoint), a read-through LRU chunk
+//! cache with sequential read-ahead, and the [`ObjectStore`] router mapping
+//! bucket → backend stack. TAR-shard member extraction rides the same
+//! streaming [`EntryReader`] seam on every tier.
 
+pub mod cache;
 pub mod engine;
+pub mod local;
 pub mod mountpath;
+pub mod remote;
 pub mod shard;
 
-pub use engine::{EntryReader, ObjectStore, StoreError};
+pub use cache::{CachedBackend, ChunkCache};
+pub use engine::{Backend, ChunkSource, EntryReader, ObjectStore, StoreError};
+pub use local::LocalBackend;
+pub use remote::RemoteBackend;
 pub use shard::ShardIndexCache;

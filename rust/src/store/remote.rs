@@ -1,0 +1,235 @@
+//! The remote tier: a [`Backend`] that fronts buckets whose objects live
+//! on another node (or an S3-like endpoint speaking the same contract)
+//! over the crate's internal HTTP object API. Reads ride the existing
+//! Range support (`proto::http` 206 + `content-range`): a reader holds one
+//! streaming ranged GET open and pulls `chunk_bytes` pieces off it, so
+//! remote reads have the same O(chunk) residency as local ones; a seek
+//! drops the stream and re-issues the range at the new offset. Metadata
+//! (size, stored CRC-32 sidecar) comes from a 1-byte ranged probe — the
+//! `content-range` total plus the `x-getbatch-crc32` response header.
+//!
+//! Point `addr` at a target for single-node buckets, or at a proxy to
+//! front a whole remote cluster (object requests follow the proxy's 307
+//! redirect to the HRW owner; `list` fans out proxy-side).
+
+use std::io::{self, Read};
+use std::sync::Arc;
+
+use crate::metrics::GetBatchMetrics;
+use crate::proto::http::{content_range_total, HttpClient};
+use crate::proto::wire;
+
+use super::engine::{Backend, ChunkSource, EntryReader, StoreError};
+
+pub struct RemoteBackend {
+    client: HttpClient,
+    addr: String,
+    metrics: Option<Arc<GetBatchMetrics>>,
+}
+
+impl RemoteBackend {
+    pub fn new(addr: &str, metrics: Option<Arc<GetBatchMetrics>>) -> RemoteBackend {
+        RemoteBackend { client: HttpClient::new(true), addr: addr.to_string(), metrics }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn pq(bucket: &str, obj: &str) -> String {
+        format!("{}?local=true", wire::object_path(bucket, obj))
+    }
+
+    fn count_fetch(&self, bytes: u64) {
+        if let Some(m) = &self.metrics {
+            m.remote_fetches.inc();
+            m.remote_fetch_bytes.add(bytes);
+        }
+    }
+
+    /// 1-byte ranged probe: learns (total length, stored CRC-32 sidecar).
+    fn probe(&self, bucket: &str, obj: &str) -> Result<(u64, Option<u32>), StoreError> {
+        self.count_fetch(0);
+        let pq = Self::pq(bucket, obj);
+        let resp = self.client.get_range(&self.addr, &pq, 0, 1).map_err(StoreError::Io)?;
+        match resp.status {
+            206 => {
+                let total = resp
+                    .header("content-range")
+                    .and_then(content_range_total)
+                    .ok_or_else(|| {
+                        StoreError::Io(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("remote {}: missing content-range", self.addr),
+                        ))
+                    })?;
+                let crc = resp
+                    .header(wire::HDR_OBJ_CRC)
+                    .and_then(|h| u32::from_str_radix(h.trim(), 16).ok());
+                let _ = resp.into_bytes(); // drain ≤ 1 byte; recycles the conn
+                Ok((total, crc))
+            }
+            404 => Err(StoreError::NotFound(format!("{bucket}/{obj} @ {}", self.addr))),
+            s => Err(StoreError::Io(io::Error::new(
+                io::ErrorKind::Other,
+                format!("remote {}: http {s}", self.addr),
+            ))),
+        }
+    }
+
+    fn open_span(
+        &self,
+        bucket: &str,
+        obj: &str,
+        base: u64,
+        len: u64,
+    ) -> Result<EntryReader, StoreError> {
+        let src = RemoteSource {
+            client: self.client.clone(),
+            addr: self.addr.clone(),
+            pq: Self::pq(bucket, obj),
+            base,
+            len,
+            metrics: self.metrics.clone(),
+            stream: None,
+        };
+        Ok(EntryReader::from_source(Box::new(src), len))
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
+        let (total, _) = self.probe(bucket, obj)?;
+        self.open_span(bucket, obj, 0, total)
+    }
+
+    fn open_entry_range(
+        &self,
+        bucket: &str,
+        obj: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<EntryReader, StoreError> {
+        let (total, _) = self.probe(bucket, obj)?;
+        if offset.saturating_add(len) > total {
+            return Err(StoreError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("range {offset}+{len} past EOF ({total}) in {bucket}/{obj}"),
+            )));
+        }
+        self.open_span(bucket, obj, offset, len)
+    }
+
+    fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError> {
+        self.count_fetch(0);
+        let resp = self.client.put(&self.addr, &Self::pq(bucket, obj), data).map_err(StoreError::Io)?;
+        match resp.status {
+            200 => Ok(()),
+            s => Err(StoreError::Io(io::Error::new(
+                io::ErrorKind::Other,
+                format!("remote put {}: http {s}", self.addr),
+            ))),
+        }
+    }
+
+    fn exists(&self, bucket: &str, obj: &str) -> bool {
+        self.probe(bucket, obj).is_ok()
+    }
+
+    fn size(&self, bucket: &str, obj: &str) -> Result<u64, StoreError> {
+        Ok(self.probe(bucket, obj)?.0)
+    }
+
+    fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError> {
+        self.count_fetch(0);
+        let resp = self
+            .client
+            .request("DELETE", &self.addr, &Self::pq(bucket, obj), &[])
+            .map_err(StoreError::Io)?;
+        match resp.status {
+            200 => Ok(()),
+            404 => Err(StoreError::NotFound(format!("{bucket}/{obj} @ {}", self.addr))),
+            s => Err(StoreError::Io(io::Error::new(
+                io::ErrorKind::Other,
+                format!("remote delete {}: http {s}", self.addr),
+            ))),
+        }
+    }
+
+    fn list(&self, bucket: &str) -> Result<Vec<String>, StoreError> {
+        self.count_fetch(0);
+        let pq = format!("{}?bucket={bucket}", wire::paths::LIST);
+        let resp = self.client.get(&self.addr, &pq).map_err(StoreError::Io)?;
+        if resp.status != 200 {
+            return Err(StoreError::Io(io::Error::new(
+                io::ErrorKind::Other,
+                format!("remote list {}: http {}", self.addr, resp.status),
+            )));
+        }
+        let body = resp.into_bytes().map_err(StoreError::Io)?;
+        Ok(String::from_utf8_lossy(&body)
+            .lines()
+            .filter(|l| !l.is_empty())
+            .map(|l| l.to_string())
+            .collect())
+    }
+
+    fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32> {
+        self.probe(bucket, obj).ok().and_then(|(_, crc)| crc)
+    }
+}
+
+/// Streaming source over one remote entry span: lazily opens a ranged GET
+/// covering `[base+pos, base+len)` and reads sequentially off its chunked
+/// body; a non-sequential `read_at` (seek) drops the stream and re-issues
+/// the range at the new position.
+struct RemoteSource {
+    client: HttpClient,
+    addr: String,
+    pq: String,
+    /// Entry span start within the remote object.
+    base: u64,
+    /// Entry span length.
+    len: u64,
+    metrics: Option<Arc<GetBatchMetrics>>,
+    /// Open response body + the entry-relative position of its next byte.
+    stream: Option<(crate::proto::http::BodyReader, u64)>,
+}
+
+impl ChunkSource for RemoteSource {
+    fn read_at(&mut self, pos: u64, buf: &mut [u8]) -> io::Result<usize> {
+        if pos >= self.len || buf.is_empty() {
+            return Ok(0);
+        }
+        if self.stream.as_ref().map(|(_, at)| *at) != Some(pos) {
+            self.stream = None;
+            if let Some(m) = &self.metrics {
+                m.remote_fetches.inc();
+            }
+            let resp = self
+                .client
+                .get_range(&self.addr, &self.pq, self.base + pos, self.len - pos)?;
+            if resp.status != 206 {
+                return Err(io::Error::new(
+                    io::ErrorKind::Other,
+                    format!("remote read {}: http {}", self.addr, resp.status),
+                ));
+            }
+            self.stream = Some((resp.body, pos));
+        }
+        let (body, at) = self.stream.as_mut().expect("stream just ensured");
+        let n = body.read(buf)?;
+        if n == 0 {
+            // Server delivered fewer bytes than the advertised span (object
+            // shrank / truncated response): drop the stream so a retry
+            // re-issues the range; the reader surfaces UnexpectedEof.
+            self.stream = None;
+            return Ok(0);
+        }
+        *at += n as u64;
+        if let Some(m) = &self.metrics {
+            m.remote_fetch_bytes.add(n as u64);
+        }
+        Ok(n)
+    }
+}

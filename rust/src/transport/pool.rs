@@ -168,6 +168,48 @@ impl PeerPool {
         Ok(())
     }
 
+    /// Lending variant of [`PeerPool::send_iter`] for the sender hot loop:
+    /// `fill` appends the next frame's wire payload into the reusable
+    /// buffer (cleared between frames) and returns its head, or `None` to
+    /// end the burst — one payload allocation and one encode buffer serve
+    /// every chunk frame, instead of a fresh `Vec` per chunk. Stale-pool
+    /// handling mirrors `send_iter`: a dead pooled socket is replaced only
+    /// while nothing of the burst has been delivered.
+    pub fn send_stream(
+        &self,
+        addr: &str,
+        mut fill: impl FnMut(&mut Vec<u8>) -> Option<frame::FrameHead>,
+    ) -> io::Result<()> {
+        let (mut stream, mut from_pool) = self.checkout(addr)?;
+        let mut payload = Vec::with_capacity(64 * 1024);
+        let mut scratch = Vec::with_capacity(64 * 1024);
+        let mut sent_any = false;
+        loop {
+            payload.clear();
+            let head = match fill(&mut payload) {
+                Some(h) => h,
+                None => break,
+            };
+            frame::encode_head_into(head, &payload, &mut scratch);
+            match stream.write_all(&scratch) {
+                Ok(()) => {}
+                Err(e) => {
+                    if sent_any || !from_pool {
+                        return Err(e);
+                    }
+                    // Stale pooled socket detected on first write: retry the
+                    // same frame on a fresh connection.
+                    stream = self.connect_fresh(addr)?;
+                    from_pool = false;
+                    stream.write_all(&scratch)?;
+                }
+            }
+            sent_any = true;
+        }
+        self.checkin(addr, stream);
+        Ok(())
+    }
+
     /// Reap idle connections past the timeout (called opportunistically).
     pub fn reap(&self) {
         let mut idle = self.idle.lock().unwrap();
@@ -346,6 +388,59 @@ mod tests {
             }
         }
         assert_eq!(rebuilt, payload);
+    }
+
+    #[test]
+    fn send_stream_delivers_borrowed_frames() {
+        // The lending path must be wire-identical to owned frames: a
+        // 3-chunk entry produced into one reused payload buffer arrives
+        // reassemblable and in order, followed by SENDER_DONE.
+        let (srv, rx) = collector();
+        let pool = PeerPool::new(Duration::from_secs(5));
+        let addr = srv.addr.to_string();
+        let payload: Vec<u8> = (0..3000u32).map(|i| (i % 239) as u8).collect();
+        let chunk = 1024usize;
+        let total = payload.len() as u64;
+        let mut off = 0usize;
+        let mut done = false;
+        pool.send_stream(&addr, |buf| {
+            if done {
+                return None;
+            }
+            if off >= payload.len() {
+                done = true;
+                return Some(frame::FrameHead {
+                    ftype: frame::FrameType::SenderDone,
+                    flags: 0,
+                    req_id: 9,
+                    index: 1,
+                });
+            }
+            let first = off == 0;
+            let end = (off + chunk).min(payload.len());
+            let last = end == payload.len();
+            if first && !last {
+                buf.extend_from_slice(&total.to_le_bytes());
+            }
+            buf.extend_from_slice(&payload[off..end]);
+            off = end;
+            let flags = if first { frame::FLAG_FIRST } else if last { frame::FLAG_LAST } else { 0 };
+            Some(frame::FrameHead { ftype: frame::FrameType::Data, flags, req_id: 9, index: 0 })
+        })
+        .unwrap();
+        let mut rebuilt = Vec::new();
+        loop {
+            let f = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            if f.ftype == frame::FrameType::SenderDone {
+                break;
+            }
+            let (t, bytes) = f.chunk_parts().unwrap();
+            if f.is_first() {
+                assert_eq!(t, total);
+            }
+            rebuilt.extend_from_slice(bytes);
+        }
+        assert_eq!(rebuilt, payload, "borrowed frames reassemble byte-identically");
     }
 
     #[test]

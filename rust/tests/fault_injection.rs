@@ -65,7 +65,7 @@ fn injected_read_faults_recovered_or_surfaced() {
     // inject 100% read failure on one target: its objects fail locally,
     // GFN tries neighbors (who don't own replicas → also fail) → with coer
     // the entries become placeholders, others succeed.
-    *c.targets[0].store.fault_rate.lock().unwrap() = 1.0;
+    c.targets[0].store.set_fault_rate(1.0);
     let client = Client::new(&c.proxy_addr());
     let entries: Vec<BatchEntry> = names.iter().map(|n| BatchEntry::obj("b", n)).collect();
     let items = client
@@ -95,7 +95,7 @@ fn gfn_recovery_succeeds_when_neighbor_has_object() {
             t.store.put("b", key, b"precious").unwrap();
         }
     }
-    *c.targets[owner].store.fault_rate.lock().unwrap() = 1.0;
+    c.targets[owner].store.set_fault_rate(1.0);
     let items = client
         .get_batch_collect(
             &BatchRequest::new(vec![BatchEntry::obj("b", key)]).continue_on_err(true),
