@@ -198,7 +198,7 @@ fn main() {
         2,
         GetBatchConfig { cache_bytes: 32 << 20, readahead_chunks: 2, ..Default::default() },
     );
-    serving.route_remote_bucket("rb", &storage.proxy_addr(), true);
+    serving.route_remote_bucket("rb", &[&storage.proxy_addr()], true);
     let sclient = Client::new(&serving.proxy_addr());
     let rb_entries = vec![BatchEntry::obj("rb", "o")];
     let warm_req = BatchRequest::new(rb_entries);

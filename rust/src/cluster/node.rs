@@ -217,30 +217,37 @@ impl Cluster {
         Ok(())
     }
 
-    /// Route `bucket` on **every** target to a remote backend at `addr` (a
-    /// target or proxy of another cluster), optionally fronted by each
-    /// target's chunk cache — how endpoints only known at runtime
-    /// (ephemeral ports) are attached after boot; config-time routing uses
-    /// `GetBatchConfig::buckets`.
-    pub fn route_remote_bucket(&self, bucket: &str, addr: &str, cached: bool) {
+    /// Route `bucket` on **every** target to a remote backend over the
+    /// endpoint set `addrs` (targets or proxies of another cluster — all
+    /// serving the same data), optionally fronted by each target's chunk
+    /// cache — how endpoints only known at runtime (ephemeral ports) are
+    /// attached after boot; config-time routing uses
+    /// `GetBatchConfig::buckets`. Reads select among healthy endpoints and
+    /// fail over per `endpoint_failure_limit` / `endpoint_probe_ms`.
+    ///
+    /// Panics if `addrs` is empty — an endpoint-less remote bucket cannot
+    /// serve anything (the config path rejects the same misconfiguration
+    /// at boot).
+    pub fn route_remote_bucket(&self, bucket: &str, addrs: &[&str], cached: bool) {
         for t in &self.targets {
-            self.route_remote_bucket_on(t.idx, bucket, addr, cached);
+            self.route_remote_bucket_on(t.idx, bucket, addrs, cached);
         }
     }
 
     /// [`Cluster::route_remote_bucket`] for a single target — asymmetric
     /// topologies (e.g. one node keeping a local replica of a bucket the
     /// others front remotely).
-    pub fn route_remote_bucket_on(&self, target: usize, bucket: &str, addr: &str, cached: bool) {
+    pub fn route_remote_bucket_on(&self, target: usize, bucket: &str, addrs: &[&str], cached: bool) {
         let t = &self.targets[target];
-        let remote: Arc<dyn Backend> =
-            Arc::new(RemoteBackend::new(addr, Some(Arc::clone(&t.metrics))));
-        let stack: Arc<dyn Backend> = if cached && self.cfg.getbatch.cache_bytes > 0 {
-            Arc::new(CachedBackend::new(
-                remote,
-                Arc::clone(&t.cache),
-                self.cfg.getbatch.readahead_chunks,
-            ))
+        let gb = &self.cfg.getbatch;
+        let remote: Arc<dyn Backend> = Arc::new(RemoteBackend::multi(
+            addrs,
+            gb.endpoint_failure_limit,
+            gb.endpoint_probe,
+            Some(Arc::clone(&t.metrics)),
+        ));
+        let stack: Arc<dyn Backend> = if cached && gb.cache_bytes > 0 {
+            Arc::new(CachedBackend::new(remote, Arc::clone(&t.cache), gb.readahead_chunks))
         } else {
             remote
         };
@@ -264,10 +271,16 @@ fn bucket_stack(
     metrics: &Arc<GetBatchMetrics>,
 ) -> Result<Option<Arc<dyn Backend>>, String> {
     let base: Arc<dyn Backend> = match spec.backend.as_str() {
-        "remote" if !spec.remote_addr.is_empty() => {
-            Arc::new(RemoteBackend::new(&spec.remote_addr, Some(Arc::clone(metrics))))
+        "remote" if !spec.remote_addrs.is_empty() => {
+            let addrs: Vec<&str> = spec.remote_addrs.iter().map(|a| a.as_str()).collect();
+            Arc::new(RemoteBackend::multi(
+                &addrs,
+                gb.endpoint_failure_limit,
+                gb.endpoint_probe,
+                Some(Arc::clone(metrics)),
+            ))
         }
-        "remote" => return Err("backend \"remote\" requires remote_addr".into()),
+        "remote" => return Err("backend \"remote\" requires remote_addrs".into()),
         "local" | "" => Arc::clone(store.local()) as Arc<dyn Backend>,
         other => return Err(format!("unknown backend \"{other}\" (expected local|remote)")),
     };

@@ -17,11 +17,14 @@ pub struct BucketSpec {
     pub name: String,
     /// Backend kind: `"local"` or `"remote"`.
     pub backend: String,
-    /// `host:port` of the node (or proxy) fronting a remote bucket; unused
-    /// for local. Buckets whose endpoints are only known at runtime
-    /// (ephemeral ports) are routed via `Cluster::route_remote_bucket`
-    /// instead.
-    pub remote_addr: String,
+    /// `host:port` endpoints of the nodes (or proxies) fronting a remote
+    /// bucket; unused for local. All endpoints must serve the same data
+    /// (replicated front) — reads select among the healthy ones and fail
+    /// over on endpoint faults (`endpoint_failure_limit`,
+    /// `endpoint_probe_ms`). Buckets whose endpoints are only known at
+    /// runtime (ephemeral ports) are routed via
+    /// `Cluster::route_remote_bucket` instead.
+    pub remote_addrs: Vec<String>,
     /// Route reads through the node's read-through chunk cache
     /// (`cache_bytes` capacity, `readahead_chunks` sequential read-ahead).
     pub cache: bool,
@@ -32,15 +35,32 @@ impl BucketSpec {
         Value::obj()
             .set("name", Value::str(&self.name))
             .set("backend", Value::str(&self.backend))
-            .set("remote_addr", Value::str(&self.remote_addr))
+            .set(
+                "remote_addrs",
+                Value::Arr(self.remote_addrs.iter().map(|a| Value::str(a)).collect()),
+            )
             .set("cache", Value::Bool(self.cache))
     }
 
     pub fn from_json(v: &Value) -> Option<BucketSpec> {
+        // `remote_addrs` (list) is canonical; the pre-failover scalar
+        // `remote_addr` is still accepted from older config files.
+        let mut addrs: Vec<String> = v
+            .get("remote_addrs")
+            .and_then(|a| a.as_arr())
+            .map(|xs| xs.iter().filter_map(|x| x.as_str().map(|s| s.to_string())).collect())
+            .unwrap_or_default();
+        if addrs.is_empty() {
+            if let Some(a) = v.str_field("remote_addr") {
+                if !a.is_empty() {
+                    addrs.push(a.to_string());
+                }
+            }
+        }
         Some(BucketSpec {
             name: v.str_field("name")?.to_string(),
             backend: v.str_field("backend").unwrap_or("local").to_string(),
-            remote_addr: v.str_field("remote_addr").unwrap_or("").to_string(),
+            remote_addrs: addrs,
             cache: v.bool_field("cache").unwrap_or(false),
         })
     }
@@ -99,6 +119,15 @@ pub struct GetBatchConfig {
     /// *following* chunks through one ranged read of the inner backend
     /// (clamped so one fill never exceeds `dt_buffer_bytes`).
     pub readahead_chunks: usize,
+    /// Remote endpoint circuit breaker: this many *consecutive* failed
+    /// operations mark an endpoint unhealthy (reads stop selecting it
+    /// while healthy peers remain). Clamped to ≥ 1.
+    pub endpoint_failure_limit: u32,
+    /// How often an unhealthy remote endpoint is re-tried: the interval
+    /// between active `/v1/health` probes and between half-open trial
+    /// admissions of live traffic. Smaller means faster recovery after an
+    /// endpoint returns, at the cost of more probe traffic.
+    pub endpoint_probe: Duration,
     /// Per-bucket backend routing (see [`BucketSpec`]); buckets not listed
     /// are served by the node's local backend, uncached.
     pub buckets: Vec<BucketSpec>,
@@ -120,6 +149,8 @@ impl Default for GetBatchConfig {
             budget_overrun_limit: 4,
             cache_bytes: 64 << 20,
             readahead_chunks: 2,
+            endpoint_failure_limit: 3,
+            endpoint_probe: Duration::from_millis(1000),
             buckets: Vec::new(),
         }
     }
@@ -140,6 +171,12 @@ impl GetBatchConfig {
         // so a single fill can never out-size the node's data-plane budget.
         let max_ra = (c.dt_buffer_bytes / c.chunk_bytes as u64).saturating_sub(1) as usize;
         c.readahead_chunks = c.readahead_chunks.min(max_ra);
+        // A failure limit of 0 would open endpoint circuits spontaneously,
+        // and a zero probe interval would disable trial/probe rate-limiting
+        // (every operation would lead with a broken endpoint and spawn a
+        // probe thread).
+        c.endpoint_failure_limit = c.endpoint_failure_limit.max(1);
+        c.endpoint_probe = c.endpoint_probe.max(Duration::from_millis(10));
         c
     }
 
@@ -158,6 +195,8 @@ impl GetBatchConfig {
             .set("budget_overrun_limit", Value::num(self.budget_overrun_limit as f64))
             .set("cache_bytes", Value::num(self.cache_bytes as f64))
             .set("readahead_chunks", Value::num(self.readahead_chunks as f64))
+            .set("endpoint_failure_limit", Value::num(self.endpoint_failure_limit as f64))
+            .set("endpoint_probe_ms", Value::num(self.endpoint_probe.as_millis() as f64))
             .set("buckets", Value::Arr(self.buckets.iter().map(BucketSpec::to_json).collect()))
     }
 
@@ -198,6 +237,14 @@ impl GetBatchConfig {
                 .u64_field("readahead_chunks")
                 .map(|x| x as usize)
                 .unwrap_or(d.readahead_chunks),
+            endpoint_failure_limit: v
+                .u64_field("endpoint_failure_limit")
+                .map(|x| x as u32)
+                .unwrap_or(d.endpoint_failure_limit),
+            endpoint_probe: v
+                .u64_field("endpoint_probe_ms")
+                .map(Duration::from_millis)
+                .unwrap_or(d.endpoint_probe),
             buckets: v
                 .get("buckets")
                 .and_then(|b| b.as_arr())
@@ -321,22 +368,48 @@ mod tests {
         c.getbatch.budget_overrun_limit = 9;
         c.getbatch.cache_bytes = 8 << 20;
         c.getbatch.readahead_chunks = 5;
+        c.getbatch.endpoint_failure_limit = 7;
+        c.getbatch.endpoint_probe = Duration::from_millis(250);
         c.getbatch.buckets = vec![
             BucketSpec {
                 name: "hot".into(),
                 backend: "remote".into(),
-                remote_addr: "10.0.0.7:8080".into(),
+                remote_addrs: vec!["10.0.0.7:8080".into(), "10.0.0.8:8080".into()],
                 cache: true,
             },
             BucketSpec {
                 name: "cold".into(),
                 backend: "local".into(),
-                remote_addr: String::new(),
+                remote_addrs: Vec::new(),
                 cache: false,
             },
         ];
         let back = ClusterConfig::from_json(&c.to_json());
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn legacy_scalar_remote_addr_still_parses() {
+        let v = Value::parse(
+            r#"{"name": "hot", "backend": "remote", "remote_addr": "10.0.0.7:8080"}"#,
+        )
+        .unwrap();
+        let spec = BucketSpec::from_json(&v).unwrap();
+        assert_eq!(spec.remote_addrs, vec!["10.0.0.7:8080".to_string()]);
+    }
+
+    #[test]
+    fn sanitized_clamps_endpoint_knobs() {
+        let c = GetBatchConfig {
+            endpoint_failure_limit: 0,
+            endpoint_probe: Duration::ZERO,
+            ..Default::default()
+        }
+        .sanitized();
+        assert_eq!(c.endpoint_failure_limit, 1);
+        assert!(c.endpoint_probe >= Duration::from_millis(10));
+        let ok = GetBatchConfig::default().sanitized();
+        assert_eq!(ok.endpoint_probe, GetBatchConfig::default().endpoint_probe);
     }
 
     #[test]

@@ -318,6 +318,73 @@ mod tests {
     }
 
     #[test]
+    fn list_fanout_5xx_surfaces_partial_failure() {
+        use crate::proto::http::{Handler, HttpServer};
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        // Two live targets behind the proxy's /v1/list fan-out: one serves
+        // its slice, the other can be flipped into a 5xx failure mode. A
+        // failing target must surface as a partial-failure error (502) —
+        // never as a silently truncated merged listing.
+        let ok_handler: Handler = Arc::new(|req: Request| {
+            assert_eq!(req.path, paths::LIST);
+            Response::ok(b"obj-a\nobj-b".to_vec())
+        });
+        let broken = Arc::new(AtomicBool::new(false));
+        let broken2 = Arc::clone(&broken);
+        let flaky_handler: Handler = Arc::new(move |_req: Request| {
+            if broken2.load(Ordering::Relaxed) {
+                Response::text(500, "disk gone")
+            } else {
+                Response::ok(b"obj-c".to_vec())
+            }
+        });
+        let t0 = HttpServer::serve(ok_handler, 2, "list-ok").unwrap();
+        let t1 = HttpServer::serve(flaky_handler, 2, "list-flaky").unwrap();
+
+        let h = SmapHolder::new();
+        h.set(Arc::new(Smap::new(
+            1,
+            vec![],
+            vec![
+                NodeInfo {
+                    id: "t0".into(),
+                    http_addr: t0.addr.to_string(),
+                    p2p_addr: String::new(),
+                },
+                NodeInfo {
+                    id: "t1".into(),
+                    http_addr: t1.addr.to_string(),
+                    p2p_addr: String::new(),
+                },
+            ],
+        )));
+        let st = ProxyState::new("p0", h, GetBatchMetrics::new());
+
+        // Healthy fan-out merges both slices.
+        let resp = route(&st, get("/v1/list?bucket=b", &[]));
+        assert_eq!(resp.status, 200);
+        match resp.body {
+            crate::proto::http::Body::Bytes(b) => {
+                assert_eq!(String::from_utf8_lossy(&b), "obj-a\nobj-b\nobj-c");
+            }
+            _ => panic!("expected bytes"),
+        }
+
+        // One target 5xx: the whole listing fails loudly, naming the target.
+        broken.store(true, Ordering::Relaxed);
+        let resp = route(&st, get("/v1/list?bucket=b", &[]));
+        assert_eq!(resp.status, 502, "partial failure must not truncate the merge");
+        match resp.body {
+            crate::proto::http::Body::Bytes(b) => {
+                let msg = String::from_utf8_lossy(&b).into_owned();
+                assert!(msg.contains("t1") && msg.contains("500"), "{msg}");
+            }
+            _ => panic!("expected bytes"),
+        }
+    }
+
+    #[test]
     fn req_ids_unique_and_spread() {
         let st = ProxyState::new("p0", holder(4), GetBatchMetrics::new());
         let mut ids: Vec<u64> = (0..100).map(|_| st.next_req_id()).collect();

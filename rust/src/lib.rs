@@ -10,6 +10,13 @@
 //! coordinates, all other nodes stream locally-owned items to it — and the
 //! DT emits a single TAR response in strict request order.
 //!
+//! **Start with `docs/ARCHITECTURE.md`** (repository root) for the
+//! end-to-end batch lifecycle — register → admission → senders → DT order
+//! buffer → assembler → GFN recovery — with the module map and the
+//! memory-bound invariants; the README's "Configuration reference" table
+//! covers every `GetBatchConfig` knob, and `EXPERIMENTS.md` records the
+//! bench protocol.
+//!
 //! The data path is *chunked streaming with enforced backpressure, end to
 //! end* — the read side streams just like the emit side:
 //!
@@ -19,9 +26,12 @@
 //!    and pulls `chunk_bytes` pieces; no call path materializes a full
 //!    entry. The store is *tiered*: `ObjectStore` is a bucket → backend
 //!    router over the `store::Backend` trait — local mountpaths
-//!    (`store::local`), remote nodes over HTTP Range (`store::remote`),
-//!    and a read-through LRU chunk cache with sequential read-ahead
-//!    (`store::cache`) composable in front of either.
+//!    (`store::local`), remote nodes over HTTP Range (`store::remote`,
+//!    serving each bucket from a health-tracked *endpoint set* — circuit
+//!    breaker + half-open probing in `store::health` — with transparent
+//!    failover that resumes a ranged stream mid-entry on the next healthy
+//!    endpoint), and a read-through LRU chunk cache with sequential
+//!    read-ahead (`store::cache`) composable in front of either.
 //! 2. **Send** — senders cut chunk frames (`proto::frame` FIRST/LAST
 //!    flags) straight off the reader, so sender residency is O(chunk), not
 //!    O(object).
@@ -54,9 +64,10 @@
 //! - `proto` — minimal HTTP/1.1 (+ chunked transfer), the chunked P2P frame
 //!   protocol, control-plane wire messages.
 //! - `store` — the tiered store: the `Backend` trait, the `ObjectStore`
-//!   bucket router, local mountpath / remote HTTP / cached tiers, the
-//!   streaming `EntryReader` seam, PUT-time CRC-32 sidecars, and TAR-shard
-//!   member extraction (range-bounded readers on any tier).
+//!   bucket router, local mountpath / remote HTTP / cached tiers, endpoint
+//!   health tracking + failover for the remote tier, the streaming
+//!   `EntryReader` seam, PUT-time CRC-32 sidecars, and TAR-shard member
+//!   extraction (range-bounded readers on any tier).
 //! - `tar` — ustar codec: whole-entry and streamed-entry writers, readers.
 //! - `cluster` — smap, HRW placement, the in-process node runtime.
 //! - `gateway` — proxy: object redirect + three-phase GetBatch flow.

@@ -98,6 +98,11 @@ pub struct GetBatchMetrics {
     /// Remote-backend requests issued / payload bytes fetched over HTTP.
     pub remote_fetches: Counter,
     pub remote_fetch_bytes: Counter,
+    /// Endpoint failovers: remote operations (including mid-stream ranged
+    /// reads) that moved to another endpoint after a failure.
+    pub remote_failovers: Counter,
+    /// Active health probes issued against broken remote endpoints.
+    pub endpoint_probes: Counter,
 
     // -- resources ----------------------------------------------------------
     /// Bytes currently buffered by in-flight DT assemblies.
@@ -111,6 +116,10 @@ pub struct GetBatchMetrics {
     pub sender_peak_buffer: Gauge,
     /// Bytes currently resident in the node's read-through chunk cache.
     pub cache_resident_bytes: Gauge,
+    /// Remote endpoints currently marked unhealthy (circuit open) across
+    /// this node's remote backends. Flips back down when a broken endpoint
+    /// passes a health probe (or serves a half-open trial request).
+    pub endpoints_unhealthy: Gauge,
 }
 
 impl GetBatchMetrics {
@@ -151,6 +160,8 @@ impl GetBatchMetrics {
             c("cache_evictions_total", "chunk cache LRU evictions", self.cache_evictions.get());
             c("remote_fetches_total", "remote-backend requests issued", self.remote_fetches.get());
             c("remote_fetch_bytes_total", "payload bytes fetched from remote backends", self.remote_fetch_bytes.get());
+            c("remote_failovers_total", "remote operations failed over to another endpoint", self.remote_failovers.get());
+            c("endpoint_probes_total", "active health probes of broken remote endpoints", self.endpoint_probes.get());
         }
         let mut g = |name: &str, help: &str, v: i64| {
             out.push_str(&format!(
@@ -161,6 +172,7 @@ impl GetBatchMetrics {
         g("dt_inflight", "in-flight executions as DT", self.dt_inflight.get());
         g("sender_peak_buffer", "largest single sender-side entry buffer", self.sender_peak_buffer.get());
         g("cache_resident_bytes", "bytes resident in the chunk cache", self.cache_resident_bytes.get());
+        g("endpoints_unhealthy", "remote endpoints currently marked unhealthy", self.endpoints_unhealthy.get());
         out
     }
 

@@ -174,6 +174,16 @@ impl ChunkCache {
 /// writes and deletes pass through and invalidate. Wrap a
 /// [`RemoteBackend`](super::remote::RemoteBackend) to hide network latency,
 /// or a local backend to serve a hot working set from memory.
+///
+/// Failover transparency: the cache composes over a multi-endpoint remote
+/// backend unchanged — a fill's inner ranged read may fail over (or resume
+/// mid-stream on another endpoint) underneath it, and under the endpoint
+/// set's contract (every endpoint fronts the same underlying store) the
+/// inserted chunks are byte-identical whichever endpoint served them. Note
+/// the remote tier's EOF CRC check covers only whole-object streams — a
+/// ranged fill cannot be checked against the whole-object sidecar — so
+/// listing *divergent* replicas as endpoints is outside the contract on
+/// this path too (see `store::remote`).
 pub struct CachedBackend {
     inner: Arc<dyn Backend>,
     cache: Arc<ChunkCache>,

@@ -55,7 +55,9 @@ impl From<StoreError> for io::Error {
 /// generalized): streaming entry readers plus object CRUD. Every
 /// implementation is positionable behind every other — the read-through
 /// cache wraps a local or remote backend, the remote backend fronts
-/// another node's whole stack over HTTP.
+/// another node's whole stack over HTTP (across a health-tracked endpoint
+/// set with transparent failover — callers see one logical backend
+/// whether it is one disk or N interchangeable hosts).
 pub trait Backend: Send + Sync {
     /// Open a whole object as a streaming [`EntryReader`].
     fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError>;

@@ -1,0 +1,455 @@
+//! Endpoint health tracking for the remote tier: a per-endpoint
+//! consecutive-error **circuit breaker** with half-open recovery and cheap
+//! active re-probing — what turns a list of `host:port` endpoints into a
+//! fault-tolerant endpoint *set* the [`RemoteBackend`](super::RemoteBackend)
+//! can fail over across.
+//!
+//! Mechanics:
+//!
+//! - **Passive marking** — every remote operation reports its outcome:
+//!   [`EndpointSet::note_ok`] resets an endpoint's error streak,
+//!   [`EndpointSet::note_err`] extends it. `endpoint_failure_limit`
+//!   consecutive errors open the circuit (the endpoint is *unhealthy* and
+//!   stops being selected while any healthy endpoint remains).
+//! - **Half-open recovery** — an unhealthy endpoint becomes *eligible*
+//!   again every `endpoint_probe_ms`: [`EndpointSet::plan`] leads with due
+//!   broken endpoints, so live traffic doubles as the half-open trial (at
+//!   most one request per window pays the failure latency; one success
+//!   closes the circuit), and the set keeps working even when every
+//!   endpoint is broken.
+//! - **Active probing** — [`EndpointSet::maybe_probe`] (called on the
+//!   selection path, so probing needs no dedicated scheduler thread)
+//!   launches one short-lived background `GET /v1/health` per due broken
+//!   endpoint; a 200 closes the circuit without risking a real read.
+//!
+//! Selection among healthy endpoints is round-robin. Health state is shared
+//! per backend instance — every reader opened through one `RemoteBackend`
+//! observes (and contributes to) the same circuit state.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::GetBatchMetrics;
+use crate::proto::http::HttpClient;
+use crate::proto::wire::paths;
+
+/// Per-endpoint circuit state (under the endpoint's lock).
+struct EpState {
+    /// Consecutive failed operations (reset on any success).
+    consec_errors: u32,
+    /// Circuit open: the endpoint is skipped while healthy peers exist.
+    unhealthy: bool,
+    /// Last half-open trial admission by [`EndpointSet::plan`] (or failed
+    /// operation). Rate-limits trials *independently* of probes — an
+    /// endpoint whose server has no `/v1/health` route (S3-like front)
+    /// must still recover through live-traffic trials.
+    last_trial: Option<Instant>,
+    /// Last active probe launch (rate-limits probes).
+    last_probe: Option<Instant>,
+    /// An active probe thread is in flight (don't stack probes).
+    probe_inflight: bool,
+}
+
+struct Endpoint {
+    addr: String,
+    state: Mutex<EpState>,
+}
+
+/// A health-tracked set of interchangeable endpoints serving the same
+/// bucket data (replicated storage front, S3-like multi-host gateway).
+pub struct EndpointSet {
+    endpoints: Vec<Arc<Endpoint>>,
+    rr: AtomicUsize,
+    failure_limit: u32,
+    probe_interval: Duration,
+    metrics: Option<Arc<GetBatchMetrics>>,
+}
+
+impl EndpointSet {
+    /// Track `addrs` with circuit-breaker parameters. `failure_limit` is
+    /// clamped to ≥ 1 (a limit of 0 would open circuits spontaneously).
+    /// Duplicate addresses are collapsed — health state is keyed by
+    /// address, and a duplicate would shadow its twin's circuit (lookups
+    /// resolve to the first instance, leaving the copy permanently
+    /// "healthy" in rotation).
+    pub fn new(
+        addrs: &[&str],
+        failure_limit: u32,
+        probe_interval: Duration,
+        metrics: Option<Arc<GetBatchMetrics>>,
+    ) -> Arc<EndpointSet> {
+        assert!(!addrs.is_empty(), "endpoint set needs at least one endpoint");
+        let mut endpoints: Vec<Arc<Endpoint>> = Vec::with_capacity(addrs.len());
+        for a in addrs {
+            if endpoints.iter().any(|e| e.addr == *a) {
+                continue;
+            }
+            endpoints.push(Arc::new(Endpoint {
+                addr: a.to_string(),
+                state: Mutex::new(EpState {
+                    consec_errors: 0,
+                    unhealthy: false,
+                    last_trial: None,
+                    last_probe: None,
+                    probe_inflight: false,
+                }),
+            }));
+        }
+        Arc::new(EndpointSet {
+            endpoints,
+            rr: AtomicUsize::new(0),
+            failure_limit: failure_limit.max(1),
+            probe_interval,
+            metrics,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.endpoints.is_empty()
+    }
+
+    /// All tracked endpoint addresses, in configuration order.
+    pub fn addrs(&self) -> Vec<String> {
+        self.endpoints.iter().map(|e| e.addr.clone()).collect()
+    }
+
+    /// The first configured endpoint (display / single-endpoint compat).
+    pub fn primary(&self) -> &str {
+        &self.endpoints[0].addr
+    }
+
+    /// Whether `addr`'s circuit is currently closed.
+    pub fn is_healthy(&self, addr: &str) -> bool {
+        self.endpoints
+            .iter()
+            .find(|e| e.addr == addr)
+            .map(|e| !e.state.lock().unwrap().unhealthy)
+            .unwrap_or(false)
+    }
+
+    /// Endpoints with an open circuit right now.
+    pub fn unhealthy_count(&self) -> usize {
+        self.endpoints.iter().filter(|e| e.state.lock().unwrap().unhealthy).count()
+    }
+
+    /// Ordered candidate list for one operation: broken endpoints whose
+    /// half-open window has elapsed come **first** — callers stop at the
+    /// first success, so a trailing trial would be admitted (window
+    /// re-armed) yet never actually attempted while a healthy peer keeps
+    /// succeeding, and an endpoint whose server has no `/v1/health` route
+    /// could then never recover. Leading the list makes live traffic the
+    /// real half-open trial: at most one request per `endpoint_probe_ms`
+    /// pays the broken endpoint's failure latency (admission is recorded,
+    /// so trials don't stampede), and its success closes the circuit.
+    /// Healthy endpoints follow, round-robin rotated; `last` (the endpoint
+    /// the caller just watched fail) is retried only as the absolute last
+    /// resort. Callers walk the list in order and stop at the first
+    /// success.
+    pub fn plan(&self, last: Option<&str>) -> Vec<String> {
+        let mut trial: Vec<String> = Vec::new();
+        let mut healthy: Vec<String> = Vec::new();
+        let now = Instant::now();
+        for ep in &self.endpoints {
+            let mut st = ep.state.lock().unwrap();
+            if !st.unhealthy {
+                if Some(ep.addr.as_str()) != last {
+                    healthy.push(ep.addr.clone());
+                }
+            } else if st
+                .last_trial
+                .map(|t| now.duration_since(t) >= self.probe_interval)
+                .unwrap_or(true)
+                && Some(ep.addr.as_str()) != last
+            {
+                st.last_trial = Some(now);
+                trial.push(ep.addr.clone());
+            }
+        }
+        if !healthy.is_empty() {
+            let k = self.rr.fetch_add(1, Ordering::Relaxed) % healthy.len();
+            healthy.rotate_left(k);
+        }
+        trial.extend(healthy);
+        if let Some(l) = last {
+            trial.push(l.to_string());
+        }
+        trial
+    }
+
+    /// Record a successful operation on `addr`: closes the circuit.
+    pub fn note_ok(&self, addr: &str) {
+        if let Some(ep) = self.endpoints.iter().find(|e| e.addr == addr) {
+            let mut st = ep.state.lock().unwrap();
+            st.consec_errors = 0;
+            if st.unhealthy {
+                st.unhealthy = false;
+                if let Some(m) = &self.metrics {
+                    m.endpoints_unhealthy.sub(1);
+                }
+            }
+        }
+    }
+
+    /// Record a failed operation on `addr`; `failure_limit` consecutive
+    /// failures open the circuit.
+    pub fn note_err(&self, addr: &str) {
+        if let Some(ep) = self.endpoints.iter().find(|e| e.addr == addr) {
+            let mut st = ep.state.lock().unwrap();
+            st.consec_errors = st.consec_errors.saturating_add(1);
+            // Failing (healthy or half-open trial) also re-arms the
+            // trial window so back-to-back retries don't hammer it.
+            st.last_trial = Some(Instant::now());
+            if !st.unhealthy && st.consec_errors >= self.failure_limit {
+                st.unhealthy = true;
+                if let Some(m) = &self.metrics {
+                    m.endpoints_unhealthy.add(1);
+                }
+            }
+        }
+    }
+
+    /// Launch an active `GET /v1/health` probe (detached thread, one per
+    /// endpoint at a time) against every broken endpoint whose probe window
+    /// has elapsed. Called from the selection path — probing is
+    /// traffic-triggered, so an idle backend costs nothing. (Associated
+    /// function because the probe thread needs an owned `Arc` of the set.)
+    pub fn maybe_probe(set: &Arc<EndpointSet>, client: &HttpClient) {
+        let now = Instant::now();
+        for (i, ep) in set.endpoints.iter().enumerate() {
+            let due = {
+                let mut st = ep.state.lock().unwrap();
+                // Probes run on their own timer (`last_probe`) so they can
+                // never starve the live-traffic half-open trials that
+                // `plan` admits on `last_trial` — against an endpoint with
+                // no `/v1/health` route, trials are the only recovery path.
+                let due = st.unhealthy
+                    && !st.probe_inflight
+                    && st
+                        .last_probe
+                        .map(|t| now.duration_since(t) >= set.probe_interval)
+                        .unwrap_or(true);
+                if due {
+                    st.probe_inflight = true;
+                    st.last_probe = Some(now);
+                }
+                due
+            };
+            if !due {
+                continue;
+            }
+            let set2 = Arc::clone(set);
+            let cl = client.clone();
+            let idx = i;
+            let spawned = std::thread::Builder::new()
+                .name("ep-probe".to_string())
+                .stack_size(128 * 1024)
+                .spawn(move || {
+                    let ep = &set2.endpoints[idx];
+                    if let Some(m) = &set2.metrics {
+                        m.endpoint_probes.inc();
+                    }
+                    let ok = cl
+                        .get(&ep.addr, paths::HEALTH)
+                        .map(|resp| {
+                            let s = resp.status;
+                            let _ = resp.into_bytes();
+                            s == 200
+                        })
+                        .unwrap_or(false);
+                    if ok {
+                        set2.note_ok(&ep.addr);
+                    }
+                    ep.state.lock().unwrap().probe_inflight = false;
+                });
+            if spawned.is_err() {
+                // Spawn failure (thread exhaustion): un-arm the flag so a
+                // later call can retry instead of stranding the endpoint
+                // with active probing permanently disabled.
+                ep.state.lock().unwrap().probe_inflight = false;
+            }
+        }
+    }
+}
+
+impl Drop for EndpointSet {
+    /// Settle the node gauge: a set dropped with open circuits (bucket
+    /// re-routed, cluster shutdown) must not leave `endpoints_unhealthy`
+    /// inflated forever.
+    fn drop(&mut self) {
+        if let Some(m) = &self.metrics {
+            let open = self
+                .endpoints
+                .iter()
+                .filter(|e| e.state.lock().unwrap().unhealthy)
+                .count();
+            if open > 0 {
+                m.endpoints_unhealthy.sub(open as i64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(addrs: &[&str], limit: u32, probe: Duration) -> Arc<EndpointSet> {
+        EndpointSet::new(addrs, limit, probe, None)
+    }
+
+    #[test]
+    fn consecutive_errors_open_the_circuit() {
+        let s = set(&["a:1", "b:2"], 3, Duration::from_secs(60));
+        assert!(s.is_healthy("a:1"));
+        s.note_err("a:1");
+        s.note_err("a:1");
+        assert!(s.is_healthy("a:1"), "below the limit");
+        s.note_err("a:1");
+        assert!(!s.is_healthy("a:1"), "limit reached");
+        assert_eq!(s.unhealthy_count(), 1);
+        // a success anywhere in the streak resets it
+        s.note_err("b:2");
+        s.note_err("b:2");
+        s.note_ok("b:2");
+        s.note_err("b:2");
+        assert!(s.is_healthy("b:2"));
+    }
+
+    #[test]
+    fn plan_skips_unhealthy_until_halfopen_window() {
+        let s = set(&["a:1", "b:2"], 1, Duration::from_millis(40));
+        s.note_err("a:1");
+        assert!(!s.is_healthy("a:1"));
+        // Broken endpoint excluded while fresh; note_err armed the window.
+        assert_eq!(s.plan(None), vec!["b:2".to_string()]);
+        std::thread::sleep(Duration::from_millis(60));
+        // Window elapsed: it LEADS the plan as the half-open trial —
+        // callers stop at the first success, so a trailing trial would
+        // never actually run while the healthy peer keeps succeeding.
+        let p = s.plan(None);
+        assert_eq!(p.first().map(|x| x.as_str()), Some("a:1"), "{p:?}");
+        assert!(p.contains(&"b:2".to_string()), "{p:?}");
+        // ...and its admission re-armed the window immediately.
+        assert_eq!(s.plan(None), vec!["b:2".to_string()]);
+        // A trial success closes the circuit.
+        s.note_ok("a:1");
+        assert!(s.is_healthy("a:1"));
+        assert_eq!(s.unhealthy_count(), 0);
+    }
+
+    #[test]
+    fn plan_round_robins_healthy_endpoints() {
+        let s = set(&["a:1", "b:2", "c:3"], 3, Duration::from_secs(60));
+        let firsts: Vec<String> =
+            (0..6).map(|_| s.plan(None).first().unwrap().clone()).collect();
+        let distinct: std::collections::HashSet<&String> = firsts.iter().collect();
+        assert_eq!(distinct.len(), 3, "{firsts:?}");
+    }
+
+    #[test]
+    fn plan_deprioritizes_the_endpoint_that_just_failed() {
+        // The just-failed endpoint is never first, but stays reachable as
+        // the absolute last resort (a transient failure on it must not
+        // abort the read when every other candidate is also failing).
+        let s = set(&["a:1", "b:2"], 5, Duration::from_secs(60));
+        for _ in 0..4 {
+            let p = s.plan(Some("a:1"));
+            assert_eq!(p, vec!["b:2".to_string(), "a:1".to_string()]);
+        }
+        // Sole endpoint: still offered.
+        let lone = set(&["a:1"], 5, Duration::from_secs(60));
+        assert_eq!(lone.plan(Some("a:1")), vec!["a:1".to_string()]);
+    }
+
+    #[test]
+    fn drop_settles_the_unhealthy_gauge() {
+        let metrics = GetBatchMetrics::new();
+        let s = EndpointSet::new(
+            &["a:1", "b:2"],
+            1,
+            Duration::from_secs(60),
+            Some(Arc::clone(&metrics)),
+        );
+        s.note_err("a:1");
+        s.note_err("b:2");
+        assert_eq!(metrics.endpoints_unhealthy.get(), 2);
+        drop(s);
+        assert_eq!(metrics.endpoints_unhealthy.get(), 0, "drop paired the add");
+    }
+
+    #[test]
+    fn duplicate_addrs_collapse() {
+        // A duplicated address would shadow its twin's circuit (state is
+        // keyed by addr): the set must collapse it.
+        let s = set(&["a:1", "a:1", "b:2"], 1, Duration::from_secs(60));
+        assert_eq!(s.len(), 2);
+        s.note_err("a:1");
+        assert!(!s.is_healthy("a:1"));
+        assert_eq!(s.plan(None), vec!["b:2".to_string()], "no healthy ghost of a:1");
+    }
+
+    #[test]
+    fn all_down_still_offers_halfopen_trials() {
+        let s = set(&["a:1", "b:2"], 1, Duration::from_millis(0));
+        s.note_err("a:1");
+        s.note_err("b:2");
+        assert_eq!(s.unhealthy_count(), 2);
+        // Zero probe interval: every plan offers both as trials.
+        let p = s.plan(None);
+        assert_eq!(p.len(), 2, "{p:?}");
+    }
+
+    #[test]
+    fn active_probe_recovers_endpoint_when_it_returns() {
+        use crate::proto::http::{Handler, HttpServer, Request, Response};
+        use std::sync::atomic::AtomicBool;
+
+        let dead = Arc::new(AtomicBool::new(true));
+        let dead2 = Arc::clone(&dead);
+        let handler: Handler = Arc::new(move |req: Request| {
+            if dead2.load(Ordering::Relaxed) {
+                Response::text(500, "down")
+            } else if req.path == paths::HEALTH {
+                Response::ok(b"ok".to_vec())
+            } else {
+                Response::status(404)
+            }
+        });
+        let srv = HttpServer::serve(handler, 2, "probe-test").unwrap();
+        let addr = srv.addr.to_string();
+        let metrics = GetBatchMetrics::new();
+        let s = EndpointSet::new(
+            &[addr.as_str()],
+            1,
+            Duration::from_millis(10),
+            Some(Arc::clone(&metrics)),
+        );
+        let cl = HttpClient::new(true);
+        s.note_err(&addr);
+        assert_eq!(metrics.endpoints_unhealthy.get(), 1);
+
+        // While the endpoint is down, probes fire but the circuit stays open.
+        std::thread::sleep(Duration::from_millis(20));
+        EndpointSet::maybe_probe(&s, &cl);
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!s.is_healthy(&addr));
+
+        // Endpoint comes back: the next due probe closes the circuit.
+        dead.store(false, Ordering::Relaxed);
+        for _ in 0..50 {
+            EndpointSet::maybe_probe(&s, &cl);
+            if s.is_healthy(&addr) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(s.is_healthy(&addr), "probe recovered the endpoint");
+        assert_eq!(metrics.endpoints_unhealthy.get(), 0);
+        assert!(metrics.endpoint_probes.get() > 0);
+    }
+}

@@ -1,12 +1,14 @@
 //! Per-node storage substrate, tiered: the [`Backend`] trait every tier
 //! implements, the local mountpath backend, a remote HTTP backend (objects
-//! living on another node / S3-like endpoint), a read-through LRU chunk
-//! cache with sequential read-ahead, and the [`ObjectStore`] router mapping
-//! bucket → backend stack. TAR-shard member extraction rides the same
-//! streaming [`EntryReader`] seam on every tier.
+//! living on another node / S3-like endpoint, served by a health-tracked
+//! endpoint *set* with transparent failover — see [`health`]), a
+//! read-through LRU chunk cache with sequential read-ahead, and the
+//! [`ObjectStore`] router mapping bucket → backend stack. TAR-shard member
+//! extraction rides the same streaming [`EntryReader`] seam on every tier.
 
 pub mod cache;
 pub mod engine;
+pub mod health;
 pub mod local;
 pub mod mountpath;
 pub mod remote;
@@ -14,6 +16,7 @@ pub mod shard;
 
 pub use cache::{CachedBackend, ChunkCache};
 pub use engine::{Backend, ChunkSource, EntryReader, ObjectStore, StoreError};
+pub use health::EndpointSet;
 pub use local::LocalBackend;
 pub use remote::RemoteBackend;
 pub use shard::ShardIndexCache;

@@ -8,73 +8,187 @@
 //! (size, stored CRC-32 sidecar) comes from a 1-byte ranged probe — the
 //! `content-range` total plus the `x-getbatch-crc32` response header.
 //!
-//! Point `addr` at a target for single-node buckets, or at a proxy to
+//! A bucket is served by an **endpoint set**, not a single trusted address:
+//! every operation walks [`EndpointSet::plan`]'s health-ordered candidates
+//! and fails over on endpoint faults (connect errors, 5xx), so one dead
+//! host degrades to a retry instead of a hard `Io` error. Because a remote
+//! read is a ranged stream, failover works **mid-stream** too: when the
+//! endpoint serving an open stream dies, the source re-issues the range at
+//! the current offset on the next healthy endpoint and keeps going — and a
+//! whole-object stream that failed over is CRC-verified at EOF against the
+//! object's `x-getbatch-crc32` sidecar (learned at open), failing closed if
+//! the endpoints disagreed about the bytes. That check is defense in
+//! depth, not a substitute for the contract: all endpoints must front the
+//! **same underlying store** — a *ranged* span (cache fill, shard member,
+//! GFN) has no per-range hash to verify against, so divergent replicas in
+//! one endpoint set are unsupported on every path. `StoreError::Io`
+//! surfaces only once *all* endpoints are down. Health state
+//! (consecutive-error circuit breaker, half-open trials, active
+//! `/v1/health` probes) lives in [`super::health`].
+//!
+//! Point an endpoint at a target for single-node buckets, or at a proxy to
 //! front a whole remote cluster (object requests follow the proxy's 307
-//! redirect to the HRW owner; `list` fans out proxy-side).
+//! redirect to the HRW owner; `list` fans out proxy-side). List several
+//! endpoints (replicated fronts, multi-host gateways) to enable failover.
 
 use std::io::{self, Read};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::metrics::GetBatchMetrics;
 use crate::proto::http::{content_range_total, HttpClient};
 use crate::proto::wire;
+use crate::util::crc32;
 
 use super::engine::{Backend, ChunkSource, EntryReader, StoreError};
+use super::health::EndpointSet;
+
+/// How one endpoint's attempt at an operation failed.
+enum Attempt {
+    /// A definitive answer from a live endpoint (404, malformed request):
+    /// returned as-is, no failover — retrying elsewhere cannot change it.
+    Fatal(StoreError),
+    /// The endpoint itself failed (connect error, 5xx): counts against its
+    /// circuit breaker and the operation moves to the next candidate.
+    Endpoint(io::Error),
+}
 
 pub struct RemoteBackend {
     client: HttpClient,
-    addr: String,
+    endpoints: Arc<EndpointSet>,
     metrics: Option<Arc<GetBatchMetrics>>,
 }
 
 impl RemoteBackend {
+    /// Single-endpoint backend with default health parameters (3-error
+    /// circuit breaker, 1 s probe interval).
     pub fn new(addr: &str, metrics: Option<Arc<GetBatchMetrics>>) -> RemoteBackend {
-        RemoteBackend { client: HttpClient::new(true), addr: addr.to_string(), metrics }
+        RemoteBackend::multi(&[addr], 3, Duration::from_millis(1000), metrics)
     }
 
+    /// Backend over a health-tracked endpoint set — see
+    /// `GetBatchConfig::endpoint_failure_limit` / `endpoint_probe_ms` for
+    /// the knobs the cluster feeds in.
+    pub fn multi(
+        addrs: &[&str],
+        failure_limit: u32,
+        probe_interval: Duration,
+        metrics: Option<Arc<GetBatchMetrics>>,
+    ) -> RemoteBackend {
+        RemoteBackend {
+            client: HttpClient::new(true),
+            endpoints: EndpointSet::new(addrs, failure_limit, probe_interval, metrics.clone()),
+            metrics,
+        }
+    }
+
+    /// The primary (first-configured) endpoint.
     pub fn addr(&self) -> &str {
-        &self.addr
+        self.endpoints.primary()
+    }
+
+    /// The health-tracked endpoint set (tests and diagnostics).
+    pub fn endpoints(&self) -> &Arc<EndpointSet> {
+        &self.endpoints
     }
 
     fn pq(bucket: &str, obj: &str) -> String {
         format!("{}?local=true", wire::object_path(bucket, obj))
     }
 
-    fn count_fetch(&self, bytes: u64) {
+    fn count_fetch(&self) {
         if let Some(m) = &self.metrics {
             m.remote_fetches.inc();
-            m.remote_fetch_bytes.add(bytes);
         }
     }
 
-    /// 1-byte ranged probe: learns (total length, stored CRC-32 sidecar).
-    fn probe(&self, bucket: &str, obj: &str) -> Result<(u64, Option<u32>), StoreError> {
-        self.count_fetch(0);
-        let pq = Self::pq(bucket, obj);
-        let resp = self.client.get_range(&self.addr, &pq, 0, 1).map_err(StoreError::Io)?;
-        match resp.status {
-            206 => {
-                let total = resp
-                    .header("content-range")
-                    .and_then(content_range_total)
-                    .ok_or_else(|| {
-                        StoreError::Io(io::Error::new(
-                            io::ErrorKind::InvalidData,
-                            format!("remote {}: missing content-range", self.addr),
-                        ))
-                    })?;
-                let crc = resp
-                    .header(wire::HDR_OBJ_CRC)
-                    .and_then(|h| u32::from_str_radix(h.trim(), 16).ok());
-                let _ = resp.into_bytes(); // drain ≤ 1 byte; recycles the conn
-                Ok((total, crc))
+    /// Run `f` against the endpoint set's candidates in health order,
+    /// failing over past endpoint faults; `Io` only when every candidate
+    /// failed.
+    fn with_endpoints<T>(
+        &self,
+        mut f: impl FnMut(&str) -> Result<T, Attempt>,
+    ) -> Result<T, StoreError> {
+        EndpointSet::maybe_probe(&self.endpoints, &self.client);
+        let mut last_io: Option<io::Error> = None;
+        for addr in self.endpoints.plan(None) {
+            if last_io.is_some() {
+                if let Some(m) = &self.metrics {
+                    m.remote_failovers.inc();
+                }
             }
-            404 => Err(StoreError::NotFound(format!("{bucket}/{obj} @ {}", self.addr))),
-            s => Err(StoreError::Io(io::Error::new(
-                io::ErrorKind::Other,
-                format!("remote {}: http {s}", self.addr),
-            ))),
+            self.count_fetch();
+            match f(&addr) {
+                Ok(v) => {
+                    self.endpoints.note_ok(&addr);
+                    return Ok(v);
+                }
+                Err(Attempt::Fatal(e)) => {
+                    self.endpoints.note_ok(&addr);
+                    return Err(e);
+                }
+                Err(Attempt::Endpoint(e)) => {
+                    self.endpoints.note_err(&addr);
+                    last_io = Some(e);
+                }
+            }
         }
+        Err(StoreError::Io(all_down(self.endpoints.len(), last_io)))
+    }
+
+    /// 1-byte ranged probe: learns (total length, stored CRC-32 sidecar).
+    ///
+    /// Zero-length objects: a 0-byte object cannot satisfy `bytes=0-0`, so
+    /// a strict server answers **416** with `content-range: bytes */0` (the
+    /// crate's internal servers answer an empty 206 instead — both carry
+    /// the total). Either shape resolves to `size == 0`, not an error.
+    fn probe(&self, bucket: &str, obj: &str) -> Result<(u64, Option<u32>), StoreError> {
+        let pq = Self::pq(bucket, obj);
+        self.with_endpoints(|addr| {
+            let resp = self.client.get_range(addr, &pq, 0, 1).map_err(Attempt::Endpoint)?;
+            let crc = resp
+                .header(wire::HDR_OBJ_CRC)
+                .and_then(|h| u32::from_str_radix(h.trim(), 16).ok());
+            match resp.status {
+                206 => {
+                    let total = resp
+                        .header("content-range")
+                        .and_then(content_range_total)
+                        .ok_or_else(|| {
+                            Attempt::Endpoint(io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                format!("remote {addr}: missing content-range"),
+                            ))
+                        })?;
+                    let _ = resp.into_bytes(); // drain ≤ 1 byte; recycles the conn
+                    Ok((total, crc))
+                }
+                // Empty object behind a strict-RFC server: the range is
+                // unsatisfiable but the total (0) rides `content-range:
+                // bytes */0` (RFC 9110 requires it on 416). No parseable
+                // total means this is NOT that case — treat it as an
+                // endpoint fault like the 206 branch does, never as a
+                // 0-byte object (that would turn an unreadable object into
+                // silent empty-entry "success").
+                416 => {
+                    let total = resp
+                        .header("content-range")
+                        .and_then(content_range_total)
+                        .ok_or_else(|| {
+                            Attempt::Endpoint(io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                format!("remote {addr}: 416 without content-range total"),
+                            ))
+                        })?;
+                    let _ = resp.into_bytes();
+                    Ok((total, crc))
+                }
+                404 => Err(Attempt::Fatal(StoreError::NotFound(format!(
+                    "{bucket}/{obj} @ {addr}"
+                )))),
+                s => Err(status_attempt(addr, "probe", s)),
+            }
+        })
     }
 
     fn open_span(
@@ -83,24 +197,51 @@ impl RemoteBackend {
         obj: &str,
         base: u64,
         len: u64,
+        whole_object_crc: Option<u32>,
     ) -> Result<EntryReader, StoreError> {
         let src = RemoteSource {
             client: self.client.clone(),
-            addr: self.addr.clone(),
+            endpoints: Arc::clone(&self.endpoints),
             pq: Self::pq(bucket, obj),
             base,
             len,
             metrics: self.metrics.clone(),
             stream: None,
+            expected_crc: whole_object_crc,
+            hasher: if whole_object_crc.is_some() { Some(crc32::Hasher::new()) } else { None },
+            hashed_to: 0,
+            mixed: false,
         };
         Ok(EntryReader::from_source(Box::new(src), len))
     }
 }
 
+/// The "every candidate failed" terminal error.
+fn all_down(n: usize, last: Option<io::Error>) -> io::Error {
+    match last {
+        Some(e) => io::Error::new(e.kind(), format!("all {n} remote endpoints down: {e}")),
+        None => io::Error::new(
+            io::ErrorKind::Other,
+            format!("all {n} remote endpoints down (circuits open)"),
+        ),
+    }
+}
+
+/// Classify an unexpected HTTP status: 5xx / 429 are endpoint faults
+/// (fail over), other 4xx are definitive answers (don't).
+fn status_attempt(addr: &str, op: &str, status: u16) -> Attempt {
+    let e = io::Error::new(io::ErrorKind::Other, format!("remote {op} {addr}: http {status}"));
+    if status >= 500 || status == 429 {
+        Attempt::Endpoint(e)
+    } else {
+        Attempt::Fatal(StoreError::Io(e))
+    }
+}
+
 impl Backend for RemoteBackend {
     fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
-        let (total, _) = self.probe(bucket, obj)?;
-        self.open_span(bucket, obj, 0, total)
+        let (total, crc) = self.probe(bucket, obj)?;
+        self.open_span(bucket, obj, 0, total, crc)
     }
 
     fn open_entry_range(
@@ -117,19 +258,25 @@ impl Backend for RemoteBackend {
                 format!("range {offset}+{len} past EOF ({total}) in {bucket}/{obj}"),
             )));
         }
-        self.open_span(bucket, obj, offset, len)
+        self.open_span(bucket, obj, offset, len, None)
     }
 
+    /// Write-through PUT. Contract: every endpoint in the set fronts the
+    /// **same underlying store** (multiple gateways/proxies of one
+    /// cluster), so writing through any one endpoint is equivalent — the
+    /// write is issued once, to the first healthy candidate. Endpoint
+    /// lists over *independent* replicas are read-only territory: writes
+    /// would land on one replica and diverge the others (which the read
+    /// path's failover CRC check would then reject).
     fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError> {
-        self.count_fetch(0);
-        let resp = self.client.put(&self.addr, &Self::pq(bucket, obj), data).map_err(StoreError::Io)?;
-        match resp.status {
-            200 => Ok(()),
-            s => Err(StoreError::Io(io::Error::new(
-                io::ErrorKind::Other,
-                format!("remote put {}: http {s}", self.addr),
-            ))),
-        }
+        let pq = Self::pq(bucket, obj);
+        self.with_endpoints(|addr| {
+            let resp = self.client.put(addr, &pq, data).map_err(Attempt::Endpoint)?;
+            match resp.status {
+                200 => Ok(()),
+                s => Err(status_attempt(addr, "put", s)),
+            }
+        })
     }
 
     fn exists(&self, bucket: &str, obj: &str) -> bool {
@@ -140,38 +287,57 @@ impl Backend for RemoteBackend {
         Ok(self.probe(bucket, obj)?.0)
     }
 
+    /// Write-through DELETE — same single-store contract as [`Backend::put`]
+    /// on this type, with at-least-once retry semantics: a failed attempt
+    /// that *reached* the store may have been applied before the response
+    /// was lost, so after such a failure a 404 from a later endpoint of
+    /// the same store means "already deleted" and reports success. A
+    /// refused connection never carried the request, so it keeps the
+    /// definitive-`NotFound` semantics intact.
     fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError> {
-        self.count_fetch(0);
-        let resp = self
-            .client
-            .request("DELETE", &self.addr, &Self::pq(bucket, obj), &[])
-            .map_err(StoreError::Io)?;
-        match resp.status {
-            200 => Ok(()),
-            404 => Err(StoreError::NotFound(format!("{bucket}/{obj} @ {}", self.addr))),
-            s => Err(StoreError::Io(io::Error::new(
-                io::ErrorKind::Other,
-                format!("remote delete {}: http {s}", self.addr),
-            ))),
-        }
+        let pq = Self::pq(bucket, obj);
+        let mut maybe_applied = false;
+        self.with_endpoints(|addr| {
+            let resp = match self.client.request("DELETE", addr, &pq, &[]) {
+                Ok(r) => r,
+                Err(e) => {
+                    if e.kind() != io::ErrorKind::ConnectionRefused {
+                        maybe_applied = true;
+                    }
+                    return Err(Attempt::Endpoint(e));
+                }
+            };
+            match resp.status {
+                200 => Ok(()),
+                404 if maybe_applied => Ok(()),
+                404 => Err(Attempt::Fatal(StoreError::NotFound(format!(
+                    "{bucket}/{obj} @ {addr}"
+                )))),
+                s => {
+                    let a = status_attempt(addr, "delete", s);
+                    if matches!(a, Attempt::Endpoint(_)) {
+                        maybe_applied = true;
+                    }
+                    Err(a)
+                }
+            }
+        })
     }
 
     fn list(&self, bucket: &str) -> Result<Vec<String>, StoreError> {
-        self.count_fetch(0);
         let pq = format!("{}?bucket={bucket}", wire::paths::LIST);
-        let resp = self.client.get(&self.addr, &pq).map_err(StoreError::Io)?;
-        if resp.status != 200 {
-            return Err(StoreError::Io(io::Error::new(
-                io::ErrorKind::Other,
-                format!("remote list {}: http {}", self.addr, resp.status),
-            )));
-        }
-        let body = resp.into_bytes().map_err(StoreError::Io)?;
-        Ok(String::from_utf8_lossy(&body)
-            .lines()
-            .filter(|l| !l.is_empty())
-            .map(|l| l.to_string())
-            .collect())
+        self.with_endpoints(|addr| {
+            let resp = self.client.get(addr, &pq).map_err(Attempt::Endpoint)?;
+            if resp.status != 200 {
+                return Err(status_attempt(addr, "list", resp.status));
+            }
+            let body = resp.into_bytes().map_err(Attempt::Endpoint)?;
+            Ok(String::from_utf8_lossy(&body)
+                .lines()
+                .filter(|l| !l.is_empty())
+                .map(|l| l.to_string())
+                .collect())
+        })
     }
 
     fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32> {
@@ -183,17 +349,131 @@ impl Backend for RemoteBackend {
 /// covering `[base+pos, base+len)` and reads sequentially off its chunked
 /// body; a non-sequential `read_at` (seek) drops the stream and re-issues
 /// the range at the new position.
+///
+/// Failover: when the endpoint serving the open stream dies mid-body, the
+/// source marks it, drops the stream and **resumes the ranged fetch at the
+/// current offset** on the next candidate from the endpoint set — invisible
+/// to the reader above. A whole-object stream (base 0, full length) that
+/// was read strictly sequentially keeps a running CRC-32; if a mid-stream
+/// failover mixed bytes from more than one endpoint, the final CRC is
+/// checked against the PUT-time sidecar learned at open and a mismatch
+/// fails the read (fail closed — endpoints serving divergent replicas must
+/// not produce a silently corrupt entry).
 struct RemoteSource {
     client: HttpClient,
-    addr: String,
+    endpoints: Arc<EndpointSet>,
     pq: String,
     /// Entry span start within the remote object.
     base: u64,
     /// Entry span length.
     len: u64,
     metrics: Option<Arc<GetBatchMetrics>>,
-    /// Open response body + the entry-relative position of its next byte.
-    stream: Option<(crate::proto::http::BodyReader, u64)>,
+    /// Open response body + the entry-relative position of its next byte +
+    /// the endpoint serving it.
+    stream: Option<(crate::proto::http::BodyReader, u64, String)>,
+    /// Whole-object sidecar CRC learned by the open-time probe.
+    expected_crc: Option<u32>,
+    /// Running CRC while reads stay strictly sequential from byte 0;
+    /// dropped on the first seek (a partial hash proves nothing).
+    hasher: Option<crc32::Hasher>,
+    /// Bytes hashed so far (== pos while the hasher lives).
+    hashed_to: u64,
+    /// A mid-stream failover delivered bytes from more than one endpoint.
+    mixed: bool,
+}
+
+impl RemoteSource {
+    /// (Re-)issue the ranged GET at entry-relative `pos`, walking the
+    /// endpoint set's candidates; `exclude` is the endpoint that just
+    /// failed mid-stream (tried again only as a last resort).
+    fn open_at(&mut self, pos: u64, exclude: Option<&str>) -> io::Result<()> {
+        self.stream = None;
+        EndpointSet::maybe_probe(&self.endpoints, &self.client);
+        let mut failed_before = exclude.is_some();
+        let mut last_err: Option<io::Error> = None;
+        for addr in self.endpoints.plan(exclude) {
+            if failed_before {
+                if let Some(m) = &self.metrics {
+                    m.remote_failovers.inc();
+                }
+            }
+            if let Some(m) = &self.metrics {
+                m.remote_fetches.inc();
+            }
+            let resp = match self.client.get_range(&addr, &self.pq, self.base + pos, self.len - pos)
+            {
+                Ok(r) => r,
+                Err(e) => {
+                    self.endpoints.note_err(&addr);
+                    last_err = Some(e);
+                    failed_before = true;
+                    continue;
+                }
+            };
+            match resp.status {
+                206 => {
+                    self.endpoints.note_ok(&addr);
+                    self.stream = Some((resp.body, pos, addr));
+                    return Ok(());
+                }
+                404 => {
+                    // A live endpoint says the object is gone: definitive.
+                    self.endpoints.note_ok(&addr);
+                    return Err(io::Error::new(
+                        io::ErrorKind::NotFound,
+                        format!("remote {addr}: object vanished mid-read"),
+                    ));
+                }
+                // Same classification as the non-stream paths: only
+                // endpoint faults (5xx/429) burn the circuit and fail
+                // over; a definitive per-object answer (e.g. 416 after
+                // the object shrank under a resumed range) must not
+                // poison every endpoint in the set.
+                s => match status_attempt(&addr, "read", s) {
+                    Attempt::Endpoint(e) => {
+                        self.endpoints.note_err(&addr);
+                        last_err = Some(e);
+                        failed_before = true;
+                    }
+                    Attempt::Fatal(se) => {
+                        self.endpoints.note_ok(&addr);
+                        return Err(se.into());
+                    }
+                },
+            }
+        }
+        Err(all_down(self.endpoints.len(), last_err))
+    }
+
+    /// Fold successfully delivered bytes into the sequential-stream CRC and
+    /// verify against the sidecar once the whole object has streamed.
+    fn digest(&mut self, pos: u64, bytes: &[u8]) -> io::Result<()> {
+        if self.hasher.is_none() {
+            return Ok(());
+        }
+        if pos != self.hashed_to {
+            self.hasher = None; // seek: partial hash proves nothing
+            return Ok(());
+        }
+        self.hasher.as_mut().expect("checked above").update(bytes);
+        self.hashed_to += bytes.len() as u64;
+        if self.hashed_to == self.len && self.mixed {
+            let got = self.hasher.take().expect("checked above").finalize();
+            if let Some(want) = self.expected_crc {
+                if got != want {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!(
+                            "failover CRC mismatch: stream {got:08x} != sidecar {want:08x} \
+                             (endpoints serve divergent bytes for {})",
+                            self.pq
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 impl ChunkSource for RemoteSource {
@@ -201,35 +481,104 @@ impl ChunkSource for RemoteSource {
         if pos >= self.len || buf.is_empty() {
             return Ok(0);
         }
-        if self.stream.as_ref().map(|(_, at)| *at) != Some(pos) {
-            self.stream = None;
-            if let Some(m) = &self.metrics {
-                m.remote_fetches.inc();
+        // Bound mid-stream retries: every endpoint gets at most one shot at
+        // resuming this read (open_at itself walks all candidates per shot).
+        let mut resumes = 0usize;
+        loop {
+            if self.stream.as_ref().map(|(_, at, _)| *at) != Some(pos) {
+                self.open_at(pos, None)?;
             }
-            let resp = self
-                .client
-                .get_range(&self.addr, &self.pq, self.base + pos, self.len - pos)?;
-            if resp.status != 206 {
-                return Err(io::Error::new(
-                    io::ErrorKind::Other,
-                    format!("remote read {}: http {}", self.addr, resp.status),
-                ));
+            let r = {
+                let (body, _, _) = self.stream.as_mut().expect("stream just ensured");
+                body.read(buf)
+            };
+            match r {
+                Ok(0) => {
+                    // Clean short delivery (object shrank server-side): not
+                    // an endpoint fault — drop the stream so a retry
+                    // re-issues the range; the reader surfaces UnexpectedEof.
+                    self.stream = None;
+                    return Ok(0);
+                }
+                Ok(n) => {
+                    let (_, at, _) = self.stream.as_mut().expect("stream open");
+                    *at += n as u64;
+                    if let Some(m) = &self.metrics {
+                        m.remote_fetch_bytes.add(n as u64);
+                    }
+                    self.digest(pos, &buf[..n])?;
+                    return Ok(n);
+                }
+                Err(e) => {
+                    // The serving endpoint died mid-body: mark it, then
+                    // resume the range at the current offset elsewhere.
+                    let failed = self.stream.take().map(|(_, _, a)| a);
+                    if let Some(a) = &failed {
+                        self.endpoints.note_err(a);
+                    }
+                    resumes += 1;
+                    if resumes > self.endpoints.len() {
+                        return Err(e);
+                    }
+                    if pos > 0 {
+                        self.mixed = true;
+                    }
+                    // (open_at counts the failover once: `exclude` being
+                    // set marks the first candidate as an after-failure
+                    // switch — no second increment here.)
+                    self.open_at(pos, failed.as_deref())?;
+                }
             }
-            self.stream = Some((resp.body, pos));
         }
-        let (body, at) = self.stream.as_mut().expect("stream just ensured");
-        let n = body.read(buf)?;
-        if n == 0 {
-            // Server delivered fewer bytes than the advertised span (object
-            // shrank / truncated response): drop the stream so a retry
-            // re-issues the range; the reader surfaces UnexpectedEof.
-            self.stream = None;
-            return Ok(0);
-        }
-        *at += n as u64;
-        if let Some(m) = &self.metrics {
-            m.remote_fetch_bytes.add(n as u64);
-        }
-        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::http::{range_unsatisfiable, Handler, HttpServer, Request, Response};
+
+    /// A strict-RFC endpoint: `bytes=0-0` against a 0-byte object answers
+    /// 416 + `content-range: bytes */0` (S3 semantics), unlike the crate's
+    /// internal servers which answer an empty 206.
+    fn strict_empty_server() -> HttpServer {
+        let handler: Handler = Arc::new(|req: Request| {
+            if req.path.starts_with("/v1/objects/") && req.method == "GET" {
+                let mut resp = range_unsatisfiable(0);
+                resp = resp.with_header(wire::HDR_OBJ_CRC, "00000000");
+                resp
+            } else {
+                Response::status(404)
+            }
+        });
+        HttpServer::serve(handler, 2, "strict-empty").unwrap()
+    }
+
+    #[test]
+    fn probe_resolves_strict_416_empty_object_as_size_zero() {
+        let srv = strict_empty_server();
+        let remote = RemoteBackend::new(&srv.addr.to_string(), None);
+        assert_eq!(remote.size("b", "empty").unwrap(), 0, "416 resolved to size 0");
+        assert!(remote.exists("b", "empty"));
+        assert_eq!(remote.content_crc("b", "empty"), Some(0));
+        let r = remote.open_entry("b", "empty").unwrap();
+        assert!(r.is_empty());
+        assert_eq!(r.read_all().unwrap(), b"");
+    }
+
+    #[test]
+    fn all_endpoints_down_is_io() {
+        // Nobody listens on either port: every operation must walk both
+        // candidates and surface Io, never NotFound or a hang.
+        let dead = RemoteBackend::multi(
+            &["127.0.0.1:1", "127.0.0.1:2"],
+            3,
+            Duration::from_millis(50),
+            None,
+        );
+        assert!(matches!(dead.open_entry("b", "o"), Err(StoreError::Io(_))));
+        assert!(matches!(dead.size("b", "o"), Err(StoreError::Io(_))));
+        assert!(matches!(dead.list("b"), Err(StoreError::Io(_))));
+        assert!(!dead.exists("b", "o"));
     }
 }

@@ -1,0 +1,402 @@
+//! The endpoint-failover scenario family: multi-endpoint remote buckets
+//! under endpoint death — mid-stream resume on a healthy endpoint, CRC
+//! fail-closed on divergent replicas, a live GetBatch surviving an endpoint
+//! kill with zero client-visible errors, the health gauge flipping
+//! unhealthy → healthy when an endpoint returns, and the cache staying
+//! byte-identical over a failing-over backend.
+
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::client::sdk::Client;
+use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::metrics::GetBatchMetrics;
+use getbatch::proto::http::{
+    range_unsatisfiable, resolve_range, Handler, HttpServer, RangeSpec, Request, Response,
+};
+use getbatch::proto::wire;
+use getbatch::store::{Backend, CachedBackend, ChunkCache, RemoteBackend, StoreError};
+use getbatch::testutil::fixtures;
+use getbatch::util::crc32;
+use getbatch::util::rng::Rng;
+
+fn payload(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut buf = vec![0u8; n];
+    rng.fill_bytes(&mut buf);
+    buf
+}
+
+/// A controllable storage endpoint speaking the internal object API over an
+/// in-memory object map (keys `bucket/obj`):
+/// - `dead` flips every response (including `/v1/health`) to 500;
+/// - `die_after` makes ranged GETs deliver that many bytes, then abort the
+///   connection mid-chunked-stream (the endpoint-death-mid-read shape);
+/// - `crc_override` advertises a chosen sidecar instead of the payload's
+///   real CRC (models an endpoint serving divergent bytes).
+struct StubEndpoint {
+    addr: String,
+    dead: Arc<AtomicBool>,
+    _srv: HttpServer,
+}
+
+fn stub_endpoint(
+    objects: HashMap<String, Vec<u8>>,
+    die_after: Option<usize>,
+    crc_override: Option<u32>,
+) -> StubEndpoint {
+    let objects = Arc::new(objects);
+    let dead = Arc::new(AtomicBool::new(false));
+    let dead2 = Arc::clone(&dead);
+    let handler: Handler = Arc::new(move |req: Request| {
+        if dead2.load(Ordering::Relaxed) {
+            return Response::text(500, "endpoint down");
+        }
+        if req.path == wire::paths::HEALTH {
+            return Response::ok(b"ok".to_vec());
+        }
+        let (bucket, obj) = match wire::parse_object_path(&req.path) {
+            Some(x) => x,
+            None => return Response::status(404),
+        };
+        if req.method != "GET" {
+            return Response::status(400);
+        }
+        let data = match objects.get(&format!("{bucket}/{obj}")) {
+            Some(d) => d.clone(),
+            None => return Response::status(404),
+        };
+        let crc = crc_override.unwrap_or_else(|| crc32::hash(&data));
+        let len = data.len() as u64;
+        let resp = match resolve_range(req.header("range"), len) {
+            RangeSpec::Whole => Response::ok(data),
+            RangeSpec::Slice { start, end } => {
+                let slice = data[start as usize..end as usize].to_vec();
+                match die_after {
+                    Some(k) if slice.len() > k => {
+                        let partial = slice[..k].to_vec();
+                        Response::stream(move |w| {
+                            w.write_all(&partial)?;
+                            w.flush()?;
+                            Err(io::Error::new(io::ErrorKind::Other, "injected endpoint death"))
+                        })
+                        .into_partial(start, end, len)
+                    }
+                    _ => Response::ok(slice).into_partial(start, end, len),
+                }
+            }
+            RangeSpec::Unsatisfiable => range_unsatisfiable(len),
+        };
+        resp.with_header(wire::HDR_OBJ_CRC, &format!("{crc:08x}"))
+    });
+    let srv = HttpServer::serve(handler, 4, "stub-ep").unwrap();
+    StubEndpoint { addr: srv.addr.to_string(), dead, _srv: srv }
+}
+
+#[test]
+fn midstream_endpoint_death_resumes_on_healthy_endpoint() {
+    // Endpoint A aborts every multi-chunk ranged read after 8 KiB;
+    // endpoint B serves the same object intact. Reads that start on A must
+    // resume at the current offset on B — byte-identical, no error.
+    let data = payload(100 << 10, 42);
+    let mut objects = HashMap::new();
+    objects.insert("b/o".to_string(), data.clone());
+    let a = stub_endpoint(objects.clone(), Some(8 << 10), None);
+    let b = stub_endpoint(objects, None, None);
+
+    let metrics = GetBatchMetrics::new();
+    let remote = RemoteBackend::multi(
+        &[&a.addr, &b.addr],
+        10, // keep A selectable so the dying stream is exercised repeatedly
+        Duration::from_millis(100),
+        Some(Arc::clone(&metrics)),
+    );
+    let mut saw_failover = false;
+    for i in 0..4 {
+        // A successful read consumes an even number of round-robin picks
+        // (probe + stream open); the extra probe shifts parity so the
+        // stream open reaches the dying endpoint within two iterations.
+        let _ = remote.size("b", "o").unwrap();
+        let got = remote.open_entry("b", "o").unwrap().read_all().unwrap();
+        assert_eq!(got, data, "read {i} byte-identical despite endpoint death");
+        if metrics.remote_failovers.get() > 0 {
+            saw_failover = true;
+            break;
+        }
+    }
+    assert!(saw_failover, "round-robin reached the dying endpoint");
+    assert!(metrics.remote_fetches.get() > 0);
+}
+
+#[test]
+fn repeated_death_opens_circuit_and_b_serves_alone() {
+    let data = payload(64 << 10, 7);
+    let mut objects = HashMap::new();
+    objects.insert("b/o".to_string(), data.clone());
+    let a = stub_endpoint(objects.clone(), Some(4 << 10), None);
+    let b = stub_endpoint(objects, None, None);
+
+    let metrics = GetBatchMetrics::new();
+    let remote = RemoteBackend::multi(
+        &[&a.addr, &b.addr],
+        1, // first mid-stream death opens A's circuit
+        Duration::from_secs(60),
+        Some(Arc::clone(&metrics)),
+    );
+    for _ in 0..6 {
+        let _ = remote.size("b", "o").unwrap(); // parity shift (see above)
+        assert_eq!(remote.open_entry("b", "o").unwrap().read_all().unwrap(), data);
+    }
+    // Once A died mid-stream its circuit opened (limit 1, long probe
+    // window) and every later read came off B without further failovers.
+    assert!(!remote.endpoints().is_healthy(&a.addr), "A's circuit open");
+    assert!(remote.endpoints().is_healthy(&b.addr));
+    assert_eq!(metrics.endpoints_unhealthy.get(), 1);
+}
+
+#[test]
+fn failover_crc_mismatch_fails_closed() {
+    // Endpoint A serves *divergent* bytes (same length) and dies
+    // mid-stream; endpoint B serves the true object. Both advertise the
+    // true object's sidecar CRC. A read stitched A-prefix + B-suffix must
+    // fail the EOF CRC check instead of returning silently corrupt bytes.
+    let good = payload(64 << 10, 1);
+    let bad = payload(64 << 10, 2);
+    let want_crc = crc32::hash(&good);
+    let mut a_objects = HashMap::new();
+    a_objects.insert("b/o".to_string(), bad);
+    let mut b_objects = HashMap::new();
+    b_objects.insert("b/o".to_string(), good.clone());
+    let a = stub_endpoint(a_objects, Some(4 << 10), Some(want_crc));
+    let b = stub_endpoint(b_objects, None, None);
+
+    let remote = RemoteBackend::multi(
+        &[&a.addr, &b.addr],
+        10,
+        Duration::from_millis(100),
+        None,
+    );
+    let mut saw_mismatch = false;
+    for _ in 0..6 {
+        let _ = remote.size("b", "o").unwrap(); // parity shift (see above)
+        match remote.open_entry("b", "o").unwrap().read_all() {
+            // Stream served wholly by B: fine, and must be the true bytes.
+            Ok(got) => assert_eq!(got, good),
+            // Stream stitched across A and B: must fail closed.
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains("CRC mismatch"), "unexpected error: {msg}");
+                saw_mismatch = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_mismatch, "a stitched read must trip the CRC check");
+}
+
+#[test]
+fn getbatch_survives_endpoint_kill_with_zero_client_errors() {
+    // The acceptance scenario: a 2-endpoint remote bucket (two storage
+    // clusters holding identical data), one endpoint killed between
+    // batches. The batch over the surviving endpoint completes
+    // byte-identical with zero client-visible errors and a positive
+    // failover count.
+    let s1 = fixtures::cluster(1);
+    let s2 = fixtures::cluster(1);
+    let mut staged: Vec<(String, Vec<u8>)> = Vec::new();
+    for i in 0..8 {
+        let name = format!("obj-{i:03}");
+        let data = payload(40 << 10, 900 + i);
+        s1.put_direct("rb", &name, &data).unwrap();
+        s2.put_direct("rb", &name, &data).unwrap();
+        staged.push((name, data));
+    }
+
+    let c = getbatch::Cluster::start(ClusterConfig {
+        targets: 2,
+        http_workers: 4,
+        getbatch: GetBatchConfig {
+            chunk_bytes: 16 << 10,
+            dt_buffer_bytes: 64 << 10,
+            endpoint_failure_limit: 1,
+            endpoint_probe: Duration::from_millis(100),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    c.route_remote_bucket("rb", &[&s1.proxy_addr(), &s2.proxy_addr()], false);
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> = staged.iter().map(|(n, _)| BatchEntry::obj("rb", n)).collect();
+
+    // Both endpoints alive: baseline batch.
+    let items = client.get_batch_collect(&BatchRequest::new(entries.clone())).unwrap();
+    for (item, (_, data)) in items.iter().zip(&staged) {
+        assert_eq!(item.data().unwrap(), &data[..]);
+    }
+
+    // Kill endpoint 1; the batch must still complete byte-identically with
+    // no placeholders and no client-visible error.
+    drop(s1);
+    let items = client.get_batch_collect(&BatchRequest::new(entries)).unwrap();
+    assert_eq!(items.len(), staged.len());
+    for (item, (name, data)) in items.iter().zip(&staged) {
+        assert!(!item.is_missing(), "{name} must not degrade to a placeholder");
+        assert_eq!(item.data().unwrap(), &data[..], "{name} byte-identical after kill");
+    }
+    let failovers: u64 = c.targets.iter().map(|t| t.metrics.remote_failovers.get()).sum();
+    assert!(failovers > 0, "dead endpoint forced failovers");
+    let unhealthy: i64 = c.targets.iter().map(|t| t.metrics.endpoints_unhealthy.get()).sum();
+    assert!(unhealthy > 0, "dead endpoint marked unhealthy somewhere");
+    let hard: u64 = c.targets.iter().map(|t| t.metrics.hard_failures.get()).sum();
+    assert_eq!(hard, 0, "no aborted requests");
+}
+
+#[test]
+fn health_gauge_flips_when_endpoint_returns() {
+    // A revivable stub endpoint + a real storage cluster serving the same
+    // objects. Killing the stub marks it unhealthy on the serving targets;
+    // once it returns, traffic-triggered /v1/health probes flip its gauge
+    // back to healthy.
+    let storage = fixtures::cluster(1);
+    let mut objects = HashMap::new();
+    let mut staged: Vec<(String, Vec<u8>)> = Vec::new();
+    for i in 0..6 {
+        let name = format!("obj-{i:03}");
+        let data = payload(20 << 10, 300 + i);
+        storage.put_direct("rb", &name, &data).unwrap();
+        objects.insert(format!("rb/{name}"), data.clone());
+        staged.push((name, data));
+    }
+    let stub = stub_endpoint(objects, None, None);
+
+    let c = getbatch::Cluster::start(ClusterConfig {
+        targets: 2,
+        http_workers: 4,
+        getbatch: GetBatchConfig {
+            chunk_bytes: 16 << 10,
+            dt_buffer_bytes: 64 << 10,
+            endpoint_failure_limit: 1,
+            endpoint_probe: Duration::from_millis(50),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    c.route_remote_bucket("rb", &[&stub.addr, &storage.proxy_addr()], false);
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> = staged.iter().map(|(n, _)| BatchEntry::obj("rb", n)).collect();
+    let run = |tag: &str| {
+        let items = client.get_batch_collect(&BatchRequest::new(entries.clone())).unwrap();
+        for (item, (name, data)) in items.iter().zip(&staged) {
+            assert_eq!(item.data().unwrap(), &data[..], "{tag}: {name}");
+        }
+    };
+    let unhealthy = |c: &getbatch::Cluster| -> i64 {
+        c.targets.iter().map(|t| t.metrics.endpoints_unhealthy.get()).sum()
+    };
+
+    run("both alive");
+    assert_eq!(unhealthy(&c), 0);
+
+    // Stub down: batches keep completing; the stub goes unhealthy.
+    stub.dead.store(true, Ordering::Relaxed);
+    let mut went_unhealthy = false;
+    for _ in 0..10 {
+        run("stub dead");
+        if unhealthy(&c) > 0 {
+            went_unhealthy = true;
+            break;
+        }
+    }
+    assert!(went_unhealthy, "dead stub marked unhealthy");
+
+    // Stub back: traffic-triggered probes close the circuit again.
+    stub.dead.store(false, Ordering::Relaxed);
+    let mut recovered = false;
+    for _ in 0..100 {
+        run("stub revived");
+        if unhealthy(&c) == 0 {
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(recovered, "health gauge flipped back after the endpoint returned");
+    let probes: u64 = c.targets.iter().map(|t| t.metrics.endpoint_probes.get()).sum();
+    assert!(probes > 0, "active probes fired");
+}
+
+#[test]
+fn all_endpoints_down_surfaces_io_and_coer_placeholder() {
+    // Backend level: Io when every endpoint is dead.
+    let dead = RemoteBackend::multi(
+        &["127.0.0.1:1", "127.0.0.1:2"],
+        3,
+        Duration::from_millis(50),
+        None,
+    );
+    assert!(matches!(dead.open_entry("b", "o"), Err(StoreError::Io(_))));
+
+    // Cluster level: a bucket routed to two dead endpoints degrades to
+    // soft errors / placeholders under continue-on-error, never a hang.
+    let c = getbatch::Cluster::start(ClusterConfig {
+        targets: 2,
+        http_workers: 4,
+        getbatch: GetBatchConfig {
+            sender_wait: Duration::from_millis(1500),
+            gfn_attempts: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    c.route_remote_bucket("rb", &["127.0.0.1:1", "127.0.0.1:2"], false);
+    let client = Client::new(&c.proxy_addr());
+    let req = BatchRequest::new(vec![BatchEntry::obj("rb", "gone")]).continue_on_err(true);
+    let items = client.get_batch_collect(&req).unwrap();
+    assert_eq!(items.len(), 1);
+    assert!(items[0].is_missing(), "all-endpoints-down surfaced as a placeholder");
+}
+
+#[test]
+fn cache_over_failover_backend_stays_byte_identical() {
+    // The read-through chunk cache composes over a failing-over remote
+    // backend: fills whose inner ranged read dies mid-stream still insert
+    // the true bytes, cold and warm reads are byte-identical, and warm
+    // reads come from cache.
+    let data = payload(96 << 10, 5);
+    let mut objects = HashMap::new();
+    objects.insert("b/o".to_string(), data.clone());
+    let a = stub_endpoint(objects.clone(), Some(6 << 10), None);
+    let b = stub_endpoint(objects, None, None);
+
+    let metrics = GetBatchMetrics::new();
+    let remote: Arc<dyn Backend> = Arc::new(RemoteBackend::multi(
+        &[&a.addr, &b.addr],
+        10,
+        Duration::from_millis(100),
+        Some(Arc::clone(&metrics)),
+    ));
+    let cache = Arc::new(ChunkCache::new(1 << 20, 16 << 10, None));
+    let cached = CachedBackend::new(remote, Arc::clone(&cache), 2);
+
+    let mut saw_failover = false;
+    for i in 0..4 {
+        cache.invalidate_object("b", "o");
+        let cold = cached.open_entry("b", "o").unwrap().read_all().unwrap();
+        assert_eq!(cold, data, "cold fill {i} byte-identical");
+        let warm = cached.open_entry("b", "o").unwrap().read_all().unwrap();
+        assert_eq!(warm, data, "warm read {i} byte-identical");
+        if metrics.remote_failovers.get() > 0 {
+            saw_failover = true;
+            break;
+        }
+    }
+    assert!(saw_failover, "a fill exercised the failover path");
+    assert!(cache.hits.get() > 0, "warm reads served from cache");
+}

@@ -70,6 +70,29 @@ fn remote_backend_full_object_lifecycle() {
 }
 
 #[test]
+fn remote_backend_zero_length_object() {
+    // Regression: the 1-byte metadata probe asks for `bytes=0-0`, which a
+    // 0-byte object cannot satisfy — the probe must resolve the empty /
+    // unsatisfiable range response to `size == 0`, not an error.
+    let storage = fixtures::cluster(1);
+    let remote = RemoteBackend::new(&storage.proxy_addr(), None);
+    remote.put("rb", "empty", b"").unwrap();
+    assert!(remote.exists("rb", "empty"));
+    assert_eq!(remote.size("rb", "empty").unwrap(), 0);
+    let r = remote.open_entry("rb", "empty").unwrap();
+    assert!(r.is_empty());
+    assert_eq!(r.read_all().unwrap(), b"");
+    // ...and through a GetBatch over the remote tier.
+    let c = serving_cluster(&storage.proxy_addr(), false);
+    let client = Client::new(&c.proxy_addr());
+    let items = client
+        .get_batch_collect(&BatchRequest::new(vec![BatchEntry::obj("rb", "empty")]))
+        .unwrap();
+    assert_eq!(items.len(), 1);
+    assert_eq!(items[0].data().unwrap(), b"");
+}
+
+#[test]
 fn remote_backend_node_down_surfaces_io() {
     // Nothing listens on port 1: every call must surface an I/O error (not
     // a clean NotFound, and never a hang or panic).
@@ -97,7 +120,7 @@ fn serving_cluster(storage_addr: &str, cached: bool) -> getbatch::Cluster {
         ..Default::default()
     })
     .unwrap();
-    c.route_remote_bucket("rb", storage_addr, cached);
+    c.route_remote_bucket("rb", &[storage_addr], cached);
     c
 }
 
@@ -192,7 +215,7 @@ fn dead_remote_surfaces_as_placeholders_under_coer() {
         ..Default::default()
     })
     .unwrap();
-    c.route_remote_bucket("rb", "127.0.0.1:1", false);
+    c.route_remote_bucket("rb", &["127.0.0.1:1"], false);
     let client = Client::new(&c.proxy_addr());
     let req = BatchRequest::new(vec![BatchEntry::obj("rb", "gone")]).continue_on_err(true);
     let items = client.get_batch_collect(&req).unwrap();
@@ -223,7 +246,7 @@ fn gfn_recovers_remote_bucket_entry_from_local_replica() {
     })
     .unwrap();
     let owner = placement::owner(&c.smap, "rb/precious");
-    c.route_remote_bucket_on(owner, "rb", &storage.proxy_addr(), false);
+    c.route_remote_bucket_on(owner, "rb", &[&storage.proxy_addr()], false);
     for (i, t) in c.targets.iter().enumerate() {
         if i != owner {
             t.store.local().put("rb", "precious", &data).unwrap();
@@ -253,7 +276,7 @@ fn config_driven_bucket_routing() {
             buckets: vec![getbatch::config::BucketSpec {
                 name: "hot".into(),
                 backend: "local".into(),
-                remote_addr: String::new(),
+                remote_addrs: Vec::new(),
                 cache: true,
             }],
             ..Default::default()
@@ -276,14 +299,14 @@ fn config_driven_bucket_routing() {
 
 #[test]
 fn misconfigured_bucket_spec_refuses_to_boot() {
-    for (backend, addr) in [("remote", ""), ("s3", "10.0.0.1:80")] {
+    for (backend, addrs) in [("remote", vec![]), ("s3", vec!["10.0.0.1:80".to_string()])] {
         let bad = ClusterConfig {
             targets: 1,
             getbatch: GetBatchConfig {
                 buckets: vec![getbatch::config::BucketSpec {
                     name: "hot".into(),
                     backend: backend.into(),
-                    remote_addr: addr.into(),
+                    remote_addrs: addrs.clone(),
                     cache: false,
                 }],
                 ..Default::default()
@@ -292,7 +315,7 @@ fn misconfigured_bucket_spec_refuses_to_boot() {
         };
         assert!(
             getbatch::Cluster::start(bad).is_err(),
-            "spec backend={backend} addr={addr:?} must refuse to boot"
+            "spec backend={backend} addrs={addrs:?} must refuse to boot"
         );
     }
 }
