@@ -3,7 +3,7 @@
 //! end-to-end single-batch latency on a live cluster.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use getbatch::batch::request::{BatchEntry, BatchRequest};
 use getbatch::client::sdk::Client;
@@ -154,8 +154,12 @@ fn main() {
     });
     bench("store: 1MiB read, cache COLD (read-through)", 100 * scale, || {
         let cache = Arc::new(ChunkCache::new(8 << 20, 256 << 10, None));
-        let cached =
-            CachedBackend::new(Arc::clone(&local) as Arc<dyn Backend>, cache, 2);
+        let cached = CachedBackend::new(
+            Arc::clone(&local) as Arc<dyn Backend>,
+            cache,
+            2,
+            Duration::from_secs(3600),
+        );
         assert_eq!(cached.open_entry("b", "o").unwrap().read_all().unwrap().len(), 1 << 20);
     });
     let warm_cache = Arc::new(ChunkCache::new(8 << 20, 256 << 10, None));
@@ -163,6 +167,7 @@ fn main() {
         Arc::clone(&local) as Arc<dyn Backend>,
         Arc::clone(&warm_cache),
         2,
+        Duration::from_secs(3600),
     );
     let _ = warm.open_entry("b", "o").unwrap().read_all().unwrap();
     bench("store: 1MiB read, cache WARM (all hits)", 500 * scale, || {
@@ -180,6 +185,7 @@ fn main() {
         Arc::clone(&remote) as Arc<dyn Backend>,
         Arc::clone(&rcache),
         2,
+        Duration::from_secs(3600),
     );
     let _ = rcached.open_entry("rb", "o").unwrap().read_all().unwrap();
     bench("store: 1MiB read, remote + WARM cache", 200 * scale, || {

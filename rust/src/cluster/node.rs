@@ -143,6 +143,7 @@ impl Cluster {
                 smap: Arc::clone(&smap_holder),
                 store: Arc::clone(&store),
                 shards: Arc::clone(&shards),
+                cache: Arc::clone(&cache),
                 registry: Arc::clone(&dt_registry),
                 peer_pool: Arc::clone(&peer_pool),
                 metrics: Arc::clone(&metrics),
@@ -151,6 +152,7 @@ impl Cluster {
                 budget: Arc::clone(&budget),
                 cfg: cfg.clone(),
                 clock: Arc::clone(&clock),
+                http: HttpClient::new(true),
             });
             let http = HttpServer::serve(make_target_handler(tstate), cfg.http_workers, &id)?;
 
@@ -247,7 +249,12 @@ impl Cluster {
             Some(Arc::clone(&t.metrics)),
         ));
         let stack: Arc<dyn Backend> = if cached && gb.cache_bytes > 0 {
-            Arc::new(CachedBackend::new(remote, Arc::clone(&t.cache), gb.readahead_chunks))
+            Arc::new(CachedBackend::new(
+                remote,
+                Arc::clone(&t.cache),
+                gb.readahead_chunks,
+                gb.coherence_grace,
+            ))
         } else {
             remote
         };
@@ -285,7 +292,12 @@ fn bucket_stack(
         other => return Err(format!("unknown backend \"{other}\" (expected local|remote)")),
     };
     Ok(if spec.cache && gb.cache_bytes > 0 {
-        Some(Arc::new(CachedBackend::new(base, Arc::clone(cache), gb.readahead_chunks)))
+        Some(Arc::new(CachedBackend::new(
+            base,
+            Arc::clone(cache),
+            gb.readahead_chunks,
+            gb.coherence_grace,
+        )))
     } else if spec.backend == "remote" {
         Some(base)
     } else {
@@ -309,6 +321,9 @@ struct TargetState {
     smap: Arc<SmapHolder>,
     store: Arc<ObjectStore>,
     shards: Arc<ShardIndexCache>,
+    /// The node's shared chunk cache — the `/v1/invalidate` handler drops
+    /// an object's chunks here when another node writes it.
+    cache: Arc<ChunkCache>,
     registry: Arc<DtRegistry>,
     peer_pool: Arc<PeerPool>,
     metrics: Arc<GetBatchMetrics>,
@@ -317,6 +332,9 @@ struct TargetState {
     budget: Arc<MemoryBudget>,
     cfg: ClusterConfig,
     clock: Arc<dyn Clock>,
+    /// Pooled client for intra-cluster control traffic (invalidation
+    /// broadcasts).
+    http: HttpClient,
 }
 
 fn make_target_handler(st: Arc<TargetState>) -> Handler {
@@ -341,10 +359,57 @@ fn target_route(st: &Arc<TargetState>, req: Request) -> Response {
             },
             None => Response::text(400, "missing bucket"),
         },
+        // Cache-coherence invalidation (another node wrote this object):
+        // drop its cached chunks and its shard member index. Idempotent and
+        // cheap when nothing is cached.
+        ("POST", paths::INVALIDATE) => {
+            match (req.query_param("bucket"), req.query_param("obj")) {
+                (Some(bucket), Some(obj)) => {
+                    st.cache.invalidate_object(bucket, obj);
+                    st.shards.invalidate(bucket, obj);
+                    Response::ok(Vec::new())
+                }
+                _ => Response::text(400, "missing bucket/obj"),
+            }
+        }
         ("GET", paths::METRICS) => Response::ok(st.metrics.render(&st.id).into_bytes()),
         ("GET", paths::HEALTH) => Response::ok(b"ok".to_vec()),
         _ => Response::status(404),
     }
+}
+
+/// Fan a cache-invalidation out to every *other* target in the smap after
+/// a successful PUT/DELETE through this node — fire-and-forget on the
+/// background pool (the write response never waits on the broadcast). A
+/// missed delivery is tolerated by design: versioned chunk keys make the
+/// stale chunks unreachable at the peer's next metadata revalidation
+/// (`coherence_grace_ms`), so the broadcast only narrows the staleness
+/// window, it does not carry correctness.
+fn broadcast_invalidate(st: &Arc<TargetState>, bucket: &str, obj: &str) {
+    let smap = match st.smap.get() {
+        Some(s) => s,
+        None => return,
+    };
+    if smap.targets.len() <= 1 {
+        return;
+    }
+    st.metrics.invalidate_broadcasts.inc();
+    let st2 = Arc::clone(st);
+    let pq = format!("{}?bucket={bucket}&obj={obj}", paths::INVALIDATE);
+    st.bg.execute(move || {
+        // Parallel fan-out (same shape as the proxy's): one slow or
+        // partitioned peer must not delay delivery to the others — a
+        // sequential walk would stretch every later peer's staleness
+        // window by the stuck peer's connect timeout.
+        let others: Vec<usize> =
+            (0..smap.targets.len()).filter(|&i| i != st2.idx).collect();
+        let width = others.len().clamp(1, 16);
+        crate::util::threadpool::scoped_map(&others, width, |_, &i| {
+            if let Ok(resp) = st2.http.request("POST", &smap.targets[i].http_addr, &pq, &[]) {
+                let _ = resp.into_bytes();
+            }
+        });
+    });
 }
 
 /// Local object I/O (clients arrive here via proxy redirect; GFN arrives
@@ -364,12 +429,32 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
         "PUT" => match st.store.put(&bucket, &obj, &req.body) {
             Ok(()) => {
                 st.shards.invalidate(&bucket, &obj);
+                broadcast_invalidate(st, &bucket, &obj);
                 Response::ok(Vec::new())
             }
             Err(e) => Response::text(500, &e.to_string()),
         },
         "GET" => {
             use crate::proto::http::RangeSpec;
+            // Whole-object GETs and range-start-0 slices (metadata probes,
+            // a recovery's first chunk) advertise the PUT-time CRC-32
+            // sidecar and the object's write generation; later per-chunk
+            // ranged GETs skip the lookup — for a remote-routed bucket it
+            // would cost one remote probe per chunk. Member extraction has
+            // no per-member sidecar (the hash covers the whole shard).
+            //
+            // The stat runs BEFORE the reader opens (start-0 detection via
+            // resolve_range against u64::MAX — it needs no length), so the
+            // advertised version can never be newer than the streamed
+            // bytes: under a concurrent overwrite a remote consumer pins
+            // the older version and its fill gate rejects the newer bytes,
+            // instead of caching them under a too-new pin.
+            let want_meta = req.query_param("archpath").is_none()
+                && matches!(
+                    crate::proto::http::resolve_range(req.header("range"), u64::MAX),
+                    RangeSpec::Whole | RangeSpec::Slice { start: 0, .. }
+                );
+            let meta = if want_meta { st.store.stat(&bucket, &obj).ok() } else { None };
             let opened = match req.query_param("archpath") {
                 Some(member) => st
                     .shards
@@ -385,15 +470,6 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
             let len = reader.len();
             let chunk = st.cfg.getbatch.chunk_bytes.max(1);
             let range = crate::proto::http::resolve_range(req.header("range"), len);
-            // Whole-object GETs and range-start-0 slices (metadata probes,
-            // a recovery's first chunk) advertise the PUT-time CRC-32
-            // sidecar; later per-chunk ranged GETs skip the lookup — for a
-            // remote-routed bucket it would cost one remote probe per
-            // chunk. Member extraction has no per-member sidecar (the hash
-            // covers the whole shard).
-            let want_crc = req.query_param("archpath").is_none()
-                && matches!(range, RangeSpec::Whole | RangeSpec::Slice { start: 0, .. });
-            let crc = if want_crc { st.store.content_crc(&bucket, &obj) } else { None };
             let resp = match range {
                 RangeSpec::Whole => {
                     Response::stream(move |w| stream_entry(reader, len, chunk, w))
@@ -408,13 +484,23 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
                 }
                 RangeSpec::Unsatisfiable => crate::proto::http::range_unsatisfiable(len),
             };
-            match crc {
-                Some(c) => resp.with_header(wire::HDR_OBJ_CRC, &format!("{c:08x}")),
-                None => resp,
+            let mut resp = resp;
+            if let Some(m) = &meta {
+                if let Some(c) = m.crc {
+                    resp = resp.with_header(wire::HDR_OBJ_CRC, &format!("{c:08x}"));
+                }
+                if let Some(v) = m.version {
+                    resp = resp.with_header(wire::HDR_OBJ_VERSION, &v.to_string());
+                }
             }
+            resp
         }
         "DELETE" => match st.store.delete(&bucket, &obj) {
-            Ok(()) => Response::ok(Vec::new()),
+            Ok(()) => {
+                st.shards.invalidate(&bucket, &obj);
+                broadcast_invalidate(st, &bucket, &obj);
+                Response::ok(Vec::new())
+            }
             Err(e) => Response::text(404, &e.to_string()),
         },
         _ => Response::status(400),

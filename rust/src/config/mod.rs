@@ -119,6 +119,15 @@ pub struct GetBatchConfig {
     /// *following* chunks through one ranged read of the inner backend
     /// (clamped so one fill never exceeds `dt_buffer_bytes`).
     pub readahead_chunks: usize,
+    /// Cache coherence: how long the chunk cache trusts remembered
+    /// per-object metadata (length + write generation) before an open
+    /// re-probes the inner backend. Within the grace, cross-node coherence
+    /// relies on the best-effort `/v1/invalidate` broadcast; past it,
+    /// versioned chunk keys are the correctness backstop for a node that
+    /// missed the broadcast. `0` revalidates on every open (strongest
+    /// coherence, one metadata probe per open); larger values trade
+    /// staleness-after-missed-broadcast for fewer probes.
+    pub coherence_grace: Duration,
     /// Remote endpoint circuit breaker: this many *consecutive* failed
     /// operations mark an endpoint unhealthy (reads stop selecting it
     /// while healthy peers remain). Clamped to ≥ 1.
@@ -149,6 +158,7 @@ impl Default for GetBatchConfig {
             budget_overrun_limit: 4,
             cache_bytes: 64 << 20,
             readahead_chunks: 2,
+            coherence_grace: Duration::from_millis(500),
             endpoint_failure_limit: 3,
             endpoint_probe: Duration::from_millis(1000),
             buckets: Vec::new(),
@@ -195,6 +205,7 @@ impl GetBatchConfig {
             .set("budget_overrun_limit", Value::num(self.budget_overrun_limit as f64))
             .set("cache_bytes", Value::num(self.cache_bytes as f64))
             .set("readahead_chunks", Value::num(self.readahead_chunks as f64))
+            .set("coherence_grace_ms", Value::num(self.coherence_grace.as_millis() as f64))
             .set("endpoint_failure_limit", Value::num(self.endpoint_failure_limit as f64))
             .set("endpoint_probe_ms", Value::num(self.endpoint_probe.as_millis() as f64))
             .set("buckets", Value::Arr(self.buckets.iter().map(BucketSpec::to_json).collect()))
@@ -237,6 +248,10 @@ impl GetBatchConfig {
                 .u64_field("readahead_chunks")
                 .map(|x| x as usize)
                 .unwrap_or(d.readahead_chunks),
+            coherence_grace: v
+                .u64_field("coherence_grace_ms")
+                .map(Duration::from_millis)
+                .unwrap_or(d.coherence_grace),
             endpoint_failure_limit: v
                 .u64_field("endpoint_failure_limit")
                 .map(|x| x as u32)
@@ -368,6 +383,7 @@ mod tests {
         c.getbatch.budget_overrun_limit = 9;
         c.getbatch.cache_bytes = 8 << 20;
         c.getbatch.readahead_chunks = 5;
+        c.getbatch.coherence_grace = Duration::from_millis(125);
         c.getbatch.endpoint_failure_limit = 7;
         c.getbatch.endpoint_probe = Duration::from_millis(250);
         c.getbatch.buckets = vec![

@@ -82,6 +82,7 @@ fn route(st: &ProxyState, req: Request) -> Response {
             None => Response::text(503, "smap not ready"),
         },
         ("GET", paths::LIST) => route_list(st, req),
+        ("POST", paths::INVALIDATE) => route_invalidate(st, req),
         ("GET", paths::METRICS) => Response::ok(st.metrics.render(&st.id).into_bytes()),
         ("GET", paths::HEALTH) => Response::ok(b"ok".to_vec()),
         _ => Response::status(404),
@@ -120,6 +121,41 @@ fn route_list(st: &ProxyState, req: Request) -> Response {
     names.sort();
     names.dedup();
     Response::ok(names.join("\n").into_bytes())
+}
+
+/// Cache-coherence invalidation, gateway side: fan
+/// `POST /v1/invalidate?bucket=..&obj=..` out to every target in the smap —
+/// how an external writer (one that mutated the underlying storage without
+/// going through this cluster) tells a whole serving cluster to drop an
+/// object's cached chunks with a single call. Best-effort like the
+/// target-initiated broadcast: a target that misses it is corrected by
+/// versioned-key revalidation after `coherence_grace_ms`, so delivery
+/// failures degrade the window, never correctness — the response reports
+/// the delivered/total count instead of failing the call.
+fn route_invalidate(st: &ProxyState, req: Request) -> Response {
+    let smap = match st.smap.get() {
+        Some(s) => s,
+        None => return Response::text(503, "smap not ready"),
+    };
+    let (bucket, obj) = match (req.query_param("bucket"), req.query_param("obj")) {
+        (Some(b), Some(o)) => (b.to_string(), o.to_string()),
+        _ => return Response::text(400, "missing bucket/obj"),
+    };
+    st.metrics.invalidate_broadcasts.inc();
+    let pq = format!("{}?bucket={bucket}&obj={obj}", paths::INVALIDATE);
+    let idxs: Vec<usize> = (0..smap.targets.len()).collect();
+    let delivered: usize = scoped_map(&idxs, idxs.len().max(1).min(16), |_, &i| {
+        match st.http.request("POST", &smap.targets[i].http_addr, &pq, &[]) {
+            Ok(resp) if resp.status == 200 => {
+                let _ = resp.into_bytes();
+                1usize
+            }
+            _ => 0usize,
+        }
+    })
+    .into_iter()
+    .sum();
+    Response::ok(format!("invalidated on {delivered}/{} targets", idxs.len()).into_bytes())
 }
 
 /// Object GET/PUT → redirect to the HRW owner target (per-request hop that

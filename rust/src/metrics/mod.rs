@@ -95,6 +95,17 @@ pub struct GetBatchMetrics {
     pub cache_hits: Counter,
     pub cache_misses: Counter,
     pub cache_evictions: Counter,
+    /// Coherence: invalidation events applied to the chunk cache (local
+    /// write-through + received `/v1/invalidate` broadcasts).
+    pub cache_invalidations: Counter,
+    /// Coherence: chunks dropped because a newer object version was
+    /// observed or the object was invalidated — staleness work, disjoint
+    /// from the capacity-driven `cache_evictions`.
+    pub cache_stale_evictions: Counter,
+    /// Coherence: `/v1/invalidate` broadcasts initiated by this node
+    /// (target fan-out after PUT/DELETE, or proxy fan-out on behalf of an
+    /// external writer).
+    pub invalidate_broadcasts: Counter,
     /// Remote-backend requests issued / payload bytes fetched over HTTP.
     pub remote_fetches: Counter,
     pub remote_fetch_bytes: Counter,
@@ -120,11 +131,49 @@ pub struct GetBatchMetrics {
     /// this node's remote backends. Flips back down when a broken endpoint
     /// passes a health probe (or serves a half-open trial request).
     pub endpoints_unhealthy: Gauge,
+    /// Per-endpoint circuit state, rendered as one
+    /// `remote_endpoint_healthy{addr="..."}` gauge line per configured
+    /// endpoint (1 = circuit closed). Keyed by address with a registration
+    /// refcount: endpoint sets that share an address on one node share
+    /// (and overwrite) its line, and the line disappears only when the
+    /// *last* set tracking that address is dropped.
+    endpoint_health: Mutex<BTreeMap<String, (bool, usize)>>,
 }
 
 impl GetBatchMetrics {
     pub fn new() -> Arc<GetBatchMetrics> {
         Arc::new(GetBatchMetrics::default())
+    }
+
+    /// Register one tracker of `addr`'s health line (called per endpoint
+    /// at `EndpointSet` construction). A *new* line starts healthy; an
+    /// existing one keeps its current state — another live set may have
+    /// that endpoint's circuit open, and registration is not a health
+    /// event.
+    pub fn register_endpoint(&self, addr: &str) {
+        let mut m = self.endpoint_health.lock().unwrap();
+        m.entry(addr.to_string()).or_insert((true, 0)).1 += 1;
+    }
+
+    /// Update one endpoint's health line (circuit open/close). No-op for
+    /// an unregistered address.
+    pub fn set_endpoint_health(&self, addr: &str, healthy: bool) {
+        if let Some(e) = self.endpoint_health.lock().unwrap().get_mut(addr) {
+            e.0 = healthy;
+        }
+    }
+
+    /// Drop one registration of `addr`'s health line (its set was dropped —
+    /// bucket re-routed, cluster shutdown); the line is removed only when
+    /// no set tracks the address anymore.
+    pub fn drop_endpoint_health(&self, addr: &str) {
+        let mut m = self.endpoint_health.lock().unwrap();
+        if let Some(e) = m.get_mut(addr) {
+            e.1 = e.1.saturating_sub(1);
+            if e.1 == 0 {
+                m.remove(addr);
+            }
+        }
     }
 
     /// Prometheus text exposition (§2.4.4 "lightweight, per-node Prometheus
@@ -158,6 +207,9 @@ impl GetBatchMetrics {
             c("cache_hits_total", "chunk cache hits", self.cache_hits.get());
             c("cache_misses_total", "chunk cache misses", self.cache_misses.get());
             c("cache_evictions_total", "chunk cache LRU evictions", self.cache_evictions.get());
+            c("cache_invalidations_total", "cache invalidation events applied", self.cache_invalidations.get());
+            c("cache_stale_evictions_total", "chunks dropped for version staleness", self.cache_stale_evictions.get());
+            c("invalidate_broadcasts_total", "invalidation broadcasts initiated", self.invalidate_broadcasts.get());
             c("remote_fetches_total", "remote-backend requests issued", self.remote_fetches.get());
             c("remote_fetch_bytes_total", "payload bytes fetched from remote backends", self.remote_fetch_bytes.get());
             c("remote_failovers_total", "remote operations failed over to another endpoint", self.remote_failovers.get());
@@ -173,6 +225,23 @@ impl GetBatchMetrics {
         g("sender_peak_buffer", "largest single sender-side entry buffer", self.sender_peak_buffer.get());
         g("cache_resident_bytes", "bytes resident in the chunk cache", self.cache_resident_bytes.get());
         g("endpoints_unhealthy", "remote endpoints currently marked unhealthy", self.endpoints_unhealthy.get());
+        // Per-endpoint circuit state: one labeled line per configured
+        // remote endpoint (the ROADMAP's "surface per-endpoint health"
+        // item — the aggregate gauge above says *how many* are broken,
+        // these lines say *which*).
+        let eps = self.endpoint_health.lock().unwrap();
+        if !eps.is_empty() {
+            out.push_str(
+                "# HELP ais_getbatch_remote_endpoint_healthy 1 if the endpoint's circuit is closed\n\
+                 # TYPE ais_getbatch_remote_endpoint_healthy gauge\n",
+            );
+            for (addr, (healthy, _refs)) in eps.iter() {
+                out.push_str(&format!(
+                    "ais_getbatch_remote_endpoint_healthy{{node=\"{node}\",addr=\"{addr}\"}} {}\n",
+                    u8::from(*healthy)
+                ));
+            }
+        }
         out
     }
 
@@ -243,6 +312,45 @@ mod tests {
         assert_eq!(parsed["ais_getbatch_dt_inflight"], 2.0);
         assert!(text.contains("node=\"t1\""));
         assert!(text.contains("# TYPE ais_getbatch_work_items_total counter"));
+    }
+
+    #[test]
+    fn endpoint_health_renders_one_labeled_line_per_endpoint() {
+        let m = GetBatchMetrics::default();
+        assert!(
+            !m.render("t0").contains("remote_endpoint_healthy"),
+            "no endpoint lines before any endpoint registers"
+        );
+        m.register_endpoint("10.0.0.7:8080");
+        m.register_endpoint("10.0.0.8:8080");
+        let text = m.render("t0");
+        let lines: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("ais_getbatch_remote_endpoint_healthy{"))
+            .collect();
+        assert_eq!(lines.len(), 2, "one line per endpoint: {lines:?}");
+        assert!(lines.iter().all(|l| l.ends_with(" 1")), "{lines:?}");
+        assert!(text.contains("addr=\"10.0.0.7:8080\""));
+        // Flip one unhealthy: exactly that line reads 0.
+        m.set_endpoint_health("10.0.0.7:8080", false);
+        let text = m.render("t0");
+        assert!(text.contains("addr=\"10.0.0.7:8080\"} 0"), "{text}");
+        assert!(text.contains("addr=\"10.0.0.8:8080\"} 1"), "{text}");
+        // A second set tracking the same address: registration is not a
+        // health event (the open circuit stays visible), and dropping ONE
+        // registration must not remove the line another live set still
+        // owns.
+        m.register_endpoint("10.0.0.7:8080");
+        assert!(
+            m.render("t0").contains("addr=\"10.0.0.7:8080\"} 0"),
+            "re-registration must not mask the open circuit"
+        );
+        m.drop_endpoint_health("10.0.0.7:8080");
+        assert!(m.render("t0").contains("addr=\"10.0.0.7:8080\""), "refcounted line survives");
+        // Dropping the last registrations removes the lines.
+        m.drop_endpoint_health("10.0.0.7:8080");
+        m.drop_endpoint_health("10.0.0.8:8080");
+        assert!(!m.render("t0").contains("remote_endpoint_healthy{"));
     }
 
     #[test]

@@ -26,12 +26,26 @@ pub mod paths {
     /// their local subset; proxies fan out and merge. The remote store
     /// backend's `list` rides this.
     pub const LIST: &str = "/v1/list";
+    /// Cache-coherence invalidation:
+    /// `POST /v1/invalidate?bucket={bucket}&obj={obj}`. On a **target** it
+    /// drops the object's cached chunks and shard index; on a **proxy** it
+    /// fans the same call out to every target in the smap (how an external
+    /// writer notifies a whole serving cluster). Best-effort: a missed
+    /// delivery degrades to versioned-key revalidation after
+    /// `coherence_grace_ms`, never to a stale read forever.
+    pub const INVALIDATE: &str = "/v1/invalidate";
 }
 
 /// Response header carrying an object's PUT-time CRC-32 sidecar (8 hex
 /// chars) on object GETs — how the remote backend and GFN splice recovery
 /// learn a stored content hash without an extra round trip.
 pub const HDR_OBJ_CRC: &str = "x-getbatch-crc32";
+
+/// Response header carrying an object's monotonic write generation
+/// (decimal) on object GETs — how a remote caching tier pins the version
+/// its chunk keys are derived from. Absent when the serving tier has no
+/// version for the object (pre-versioning sidecar).
+pub const HDR_OBJ_VERSION: &str = "x-getbatch-version";
 
 /// Query parameter carrying the colocation hint (§2.4.1: "clients provide a
 /// colocation hint via a query parameter" so the proxy knows to unmarshal).

@@ -51,6 +51,19 @@ impl From<StoreError> for io::Error {
     }
 }
 
+/// Object metadata learned in one operation: length plus the coherence
+/// fields the caching tier keys on. `version` is the object's monotonic
+/// write generation (stamped in the local tier's CRC sidecar, carried over
+/// HTTP via `x-getbatch-version`); `None` means the tier has no version for
+/// the object (pre-versioning sidecar, version-less remote) and cached
+/// reads degrade to unversioned (LRU-convergent) behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObjectStat {
+    pub len: u64,
+    pub version: Option<u64>,
+    pub crc: Option<u32>,
+}
+
 /// What a tier must provide to serve a bucket (§2.2's store substrate,
 /// generalized): streaming entry readers plus object CRUD. Every
 /// implementation is positionable behind every other — the read-through
@@ -79,6 +92,29 @@ pub trait Backend: Send + Sync {
     /// splice recovery uses it to verify an already-emitted prefix without
     /// re-downloading it. `None` when absent or unsupported by the tier.
     fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32>;
+    /// The object's monotonic write generation (see [`ObjectStat`]). Every
+    /// PUT bumps it; the caching tier keys chunks by it so a stale version
+    /// becomes unreachable the moment a newer one is observed. `None` when
+    /// the tier has no version for the object.
+    fn content_version(&self, _bucket: &str, _obj: &str) -> Option<u64> {
+        None
+    }
+    /// Length + coherence metadata in one call. The default composes
+    /// [`Backend::size`] / [`Backend::content_version`] /
+    /// [`Backend::content_crc`]; tiers that can answer from a single round
+    /// trip (the remote backend's 1-byte probe) override it.
+    ///
+    /// Ordering matters: the **version is read before the length**. Under
+    /// a concurrent overwrite the skew then lands on (newer len, older
+    /// version) — a read pinned on that stat fails the cache's fill-time
+    /// version gate and retries at the new version. The reverse order
+    /// could yield (older len, newer version), which *passes* the gate
+    /// and would serve a silently truncated read as complete.
+    fn stat(&self, bucket: &str, obj: &str) -> Result<ObjectStat, StoreError> {
+        let version = self.content_version(bucket, obj);
+        let len = self.size(bucket, obj)?;
+        Ok(ObjectStat { len, version, crc: self.content_crc(bucket, obj) })
+    }
 }
 
 /// The byte source behind an [`EntryReader`]: positioned reads over one
@@ -306,6 +342,16 @@ impl ObjectStore {
     /// The object's PUT-time CRC-32 sidecar, if stored.
     pub fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32> {
         self.backend_for(bucket).content_crc(bucket, obj)
+    }
+
+    /// The object's monotonic write generation, if the serving tier has one.
+    pub fn content_version(&self, bucket: &str, obj: &str) -> Option<u64> {
+        self.backend_for(bucket).content_version(bucket, obj)
+    }
+
+    /// Length + coherence metadata in one call (see [`Backend::stat`]).
+    pub fn stat(&self, bucket: &str, obj: &str) -> Result<ObjectStat, StoreError> {
+        self.backend_for(bucket).stat(bucket, obj)
     }
 
     pub fn mountpath_count(&self) -> usize {

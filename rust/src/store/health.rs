@@ -85,6 +85,13 @@ impl EndpointSet {
             if endpoints.iter().any(|e| e.addr == *a) {
                 continue;
             }
+            if let Some(m) = &metrics {
+                // Every endpoint gets its labeled health line the moment
+                // it is configured (closed circuit), not at first failure.
+                // Registration is refcounted per address, so sets sharing
+                // an endpoint don't tear each other's line down on drop.
+                m.register_endpoint(a);
+            }
             endpoints.push(Arc::new(Endpoint {
                 addr: a.to_string(),
                 state: Mutex::new(EpState {
@@ -190,6 +197,7 @@ impl EndpointSet {
                 st.unhealthy = false;
                 if let Some(m) = &self.metrics {
                     m.endpoints_unhealthy.sub(1);
+                    m.set_endpoint_health(addr, true);
                 }
             }
         }
@@ -208,6 +216,7 @@ impl EndpointSet {
                 st.unhealthy = true;
                 if let Some(m) = &self.metrics {
                     m.endpoints_unhealthy.add(1);
+                    m.set_endpoint_health(addr, false);
                 }
             }
         }
@@ -277,9 +286,9 @@ impl EndpointSet {
 }
 
 impl Drop for EndpointSet {
-    /// Settle the node gauge: a set dropped with open circuits (bucket
+    /// Settle the node gauges: a set dropped with open circuits (bucket
     /// re-routed, cluster shutdown) must not leave `endpoints_unhealthy`
-    /// inflated forever.
+    /// inflated — or orphaned per-endpoint health lines — forever.
     fn drop(&mut self) {
         if let Some(m) = &self.metrics {
             let open = self
@@ -289,6 +298,9 @@ impl Drop for EndpointSet {
                 .count();
             if open > 0 {
                 m.endpoints_unhealthy.sub(open as i64);
+            }
+            for ep in &self.endpoints {
+                m.drop_endpoint_health(&ep.addr);
             }
         }
     }
@@ -380,6 +392,36 @@ mod tests {
         assert_eq!(metrics.endpoints_unhealthy.get(), 2);
         drop(s);
         assert_eq!(metrics.endpoints_unhealthy.get(), 0, "drop paired the add");
+    }
+
+    #[test]
+    fn per_endpoint_health_gauge_lines_track_the_circuit() {
+        let metrics = GetBatchMetrics::new();
+        let s = EndpointSet::new(
+            &["a:1", "b:2"],
+            1,
+            Duration::from_secs(60),
+            Some(Arc::clone(&metrics)),
+        );
+        // One labeled line per configured endpoint, healthy at birth.
+        let text = metrics.render("t0");
+        let lines: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("ais_getbatch_remote_endpoint_healthy{"))
+            .collect();
+        assert_eq!(lines.len(), 2, "{lines:?}");
+        assert!(text.contains("addr=\"a:1\"} 1") && text.contains("addr=\"b:2\"} 1"), "{text}");
+        // Circuit opens → that endpoint's line flips to 0, the other stays 1.
+        s.note_err("a:1");
+        let text = metrics.render("t0");
+        assert!(text.contains("addr=\"a:1\"} 0"), "{text}");
+        assert!(text.contains("addr=\"b:2\"} 1"), "{text}");
+        // Recovery flips it back.
+        s.note_ok("a:1");
+        assert!(metrics.render("t0").contains("addr=\"a:1\"} 1"));
+        // Dropping the set removes its lines.
+        drop(s);
+        assert!(!metrics.render("t0").contains("remote_endpoint_healthy{"));
     }
 
     #[test]

@@ -4,19 +4,49 @@
 //! CRC-32 sidecar next to the object so recovery paths can verify content
 //! identity without re-reading it; GETs hand out streaming entry readers
 //! (whole object or shard-member span).
+//!
+//! **Versioning (cache coherence):** every PUT stamps the object with a
+//! monotonic write generation, stored alongside the CRC in the sidecar
+//! (`"{crc:08x} {version}"`). The caching tier keys chunks by this version,
+//! so a stale cached chunk becomes unreachable the moment a newer version
+//! is observed. The authoritative version lives in an in-memory map whose
+//! update happens in the *same critical section* as the object rename —
+//! the invariant consumers rely on is: bytes read from any file handle are
+//! never **newer** than the version a later [`Backend::content_version`]
+//! call reports (version visibility is monotonic w.r.t. content
+//! visibility). Fresh objects (and objects recreated after a delete) seed
+//! their version from the wall clock in nanoseconds, so a delete + re-PUT
+//! can never reuse a version an overwrite chain already consumed.
 
+use std::collections::HashMap;
 use std::fs::{self, File};
 use std::io::{self, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::engine::{Backend, ChunkSource, EntryReader, StoreError};
 use super::mountpath::Mountpaths;
 
-/// Sidecar suffix carrying an object's PUT-time CRC-32 (8 hex chars).
+/// Sidecar suffix carrying an object's PUT-time CRC-32 (8 hex chars) and,
+/// since the coherence revision, its write generation (decimal, space
+/// separated; older single-field sidecars still parse, version `None`).
 /// Sidecars are internal: hidden from `list`, replaced on overwrite,
 /// removed on delete.
 const CRC_SUFFIX: &str = ".#crc32";
+
+/// Seed version for an object with no prior generation: wall-clock
+/// nanoseconds. Overwrites bump by 1, and any two filesystem writes are
+/// far more than a nanosecond apart, so a recreated object's seed is
+/// always past every version its previous incarnation reached.
+fn fresh_version() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(1)
+        .max(1)
+}
 
 /// Positioned reads over one entry's span of a local file. Keeps the OS
 /// cursor aligned with the last read so the sequential hot path never pays
@@ -49,7 +79,21 @@ pub struct LocalBackend {
     /// Injected read fault rate (failure testing); 0.0 in production.
     fault_rate: std::sync::Mutex<f64>,
     fault_rng: std::sync::Mutex<crate::util::rng::Rng>,
+    /// Authoritative per-object write generations, lazily seeded from
+    /// sidecars. Each object has its own slot mutex: PUT/DELETE mutate the
+    /// slot in the same critical section as the object rename/unlink (see
+    /// module docs for the visibility invariant) and writers to one object
+    /// serialize on it — while writes and version lookups of *unrelated*
+    /// objects never contend (the outer map lock is held only for the
+    /// entry lookup, never across filesystem I/O). Slots are not reclaimed
+    /// on delete (`None` = "consult the sidecar"); the map is bounded by
+    /// distinct objects touched, like the cache's metadata map.
+    versions: Mutex<HashMap<(String, String), VersionSlot>>,
 }
+
+/// One object's write-generation slot: `None` = not loaded (consult the
+/// sidecar), `Some(v)` = authoritative in-memory generation.
+type VersionSlot = Arc<Mutex<Option<u64>>>;
 
 impl LocalBackend {
     pub fn open(base: &Path, mountpaths: usize) -> Result<LocalBackend, StoreError> {
@@ -62,6 +106,7 @@ impl LocalBackend {
             tmp_dir,
             fault_rate: std::sync::Mutex::new(0.0),
             fault_rng: std::sync::Mutex::new(crate::util::rng::Rng::new(0xFA01)),
+            versions: Mutex::new(HashMap::new()),
         })
     }
 
@@ -84,6 +129,33 @@ impl LocalBackend {
 
     fn sidecar_path(&self, bucket: &str, obj: &str) -> PathBuf {
         self.mounts.object_path(bucket, &format!("{obj}{CRC_SUFFIX}"))
+    }
+
+    /// Parse a sidecar into (crc, version). The pre-coherence format held
+    /// only the CRC; such objects report `version: None` until their next
+    /// PUT stamps one.
+    fn read_sidecar(&self, bucket: &str, obj: &str) -> Option<(u32, Option<u64>)> {
+        let text = fs::read_to_string(self.sidecar_path(bucket, obj)).ok()?;
+        let mut fields = text.split_whitespace();
+        let crc = u32::from_str_radix(fields.next()?, 16).ok()?;
+        let version = fields.next().and_then(|v| v.parse().ok());
+        Some((crc, version))
+    }
+
+    /// The object's version slot (created on first touch). The outer map
+    /// lock is released before the caller locks the slot.
+    fn version_slot(&self, bucket: &str, obj: &str) -> VersionSlot {
+        let mut m = self.versions.lock().unwrap();
+        Arc::clone(m.entry((bucket.to_string(), obj.to_string())).or_default())
+    }
+
+    /// Load a slot's version, falling back to the sidecar (process
+    /// restart). Must be called with the slot locked.
+    fn load_version(&self, slot: &mut Option<u64>, bucket: &str, obj: &str) -> Option<u64> {
+        if slot.is_none() {
+            *slot = self.read_sidecar(bucket, obj).and_then(|(_, v)| v);
+        }
+        *slot
     }
 
     /// Whole-object read convenience (tests/staging; streaming paths use
@@ -121,12 +193,23 @@ impl LocalBackend {
 
 impl Backend for LocalBackend {
     /// Atomic PUT: write to a temp file on the same filesystem, then
-    /// rename. The CRC-32 sidecar is written (atomically, tmp + rename)
-    /// only *after* the object rename succeeded, so a failed PUT leaves
-    /// the previous object/sidecar pair intact; if the sidecar itself
-    /// cannot be written, any stale one is removed — recovery then sees
-    /// "no hash" rather than a wrong hash and falls back to prefix
+    /// rename. The CRC-32 + version sidecar is written (atomically, tmp +
+    /// rename) only *after* the object rename succeeded, so a failed PUT
+    /// leaves the previous object/sidecar pair intact; if the sidecar
+    /// itself cannot be written, any stale one is removed — recovery then
+    /// sees "no hash" rather than a wrong hash and falls back to prefix
     /// verification instead of failing closed.
+    ///
+    /// The version bump and the object rename share one critical section of
+    /// the object's version-slot lock: a reader that opened a file handle
+    /// holding the *new* bytes can only have opened it after the rename, so
+    /// any [`Backend::content_version`] lookup it performs afterwards
+    /// observes at least the new version — the caching tier's fill check
+    /// ("re-read the version after reading the bytes; insert only if it
+    /// still equals the pinned one") is sound because bytes can never be
+    /// newer than the reported version. The lock is per object: writes and
+    /// version lookups of unrelated objects never wait on this PUT's
+    /// filesystem I/O.
     fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError> {
         let dst = self.path(bucket, obj);
         if let Some(parent) = dst.parent() {
@@ -139,20 +222,32 @@ impl Backend for LocalBackend {
             f.write_all(data)?;
             f.sync_data().ok(); // best-effort durability; tmpfs in CI
         }
-        fs::rename(&tmp, &dst)?;
         let side = self.sidecar_path(bucket, obj);
-        let write_sidecar = || -> io::Result<()> {
+        let stmp = self.tmp_dir.join(format!("crc-{seq}.tmp"));
+
+        let slot = self.version_slot(bucket, obj);
+        let mut ver = slot.lock().unwrap();
+        let next = match self.load_version(&mut ver, bucket, obj) {
+            Some(v) => v.wrapping_add(1),
+            None => fresh_version(),
+        };
+        // Stage the sidecar before the object rename so the two renames are
+        // back to back inside the critical section.
+        let staged = (|| -> io::Result<()> {
             if let Some(parent) = side.parent() {
                 fs::create_dir_all(parent)?;
             }
-            let stmp = self.tmp_dir.join(format!("crc-{seq}.tmp"));
-            fs::write(&stmp, format!("{:08x}", crate::util::crc32::hash(data)))?;
-            fs::rename(&stmp, &side)?;
-            Ok(())
-        };
-        if write_sidecar().is_err() {
+            fs::write(&stmp, format!("{:08x} {next}", crate::util::crc32::hash(data)))
+        })()
+        .is_ok();
+        if let Err(e) = fs::rename(&tmp, &dst) {
+            let _ = fs::remove_file(&stmp); // don't leak the staged sidecar
+            return Err(e.into());
+        }
+        if !staged || fs::rename(&stmp, &side).is_err() {
             let _ = fs::remove_file(&side); // never advertise a stale hash
         }
+        *ver = Some(next);
         Ok(())
     }
 
@@ -199,6 +294,8 @@ impl Backend for LocalBackend {
 
     fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError> {
         let p = self.path(bucket, obj);
+        let slot = self.version_slot(bucket, obj);
+        let mut ver = slot.lock().unwrap();
         fs::remove_file(&p).map_err(|e| {
             if e.kind() == io::ErrorKind::NotFound {
                 StoreError::NotFound(format!("{bucket}/{obj}"))
@@ -207,6 +304,10 @@ impl Backend for LocalBackend {
             }
         })?;
         let _ = fs::remove_file(self.sidecar_path(bucket, obj));
+        // Back to "consult the sidecar": the sidecar is gone, so lookups
+        // report no version and a re-PUT reseeds from the clock (past every
+        // version this incarnation consumed).
+        *ver = None;
         Ok(())
     }
 
@@ -226,8 +327,13 @@ impl Backend for LocalBackend {
     }
 
     fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32> {
-        let text = fs::read_to_string(self.sidecar_path(bucket, obj)).ok()?;
-        u32::from_str_radix(text.trim(), 16).ok()
+        Some(self.read_sidecar(bucket, obj)?.0)
+    }
+
+    fn content_version(&self, bucket: &str, obj: &str) -> Option<u64> {
+        let slot = self.version_slot(bucket, obj);
+        let mut ver = slot.lock().unwrap();
+        self.load_version(&mut ver, bucket, obj)
     }
 }
 
@@ -291,6 +397,56 @@ mod tests {
         // error, not a clean miss; it must not be reported as NotFound.
         b.put("b", "o", b"x").unwrap();
         assert!(matches!(b.size("b", "o/sub"), Err(StoreError::Io(_))));
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn versions_bump_monotonically_and_survive_delete_recreate() {
+        let (b, base) = backend("ver");
+        assert_eq!(b.content_version("b", "o"), None, "no version before first PUT");
+        b.put("b", "o", b"v1").unwrap();
+        let v1 = b.content_version("b", "o").expect("stamped");
+        b.put("b", "o", b"v2").unwrap();
+        let v2 = b.content_version("b", "o").expect("stamped");
+        assert!(v2 > v1, "overwrite bumps: {v1} -> {v2}");
+        assert_eq!(v2, v1 + 1, "overwrite is prev + 1");
+        // Version rides the sidecar: a fresh backend over the same dir
+        // reloads it.
+        let reopened = LocalBackend::open(&base, 3).unwrap();
+        assert_eq!(reopened.content_version("b", "o"), Some(v2));
+        // Delete + recreate must never land inside the consumed range
+        // [v1, v2] — a remote cache still holding v1/v2 chunks would
+        // otherwise serve resurrected stale bytes.
+        b.delete("b", "o").unwrap();
+        assert_eq!(b.content_version("b", "o"), None);
+        b.put("b", "o", b"reborn").unwrap();
+        let v3 = b.content_version("b", "o").expect("stamped");
+        assert!(v3 > v2, "recreated version past the old chain: {v2} vs {v3}");
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn stat_bundles_len_version_crc() {
+        let (b, base) = backend("stat");
+        b.put("b", "o", b"hello").unwrap();
+        let s = b.stat("b", "o").unwrap();
+        assert_eq!(s.len, 5);
+        assert_eq!(s.crc, Some(crate::util::crc32::hash(b"hello")));
+        assert_eq!(s.version, b.content_version("b", "o"));
+        assert!(matches!(b.stat("b", "nope"), Err(StoreError::NotFound(_))));
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn legacy_crc_only_sidecar_still_parses() {
+        let (b, base) = backend("legacy");
+        b.put("b", "o", b"payload").unwrap();
+        // Rewrite the sidecar in the pre-coherence single-field format.
+        let side = b.sidecar_path("b", "o");
+        fs::write(&side, format!("{:08x}", crate::util::crc32::hash(b"payload"))).unwrap();
+        let fresh = LocalBackend::open(&base, 3).unwrap();
+        assert_eq!(fresh.content_crc("b", "o"), Some(crate::util::crc32::hash(b"payload")));
+        assert_eq!(fresh.content_version("b", "o"), None, "legacy sidecar is unversioned");
         fs::remove_dir_all(base).unwrap();
     }
 

@@ -5,6 +5,12 @@
 //! read-through LRU chunk cache with sequential read-ahead, and the
 //! [`ObjectStore`] router mapping bucket → backend stack. TAR-shard member
 //! extraction rides the same streaming [`EntryReader`] seam on every tier.
+//!
+//! Cross-node cache coherence: the local tier stamps every object with a
+//! monotonic write generation (surfaced as `x-getbatch-version`), the
+//! cache keys chunks by it ([`cache`]), and PUT/DELETE through any node
+//! broadcasts a best-effort `/v1/invalidate` — versioned keys stay the
+//! correctness backstop when a node misses the broadcast.
 
 pub mod cache;
 pub mod engine;
@@ -15,7 +21,7 @@ pub mod remote;
 pub mod shard;
 
 pub use cache::{CachedBackend, ChunkCache};
-pub use engine::{Backend, ChunkSource, EntryReader, ObjectStore, StoreError};
+pub use engine::{Backend, ChunkSource, EntryReader, ObjectStat, ObjectStore, StoreError};
 pub use health::EndpointSet;
 pub use local::LocalBackend;
 pub use remote::RemoteBackend;

@@ -136,19 +136,24 @@ impl RemoteBackend {
         Err(StoreError::Io(all_down(self.endpoints.len(), last_io)))
     }
 
-    /// 1-byte ranged probe: learns (total length, stored CRC-32 sidecar).
+    /// 1-byte ranged probe: learns (total length, stored CRC-32 sidecar,
+    /// write generation) — the CRC rides `x-getbatch-crc32`, the version
+    /// `x-getbatch-version`; either may be absent (version-less server).
     ///
     /// Zero-length objects: a 0-byte object cannot satisfy `bytes=0-0`, so
     /// a strict server answers **416** with `content-range: bytes */0` (the
     /// crate's internal servers answer an empty 206 instead — both carry
     /// the total). Either shape resolves to `size == 0`, not an error.
-    fn probe(&self, bucket: &str, obj: &str) -> Result<(u64, Option<u32>), StoreError> {
+    fn probe(&self, bucket: &str, obj: &str) -> Result<(u64, Option<u32>, Option<u64>), StoreError> {
         let pq = Self::pq(bucket, obj);
         self.with_endpoints(|addr| {
             let resp = self.client.get_range(addr, &pq, 0, 1).map_err(Attempt::Endpoint)?;
             let crc = resp
                 .header(wire::HDR_OBJ_CRC)
                 .and_then(|h| u32::from_str_radix(h.trim(), 16).ok());
+            let version = resp
+                .header(wire::HDR_OBJ_VERSION)
+                .and_then(|h| h.trim().parse::<u64>().ok());
             match resp.status {
                 206 => {
                     let total = resp
@@ -161,7 +166,7 @@ impl RemoteBackend {
                             ))
                         })?;
                     let _ = resp.into_bytes(); // drain ≤ 1 byte; recycles the conn
-                    Ok((total, crc))
+                    Ok((total, crc, version))
                 }
                 // Empty object behind a strict-RFC server: the range is
                 // unsatisfiable but the total (0) rides `content-range:
@@ -181,7 +186,7 @@ impl RemoteBackend {
                             ))
                         })?;
                     let _ = resp.into_bytes();
-                    Ok((total, crc))
+                    Ok((total, crc, version))
                 }
                 404 => Err(Attempt::Fatal(StoreError::NotFound(format!(
                     "{bucket}/{obj} @ {addr}"
@@ -240,7 +245,7 @@ fn status_attempt(addr: &str, op: &str, status: u16) -> Attempt {
 
 impl Backend for RemoteBackend {
     fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
-        let (total, crc) = self.probe(bucket, obj)?;
+        let (total, crc, _) = self.probe(bucket, obj)?;
         self.open_span(bucket, obj, 0, total, crc)
     }
 
@@ -251,7 +256,7 @@ impl Backend for RemoteBackend {
         offset: u64,
         len: u64,
     ) -> Result<EntryReader, StoreError> {
-        let (total, _) = self.probe(bucket, obj)?;
+        let (total, _, _) = self.probe(bucket, obj)?;
         if offset.saturating_add(len) > total {
             return Err(StoreError::Io(io::Error::new(
                 io::ErrorKind::UnexpectedEof,
@@ -341,7 +346,18 @@ impl Backend for RemoteBackend {
     }
 
     fn content_crc(&self, bucket: &str, obj: &str) -> Option<u32> {
-        self.probe(bucket, obj).ok().and_then(|(_, crc)| crc)
+        self.probe(bucket, obj).ok().and_then(|(_, crc, _)| crc)
+    }
+
+    fn content_version(&self, bucket: &str, obj: &str) -> Option<u64> {
+        self.probe(bucket, obj).ok().and_then(|(_, _, version)| version)
+    }
+
+    /// One probe answers everything — overriding the default (which would
+    /// issue three separate probes over the wire).
+    fn stat(&self, bucket: &str, obj: &str) -> Result<super::engine::ObjectStat, StoreError> {
+        let (len, crc, version) = self.probe(bucket, obj)?;
+        Ok(super::engine::ObjectStat { len, version, crc })
     }
 }
 

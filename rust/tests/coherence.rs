@@ -1,0 +1,398 @@
+//! Cluster-wide cache coherence under overwrite-heavy workloads: versioned
+//! chunk keys + the best-effort `/v1/invalidate` broadcast, proven against
+//! the shapes that used to go stale — overwrite through one node / read
+//! through another (cold *and* warm), delete visibility, a *missed*
+//! broadcast corrected by versioned keys alone, the gateway-side
+//! invalidation fan-out, and a concurrency property: no single read ever
+//! interleaves bytes of two versions.
+//!
+//! The overwrite-race property reads its RNG seed from
+//! `GETBATCH_COHERENCE_SEED` so CI can pin the interleavings it exercises.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::client::sdk::Client;
+use getbatch::cluster::placement;
+use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::proto::http::HttpClient;
+use getbatch::proto::wire;
+use getbatch::store::{Backend, CachedBackend, ChunkCache, LocalBackend};
+use getbatch::testutil::fixtures;
+use getbatch::testutil::prop::{check, PropConfig};
+use getbatch::util::rng::Rng;
+use getbatch::Cluster;
+
+fn payload(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut buf = vec![0u8; n];
+    rng.fill_bytes(&mut buf);
+    buf
+}
+
+/// Serving cluster: 2 targets fronting bucket `rb` from `storage_addr`
+/// through each target's chunk cache, with the given coherence grace.
+fn serving(storage_addr: &str, grace: Duration) -> Cluster {
+    let c = Cluster::start(ClusterConfig {
+        targets: 2,
+        http_workers: 4,
+        getbatch: GetBatchConfig {
+            chunk_bytes: 4 << 10,
+            dt_buffer_bytes: 64 << 10,
+            cache_bytes: 4 << 20,
+            readahead_chunks: 1,
+            coherence_grace: grace,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    c.route_remote_bucket("rb", &[storage_addr], true);
+    c
+}
+
+fn batch_bytes(client: &Client, obj: &str) -> Vec<u8> {
+    let items = client
+        .get_batch_collect(&BatchRequest::new(vec![BatchEntry::obj("rb", obj)]))
+        .unwrap();
+    assert_eq!(items.len(), 1);
+    items[0].data().expect("entry present").to_vec()
+}
+
+fn sum(c: &Cluster, f: impl Fn(&getbatch::cluster::node::TargetNode) -> u64) -> u64 {
+    c.targets.iter().map(f).sum()
+}
+
+/// The acceptance scenario: overwrite through node A, GetBatch through the
+/// cluster — the serving node (B, the entry's HRW owner, whose cache is
+/// warm with the old version) must return the new bytes cold *and* warm,
+/// with the stale chunks counted out under `cache_stale_evictions_total`.
+/// Grace 0 keeps the test deterministic: every open revalidates, so the
+/// result cannot depend on broadcast delivery timing.
+#[test]
+fn overwrite_through_node_a_reads_fresh_through_node_b_cold_and_warm() {
+    let storage = fixtures::cluster(1);
+    let v1 = payload(24 << 10, 11);
+    storage.put_direct("rb", "o", &v1).unwrap();
+
+    let c = serving(&storage.proxy_addr(), Duration::ZERO);
+    let client = Client::new(&c.proxy_addr());
+
+    // Cold then warm: v1, with the owner's cache serving the second read.
+    assert_eq!(batch_bytes(&client, "o"), v1, "cold read");
+    let hits_cold = sum(&c, |t| t.metrics.cache_hits.get());
+    assert_eq!(batch_bytes(&client, "o"), v1, "warm read");
+    assert!(sum(&c, |t| t.metrics.cache_hits.get()) > hits_cold, "second read was warm");
+
+    // Overwrite *through the non-owner target* (node A): write-through to
+    // storage + invalidation broadcast toward the warm owner (node B).
+    let owner = placement::owner(&c.smap, "rb/o");
+    let writer = 1 - owner;
+    let v2 = payload(24 << 10, 12);
+    let http = HttpClient::new(true);
+    let resp = http.put(&c.target_addr(writer), &wire::object_path("rb", "o"), &v2).unwrap();
+    assert_eq!(resp.status, 200);
+
+    // The very next read — served by node B off its warm-but-stale cache
+    // keys — must be v2: the new version makes every v1 chunk unreachable.
+    assert_eq!(batch_bytes(&client, "o"), v2, "fresh bytes straight after the overwrite");
+    assert!(
+        sum(&c, |t| t.metrics.cache_stale_evictions.get()) > 0,
+        "stale v1 chunks were evicted eagerly"
+    );
+    assert!(
+        sum(&c, |t| t.metrics.invalidate_broadcasts.get()) >= 1,
+        "the writing node broadcast the invalidation"
+    );
+    // And v2 is warm now.
+    let hits_before = sum(&c, |t| t.metrics.cache_hits.get());
+    assert_eq!(batch_bytes(&client, "o"), v2, "warm read of the new version");
+    assert!(sum(&c, |t| t.metrics.cache_hits.get()) > hits_before, "v2 served from cache");
+}
+
+/// With a *long* grace, correctness-in-time is the broadcast's job: after
+/// an overwrite through one node, the other node's warm cache converges to
+/// the new bytes without ever re-probing (the lens entry is dropped by the
+/// received `/v1/invalidate`, not by grace expiry).
+#[test]
+fn invalidation_broadcast_converges_warm_peers_within_grace() {
+    let storage = fixtures::cluster(1);
+    let v1 = payload(20 << 10, 21);
+    storage.put_direct("rb", "o", &v1).unwrap();
+
+    let c = serving(&storage.proxy_addr(), Duration::from_secs(60));
+    let client = Client::new(&c.proxy_addr());
+    assert_eq!(batch_bytes(&client, "o"), v1);
+    assert_eq!(batch_bytes(&client, "o"), v1, "owner cache warm");
+
+    let owner = placement::owner(&c.smap, "rb/o");
+    let writer = 1 - owner;
+    let v2 = payload(20 << 10, 22);
+    let http = HttpClient::new(true);
+    let resp = http.put(&c.target_addr(writer), &wire::object_path("rb", "o"), &v2).unwrap();
+    assert_eq!(resp.status, 200);
+
+    // The broadcast is fire-and-forget: poll until it lands. The 60 s
+    // grace guarantees revalidation can NOT be what flips the answer. A
+    // read that overlaps the invalidation may transiently fail (its pinned
+    // version got superseded mid-read) — that is within contract; only the
+    // converged result matters here.
+    let mut converged = false;
+    for _ in 0..200 {
+        if let Ok(items) = client
+            .get_batch_collect(&BatchRequest::new(vec![BatchEntry::obj("rb", "o")]))
+        {
+            if items[0].data() == Some(&v2[..]) {
+                converged = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(converged, "broadcast invalidation reached the warm owner");
+    assert!(
+        c.targets[owner].cache.invalidations.get() > 0,
+        "owner processed a received invalidation"
+    );
+}
+
+/// The missed-broadcast backstop: the underlying storage is mutated
+/// *without the serving cluster hearing anything* (direct write to the
+/// storage cluster — no `/v1/invalidate` can reach the serving smap). Once
+/// the coherence grace expires, versioned chunk keys alone must bring every
+/// node back to the bytes that exist — the acceptance criterion's
+/// "versioned keys remain the correctness backstop".
+#[test]
+fn missed_broadcast_versioned_keys_keep_reads_byte_correct() {
+    let storage = fixtures::cluster(1);
+    let v1 = payload(24 << 10, 31);
+    storage.put_direct("rb", "o", &v1).unwrap();
+
+    let grace = Duration::from_millis(150);
+    let c = serving(&storage.proxy_addr(), grace);
+    let client = Client::new(&c.proxy_addr());
+    assert_eq!(batch_bytes(&client, "o"), v1);
+    assert_eq!(batch_bytes(&client, "o"), v1, "warm");
+
+    // Out-of-band overwrite: straight into the storage cluster's store.
+    let v2 = payload(24 << 10, 32);
+    storage.put_direct("rb", "o", &v2).unwrap();
+
+    std::thread::sleep(grace + Duration::from_millis(250));
+    assert_eq!(
+        batch_bytes(&client, "o"),
+        v2,
+        "post-grace revalidation observed the new version"
+    );
+    assert_eq!(
+        sum(&c, |t| t.metrics.invalidate_broadcasts.get()),
+        0,
+        "no broadcast was involved — versioned keys did this alone"
+    );
+    assert!(sum(&c, |t| t.metrics.cache_stale_evictions.get()) > 0, "v1 chunks evicted");
+    assert_eq!(batch_bytes(&client, "o"), v2, "new version warm afterwards");
+}
+
+/// Delete-through-one-node visibility: after a DELETE through the serving
+/// cluster, a continue-on-error batch returns a placeholder (never stale
+/// cached bytes), and non-placeholder entries are unaffected.
+#[test]
+fn delete_through_cluster_is_visible_despite_warm_caches() {
+    let storage = fixtures::cluster(1);
+    let keep = payload(8 << 10, 41);
+    let doomed = payload(8 << 10, 42);
+    storage.put_direct("rb", "keep", &keep).unwrap();
+    storage.put_direct("rb", "doomed", &doomed).unwrap();
+
+    let c = serving(&storage.proxy_addr(), Duration::ZERO);
+    let client = Client::new(&c.proxy_addr());
+    let req = BatchRequest::new(vec![
+        BatchEntry::obj("rb", "keep"),
+        BatchEntry::obj("rb", "doomed"),
+    ])
+    .continue_on_err(true);
+    let items = client.get_batch_collect(&req).unwrap();
+    assert_eq!(items[0].data().unwrap(), &keep[..]);
+    assert_eq!(items[1].data().unwrap(), &doomed[..], "warm-up read");
+
+    let http = HttpClient::new(true);
+    let resp = http
+        .request("DELETE", &c.proxy_addr(), &wire::object_path("rb", "doomed"), &[])
+        .unwrap();
+    assert_eq!(resp.status, 200);
+
+    let items = client.get_batch_collect(&req).unwrap();
+    assert_eq!(items[0].data().unwrap(), &keep[..], "surviving entry intact");
+    assert!(
+        items[1].is_missing(),
+        "deleted object surfaced as a placeholder, not stale cached bytes"
+    );
+    assert!(sum(&c, |t| t.metrics.soft_errors.get()) > 0);
+}
+
+/// The gateway-side broadcast: one `POST /v1/invalidate` against a proxy
+/// fans out to every target — how an external writer (who mutated storage
+/// behind the cluster's back) drops a whole cluster's cached object at
+/// once, without waiting out the grace.
+#[test]
+fn proxy_invalidate_fans_out_to_every_target() {
+    // Local cached bucket, long grace: only the fan-out can flip the bytes.
+    let c = Cluster::start(ClusterConfig {
+        targets: 2,
+        http_workers: 4,
+        getbatch: GetBatchConfig {
+            chunk_bytes: 4 << 10,
+            cache_bytes: 1 << 20,
+            coherence_grace: Duration::from_secs(60),
+            buckets: vec![getbatch::config::BucketSpec {
+                name: "hot".into(),
+                backend: "local".into(),
+                remote_addrs: Vec::new(),
+                cache: true,
+            }],
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let client = Client::new(&c.proxy_addr());
+    let v1 = payload(16 << 10, 51);
+    c.put_direct("hot", "o", &v1).unwrap();
+
+    let read = |tag: &str, want: &[u8]| {
+        let items = client
+            .get_batch_collect(&BatchRequest::new(vec![BatchEntry::obj("hot", "o")]))
+            .unwrap();
+        assert_eq!(items[0].data().unwrap(), want, "{tag}");
+    };
+    read("cold v1", &v1);
+    read("warm v1", &v1);
+
+    // Mutate behind the cache (direct local write — no HTTP, no broadcast):
+    // with the 60 s grace the cluster keeps serving the remembered v1.
+    let v2 = payload(16 << 10, 52);
+    c.put_direct("hot", "o", &v2).unwrap();
+    read("stale within grace (the gap the fan-out exists for)", &v1);
+
+    // One call to the gateway drops it everywhere.
+    let http = HttpClient::new(true);
+    let resp = http
+        .request("POST", &c.proxy_addr(), "/v1/invalidate?bucket=hot&obj=o", &[])
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    let body = String::from_utf8(resp.into_bytes().unwrap()).unwrap();
+    assert!(body.contains("2/2"), "delivered to every target: {body}");
+    assert!(c.proxies[0].state.metrics.invalidate_broadcasts.get() >= 1);
+
+    read("fresh after fan-out", &v2);
+    assert!(sum(&c, |t| t.metrics.cache_invalidations.get()) >= 2, "both targets invalidated");
+}
+
+/// The overwrite-race property (mini-prop, `testutil::prop`): under
+/// concurrent out-of-band overwrites, a read through the cache either
+/// fails (version superseded mid-read — allowed) or returns bytes of
+/// exactly ONE version — never an interleaving. Every byte of version `k`
+/// equals `k % 251`, so uniformity is the whole check. Seeded via
+/// `GETBATCH_COHERENCE_SEED` (CI pins two seeds).
+#[test]
+fn prop_concurrent_overwrites_never_interleave_versions() {
+    let seed = std::env::var("GETBATCH_COHERENCE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0_FFEE);
+    check(
+        PropConfig { cases: 6, seed, max_shrink: 8 },
+        |rng: &mut Rng, size: usize| {
+            let chunk = 256usize << rng.usize_below(3); // 256 B .. 1 KiB
+            let chunks = 2 + rng.usize_below(4); // 2..=5 chunks per object
+            let writes = 8 + size.min(40);
+            (chunk, chunk * chunks, writes)
+        },
+        |&(chunk, obj_len, writes)| overwrite_race(chunk, obj_len, writes),
+    );
+}
+
+fn overwrite_race(chunk: usize, obj_len: usize, writes: usize) -> Result<(), String> {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let base = std::env::temp_dir().join(format!(
+        "gbcoh-race-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).map_err(|e| e.to_string())?;
+    let local = Arc::new(LocalBackend::open(&base, 1).map_err(|e| e.to_string())?);
+    let cache = Arc::new(ChunkCache::new(1 << 20, chunk, None));
+    let cached = Arc::new(CachedBackend::new(
+        Arc::clone(&local) as Arc<dyn Backend>,
+        cache,
+        1,
+        Duration::ZERO,
+    ));
+    // Version-tagged payloads: every byte of write k is k % 251.
+    let pattern = |k: usize| vec![(k % 251) as u8; obj_len];
+    cached.put("b", "o", &pattern(0)).map_err(|e| e.to_string())?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let verdict = std::thread::scope(|s| -> Result<(), String> {
+        // Out-of-band writer: straight into the local tier, worst case for
+        // the cache (its own put() would at least invalidate locally).
+        let writer = s.spawn(|| {
+            for k in 1..=writes {
+                local.put("b", "o", &pattern(k)).expect("writer put");
+            }
+        });
+        let mut readers = Vec::new();
+        for _ in 0..2 {
+            let cached = Arc::clone(&cached);
+            let stop = Arc::clone(&stop);
+            readers.push(s.spawn(move || -> Result<(), String> {
+                while !stop.load(Ordering::Relaxed) {
+                    match cached.open_entry("b", "o").and_then(|r| r.read_all()) {
+                        Ok(bytes) => {
+                            if bytes.len() != obj_len {
+                                return Err(format!(
+                                    "read length {} != {obj_len}",
+                                    bytes.len()
+                                ));
+                            }
+                            let v = bytes[0];
+                            if let Some(pos) = bytes.iter().position(|&b| b != v) {
+                                return Err(format!(
+                                    "interleaved versions: byte 0 is {v}, byte {pos} is {}",
+                                    bytes[pos]
+                                ));
+                            }
+                        }
+                        // A failed read (version superseded mid-fill,
+                        // metadata race) is within contract — only mixing
+                        // is forbidden.
+                        Err(_) => {}
+                    }
+                }
+                Ok(())
+            }));
+        }
+        writer.join().map_err(|_| "writer panicked".to_string())?;
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            r.join().map_err(|_| "reader panicked".to_string())??;
+        }
+        Ok(())
+    });
+    // Quiesced: the final read must succeed and be exactly the last write.
+    let settled = verdict.and_then(|()| {
+        let bytes = cached
+            .open_entry("b", "o")
+            .and_then(|r| r.read_all())
+            .map_err(|e| format!("settled read failed: {e}"))?;
+        if bytes != pattern(writes) {
+            return Err("settled read is not the last version".to_string());
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&base);
+    settled
+}

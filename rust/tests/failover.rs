@@ -333,7 +333,8 @@ fn health_gauge_flips_when_endpoint_returns() {
 
 #[test]
 fn all_endpoints_down_surfaces_io_and_coer_placeholder() {
-    // Backend level: Io when every endpoint is dead.
+    // Backend level: the error is a *typed* Io — never NotFound (a dead
+    // endpoint is not a clean miss) and never a hang.
     let dead = RemoteBackend::multi(
         &["127.0.0.1:1", "127.0.0.1:2"],
         3,
@@ -341,6 +342,7 @@ fn all_endpoints_down_surfaces_io_and_coer_placeholder() {
         None,
     );
     assert!(matches!(dead.open_entry("b", "o"), Err(StoreError::Io(_))));
+    assert!(matches!(dead.size("b", "o"), Err(StoreError::Io(_))));
 
     // Cluster level: a bucket routed to two dead endpoints degrades to
     // soft errors / placeholders under continue-on-error, never a hang.
@@ -361,6 +363,29 @@ fn all_endpoints_down_surfaces_io_and_coer_placeholder() {
     let items = client.get_batch_collect(&req).unwrap();
     assert_eq!(items.len(), 1);
     assert!(items[0].is_missing(), "all-endpoints-down surfaced as a placeholder");
+    // The degradation is visible in the soft-error metric family: the read
+    // failure was tolerated (soft), and recovery was attempted and failed
+    // (no neighbor holds a remote-bucket replica).
+    let soft: u64 = c.targets.iter().map(|t| t.metrics.soft_errors.get()).sum();
+    assert!(soft > 0, "tolerated failure counted as a soft error");
+    let attempts: u64 = c.targets.iter().map(|t| t.metrics.recovery_attempts.get()).sum();
+    let failures: u64 = c.targets.iter().map(|t| t.metrics.recovery_failures.get()).sum();
+    assert!(attempts > 0, "GFN recovery was attempted");
+    assert!(failures > 0, "recovery cannot succeed with every endpoint down");
+    let hard_before: u64 = c.targets.iter().map(|t| t.metrics.hard_failures.get()).sum();
+    assert_eq!(hard_before, 0, "coer run aborted nothing");
+
+    // Without continue-on-error the same failure is a hard abort: the
+    // streaming response is truncated and the client surfaces a typed I/O
+    // error — not a placeholder item.
+    let strict = BatchRequest::new(vec![BatchEntry::obj("rb", "gone")]);
+    match client.get_batch_collect(&strict) {
+        Err(getbatch::client::sdk::ClientError::Tar(getbatch::tar::TarError::Io(_)))
+        | Err(getbatch::client::sdk::ClientError::Io(_)) => {}
+        other => panic!("expected a typed Io error, got {other:?}"),
+    }
+    let hard: u64 = c.targets.iter().map(|t| t.metrics.hard_failures.get()).sum();
+    assert!(hard > 0, "non-coer abort counted as a hard failure");
 }
 
 #[test]
@@ -383,7 +408,9 @@ fn cache_over_failover_backend_stays_byte_identical() {
         Some(Arc::clone(&metrics)),
     ));
     let cache = Arc::new(ChunkCache::new(1 << 20, 16 << 10, None));
-    let cached = CachedBackend::new(remote, Arc::clone(&cache), 2);
+    // Long coherence grace: this test exercises failover transparency, not
+    // revalidation — warm opens must stay metadata-probe-free.
+    let cached = CachedBackend::new(remote, Arc::clone(&cache), 2, Duration::from_secs(3600));
 
     let mut saw_failover = false;
     for i in 0..4 {

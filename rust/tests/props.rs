@@ -344,6 +344,134 @@ fn prop_chunk_frames_roundtrip_any_chunk_size() {
 }
 
 #[test]
+fn prop_versioned_cache_matches_oracle_and_respects_capacity() {
+    // The versioned read-through chunk cache under random PUT / GET /
+    // DELETE interleavings over a small object pool: resident bytes must
+    // never exceed `cache_bytes`, and every GET must agree with a plain
+    // HashMap oracle — byte-identical for live objects, NotFound for
+    // deleted ones. Overwrites are the interesting part: every PUT bumps
+    // the version, so a stale chunk surviving in cache would diverge from
+    // the oracle immediately.
+    use getbatch::store::{Backend, CachedBackend, ChunkCache, LocalBackend, StoreError};
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[derive(Debug, Clone)]
+    enum Op {
+        Put(usize, Vec<u8>),
+        Get(usize),
+        Delete(usize),
+    }
+
+    static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    check(
+        PropConfig { cases: 10, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let chunk = 64usize << rng.usize_below(4); // 64 B .. 512 B
+            let cache_bytes = (chunk * (1 + rng.usize_below(6))) as u64; // 1..=6 chunks
+            let ops: Vec<Op> = (0..size.clamp(4, 60))
+                .map(|_| {
+                    let obj = rng.usize_below(4);
+                    match rng.usize_below(6) {
+                        0 | 1 => {
+                            let len = rng.usize_below(3 * chunk + 1);
+                            let mut data = vec![0u8; len];
+                            rng.fill_bytes(&mut data);
+                            Op::Put(obj, data)
+                        }
+                        5 => Op::Delete(obj),
+                        _ => Op::Get(obj),
+                    }
+                })
+                .collect();
+            (chunk, cache_bytes, ops)
+        },
+        |(chunk, cache_bytes, ops)| {
+            let base = std::env::temp_dir().join(format!(
+                "gbprop-vcache-{}-{}",
+                std::process::id(),
+                DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = std::fs::remove_dir_all(&base);
+            std::fs::create_dir_all(&base).map_err(|e| e.to_string())?;
+            let local = Arc::new(LocalBackend::open(&base, 1).map_err(|e| e.to_string())?);
+            let cache = Arc::new(ChunkCache::new(*cache_bytes, *chunk, None));
+            let cached = CachedBackend::new(
+                local as Arc<dyn Backend>,
+                Arc::clone(&cache),
+                1,
+                Duration::ZERO, // revalidate every open: versions do the work
+            );
+            let mut oracle: HashMap<usize, Vec<u8>> = HashMap::new();
+            let result = (|| -> Result<(), String> {
+                for (k, op) in ops.iter().enumerate() {
+                    match op {
+                        Op::Put(obj, data) => {
+                            cached
+                                .put("b", &format!("o{obj}"), data)
+                                .map_err(|e| format!("op {k} put o{obj}: {e}"))?;
+                            oracle.insert(*obj, data.clone());
+                        }
+                        Op::Get(obj) => {
+                            let got = cached
+                                .open_entry("b", &format!("o{obj}"))
+                                .and_then(|r| r.read_all());
+                            match (got, oracle.get(obj)) {
+                                (Ok(bytes), Some(want)) => {
+                                    if &bytes != want {
+                                        return Err(format!(
+                                            "op {k}: o{obj} diverged from oracle \
+                                             ({} vs {} bytes)",
+                                            bytes.len(),
+                                            want.len()
+                                        ));
+                                    }
+                                }
+                                (Err(StoreError::NotFound(_)), None) => {}
+                                (Ok(_), None) => {
+                                    return Err(format!("op {k}: deleted o{obj} still readable"))
+                                }
+                                (Err(e), Some(_)) => {
+                                    return Err(format!("op {k}: live o{obj} failed: {e}"))
+                                }
+                                (Err(e), None) => {
+                                    return Err(format!("op {k}: absent o{obj} wrong error: {e}"))
+                                }
+                            }
+                        }
+                        Op::Delete(obj) => {
+                            match (cached.delete("b", &format!("o{obj}")), oracle.remove(obj)) {
+                                (Ok(()), Some(_)) => {}
+                                (Err(StoreError::NotFound(_)), None) => {}
+                                (r, was) => {
+                                    return Err(format!(
+                                        "op {k}: delete o{obj} mismatch \
+                                         (oracle had it: {}, got {r:?})",
+                                        was.is_some()
+                                    ))
+                                }
+                            }
+                        }
+                    }
+                    if cache.resident_bytes() > *cache_bytes {
+                        return Err(format!(
+                            "op {k}: resident {} exceeds cache_bytes {cache_bytes}",
+                            cache.resident_bytes()
+                        ));
+                    }
+                }
+                Ok(())
+            })();
+            let _ = std::fs::remove_dir_all(&base);
+            result
+        },
+    );
+}
+
+#[test]
 fn prop_hrw_stability_under_node_addition() {
     // adding a node must move only keys that now rank it first
     check(

@@ -221,6 +221,27 @@ fn dead_remote_surfaces_as_placeholders_under_coer() {
     let items = client.get_batch_collect(&req).unwrap();
     assert_eq!(items.len(), 1);
     assert!(items[0].is_missing(), "dead remote surfaced as a placeholder");
+    // The placeholder is backed by the soft-error machinery, not silence:
+    // the failed read was counted soft and recovery was attempted (and
+    // failed — no target can reach the bucket).
+    let soft: u64 = c.targets.iter().map(|t| t.metrics.soft_errors.get()).sum();
+    assert!(soft > 0, "tolerated failure counted as a soft error");
+    let failures: u64 = c.targets.iter().map(|t| t.metrics.recovery_failures.get()).sum();
+    assert!(failures > 0, "recovery against a dead remote fails, and is counted");
+    let hard: u64 = c.targets.iter().map(|t| t.metrics.hard_failures.get()).sum();
+    assert_eq!(hard, 0, "continue-on-error aborted nothing");
+
+    // Non-coer mode must surface a *typed* I/O failure to the client — a
+    // truncated stream decoded as ClientError::Io/Tar(Io) — never a
+    // placeholder item pretending the object is merely missing.
+    let strict = BatchRequest::new(vec![BatchEntry::obj("rb", "gone")]);
+    match client.get_batch_collect(&strict) {
+        Err(getbatch::client::sdk::ClientError::Tar(getbatch::tar::TarError::Io(_)))
+        | Err(getbatch::client::sdk::ClientError::Io(_)) => {}
+        other => panic!("expected a typed Io error, got {other:?}"),
+    }
+    let hard: u64 = c.targets.iter().map(|t| t.metrics.hard_failures.get()).sum();
+    assert!(hard > 0, "non-coer abort counted as a hard failure");
 }
 
 #[test]
