@@ -17,7 +17,7 @@ use crate::proto::http::{Body, Handler, HttpClient, HttpServer, Request, Respons
 use crate::proto::wire::{self, paths, DtRegister, SenderActivate};
 use crate::sender::run_sender;
 use crate::store::{Backend, CachedBackend, ChunkCache, ObjectStore, RemoteBackend, ShardIndexCache};
-use crate::transport::{P2pServer, PeerPool};
+use crate::transport::{P2pServer, PeerPool, ReactorConfig};
 use crate::util::clock::{Clock, RealClock};
 use crate::util::threadpool::ThreadPool;
 
@@ -135,7 +135,11 @@ impl Cluster {
 
             // P2P fan-in: frames go straight to the DT registry.
             let reg2 = Arc::clone(&dt_registry);
-            let p2p = P2pServer::serve(Arc::new(move |f| reg2.dispatch(f)), &id)?;
+            let p2p = P2pServer::serve_opts(
+                Arc::new(move |f| reg2.dispatch(f)),
+                &id,
+                reactor_config(&cfg, &metrics),
+            )?;
 
             let tstate = Arc::new(TargetState {
                 id: id.clone(),
@@ -154,7 +158,8 @@ impl Cluster {
                 clock: Arc::clone(&clock),
                 http: HttpClient::new(true),
             });
-            let http = HttpServer::serve(make_target_handler(tstate), cfg.http_workers, &id)?;
+            let http =
+                HttpServer::serve_opts(make_target_handler(tstate), &id, reactor_config(&cfg, &metrics))?;
 
             targets.push(TargetNode {
                 info: NodeInfo {
@@ -181,8 +186,12 @@ impl Cluster {
         for i in 0..cfg.proxies {
             let id = format!("p{i}");
             let metrics = registry.node(&id);
-            let state = ProxyState::new(&id, Arc::clone(&smap_holder), metrics);
-            let http = HttpServer::serve(make_proxy_handler(Arc::clone(&state)), cfg.http_workers, &id)?;
+            let state = ProxyState::new(&id, Arc::clone(&smap_holder), Arc::clone(&metrics));
+            let http = HttpServer::serve_opts(
+                make_proxy_handler(Arc::clone(&state)),
+                &id,
+                reactor_config(&cfg, &metrics),
+            )?;
             proxies.push(ProxyNode {
                 info: NodeInfo { id, http_addr: http.addr.to_string(), p2p_addr: String::new() },
                 state,
@@ -263,6 +272,21 @@ impl Cluster {
 
     pub fn root(&self) -> &PathBuf {
         &self.root
+    }
+}
+
+/// Reactor shape for a node's public servers (HTTP and P2P): event-loop
+/// count and connection ceiling from the cluster config, worker floor from
+/// the legacy `http_workers` knob (the pool still grows elastically under
+/// load), node metrics wired through so `open_connections` /
+/// `reactor_wakeups_total` / `accept_backlog_shed_total` are reported.
+fn reactor_config(cfg: &ClusterConfig, metrics: &Arc<GetBatchMetrics>) -> ReactorConfig {
+    ReactorConfig {
+        threads: cfg.reactor_threads,
+        max_connections: cfg.max_connections,
+        min_workers: cfg.http_workers.max(1),
+        metrics: Some(Arc::clone(metrics)),
+        ..Default::default()
     }
 }
 
@@ -438,17 +462,12 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
             use crate::proto::http::RangeSpec;
             // Whole-object GETs and range-start-0 slices (metadata probes,
             // a recovery's first chunk) advertise the PUT-time CRC-32
-            // sidecar and the object's write generation; later per-chunk
-            // ranged GETs skip the lookup — for a remote-routed bucket it
-            // would cost one remote probe per chunk. Member extraction has
-            // no per-member sidecar (the hash covers the whole shard).
-            //
-            // The stat runs BEFORE the reader opens (start-0 detection via
-            // resolve_range against u64::MAX — it needs no length), so the
-            // advertised version can never be newer than the streamed
-            // bytes: under a concurrent overwrite a remote consumer pins
-            // the older version and its fill gate rejects the newer bytes,
-            // instead of caching them under a too-new pin.
+            // sidecar via a stat; later per-chunk ranged GETs skip it — for
+            // a remote-routed bucket it would cost one remote probe per
+            // chunk. Member extraction has no per-member sidecar (the hash
+            // covers the whole shard). The write generation is stamped
+            // separately below, bound to the bytes the reader actually
+            // holds.
             let want_meta = req.query_param("archpath").is_none()
                 && matches!(
                     crate::proto::http::resolve_range(req.header("range"), u64::MAX),
@@ -468,6 +487,7 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
                 Err(e) => return Response::text(500, &e),
             };
             let len = reader.len();
+            let observed = reader.observed_version();
             let chunk = st.cfg.getbatch.chunk_bytes.max(1);
             let range = crate::proto::http::resolve_range(req.header("range"), len);
             let resp = match range {
@@ -485,13 +505,29 @@ fn target_object(st: &Arc<TargetState>, req: Request) -> Response {
                 RangeSpec::Unsatisfiable => crate::proto::http::range_unsatisfiable(len),
             };
             let mut resp = resp;
-            if let Some(m) = &meta {
-                if let Some(c) = m.crc {
-                    resp = resp.with_header(wire::HDR_OBJ_CRC, &format!("{c:08x}"));
-                }
-                if let Some(v) = m.version {
-                    resp = resp.with_header(wire::HDR_OBJ_VERSION, &v.to_string());
-                }
+            if let Some(c) = meta.as_ref().and_then(|m| m.crc) {
+                resp = resp.with_header(wire::HDR_OBJ_CRC, &format!("{c:08x}"));
+            }
+            // Version stamp, bound to the bytes this response streams. The
+            // stat's version was read *before* the reader opened (a lower
+            // bound on the bytes' generation), the reader's observation
+            // *after* (an upper bound — the open handle pins one version):
+            // when both exist they must agree or an overwrite raced the
+            // open and the stamp is omitted (fail unconfirmed; the
+            // consumer's fill gate falls back to its own probe or retries).
+            // Ranged responses — which historically carried no version —
+            // get the after-open observation alone: a remote fill gates on
+            // "stamp == pin", and with monotonic version visibility the
+            // pinned generation can only be ≤ the bytes' ≤ the stamp, so
+            // equality pins the bytes exactly. Costs nothing extra: the
+            // observation rides metadata the reader already holds.
+            let version = match (meta.as_ref().and_then(|m| m.version), observed) {
+                (Some(pre), Some(post)) => (pre == post).then_some(post),
+                (Some(pre), None) => Some(pre),
+                (None, post) => post,
+            };
+            if let Some(v) = version {
+                resp = resp.with_header(wire::HDR_OBJ_VERSION, &v.to_string());
             }
             resp
         }
@@ -533,6 +569,19 @@ fn stream_entry(
     Ok(())
 }
 
+/// DT admission rejection: 429 plus a `Retry-After` telling the client how
+/// long a back-off is actually worth — the budget's patience window,
+/// rounded up to whole seconds (the header is integral; minimum 1 so a
+/// sub-second patience never advertises "retry immediately"). That window
+/// is how long this node lets producers block before forcing an admission,
+/// i.e. the time scale on which buffered memory realistically drains.
+/// Proxies propagate the header to the client untouched.
+fn reject_429(st: &Arc<TargetState>, msg: &str) -> Response {
+    let p = st.cfg.getbatch.budget_patience;
+    let secs = (p.as_secs() + u64::from(p.subsec_nanos() > 0)).max(1);
+    Response::text(429, msg).with_header("retry-after", &secs.to_string())
+}
+
 /// Phase 1: allocate per-request execution state; resolve *our own* entries
 /// in the background (the DT doubles as the sender for its local items).
 fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
@@ -548,11 +597,11 @@ fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
     match st.admission.check_register() {
         Admit::Ok => {}
         Admit::RejectMemory { buffered, critical } => {
-            return Response::text(429, &format!("memory pressure: {buffered}/{critical}"));
+            return reject_429(st, &format!("memory pressure: {buffered}/{critical}"));
         }
         Admit::RejectOverrun { overruns, limit } => {
-            return Response::text(
-                429,
+            return reject_429(
+                st,
                 &format!("memory budget overrunning: {overruns} forced admissions (limit {limit})"),
             );
         }

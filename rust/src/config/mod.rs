@@ -278,8 +278,18 @@ pub struct ClusterConfig {
     pub proxies: usize,
     /// Simulated mountpaths (disks) per target.
     pub mountpaths: usize,
-    /// HTTP worker threads per node.
+    /// Minimum request-handler worker threads per node. Handlers may block
+    /// (memory budget, nested intra-cluster calls), so the pool is elastic
+    /// above this floor; it no longer bounds connection concurrency.
     pub http_workers: usize,
+    /// Event-loop threads per node reactor. Connections hold no thread, so
+    /// a couple of loops multiplex thousands of sockets; raise only when a
+    /// loop core saturates on epoll/copy work.
+    pub reactor_threads: usize,
+    /// Per-node registered-connection cap. Accepts beyond it are shed
+    /// immediately (counted by `accept_backlog_shed_total`) instead of
+    /// letting untracked sockets exhaust fds/memory.
+    pub max_connections: usize,
     /// Root directory for node stores (a temp dir when empty).
     pub root_dir: String,
     /// Idle P2P connection reclaim timeout (§2.3.1 "idle connections
@@ -295,6 +305,8 @@ impl Default for ClusterConfig {
             proxies: 1,
             mountpaths: 2,
             http_workers: 8,
+            reactor_threads: 2,
+            max_connections: 4096,
             root_dir: String::new(),
             p2p_idle_timeout: Duration::from_secs(30),
             getbatch: GetBatchConfig::default(),
@@ -309,6 +321,8 @@ impl ClusterConfig {
             .set("proxies", Value::num(self.proxies as f64))
             .set("mountpaths", Value::num(self.mountpaths as f64))
             .set("http_workers", Value::num(self.http_workers as f64))
+            .set("reactor_threads", Value::num(self.reactor_threads as f64))
+            .set("max_connections", Value::num(self.max_connections as f64))
             .set("root_dir", Value::str(&self.root_dir))
             .set("p2p_idle_timeout_ms", Value::num(self.p2p_idle_timeout.as_millis() as f64))
             .set("getbatch", self.getbatch.to_json())
@@ -321,6 +335,14 @@ impl ClusterConfig {
             proxies: v.u64_field("proxies").map(|x| x as usize).unwrap_or(d.proxies),
             mountpaths: v.u64_field("mountpaths").map(|x| x as usize).unwrap_or(d.mountpaths),
             http_workers: v.u64_field("http_workers").map(|x| x as usize).unwrap_or(d.http_workers),
+            reactor_threads: v
+                .u64_field("reactor_threads")
+                .map(|x| x as usize)
+                .unwrap_or(d.reactor_threads),
+            max_connections: v
+                .u64_field("max_connections")
+                .map(|x| x as usize)
+                .unwrap_or(d.max_connections),
             root_dir: v.str_field("root_dir").unwrap_or("").to_string(),
             p2p_idle_timeout: v
                 .u64_field("p2p_idle_timeout_ms")
@@ -377,6 +399,8 @@ mod tests {
     fn json_roundtrip() {
         let mut c = ClusterConfig::default();
         c.targets = 16;
+        c.reactor_threads = 3;
+        c.max_connections = 777;
         c.getbatch.max_soft_errs = 5;
         c.getbatch.sender_wait = Duration::from_millis(1234);
         c.getbatch.budget_patience = Duration::from_millis(2500);

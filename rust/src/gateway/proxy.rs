@@ -11,7 +11,7 @@
 //! redirect the client to the DT's stream endpoint.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::batch::request::BatchRequest;
 use crate::cluster::placement;
@@ -19,8 +19,8 @@ use crate::cluster::smap::Smap;
 use crate::metrics::GetBatchMetrics;
 use crate::proto::http::{Handler, HttpClient, Request, Response};
 use crate::proto::wire::{self, paths, DtRegister, SenderActivate};
+use crate::transport::reactor::WorkerPool;
 use crate::util::rng::mix64;
-use crate::util::threadpool::scoped_map;
 
 /// Late-bound cluster map: nodes boot before the full membership is known;
 /// `set` is called once when the cluster finishes assembling.
@@ -44,6 +44,10 @@ pub struct ProxyState {
     pub smap: Arc<SmapHolder>,
     pub http: HttpClient,
     pub metrics: Arc<GetBatchMetrics>,
+    /// Persistent elastic pool for broadcast legs (sender activation,
+    /// invalidation): fan-out reuses pooled worker threads and the client's
+    /// keep-alive connections instead of spawning a thread per leg.
+    fanout: WorkerPool,
     req_seq: AtomicU64,
 }
 
@@ -54,6 +58,7 @@ impl ProxyState {
             smap,
             http: HttpClient::new(true),
             metrics,
+            fanout: WorkerPool::new(2, &format!("{id}-fanout")),
             req_seq: AtomicU64::new(1),
         })
     }
@@ -73,7 +78,31 @@ pub fn make_proxy_handler(st: Arc<ProxyState>) -> Handler {
     Arc::new(move |req: Request| route(&st, req))
 }
 
-fn route(st: &ProxyState, req: Request) -> Response {
+/// Run `job(state, i)` for `0..n` on the proxy's shared fan-out worker pool
+/// and sum the results. Replaces the old scoped thread-per-leg broadcast:
+/// worker threads persist across requests (the pool grows under load and
+/// retires back to its floor), and each leg rides the client's pooled
+/// keep-alive connection to its target.
+fn pooled_fanout_sum(
+    st: &Arc<ProxyState>,
+    n: usize,
+    job: impl Fn(&ProxyState, usize) -> usize + Send + Sync + 'static,
+) -> usize {
+    let (tx, rx) = mpsc::channel();
+    let job = Arc::new(job);
+    for i in 0..n {
+        let tx = tx.clone();
+        let job = Arc::clone(&job);
+        let stc = Arc::clone(st);
+        st.fanout.execute(move || {
+            let _ = tx.send(job(&stc, i));
+        });
+    }
+    drop(tx);
+    rx.iter().sum()
+}
+
+fn route(st: &Arc<ProxyState>, req: Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         (_, p) if p.starts_with(paths::OBJECTS) => route_object(st, req),
         ("GET", paths::BATCH) => route_batch(st, req),
@@ -132,7 +161,7 @@ fn route_list(st: &ProxyState, req: Request) -> Response {
 /// versioned-key revalidation after `coherence_grace_ms`, so delivery
 /// failures degrade the window, never correctness — the response reports
 /// the delivered/total count instead of failing the call.
-fn route_invalidate(st: &ProxyState, req: Request) -> Response {
+fn route_invalidate(st: &Arc<ProxyState>, req: Request) -> Response {
     let smap = match st.smap.get() {
         Some(s) => s,
         None => return Response::text(503, "smap not ready"),
@@ -143,8 +172,8 @@ fn route_invalidate(st: &ProxyState, req: Request) -> Response {
     };
     st.metrics.invalidate_broadcasts.inc();
     let pq = format!("{}?bucket={bucket}&obj={obj}", paths::INVALIDATE);
-    let idxs: Vec<usize> = (0..smap.targets.len()).collect();
-    let delivered: usize = scoped_map(&idxs, idxs.len().max(1).min(16), |_, &i| {
+    let n = smap.targets.len();
+    let delivered = pooled_fanout_sum(st, n, move |st, i| {
         match st.http.request("POST", &smap.targets[i].http_addr, &pq, &[]) {
             Ok(resp) if resp.status == 200 => {
                 let _ = resp.into_bytes();
@@ -152,10 +181,8 @@ fn route_invalidate(st: &ProxyState, req: Request) -> Response {
             }
             _ => 0usize,
         }
-    })
-    .into_iter()
-    .sum();
-    Response::ok(format!("invalidated on {delivered}/{} targets", idxs.len()).into_bytes())
+    });
+    Response::ok(format!("invalidated on {delivered}/{n} targets").into_bytes())
 }
 
 /// Object GET/PUT → redirect to the HRW owner target (per-request hop that
@@ -182,7 +209,7 @@ fn route_object(st: &ProxyState, req: Request) -> Response {
 }
 
 /// The three-phase GetBatch flow.
-fn route_batch(st: &ProxyState, req: Request) -> Response {
+fn route_batch(st: &Arc<ProxyState>, req: Request) -> Response {
     let smap = match st.smap.get() {
         Some(s) => s,
         None => return Response::text(503, "smap not ready"),
@@ -229,8 +256,13 @@ fn route_batch(st: &ProxyState, req: Request) -> Response {
         }
         Ok(resp) if resp.status == 429 => {
             // Admission rejection at the DT propagates to the client
-            // unchanged so it can back off and retry (§2.4.3).
-            return Response::text(429, "DT admission: memory pressure");
+            // unchanged — including the DT's Retry-After hint, derived from
+            // its budget patience — so it can back off and retry (§2.4.3).
+            let mut out = Response::text(429, "DT admission: memory pressure");
+            if let Some(ra) = resp.header("retry-after") {
+                out.headers.push(("retry-after".to_string(), ra.to_string()));
+            }
+            return out;
         }
         Ok(resp) => return Response::text(500, &format!("dt-register failed: {}", resp.status)),
         Err(e) => return Response::text(500, &format!("dt-register io: {e}")),
@@ -240,18 +272,20 @@ fn route_batch(st: &ProxyState, req: Request) -> Response {
     let _ = request; // validated above; broadcast reuses the raw body
     let body = SenderActivate::body_with_raw(req_id, &dt.p2p_addr, raw);
     let others: Vec<usize> = (0..smap.targets.len()).filter(|&i| i != dt_idx).collect();
-    let failures: usize = scoped_map(&others, others.len().max(1).min(16), |_, &i| {
-        let t = &smap.targets[i];
-        match st.http.request("POST", &t.http_addr, paths::SENDER_ACTIVATE, &body) {
-            Ok(resp) if resp.status == 200 => {
-                let _ = resp.into_bytes();
-                0usize
+    let failures = {
+        let smap = Arc::clone(&smap);
+        let others = others.clone();
+        pooled_fanout_sum(st, others.len(), move |st, k| {
+            let t = &smap.targets[others[k]];
+            match st.http.request("POST", &t.http_addr, paths::SENDER_ACTIVATE, &body) {
+                Ok(resp) if resp.status == 200 => {
+                    let _ = resp.into_bytes();
+                    0usize
+                }
+                _ => 1usize,
             }
-            _ => 1usize,
-        }
-    })
-    .into_iter()
-    .sum();
+        })
+    };
     if failures > 0 {
         // Activation failures degrade to DT sender-wait timeouts + GFN;
         // surface in metrics but do not abort (§2.4.2).
@@ -418,6 +452,37 @@ mod tests {
             }
             _ => panic!("expected bytes"),
         }
+    }
+
+    #[test]
+    fn batch_429_propagates_retry_after() {
+        use crate::proto::http::HttpServer;
+
+        // A DT stub that rejects registration under memory pressure with a
+        // Retry-After hint: the proxy must hand that hint to the client.
+        let dt: Handler = Arc::new(|req: Request| {
+            assert_eq!(req.path, paths::DT_REGISTER);
+            let mut r = Response::text(429, "memory pressure");
+            r.headers.push(("retry-after".into(), "3".into()));
+            r
+        });
+        let dt_srv = HttpServer::serve(dt, 2, "dt-stub").unwrap();
+        let h = SmapHolder::new();
+        h.set(Arc::new(Smap::new(
+            1,
+            vec![],
+            vec![NodeInfo {
+                id: "t0".into(),
+                http_addr: dt_srv.addr.to_string(),
+                p2p_addr: String::new(),
+            }],
+        )));
+        let st = ProxyState::new("p0", h, GetBatchMetrics::new());
+        let body = BatchRequest::new(vec![BatchEntry::obj("b", "o")]).to_body();
+        let resp = route(&st, get("/v1/batch", &body));
+        assert_eq!(resp.status, 429);
+        let ra = resp.headers.iter().find(|(k, _)| k == "retry-after");
+        assert_eq!(ra.map(|(_, v)| v.as_str()), Some("3"), "Retry-After propagated");
     }
 
     #[test]

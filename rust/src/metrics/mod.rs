@@ -115,7 +115,16 @@ pub struct GetBatchMetrics {
     /// Active health probes issued against broken remote endpoints.
     pub endpoint_probes: Counter,
 
+    // -- connection scheduling ----------------------------------------------
+    /// epoll wake-ups across the node's reactor threads (HTTP + P2P).
+    pub reactor_wakeups: Counter,
+    /// Accepted connections shed at the `max_connections` cap.
+    pub accept_backlog_shed: Counter,
+
     // -- resources ----------------------------------------------------------
+    /// Connections currently registered on the node's reactors (HTTP
+    /// server, P2P server, peer-pool outbound).
+    pub open_connections: Gauge,
     /// Bytes currently buffered by in-flight DT assemblies.
     pub dt_buffered_bytes: Gauge,
     /// In-flight GetBatch executions on this node (as DT).
@@ -214,12 +223,15 @@ impl GetBatchMetrics {
             c("remote_fetch_bytes_total", "payload bytes fetched from remote backends", self.remote_fetch_bytes.get());
             c("remote_failovers_total", "remote operations failed over to another endpoint", self.remote_failovers.get());
             c("endpoint_probes_total", "active health probes of broken remote endpoints", self.endpoint_probes.get());
+            c("reactor_wakeups_total", "epoll wake-ups across reactor threads", self.reactor_wakeups.get());
+            c("accept_backlog_shed_total", "connections shed at the max_connections cap", self.accept_backlog_shed.get());
         }
         let mut g = |name: &str, help: &str, v: i64| {
             out.push_str(&format!(
                 "# HELP ais_getbatch_{name} {help}\n# TYPE ais_getbatch_{name} gauge\nais_getbatch_{name}{{node=\"{node}\"}} {v}\n"
             ));
         };
+        g("open_connections", "connections registered on the node's reactors", self.open_connections.get());
         g("dt_buffered_bytes", "bytes buffered by in-flight assemblies", self.dt_buffered_bytes.get());
         g("dt_inflight", "in-flight executions as DT", self.dt_inflight.get());
         g("sender_peak_buffer", "largest single sender-side entry buffer", self.sender_peak_buffer.get());

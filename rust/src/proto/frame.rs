@@ -251,6 +251,35 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, FrameError> {
     Ok(Some(Frame { ftype, flags, req_id, index, payload }))
 }
 
+/// Decode one frame from the front of `buf` without consuming input.
+/// Returns `Ok(None)` when `buf` holds only a partial frame (read more and
+/// retry) and `Ok(Some((frame, consumed)))` when a full frame is present —
+/// the reactor's incremental-parse path (`read_frame` is its blocking
+/// counterpart and stays the wire authority for stream readers).
+pub fn decode_slice(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let ftype = FrameType::from_u8(buf[2]).ok_or(FrameError::BadType(buf[2]))?;
+    let flags = buf[3];
+    let req_id = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let index = u32::from_le_bytes(buf[12..16].try_into().unwrap());
+    let len = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(buf[20..24].try_into().unwrap());
+    if buf.len() < HEADER_LEN + len {
+        return Ok(None);
+    }
+    let payload = buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+    if crate::util::crc32::hash(&payload) != crc {
+        return Err(FrameError::BadCrc { req_id, index });
+    }
+    Ok(Some((Frame { ftype, flags, req_id, index, payload }, HEADER_LEN + len)))
+}
+
 /// Number of chunk frames an entry of `len` bytes splits into.
 pub fn chunk_count(len: usize, chunk_bytes: usize) -> usize {
     let chunk_bytes = chunk_bytes.max(1);
@@ -425,6 +454,36 @@ mod tests {
             assert_eq!(declared_total, Some(data.len() as u64), "len={len}");
             assert_eq!(rebuilt, data, "len={len} chunk={chunk}");
         }
+    }
+
+    #[test]
+    fn decode_slice_matches_read_frame() {
+        let frames = vec![
+            Frame::data(7, 3, vec![1, 2, 3, 4]),
+            Frame::soft_err(7, 9, "missing object"),
+            Frame::sender_done(7, 42),
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        // Incremental: every prefix either yields the next frame or None.
+        let mut off = 0usize;
+        let mut got = Vec::new();
+        for end in 0..=buf.len() {
+            if let Some((f, used)) = decode_slice(&buf[off..end]).unwrap() {
+                got.push(f);
+                off += used;
+            }
+        }
+        assert_eq!(got, frames);
+        assert_eq!(off, buf.len());
+        // Corruption is detected at the slice layer too.
+        let mut bad = Vec::new();
+        write_frame(&mut bad, &Frame::data(1, 0, vec![9; 10])).unwrap();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert!(matches!(decode_slice(&bad), Err(FrameError::BadCrc { .. })));
     }
 
     #[test]

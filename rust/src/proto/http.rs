@@ -1,5 +1,5 @@
-//! Minimal HTTP/1.1 implementation over blocking sockets (no hyper/tokio in
-//! the offline sandbox). Covers exactly what the GetBatch API needs:
+//! Minimal HTTP/1.1 implementation (no hyper/tokio in the offline
+//! sandbox). Covers exactly what the GetBatch API needs:
 //!
 //! - request bodies on GET (§2.2 — the JSON entry list rides a GET body);
 //! - 307 redirects (proxy → Designated Target, §2.3.1 phase 3);
@@ -8,14 +8,29 @@
 //! - keep-alive with a client-side connection cache (per-request TCP setup
 //!   is precisely the overhead the paper measures — the *baseline* GET path
 //!   can disable reuse to model cold connections).
+//!
+//! The **server** side is readiness-driven: each connection is a
+//! [`ConnProto`] state machine on the shared [`Reactor`] (incremental head
+//! parse off the connection's input buffer, one in-flight request per
+//! connection, responses written through the reactor's bounded
+//! per-connection output buffer). Handlers run on the reactor's elastic
+//! worker pool and are free to block — on the `MemoryBudget`, on nested
+//! intra-cluster calls — because they hold no socket; a streaming body
+//! that outruns a slow client blocks on the output buffer's high-water
+//! mark while the reactor keeps only write-*interest* armed. The client
+//! side stays a plain blocking caller (it lives on worker/test threads
+//! that have nothing else to do while waiting).
 
 use std::collections::BTreeMap;
-use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
+
+use crate::transport::reactor::{
+    ConnIo, ConnProto, ProtoFactory, Reactor, ReactorConfig, ReactorStats, WorkerPool,
+};
 
 
 // ---------------------------------------------------------------- types --
@@ -222,61 +237,31 @@ fn parse_query(q: &str) -> BTreeMap<String, String> {
         .collect()
 }
 
-/// Outcome of waiting for the next request on a keep-alive connection.
-enum NextRequest {
-    Req(Request),
-    /// Clean EOF: client closed between requests.
-    Closed,
-    /// Read timeout while idle (no bytes of the next request yet) — caller
-    /// checks the server stop flag and either retries or drops the conn.
-    IdleTimeout,
-}
-
-fn is_timeout(e: &io::Error) -> bool {
-    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
-}
-
-/// `read_line` that retries short read-timeouts once a request has started.
-/// Safe to retry: `read_line` appends to `line`, so partial progress is kept.
-fn read_line_retry(
-    r: &mut BufReader<TcpStream>,
-    line: &mut String,
-    deadline: std::time::Instant,
-) -> io::Result<usize> {
-    loop {
-        match r.read_line(line) {
-            Ok(n) => return Ok(n),
-            Err(e) if is_timeout(&e) && std::time::Instant::now() < deadline => continue,
-            Err(e) => return Err(e),
-        }
-    }
-}
-
-/// Read one request from a buffered stream.
-///
-/// The socket's read timeout is short (a shutdown-poll interval); a timeout
-/// *before the first byte* of a request is reported as `IdleTimeout` so the
-/// caller can check the stop flag, while timeouts *inside* a request retry
-/// until `REQUEST_DEADLINE` — a slow client is not a dead connection.
-fn read_request(r: &mut BufReader<TcpStream>, peer: Option<SocketAddr>) -> io::Result<NextRequest> {
-    const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
-    let mut line = String::new();
-    match r.read_line(&mut line) {
-        Ok(0) => return Ok(NextRequest::Closed),
-        Ok(_) => {}
-        Err(e) if is_timeout(&e) && line.is_empty() => return Ok(NextRequest::IdleTimeout),
-        Err(e) if is_timeout(&e) => {
-            // Partial request line: fall through to a retrying read of the
-            // remainder.
-            let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
-            if !line.ends_with('\n') {
-                read_line_retry(r, &mut line, deadline)?;
+/// Try to parse one complete request from the front of `buf`. Returns the
+/// request plus the bytes it consumed, or `None` when more input is needed.
+/// `scan_from` caches how much of `buf` was already searched for the head
+/// terminator so a large body arriving in pieces is not re-scanned.
+fn parse_request(
+    buf: &[u8],
+    peer: SocketAddr,
+    scan_from: &mut usize,
+) -> io::Result<Option<(Request, usize)>> {
+    const MAX_HEAD: usize = 64 * 1024;
+    let from = scan_from.saturating_sub(3);
+    let head_end = match buf[from..].windows(4).position(|w| w == b"\r\n\r\n") {
+        Some(i) => from + i + 4,
+        None => {
+            if buf.len() > MAX_HEAD {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "request head too large"));
             }
+            *scan_from = buf.len();
+            return Ok(None);
         }
-        Err(e) => return Err(e),
-    }
-    let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
-    let mut parts = line.trim_end().splitn(3, ' ');
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-utf8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let mut parts = lines.next().unwrap_or("").splitn(3, ' ');
     let method = parts.next().unwrap_or("").to_string();
     let target = parts.next().unwrap_or("").to_string();
     let version = parts.next().unwrap_or("");
@@ -288,81 +273,86 @@ fn read_request(r: &mut BufReader<TcpStream>, peer: Option<SocketAddr>) -> io::R
         None => (target, BTreeMap::new()),
     };
     let mut headers = BTreeMap::new();
-    loop {
-        let mut hl = String::new();
-        if read_line_retry(r, &mut hl, deadline)? == 0 {
-            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in headers"));
-        }
-        let hl = hl.trim_end();
-        if hl.is_empty() {
-            break;
-        }
+    for hl in lines {
         if let Some((k, v)) = hl.split_once(':') {
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
     let len: usize = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
-    let mut body = vec![0u8; len];
-    let mut filled = 0usize;
-    while filled < len {
-        match r.read(&mut body[filled..]) {
-            Ok(0) => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in body")),
-            Ok(n) => filled += n,
-            Err(e) if is_timeout(&e) && std::time::Instant::now() < deadline => continue,
-            Err(e) => return Err(e),
-        }
+    let total = head_end + len;
+    if buf.len() < total {
+        return Ok(None);
     }
-    Ok(NextRequest::Req(Request { method, path, query, headers, body, peer }))
+    let body = buf[head_end..total].to_vec();
+    Ok(Some((Request { method, path, query, headers, body, peer: Some(peer) }, total)))
 }
 
-fn write_response(w: &mut BufWriter<&TcpStream>, resp: Response, keep_alive: bool) -> io::Result<()> {
-    write!(w, "HTTP/1.1 {} {}\r\n", resp.status, status_text(resp.status))?;
-    for (k, v) in &resp.headers {
-        write!(w, "{}: {}\r\n", k, v)?;
+// ---------------------------------------------------------------- server --
+
+pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+
+/// Serialize a response head for the reactor write path.
+fn response_head(status: u16, headers: &[(String, String)], keep_alive: bool) -> String {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", status, status_text(status));
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
     }
-    write!(w, "connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+    head.push_str(if keep_alive { "connection: keep-alive\r\n" } else { "connection: close\r\n" });
+    head
+}
+
+/// Write a full response through the connection's reactor buffer. Runs on a
+/// worker thread; blocks (on the buffer high-water mark, never a socket)
+/// when the client reads slower than a streaming body produces.
+fn write_conn_response(io: &Arc<ConnIo>, resp: Response, keep_alive: bool) -> io::Result<()> {
+    let mut head = response_head(resp.status, &resp.headers, keep_alive);
     match resp.body {
         Body::Bytes(b) => {
-            write!(w, "content-length: {}\r\n\r\n", b.len())?;
-            w.write_all(&b)?;
+            head.push_str(&format!("content-length: {}\r\n\r\n", b.len()));
+            let mut buf = head.into_bytes();
+            buf.extend_from_slice(&b);
+            io.send_vec(buf).map(|_| ())
         }
         Body::Stream(f) => {
-            write!(w, "transfer-encoding: chunked\r\n\r\n")?;
-            let mut cw = ChunkedWriter { w, chunk_buf: Vec::with_capacity(64 * 1024) };
+            head.push_str("transfer-encoding: chunked\r\n\r\n");
+            io.send(head.as_bytes())?;
+            let mut cw = ChunkedWriter { io, chunk_buf: Vec::with_capacity(64 * 1024) };
             f(&mut cw)?;
-            cw.finish()?;
+            cw.finish()
         }
     }
-    w.flush()
 }
 
-/// Chunked-transfer encoder. Buffers small writes into ~64 KiB chunks so the
-/// TAR writer's 512-byte blocks don't become 512-byte chunks on the wire.
-struct ChunkedWriter<'a, 'b> {
-    w: &'a mut BufWriter<&'b TcpStream>,
+/// Chunked-transfer encoder over a reactor connection. Buffers small writes
+/// into ~64 KiB chunks so the TAR writer's 512-byte blocks don't become
+/// 512-byte chunks on the wire.
+struct ChunkedWriter<'a> {
+    io: &'a Arc<ConnIo>,
     chunk_buf: Vec<u8>,
 }
 
-impl ChunkedWriter<'_, '_> {
+impl ChunkedWriter<'_> {
     const FLUSH_AT: usize = 64 * 1024;
 
     fn emit(&mut self) -> io::Result<()> {
         if !self.chunk_buf.is_empty() {
-            write!(self.w, "{:x}\r\n", self.chunk_buf.len())?;
-            self.w.write_all(&self.chunk_buf)?;
-            self.w.write_all(b"\r\n")?;
+            let mut wire = Vec::with_capacity(self.chunk_buf.len() + 16);
+            wire.extend_from_slice(format!("{:x}\r\n", self.chunk_buf.len()).as_bytes());
+            wire.extend_from_slice(&self.chunk_buf);
+            wire.extend_from_slice(b"\r\n");
             self.chunk_buf.clear();
+            self.io.send_vec(wire)?;
         }
         Ok(())
     }
 
     fn finish(mut self) -> io::Result<()> {
         self.emit()?;
-        self.w.write_all(b"0\r\n\r\n")
+        self.io.send(b"0\r\n\r\n")
     }
 }
 
-impl Write for ChunkedWriter<'_, '_> {
+impl Write for ChunkedWriter<'_> {
     fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
         self.chunk_buf.extend_from_slice(buf);
         if self.chunk_buf.len() >= Self::FLUSH_AT {
@@ -371,119 +361,132 @@ impl Write for ChunkedWriter<'_, '_> {
         Ok(buf.len())
     }
     fn flush(&mut self) -> io::Result<()> {
-        // Flush the pending chunk to the socket — gives streaming mode real
+        // Hand the pending chunk to the reactor — gives streaming mode real
         // time-to-first-byte semantics.
-        self.emit()?;
-        self.w.flush()
+        self.emit()
     }
 }
 
-// ---------------------------------------------------------------- server --
+/// Per-connection HTTP/1.1 server state machine on the reactor. One
+/// in-flight request at a time (HTTP/1.1 response ordering); while a
+/// request is being handled, read interest is dropped so a pipelining
+/// client gets TCP backpressure instead of growing the input buffer.
+struct HttpConn {
+    handler: Handler,
+    pool: WorkerPool,
+    peer: SocketAddr,
+    /// Set while a worker owns the current request/response.
+    busy: Arc<AtomicBool>,
+    /// Peer half-closed; close once the in-flight response flushes.
+    eof: bool,
+    /// Incremental-parse resume point (see [`parse_request`]).
+    scan_from: usize,
+}
 
-pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+impl HttpConn {
+    fn dispatch(&self, req: Request, io: &Arc<ConnIo>) {
+        let keep_alive = !req
+            .header("connection")
+            .map(|c| c.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+        self.busy.store(true, Ordering::Release);
+        io.pause_reads();
+        let handler = Arc::clone(&self.handler);
+        let busy = Arc::clone(&self.busy);
+        let io = Arc::clone(io);
+        self.pool.execute(move || {
+            let resp =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(req)))
+                    .unwrap_or_else(|_| Response::text(500, "handler panicked"));
+            let ok = write_conn_response(&io, resp, keep_alive).is_ok();
+            busy.store(false, Ordering::Release);
+            if !ok {
+                io.close();
+            } else if !keep_alive {
+                io.close_after_flush();
+            } else {
+                // Resuming read interest also re-runs `on_data`, which picks
+                // up a pipelined request already sitting in the input buffer.
+                io.resume_reads();
+            }
+        });
+    }
+}
 
-/// A running HTTP server; dropping it stops the accept loop and joins it.
+impl ConnProto for HttpConn {
+    fn on_data(&mut self, inbuf: &mut Vec<u8>, io: &Arc<ConnIo>) -> io::Result<()> {
+        while !self.busy.load(Ordering::Acquire) {
+            match parse_request(inbuf, self.peer, &mut self.scan_from)? {
+                Some((req, used)) => {
+                    inbuf.drain(..used);
+                    self.scan_from = 0;
+                    self.dispatch(req, io);
+                }
+                None => {
+                    if self.eof {
+                        io.close_after_flush();
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_eof(&mut self, io: &Arc<ConnIo>) {
+        self.eof = true;
+        if !self.busy.load(Ordering::Acquire) {
+            io.close_after_flush();
+        }
+    }
+}
+
+/// A running HTTP server: a listener on a dedicated [`Reactor`] whose few
+/// event-loop threads multiplex every connection. Dropping it stops the
+/// loops and joins reactor + worker threads.
 pub struct HttpServer {
     pub addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    reactor: Arc<Reactor>,
 }
 
 impl HttpServer {
-    /// Bind to `127.0.0.1:0` (ephemeral port) and serve requests.
-    ///
-    /// Connection scheduling is thread-per-connection: keep-alive means a
-    /// connection can park idle for a long time, so a fixed worker pool
-    /// would be pinned by idle connections (classic blocking-server
-    /// pitfall). Threads are cheap at this scale; `_workers` is kept for
-    /// config compatibility and bounds nothing here.
-    pub fn serve(handler: Handler, _workers: usize, name: &str) -> io::Result<HttpServer> {
+    /// Bind to `127.0.0.1:0` (ephemeral port) and serve requests with
+    /// default reactor settings; `workers` seeds the minimum worker count
+    /// (the pool grows on demand — see [`WorkerPool`]).
+    pub fn serve(handler: Handler, workers: usize, name: &str) -> io::Result<HttpServer> {
+        let cfg = ReactorConfig { min_workers: workers.max(1), ..Default::default() };
+        HttpServer::serve_opts(handler, name, cfg)
+    }
+
+    /// [`HttpServer::serve`] with explicit reactor tuning
+    /// (`reactor_threads`, `max_connections`, buffer limit, metrics).
+    pub fn serve_opts(handler: Handler, name: &str, cfg: ReactorConfig) -> io::Result<HttpServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let name = name.to_string();
-        let accept_thread = std::thread::Builder::new()
-            .name(format!("{name}-accept"))
-            .spawn(move || {
-                let mut conns: Vec<JoinHandle<()>> = Vec::new();
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, peer)) => {
-                            let h = Arc::clone(&handler);
-                            let st = Arc::clone(&stop2);
-                            if let Ok(t) = std::thread::Builder::new()
-                                .name(format!("{name}-conn"))
-                                .stack_size(256 * 1024)
-                                .spawn(move || serve_connection(stream, peer, h, st))
-                            {
-                                conns.push(t);
-                            }
-                            // opportunistic reaping of finished conn threads
-                            if conns.len() > 64 {
-                                conns.retain(|t| !t.is_finished());
-                            }
-                        }
-                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(1));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                for t in conns {
-                    let _ = t.join();
-                }
+        let reactor = Reactor::new(cfg, name)?;
+        let pool = reactor.worker_pool();
+        let factory: ProtoFactory = Arc::new(move |peer| {
+            Box::new(HttpConn {
+                handler: Arc::clone(&handler),
+                pool: pool.clone(),
+                peer,
+                busy: Arc::new(AtomicBool::new(false)),
+                eof: false,
+                scan_from: 0,
             })
-            .expect("spawn accept loop");
-        Ok(HttpServer { addr, stop, accept_thread: Some(accept_thread) })
+        });
+        reactor.listen(listener, factory)?;
+        Ok(HttpServer { addr, reactor })
     }
 
     pub fn port(&self) -> u16 {
         self.addr.port()
     }
-}
 
-impl Drop for HttpServer {
-    fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-    }
-}
-
-fn serve_connection(stream: TcpStream, peer: SocketAddr, handler: Handler, stop: Arc<AtomicBool>) {
-    let _ = stream.set_nodelay(true);
-    // Short poll so idle keep-alive connections notice server shutdown
-    // instead of pinning a pool worker for the full client idle time.
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
-    let write_half = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::with_capacity(64 * 1024, stream);
-    loop {
-        let req = match read_request(&mut reader, Some(peer)) {
-            Ok(NextRequest::Req(r)) => r,
-            Ok(NextRequest::Closed) => return,
-            Ok(NextRequest::IdleTimeout) => {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                continue;
-            }
-            Err(_) => return,
-        };
-        let wants_close = req.header("connection").map(|c| c.eq_ignore_ascii_case("close")).unwrap_or(false);
-        let resp = handler(req);
-        let mut w = BufWriter::with_capacity(256 * 1024, &write_half);
-        if write_response(&mut w, resp, !wants_close).is_err() {
-            return;
-        }
-        if wants_close {
-            return;
-        }
+    /// Reactor counters (connection gauge, wake-ups, shed accepts, peak
+    /// buffering) — mirrored into node metrics and asserted by scale tests.
+    pub fn stats(&self) -> Arc<ReactorStats> {
+        Arc::clone(self.reactor.stats())
     }
 }
 

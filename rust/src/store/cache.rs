@@ -16,10 +16,12 @@
 //! write generation (stamped by the local tier at PUT, carried over HTTP
 //! via `x-getbatch-version`). Every open pins the version it observed; all
 //! chunks it reads or fills are keyed by that pin, so a single read can
-//! never interleave bytes of two versions — the fill path re-reads the
-//! inner version *after* reading the bytes and refuses to serve/insert on
-//! a mismatch (sound because the local tier guarantees bytes are never
-//! newer than the version a later lookup reports). Observing a newer
+//! never interleave bytes of two versions — the fill path confirms the
+//! version the bytes came from (the fill reader's own observed version
+//! when the inner tier surfaces one, a separate re-probe otherwise) and
+//! refuses to serve/insert on a mismatch (sound because the local tier
+//! guarantees bytes are never newer than the version a later — or
+//! same-handle — lookup reports). Observing a newer
 //! version eagerly evicts every older version's chunks
 //! (`cache_stale_evictions_total`). Remembered per-object metadata
 //! (length + version) is trusted for `coherence_grace_ms` since its last
@@ -452,25 +454,28 @@ impl CacheSource {
         for _ in idx..=end_idx {
             pieces.push(Arc::new(reader.read_chunk(cb as usize)?));
         }
-        // Coherence gate: the bytes above can never be *newer* than what a
-        // version lookup now reports (local-tier invariant; over a remote
-        // set it additionally assumes every endpoint fronts the same store
-        // — the tier's standing contract, see `store::remote`: with
-        // *divergent* replicas the probe may land on a different endpoint
-        // than the read and this gate, like every ranged path, cannot
-        // protect). If the version still equals the pin, the bytes are
-        // exactly the pinned version. Anything else — superseded, deleted,
-        // or unconfirmable because the probe itself failed — fails the
-        // read: serving or caching unconfirmed bytes could mix versions
+        // Coherence gate: the bytes above can never be *newer* than the
+        // version the fill's own reader observed (remote tier: the
+        // `x-getbatch-version` stamp of the responses that carried the
+        // bytes; local tier: the generation read after the file handle was
+        // opened) — and, with no observation to go on, never newer than
+        // what a version lookup now reports (local-tier invariant; over a
+        // remote set both shapes additionally assume every endpoint fronts
+        // the same store — the tier's standing contract, see
+        // `store::remote`: with *divergent* replicas this gate, like every
+        // ranged path, cannot protect). If that version equals the pin, the
+        // bytes are exactly the pinned version. Anything else — superseded,
+        // deleted, or unconfirmable because the probe itself failed — fails
+        // the read: serving or caching unconfirmed bytes could mix versions
         // (soft error upstream; a retry re-opens at the current version).
-        // Known cost: over a remote inner backend this lookup is one extra
-        // 1-byte probe per *fill* (not per chunk; read-ahead amortizes it).
-        // Eliminating it means surfacing the `x-getbatch-version` header
-        // of the fill's own ranged response through `EntryReader` — a
-        // ROADMAP item, not worth the plumbing until remote cold reads
-        // show up in profiles.
+        // Preferring the reader's observation keeps a remote cold fill at
+        // one round trip per fill span — the separate 1-byte re-probe runs
+        // only for inner tiers that don't surface versions on reads.
         if self.version != 0 {
-            match self.inner.content_version(&self.bucket, &self.obj) {
+            let confirmed = reader
+                .observed_version()
+                .or_else(|| self.inner.content_version(&self.bucket, &self.obj));
+            match confirmed {
                 Some(now) if now == self.version => {}
                 Some(now) => {
                     return Err(StoreError::Io(io::Error::new(
@@ -501,6 +506,18 @@ impl CacheSource {
 }
 
 impl ChunkSource for CacheSource {
+    /// The pin itself: every byte this source serves — cached chunk or
+    /// gated fill — is exactly the pinned version, so a consumer stacked on
+    /// top (another cache tier, the HTTP object handler stamping
+    /// `x-getbatch-version` on ranged responses) can gate on it directly.
+    fn observed_version(&self) -> Option<u64> {
+        if self.version == 0 {
+            None
+        } else {
+            Some(self.version)
+        }
+    }
+
     fn read_at(&mut self, pos: u64, buf: &mut [u8]) -> io::Result<usize> {
         let off = self.base + pos;
         if off >= self.obj_len || buf.is_empty() {
@@ -711,6 +728,87 @@ mod tests {
             "delete visible at the next revalidating open"
         );
         assert_eq!(cache.resident_bytes(), 0, "deleted object's chunks dropped");
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    /// Counts explicit version probes reaching the inner tier — the fill
+    /// gate must not issue any when the fill's own reader observed a
+    /// version (over a remote inner each such probe is a wire round trip).
+    struct ProbeCountingBackend {
+        inner: Arc<LocalBackend>,
+        version_probes: std::sync::atomic::AtomicU64,
+    }
+
+    impl Backend for ProbeCountingBackend {
+        fn open_entry(&self, b: &str, o: &str) -> Result<EntryReader, StoreError> {
+            self.inner.open_entry(b, o)
+        }
+        fn open_entry_range(
+            &self,
+            b: &str,
+            o: &str,
+            off: u64,
+            len: u64,
+        ) -> Result<EntryReader, StoreError> {
+            self.inner.open_entry_range(b, o, off, len)
+        }
+        fn put(&self, b: &str, o: &str, d: &[u8]) -> Result<(), StoreError> {
+            self.inner.put(b, o, d)
+        }
+        fn exists(&self, b: &str, o: &str) -> bool {
+            self.inner.exists(b, o)
+        }
+        fn size(&self, b: &str, o: &str) -> Result<u64, StoreError> {
+            self.inner.size(b, o)
+        }
+        fn delete(&self, b: &str, o: &str) -> Result<(), StoreError> {
+            self.inner.delete(b, o)
+        }
+        fn list(&self, b: &str) -> Result<Vec<String>, StoreError> {
+            self.inner.list(b)
+        }
+        fn content_crc(&self, b: &str, o: &str) -> Option<u32> {
+            self.inner.content_crc(b, o)
+        }
+        fn content_version(&self, b: &str, o: &str) -> Option<u64> {
+            self.version_probes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.inner.content_version(b, o)
+        }
+        fn stat(&self, b: &str, o: &str) -> Result<ObjectStat, StoreError> {
+            self.inner.stat(b, o)
+        }
+    }
+
+    #[test]
+    fn fill_gate_reuses_readers_observed_version_without_extra_probe() {
+        let base =
+            std::env::temp_dir().join(format!("gbcache-{}-obsver", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        let local = Arc::new(LocalBackend::open(&base, 2).unwrap());
+        let counting = Arc::new(ProbeCountingBackend {
+            inner: Arc::clone(&local),
+            version_probes: Default::default(),
+        });
+        let cache = Arc::new(ChunkCache::new(1 << 20, 4 << 10, None));
+        let cached = CachedBackend::new(
+            Arc::clone(&counting) as Arc<dyn Backend>,
+            Arc::clone(&cache),
+            0,
+            LAZY,
+        );
+        let data = payload(12 << 10, 5);
+        cached.put("b", "o", &data).unwrap();
+        assert_eq!(cached.open_entry("b", "o").unwrap().read_all().unwrap(), data);
+        assert_eq!(
+            counting.version_probes.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "every fill was gated on the reader's own observed version"
+        );
+        // And the cached reader re-surfaces its pin, so a tier stacked on
+        // top of *this* one gets the same single-round-trip gate.
+        let r = cached.open_entry("b", "o").unwrap();
+        assert_eq!(r.observed_version(), local.content_version("b", "o"));
         std::fs::remove_dir_all(base).unwrap();
     }
 

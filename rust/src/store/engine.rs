@@ -126,6 +126,15 @@ pub trait ChunkSource: Send {
     /// Read up to `buf.len()` bytes at entry-relative `pos`. Returns 0 only
     /// at (or past) the end of the source's bytes.
     fn read_at(&mut self, pos: u64, buf: &mut [u8]) -> io::Result<usize>;
+
+    /// The write generation of the object these bytes came from, when the
+    /// source learned one while opening (the remote source reads it off the
+    /// response's `x-getbatch-version` header). Lets consumers — the cache
+    /// fill gate, the HTTP object handler — reuse the version the read
+    /// itself pinned instead of paying a separate metadata probe.
+    fn observed_version(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// A seekable, length-known streaming source over one entry's bytes — the
@@ -163,6 +172,12 @@ impl EntryReader {
     /// Bytes not yet consumed.
     pub fn remaining(&self) -> u64 {
         self.len - self.pos
+    }
+
+    /// The object write generation the underlying source observed while
+    /// opening, if any (see [`ChunkSource::observed_version`]).
+    pub fn observed_version(&self) -> Option<u64> {
+        self.src.observed_version()
     }
 
     /// Current cursor (bytes consumed so far).

@@ -57,9 +57,19 @@ struct FileSource {
     base: u64,
     /// Entry-relative position the OS cursor currently sits at.
     cursor: u64,
+    /// Write generation read *after* the file handle was opened. The handle
+    /// pins one inode (an overwrite renames a new file into place), so
+    /// every byte this source delivers is at most this version — the upper
+    /// bound consumers need to gate version-pinned fills without another
+    /// probe (see module docs).
+    version: Option<u64>,
 }
 
 impl ChunkSource for FileSource {
+    fn observed_version(&self) -> Option<u64> {
+        self.version
+    }
+
     fn read_at(&mut self, pos: u64, buf: &mut [u8]) -> io::Result<usize> {
         if pos != self.cursor {
             self.file.seek(SeekFrom::Start(self.base + pos))?;
@@ -178,8 +188,18 @@ impl LocalBackend {
         Ok((f, size))
     }
 
-    fn reader(file: File, base: u64, len: u64) -> Result<EntryReader, StoreError> {
-        let mut src = FileSource { file, base, cursor: 0 };
+    fn reader(
+        &self,
+        bucket: &str,
+        obj: &str,
+        file: File,
+        base: u64,
+        len: u64,
+    ) -> Result<EntryReader, StoreError> {
+        // Stamp order matters: the version is looked up only now, after the
+        // handle was opened, so it upper-bounds the bytes the handle holds.
+        let version = self.content_version(bucket, obj);
+        let mut src = FileSource { file, base, cursor: 0, version };
         if base > 0 {
             src.file.seek(SeekFrom::Start(base))?;
         }
@@ -272,7 +292,7 @@ impl Backend for LocalBackend {
 
     fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
         let (file, size) = self.open_with_size(bucket, obj)?;
-        Self::reader(file, 0, size)
+        self.reader(bucket, obj, file, 0, size)
     }
 
     fn open_entry_range(
@@ -289,7 +309,7 @@ impl Backend for LocalBackend {
                 format!("range {offset}+{len} past EOF ({size}) in {bucket}/{obj}"),
             )));
         }
-        Self::reader(file, offset, len)
+        self.reader(bucket, obj, file, offset, len)
     }
 
     fn delete(&self, bucket: &str, obj: &str) -> Result<(), StoreError> {
@@ -447,6 +467,22 @@ mod tests {
         let fresh = LocalBackend::open(&base, 3).unwrap();
         assert_eq!(fresh.content_crc("b", "o"), Some(crate::util::crc32::hash(b"payload")));
         assert_eq!(fresh.content_version("b", "o"), None, "legacy sidecar is unversioned");
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn readers_carry_the_open_time_version() {
+        let (b, base) = backend("obsver");
+        assert_eq!(
+            b.open_entry("b", "o").err().map(|e| matches!(e, StoreError::NotFound(_))),
+            Some(true)
+        );
+        b.put("b", "o", b"payload").unwrap();
+        let v = b.content_version("b", "o").expect("stamped");
+        let r = b.open_entry("b", "o").unwrap();
+        assert_eq!(r.observed_version(), Some(v), "whole-object reader stamped at open");
+        let rr = b.open_entry_range("b", "o", 1, 3).unwrap();
+        assert_eq!(rr.observed_version(), Some(v), "ranged reader stamped at open");
         fs::remove_dir_all(base).unwrap();
     }
 

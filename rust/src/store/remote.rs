@@ -203,6 +203,7 @@ impl RemoteBackend {
         base: u64,
         len: u64,
         whole_object_crc: Option<u32>,
+        probed_version: Option<u64>,
     ) -> Result<EntryReader, StoreError> {
         let src = RemoteSource {
             client: self.client.clone(),
@@ -216,6 +217,8 @@ impl RemoteBackend {
             hasher: if whole_object_crc.is_some() { Some(crc32::Hasher::new()) } else { None },
             hashed_to: 0,
             mixed: false,
+            seen_version: probed_version,
+            unstamped: false,
         };
         Ok(EntryReader::from_source(Box::new(src), len))
     }
@@ -245,8 +248,8 @@ fn status_attempt(addr: &str, op: &str, status: u16) -> Attempt {
 
 impl Backend for RemoteBackend {
     fn open_entry(&self, bucket: &str, obj: &str) -> Result<EntryReader, StoreError> {
-        let (total, crc, _) = self.probe(bucket, obj)?;
-        self.open_span(bucket, obj, 0, total, crc)
+        let (total, crc, version) = self.probe(bucket, obj)?;
+        self.open_span(bucket, obj, 0, total, crc, version)
     }
 
     fn open_entry_range(
@@ -256,14 +259,14 @@ impl Backend for RemoteBackend {
         offset: u64,
         len: u64,
     ) -> Result<EntryReader, StoreError> {
-        let (total, _, _) = self.probe(bucket, obj)?;
+        let (total, _, version) = self.probe(bucket, obj)?;
         if offset.saturating_add(len) > total {
             return Err(StoreError::Io(io::Error::new(
                 io::ErrorKind::UnexpectedEof,
                 format!("range {offset}+{len} past EOF ({total}) in {bucket}/{obj}"),
             )));
         }
-        self.open_span(bucket, obj, offset, len, None)
+        self.open_span(bucket, obj, offset, len, None, version)
     }
 
     /// Write-through PUT. Contract: every endpoint in the set fronts the
@@ -396,6 +399,18 @@ struct RemoteSource {
     hashed_to: u64,
     /// A mid-stream failover delivered bytes from more than one endpoint.
     mixed: bool,
+    /// Latest `x-getbatch-version` observed — seeded by the open-time probe,
+    /// overwritten by every 206 that opens a byte stream. Versions are
+    /// monotonic per object, so "latest stamp == pin" implies every stream
+    /// this source consumed was stamped with the pin, and (server-side
+    /// open-then-stamp ordering over a stable file handle) every byte it
+    /// delivered belongs to the pinned version.
+    seen_version: Option<u64>,
+    /// A byte-delivering 206 arrived without a version stamp (pre-coherence
+    /// server, unversioned object): the observation is incomplete, so
+    /// `observed_version` reports `None` and version-gated consumers fall
+    /// back to their own probe.
+    unstamped: bool,
 }
 
 impl RemoteSource {
@@ -429,6 +444,13 @@ impl RemoteSource {
             match resp.status {
                 206 => {
                     self.endpoints.note_ok(&addr);
+                    match resp
+                        .header(wire::HDR_OBJ_VERSION)
+                        .and_then(|h| h.trim().parse::<u64>().ok())
+                    {
+                        Some(v) => self.seen_version = Some(v),
+                        None => self.unstamped = true,
+                    }
                     self.stream = Some((resp.body, pos, addr));
                     return Ok(());
                 }
@@ -493,6 +515,14 @@ impl RemoteSource {
 }
 
 impl ChunkSource for RemoteSource {
+    fn observed_version(&self) -> Option<u64> {
+        if self.unstamped {
+            None
+        } else {
+            self.seen_version
+        }
+    }
+
     fn read_at(&mut self, pos: u64, buf: &mut [u8]) -> io::Result<usize> {
         if pos >= self.len || buf.is_empty() {
             return Ok(0);

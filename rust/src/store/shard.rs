@@ -57,7 +57,17 @@ impl ShardIndexCache {
     }
 
     fn index(&self, store: &ObjectStore, bucket: &str, shard: &str) -> Result<Index, ShardError> {
-        let key = format!("{bucket}/{shard}");
+        // Key by the shard object's current write generation: an overwrite
+        // makes the stale index unreachable immediately, even when the
+        // explicit invalidation (local write hook or `/v1/invalidate`
+        // broadcast) was missed — the same versioned-key backstop the chunk
+        // cache uses. Generation 0 = unversioned (legacy sidecar), which
+        // degrades to the old name-only behavior. The generation is read
+        // BEFORE the shard is opened, so under a racing overwrite the skew
+        // lands on (older generation, newer members): a key the very next
+        // lookup — which sees the bumped generation — can no longer reach.
+        let gen = store.content_version(bucket, shard).unwrap_or(0);
+        let key = format!("{bucket}/{shard}@{gen}");
         if let Some(idx) = self.cache.lock().unwrap().get(&key) {
             self.hits.inc();
             return Ok(Arc::clone(idx));
@@ -112,9 +122,13 @@ impl ShardIndexCache {
         Ok(v)
     }
 
-    /// Drop a shard's cached index (after overwrite/delete).
+    /// Drop a shard's cached indices, all generations (after
+    /// overwrite/delete). With generation-keyed entries this narrows the
+    /// staleness window and frees memory early; reachability correctness is
+    /// carried by the keys themselves.
     pub fn invalidate(&self, bucket: &str, shard: &str) {
-        self.cache.lock().unwrap().remove(&format!("{bucket}/{shard}"));
+        let prefix = format!("{bucket}/{shard}@");
+        self.cache.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
     }
 }
 
@@ -195,6 +209,29 @@ mod tests {
         cache.invalidate("b", "s.tar");
         let data = cache.extract(&store, "b", "s.tar", "new/member.bin").unwrap().read_all().unwrap();
         assert_eq!(data, vec![7; 42]);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn generation_keys_survive_missed_invalidation() {
+        let (store, cache, base) = setup("genkey");
+        store.put("b", "s.tar", &mkshard(3)).unwrap();
+        cache.extract(&store, "b", "s.tar", "utt/0000.wav").unwrap();
+        let entries = vec![Entry { name: "new/member.bin".into(), data: vec![7; 42] }];
+        store.put("b", "s.tar", &tar::write_archive(&entries).unwrap()).unwrap();
+        // Deliberately NO invalidate(): the bumped write generation alone
+        // must make the stale index unreachable.
+        let data =
+            cache.extract(&store, "b", "s.tar", "new/member.bin").unwrap().read_all().unwrap();
+        assert_eq!(data, vec![7; 42]);
+        assert_eq!(cache.misses.get(), 2, "overwrite forced a re-scan");
+        assert!(
+            matches!(
+                cache.extract(&store, "b", "s.tar", "utt/0000.wav"),
+                Err(ShardError::MemberNotFound { .. })
+            ),
+            "old member list is gone with the old generation"
+        );
         std::fs::remove_dir_all(base).unwrap();
     }
 

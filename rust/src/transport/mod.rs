@@ -5,5 +5,7 @@
 //! timeout").
 
 pub mod pool;
+pub mod reactor;
 
 pub use pool::{P2pServer, PeerPool};
+pub use reactor::{ConnIo, ConnProto, Reactor, ReactorConfig, ReactorStats, WorkerPool};

@@ -1,0 +1,1070 @@
+//! Readiness-driven connection reactor (the crate's answer to "one OS
+//! thread per connection caps concurrency at thread count"). A small set of
+//! reactor threads multiplexes every socket of a node — HTTP server
+//! connections, P2P frame streams, and the peer pool's outbound writers —
+//! over **epoll**, wrapped by hand via `std::os::fd` + three `extern "C"`
+//! declarations (the zero-dependency rule: no tokio, no mio, no libc
+//! crate; `libc` the *system library* links by default on Linux).
+//!
+//! Division of labor, and the backpressure invariant that falls out of it:
+//!
+//! * **Reactor threads own the sockets.** They are the only threads that
+//!   `read`/`write`/`accept`, always in non-blocking mode, and they never
+//!   run protocol handlers — an epoll wake-up only moves bytes between
+//!   sockets and per-connection buffers and advances the connection's
+//!   [`ConnProto`] state machine.
+//! * **Worker threads own the blocking.** Handlers run on an elastic
+//!   [`WorkerPool`] and communicate with the socket exclusively through a
+//!   [`ConnIo`] handle: writes append to a bounded per-connection output
+//!   buffer (blocking on the buffer's high-water mark, *not* on the
+//!   socket), and the reactor arms `EPOLLOUT` only while that buffer is
+//!   non-empty. A handler stalled on the `MemoryBudget` — or on a slow
+//!   reader draining its output buffer — therefore parks holding **no**
+//!   socket: *no thread ever parks while holding a socket*, which is what
+//!   lets `reactor_threads = 2` serve thousands of keep-alive connections.
+//!
+//! Flow control is interest toggling, not thread state: a slow peer leaves
+//! `EPOLLOUT` armed and the producer blocked on the buffer's condvar; a
+//! protocol that cannot absorb more input (P2P frame queue over its bound)
+//! calls [`ConnIo::pause_reads`], dropping `EPOLLIN` so TCP pushes back on
+//! the sender.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+use std::os::raw::c_int;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::metrics::{Counter, Gauge, GetBatchMetrics};
+
+// ------------------------------------------------------------------ epoll --
+
+/// Hand-rolled epoll/eventfd bindings. The kernel ABI is stable; the
+/// symbols come from the C library every Linux Rust binary already links.
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+
+    /// `struct epoll_event`. Packed on x86_64 (kernel ABI quirk), naturally
+    /// aligned everywhere else.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: u32, flags: c_int) -> c_int;
+    }
+}
+
+struct Epoll {
+    fd: OwnedFd,
+}
+
+impl Epoll {
+    fn new() -> io::Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd: unsafe { OwnedFd::from_raw_fd(fd) } })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        let rc = unsafe { sys::epoll_ctl(self.fd.as_raw_fd(), op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn add(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, events)
+    }
+
+    fn modify(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, events)
+    }
+
+    fn del(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        let n = unsafe {
+            sys::epoll_wait(
+                self.fd.as_raw_fd(),
+                events.as_mut_ptr(),
+                events.len() as c_int,
+                timeout_ms,
+            )
+        };
+        if n < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(n as usize)
+    }
+}
+
+/// eventfd-based cross-thread wake-up for one event loop.
+struct Waker {
+    file: File,
+}
+
+impl Waker {
+    fn new() -> io::Result<Waker> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { file: unsafe { File::from_raw_fd(fd) } })
+    }
+
+    fn fd(&self) -> RawFd {
+        self.file.as_raw_fd()
+    }
+
+    fn wake(&self) {
+        let _ = (&self.file).write(&1u64.to_ne_bytes());
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 8];
+        while matches!((&self.file).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+// ------------------------------------------------------------ worker pool --
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Elastic worker pool for protocol handlers. Unlike the fixed
+/// `util::threadpool::ThreadPool`, this pool grows on demand: handlers are
+/// allowed to block (memory-budget backpressure, nested intra-cluster HTTP
+/// calls), so a fixed pool could deadlock a fan-out whose handlers wait on
+/// each other. A blocked handler costs one parked thread — never a socket —
+/// and idle workers above the minimum retire after a grace period.
+///
+/// Clones share one pool; shutdown is explicit (the owning reactor calls
+/// it), so protocol handles can keep cheap clones without a cycle back to
+/// the reactor.
+#[derive(Clone)]
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    name: String,
+    min: usize,
+}
+
+struct PoolInner {
+    st: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct PoolState {
+    jobs: VecDeque<Job>,
+    idle: usize,
+    threads: usize,
+    stop: bool,
+}
+
+impl WorkerPool {
+    pub fn new(min: usize, name: &str) -> WorkerPool {
+        WorkerPool {
+            inner: Arc::new(PoolInner { st: Mutex::new(PoolState::default()), cv: Condvar::new() }),
+            name: name.to_string(),
+            min: min.max(1),
+        }
+    }
+
+    /// Enqueue a job; spawns a new worker when none is idle. Never blocks.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.inner.st.lock().unwrap();
+        if st.stop {
+            return;
+        }
+        st.jobs.push_back(Box::new(job));
+        if st.idle == 0 {
+            st.threads += 1;
+            let seq = st.threads;
+            drop(st);
+            let inner = Arc::clone(&self.inner);
+            let min = self.min;
+            let spawned = std::thread::Builder::new()
+                .name(format!("{}-worker-{seq}", self.name))
+                .spawn(move || worker_loop(inner, min));
+            if spawned.is_err() {
+                let mut st = self.inner.st.lock().unwrap();
+                st.threads -= 1;
+                self.inner.cv.notify_one();
+            }
+        } else {
+            self.inner.cv.notify_one();
+        }
+    }
+
+    /// Live worker threads (tests/diagnostics).
+    pub fn threads(&self) -> usize {
+        self.inner.st.lock().unwrap().threads
+    }
+
+    /// Stop accepting work, drain already queued jobs, and join all workers.
+    fn shutdown(&self) {
+        let mut st = self.inner.st.lock().unwrap();
+        st.stop = true;
+        self.inner.cv.notify_all();
+        while st.threads > 0 {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<PoolInner>, min: usize) {
+    const IDLE_RETIRE: Duration = Duration::from_secs(20);
+    let mut st = inner.st.lock().unwrap();
+    loop {
+        if let Some(job) = st.jobs.pop_front() {
+            drop(st);
+            // A panicking handler must not corrupt pool accounting (a lost
+            // `threads -= 1` would hang shutdown forever).
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            st = inner.st.lock().unwrap();
+            continue;
+        }
+        if st.stop {
+            break;
+        }
+        st.idle += 1;
+        let (guard, timeout) = inner.cv.wait_timeout(st, IDLE_RETIRE).unwrap();
+        st = guard;
+        st.idle -= 1;
+        if timeout.timed_out() && st.jobs.is_empty() && !st.stop && st.threads > min {
+            break;
+        }
+    }
+    st.threads -= 1;
+    inner.cv.notify_all();
+}
+
+// ------------------------------------------------------------- the reactor --
+
+/// Per-reactor observability; the node mirrors these into its
+/// `GetBatchMetrics` (`open_connections`, `reactor_wakeups_total`,
+/// `accept_backlog_shed_total`) when one is attached.
+#[derive(Default)]
+pub struct ReactorStats {
+    /// Connections currently registered across all loops of this reactor.
+    pub open_connections: Gauge,
+    /// High-water mark of `open_connections` over the reactor's lifetime.
+    pub open_connections_peak: Gauge,
+    /// epoll wake-ups across all reactor threads.
+    pub wakeups: Counter,
+    /// Accepted connections immediately shed because `max_connections`
+    /// was reached.
+    pub shed: Counter,
+    /// High-water mark of any single connection's pending write buffer —
+    /// the observable form of the bounded-buffering invariant.
+    pub peak_outbuf: Gauge,
+}
+
+pub struct ReactorConfig {
+    /// Event-loop threads; connections are distributed round-robin.
+    pub threads: usize,
+    /// Registered-connection cap; accepts beyond it are shed (counted).
+    pub max_connections: usize,
+    /// Worker threads kept alive when idle (the pool grows on demand).
+    pub min_workers: usize,
+    /// Per-connection pending-write high-water mark: `ConnIo::send` blocks
+    /// above it until the reactor drains the socket.
+    pub write_buf_limit: usize,
+    /// Node metrics to mirror reactor counters into.
+    pub metrics: Option<Arc<GetBatchMetrics>>,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            threads: 2,
+            max_connections: 4096,
+            min_workers: 4,
+            write_buf_limit: 256 << 10,
+            metrics: None,
+        }
+    }
+}
+
+/// Per-connection protocol state machine, driven entirely by reactor
+/// threads. Implementations must never block: blocking work is handed to
+/// the [`WorkerPool`], which talks back through the connection's
+/// [`ConnIo`].
+pub trait ConnProto: Send {
+    /// Called once, on the loop thread, when the connection is registered.
+    fn on_register(&mut self, io: &Arc<ConnIo>) {
+        let _ = io;
+    }
+
+    /// New bytes arrived (or a [`ConnIo::kick`] fired): consume what you
+    /// can from the front of `inbuf`. Returning `Err` closes the
+    /// connection.
+    fn on_data(&mut self, inbuf: &mut Vec<u8>, io: &Arc<ConnIo>) -> io::Result<()>;
+
+    /// Peer closed its write side. Default: close immediately.
+    fn on_eof(&mut self, io: &Arc<ConnIo>) {
+        io.close();
+    }
+
+    /// The connection was released (socket closed, producers unblocked).
+    fn on_close(&mut self) {}
+}
+
+/// Builds a [`ConnProto`] for each accepted connection of a listener.
+pub type ProtoFactory = Arc<dyn Fn(SocketAddr) -> Box<dyn ConnProto> + Send + Sync>;
+
+enum Op {
+    Listen { listener: TcpListener, factory: ProtoFactory, token: u64 },
+    Register { stream: TcpStream, proto: Box<dyn ConnProto>, io: Arc<ConnIo> },
+    EnableWrite(u64),
+    Interest(u64),
+    Kick(u64),
+    Close(u64),
+}
+
+struct LoopHandle {
+    ops: Mutex<Vec<Op>>,
+    waker: Waker,
+    stop: AtomicBool,
+}
+
+impl LoopHandle {
+    fn post(&self, op: Op) {
+        self.ops.lock().unwrap().push(op);
+        self.waker.wake();
+    }
+}
+
+#[derive(Default)]
+struct OutBuf {
+    queue: VecDeque<Vec<u8>>,
+    /// Consumed prefix of `queue[0]` (partial socket write).
+    head_pos: usize,
+    /// Pending (not yet written) bytes across the queue.
+    bytes: usize,
+    /// Cumulative bytes ever enqueued / written — watermarks for
+    /// [`ConnIo::wait_flushed`].
+    enqueued: u64,
+    written: u64,
+    close_after_flush: bool,
+}
+
+/// Handle through which worker threads (and protocol state machines) talk
+/// to a reactor-owned socket. Cheap to clone via `Arc`; outlives the
+/// connection (operations on a closed connection fail with `BrokenPipe`).
+pub struct ConnIo {
+    token: u64,
+    lh: Arc<LoopHandle>,
+    out: Mutex<OutBuf>,
+    cv: Condvar,
+    high_water: usize,
+    read_paused: AtomicBool,
+    closed: AtomicBool,
+    stats: Arc<ReactorStats>,
+}
+
+impl ConnIo {
+    /// Queue `data` for transmission; returns the `(start, end)` enqueue
+    /// watermarks of this write (see [`ConnIo::wait_flushed`]).
+    ///
+    /// Blocks while the connection's pending-write buffer is above its
+    /// high-water mark — the caller parks on a condvar holding no socket;
+    /// the reactor drains the buffer as the peer reads. Must never be
+    /// called from a reactor thread (protocol `on_*` hooks): a loop thread
+    /// blocked here could not drain the very buffer it waits on.
+    pub fn send_vec(&self, data: Vec<u8>) -> io::Result<(u64, u64)> {
+        let len = data.len() as u64;
+        let mut out = self.out.lock().unwrap();
+        if len == 0 {
+            return Ok((out.enqueued, out.enqueued));
+        }
+        while out.bytes > 0 && out.bytes + data.len() > self.high_water {
+            if self.closed.load(Ordering::Acquire) {
+                return Err(broken_pipe());
+            }
+            out = self.cv.wait(out).unwrap();
+        }
+        if self.closed.load(Ordering::Acquire) {
+            return Err(broken_pipe());
+        }
+        let start = out.enqueued;
+        let wake = out.bytes == 0;
+        out.bytes += data.len();
+        out.enqueued += len;
+        out.queue.push_back(data);
+        self.stats.peak_outbuf.set_max(out.bytes as i64);
+        drop(out);
+        if wake {
+            self.lh.post(Op::EnableWrite(self.token));
+        }
+        Ok((start, start + len))
+    }
+
+    /// [`ConnIo::send_vec`] for borrowed bytes.
+    pub fn send(&self, data: &[u8]) -> io::Result<()> {
+        self.send_vec(data.to_vec()).map(|_| ())
+    }
+
+    /// Block until the socket has absorbed every byte up to enqueue
+    /// watermark `upto`, or the connection died first.
+    pub fn wait_flushed(&self, upto: u64) -> io::Result<()> {
+        let mut out = self.out.lock().unwrap();
+        while out.written < upto {
+            if self.closed.load(Ordering::Acquire) {
+                return Err(broken_pipe());
+            }
+            out = self.cv.wait(out).unwrap();
+        }
+        Ok(())
+    }
+
+    /// Close once the pending write buffer has drained (keep-alive `close`
+    /// responses, graceful peer shutdown).
+    pub fn close_after_flush(&self) {
+        let mut out = self.out.lock().unwrap();
+        if out.bytes == 0 {
+            drop(out);
+            self.close();
+        } else {
+            out.close_after_flush = true;
+        }
+    }
+
+    /// Close now, discarding any undelivered output.
+    pub fn close(&self) {
+        self.lh.post(Op::Close(self.token));
+    }
+
+    /// Drop read interest: the kernel socket buffer fills and TCP pushes
+    /// back on the peer — backpressure without a parked thread.
+    pub fn pause_reads(&self) {
+        if !self.read_paused.swap(true, Ordering::AcqRel) {
+            self.lh.post(Op::Interest(self.token));
+        }
+    }
+
+    /// Re-arm read interest after [`ConnIo::pause_reads`].
+    pub fn resume_reads(&self) {
+        if self.read_paused.swap(false, Ordering::AcqRel) {
+            self.lh.post(Op::Interest(self.token));
+        }
+    }
+
+    /// Re-run the protocol's `on_data` against already-buffered input (a
+    /// worker finished a request; pipelined bytes may be waiting).
+    pub fn kick(&self) {
+        self.lh.post(Op::Kick(self.token));
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Pending (unwritten) output bytes.
+    pub fn buffered(&self) -> usize {
+        self.out.lock().unwrap().bytes
+    }
+}
+
+fn broken_pipe() -> io::Error {
+    io::Error::new(io::ErrorKind::BrokenPipe, "connection closed")
+}
+
+struct Shared {
+    loops: Vec<Arc<LoopHandle>>,
+    next_loop: AtomicUsize,
+    next_token: AtomicU64,
+    open: AtomicUsize,
+    max_connections: usize,
+    write_buf_limit: usize,
+    stats: Arc<ReactorStats>,
+    metrics: Option<Arc<GetBatchMetrics>>,
+    pool: WorkerPool,
+}
+
+impl Shared {
+    fn register_stream(
+        self: &Arc<Self>,
+        stream: TcpStream,
+        proto: Box<dyn ConnProto>,
+    ) -> io::Result<Arc<ConnIo>> {
+        let _ = stream.set_nodelay(true);
+        stream.set_nonblocking(true)?;
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        let idx = self.next_loop.fetch_add(1, Ordering::Relaxed) % self.loops.len();
+        let io = Arc::new(ConnIo {
+            token,
+            lh: Arc::clone(&self.loops[idx]),
+            out: Mutex::new(OutBuf::default()),
+            cv: Condvar::new(),
+            high_water: self.write_buf_limit,
+            read_paused: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
+            stats: Arc::clone(&self.stats),
+        });
+        let open = self.open.fetch_add(1, Ordering::Relaxed) + 1;
+        self.stats.open_connections.add(1);
+        self.stats.open_connections_peak.set_max(open as i64);
+        if let Some(m) = &self.metrics {
+            m.open_connections.add(1);
+        }
+        io.lh.post(Op::Register { stream, proto, io: Arc::clone(&io) });
+        Ok(io)
+    }
+}
+
+/// A running reactor: `threads` event loops plus the shared worker pool.
+/// Dropping it stops the loops, closes every connection, and joins both
+/// loop and worker threads.
+pub struct Reactor {
+    shared: Arc<Shared>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Reactor {
+    pub fn new(cfg: ReactorConfig, name: &str) -> io::Result<Arc<Reactor>> {
+        let nloops = cfg.threads.max(1);
+        let mut loops = Vec::with_capacity(nloops);
+        for _ in 0..nloops {
+            loops.push(Arc::new(LoopHandle {
+                ops: Mutex::new(Vec::new()),
+                waker: Waker::new()?,
+                stop: AtomicBool::new(false),
+            }));
+        }
+        let shared = Arc::new(Shared {
+            loops,
+            next_loop: AtomicUsize::new(0),
+            next_token: AtomicU64::new(0),
+            open: AtomicUsize::new(0),
+            max_connections: cfg.max_connections.max(1),
+            write_buf_limit: cfg.write_buf_limit.max(1),
+            stats: Arc::new(ReactorStats::default()),
+            metrics: cfg.metrics,
+            pool: WorkerPool::new(cfg.min_workers, name),
+        });
+        let mut threads = Vec::with_capacity(nloops);
+        for i in 0..nloops {
+            let sh = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-reactor-{i}"))
+                    .spawn(move || run_loop(sh, i))?,
+            );
+        }
+        Ok(Arc::new(Reactor { shared, threads: Mutex::new(threads) }))
+    }
+
+    pub fn stats(&self) -> &Arc<ReactorStats> {
+        &self.shared.stats
+    }
+
+    /// Run a (possibly blocking) job on the reactor's worker pool.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.pool.execute(job);
+    }
+
+    /// Clonable handle to the reactor's worker pool — what protocol
+    /// factories capture (holding the reactor itself would be a cycle).
+    pub fn worker_pool(&self) -> WorkerPool {
+        self.shared.pool.clone()
+    }
+
+    /// Register a listener; accepted connections get a fresh [`ConnProto`]
+    /// from `factory` and are distributed round-robin across loops.
+    pub fn listen(&self, listener: TcpListener, factory: ProtoFactory) -> io::Result<()> {
+        listener.set_nonblocking(true)?;
+        let token = self.shared.next_token.fetch_add(1, Ordering::Relaxed);
+        self.shared.loops[0].post(Op::Listen { listener, factory, token });
+        Ok(())
+    }
+
+    /// Register an already-connected (client-side) stream.
+    pub fn register(&self, stream: TcpStream, proto: Box<dyn ConnProto>) -> io::Result<Arc<ConnIo>> {
+        self.shared.register_stream(stream, proto)
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        for lh in &self.shared.loops {
+            lh.stop.store(true, Ordering::Release);
+            lh.waker.wake();
+        }
+        for t in self.threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        self.shared.pool.shutdown();
+    }
+}
+
+// --------------------------------------------------------- the event loop --
+
+const TOK_WAKER: u64 = u64::MAX;
+const READ_CHUNK: usize = 64 << 10;
+/// Reads per readiness event before yielding back to the loop (epoll is
+/// level-triggered; an unfinished socket re-fires).
+const MAX_READS_PER_EVENT: usize = 4;
+
+struct Conn {
+    stream: TcpStream,
+    proto: Box<dyn ConnProto>,
+    io: Arc<ConnIo>,
+    inbuf: Vec<u8>,
+    interest: u32,
+    eof: bool,
+    eof_delivered: bool,
+}
+
+struct ListenerState {
+    listener: TcpListener,
+    factory: ProtoFactory,
+}
+
+fn run_loop(shared: Arc<Shared>, me: usize) {
+    let lh = Arc::clone(&shared.loops[me]);
+    let ep = match Epoll::new() {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    if ep.add(lh.waker.fd(), TOK_WAKER, sys::EPOLLIN).is_err() {
+        return;
+    }
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut listeners: HashMap<u64, ListenerState> = HashMap::new();
+    let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 512];
+    while !lh.stop.load(Ordering::Acquire) {
+        let n = match ep.wait(&mut events, 500) {
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        };
+        shared.stats.wakeups.inc();
+        if let Some(m) = &shared.metrics {
+            m.reactor_wakeups.inc();
+        }
+        let ops = std::mem::take(&mut *lh.ops.lock().unwrap());
+        for op in ops {
+            apply_op(&shared, &ep, &mut conns, &mut listeners, op);
+        }
+        for ev in events.iter().take(n) {
+            let copied = *ev;
+            let (evs, token) = (copied.events, copied.data);
+            if token == TOK_WAKER {
+                lh.waker.drain();
+            } else if let Some(l) = listeners.get(&token) {
+                accept_ready(&shared, l);
+            } else if conns.contains_key(&token) {
+                conn_event(&shared, &ep, &mut conns, token, evs);
+            }
+        }
+    }
+    // Shutdown: release every connection so producers blocked in
+    // send/flush observe `closed` and error out, then drop pending ops
+    // (a not-yet-processed Register must still be accounted for).
+    for (_, conn) in conns.drain() {
+        release_conn(&shared, conn);
+    }
+    let ops = std::mem::take(&mut *lh.ops.lock().unwrap());
+    for op in ops {
+        if let Op::Register { io, mut proto, .. } = op {
+            mark_closed(&shared, &io);
+            proto.on_close();
+        }
+    }
+}
+
+fn apply_op(
+    shared: &Arc<Shared>,
+    ep: &Epoll,
+    conns: &mut HashMap<u64, Conn>,
+    listeners: &mut HashMap<u64, ListenerState>,
+    op: Op,
+) {
+    match op {
+        Op::Listen { listener, factory, token } => {
+            if ep.add(listener.as_raw_fd(), token, sys::EPOLLIN).is_ok() {
+                listeners.insert(token, ListenerState { listener, factory });
+            }
+        }
+        Op::Register { stream, proto, io } => {
+            let token = io.token;
+            let mut conn = Conn {
+                stream,
+                proto,
+                io,
+                inbuf: Vec::new(),
+                interest: 0,
+                eof: false,
+                eof_delivered: false,
+            };
+            let want = conn_interest(&conn);
+            if ep.add(conn.stream.as_raw_fd(), token, want).is_err() {
+                release_conn(shared, conn);
+                return;
+            }
+            conn.interest = want;
+            let io = Arc::clone(&conn.io);
+            conn.proto.on_register(&io);
+            conns.insert(token, conn);
+        }
+        Op::EnableWrite(token) => drain_writes(shared, ep, conns, token),
+        Op::Interest(token) => {
+            if let Some(conn) = conns.get_mut(&token) {
+                update_interest(ep, conn);
+            }
+            // A read resume can also unblock parsing of buffered input.
+            feed_proto(shared, ep, conns, token);
+        }
+        Op::Kick(token) => feed_proto(shared, ep, conns, token),
+        Op::Close(token) => close_conn(shared, ep, conns, token),
+    }
+}
+
+fn conn_interest(conn: &Conn) -> u32 {
+    let mut ev = sys::EPOLLRDHUP;
+    if !conn.io.read_paused.load(Ordering::Relaxed) && !conn.eof {
+        ev |= sys::EPOLLIN;
+    }
+    if conn.io.out.lock().unwrap().bytes > 0 {
+        ev |= sys::EPOLLOUT;
+    }
+    ev
+}
+
+fn update_interest(ep: &Epoll, conn: &mut Conn) {
+    let want = conn_interest(conn);
+    if want != conn.interest && ep.modify(conn.stream.as_raw_fd(), conn.io.token, want).is_ok() {
+        conn.interest = want;
+    }
+}
+
+fn accept_ready(shared: &Arc<Shared>, l: &ListenerState) {
+    loop {
+        match l.listener.accept() {
+            Ok((stream, peer)) => {
+                if shared.open.load(Ordering::Relaxed) >= shared.max_connections {
+                    shared.stats.shed.inc();
+                    if let Some(m) = &shared.metrics {
+                        m.accept_backlog_shed.inc();
+                    }
+                    continue; // `stream` drops: the accept is shed
+                }
+                let proto = (l.factory)(peer);
+                let _ = shared.register_stream(stream, proto);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+fn conn_event(
+    shared: &Arc<Shared>,
+    ep: &Epoll,
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+    evs: u32,
+) {
+    if evs & sys::EPOLLERR != 0 {
+        close_conn(shared, ep, conns, token);
+        return;
+    }
+    if evs & sys::EPOLLOUT != 0 {
+        drain_writes(shared, ep, conns, token);
+        if !conns.contains_key(&token) {
+            return;
+        }
+    }
+    if evs & (sys::EPOLLIN | sys::EPOLLRDHUP | sys::EPOLLHUP) != 0 {
+        read_ready(shared, ep, conns, token);
+    }
+}
+
+fn read_ready(shared: &Arc<Shared>, ep: &Epoll, conns: &mut HashMap<u64, Conn>, token: u64) {
+    let mut dead = false;
+    if let Some(conn) = conns.get_mut(&token) {
+        if !conn.io.read_paused.load(Ordering::Relaxed) && !conn.eof {
+            let mut buf = [0u8; READ_CHUNK];
+            for _ in 0..MAX_READS_PER_EVENT {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.inbuf.extend_from_slice(&buf[..n]);
+                        if n < buf.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+    } else {
+        return;
+    }
+    if dead {
+        close_conn(shared, ep, conns, token);
+        return;
+    }
+    feed_proto(shared, ep, conns, token);
+}
+
+fn feed_proto(shared: &Arc<Shared>, ep: &Epoll, conns: &mut HashMap<u64, Conn>, token: u64) {
+    let (err, deliver_eof) = match conns.get_mut(&token) {
+        Some(conn) => {
+            let io = Arc::clone(&conn.io);
+            let err = conn.proto.on_data(&mut conn.inbuf, &io).is_err();
+            let deliver = !err && conn.eof && !conn.eof_delivered;
+            if deliver {
+                conn.eof_delivered = true;
+            }
+            (err, deliver)
+        }
+        None => return,
+    };
+    if err {
+        close_conn(shared, ep, conns, token);
+        return;
+    }
+    if deliver_eof {
+        if let Some(conn) = conns.get_mut(&token) {
+            let io = Arc::clone(&conn.io);
+            conn.proto.on_eof(&io);
+        }
+    }
+    if let Some(conn) = conns.get_mut(&token) {
+        update_interest(ep, conn);
+    }
+}
+
+fn drain_writes(shared: &Arc<Shared>, ep: &Epoll, conns: &mut HashMap<u64, Conn>, token: u64) {
+    let (dead, close_after) = match conns.get_mut(&token) {
+        Some(conn) => {
+            let mut dead = false;
+            let mut out = conn.io.out.lock().unwrap();
+            while out.bytes > 0 {
+                let n = match conn.stream.write(&out.queue[0][out.head_pos..]) {
+                    Ok(n) => n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                };
+                out.head_pos += n;
+                out.bytes -= n;
+                out.written += n as u64;
+                if out.head_pos == out.queue[0].len() {
+                    out.queue.pop_front();
+                    out.head_pos = 0;
+                }
+            }
+            let close_after = !dead && out.bytes == 0 && out.close_after_flush;
+            conn.io.cv.notify_all();
+            drop(out);
+            if !dead && !close_after {
+                update_interest(ep, conn);
+            }
+            (dead, close_after)
+        }
+        None => return,
+    };
+    if dead || close_after {
+        close_conn(shared, ep, conns, token);
+    }
+}
+
+fn close_conn(shared: &Arc<Shared>, ep: &Epoll, conns: &mut HashMap<u64, Conn>, token: u64) {
+    if let Some(conn) = conns.remove(&token) {
+        let _ = ep.del(conn.stream.as_raw_fd());
+        release_conn(shared, conn);
+    }
+}
+
+fn release_conn(shared: &Arc<Shared>, mut conn: Conn) {
+    mark_closed(shared, &conn.io);
+    conn.proto.on_close();
+}
+
+fn mark_closed(shared: &Arc<Shared>, io: &Arc<ConnIo>) {
+    io.closed.store(true, Ordering::Release);
+    let guard = io.out.lock().unwrap();
+    io.cv.notify_all();
+    drop(guard);
+    shared.open.fetch_sub(1, Ordering::Relaxed);
+    shared.stats.open_connections.sub(1);
+    if let Some(m) = &shared.metrics {
+        m.open_connections.sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+
+    /// Echo protocol: every received byte is queued straight back.
+    struct Echo;
+
+    impl ConnProto for Echo {
+        fn on_data(&mut self, inbuf: &mut Vec<u8>, io: &Arc<ConnIo>) -> io::Result<()> {
+            if !inbuf.is_empty() {
+                let data = std::mem::take(inbuf);
+                // Tiny payloads stay far below the high-water mark, so this
+                // send cannot block the loop thread in tests.
+                io.send_vec(data)?;
+            }
+            Ok(())
+        }
+        fn on_eof(&mut self, io: &Arc<ConnIo>) {
+            io.close_after_flush();
+        }
+    }
+
+    fn echo_reactor(threads: usize) -> (Arc<Reactor>, String) {
+        let r = Reactor::new(
+            ReactorConfig { threads, ..Default::default() },
+            "echo-test",
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        r.listen(listener, Arc::new(|_| Box::new(Echo))).unwrap();
+        (r, addr)
+    }
+
+    #[test]
+    fn echo_roundtrip() {
+        let (r, addr) = echo_reactor(1);
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"hello reactor").unwrap();
+        let mut got = [0u8; 13];
+        s.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"hello reactor");
+        assert_eq!(r.stats().open_connections.get(), 1);
+        drop(s);
+        drop(r);
+    }
+
+    #[test]
+    fn many_connections_few_threads() {
+        let (r, addr) = echo_reactor(2);
+        let conns: Vec<TcpStream> =
+            (0..64).map(|_| TcpStream::connect(&addr).unwrap()).collect();
+        for (i, mut s) in conns.into_iter().enumerate() {
+            let msg = format!("conn-{i}");
+            s.write_all(msg.as_bytes()).unwrap();
+            let mut got = vec![0u8; msg.len()];
+            s.read_exact(&mut got).unwrap();
+            assert_eq!(got, msg.as_bytes());
+        }
+        assert!(r.stats().open_connections_peak.get() >= 64);
+    }
+
+    #[test]
+    fn close_unblocks_pending_senders() {
+        let (r, addr) = echo_reactor(1);
+        let s = TcpStream::connect(&addr).unwrap();
+        // Let the accept propagate, then drop the whole reactor while the
+        // client connection is still registered.
+        let mut tries = 0;
+        while r.stats().open_connections.get() == 0 && tries < 200 {
+            std::thread::sleep(Duration::from_millis(5));
+            tries += 1;
+        }
+        drop(r);
+        drop(s);
+    }
+
+    #[test]
+    fn worker_pool_runs_jobs_and_retires() {
+        let pool = WorkerPool::new(1, "wp-test");
+        let done = Arc::new(TestCounter::new(0));
+        for _ in 0..50 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let mut tries = 0;
+        while done.load(Ordering::Relaxed) < 50 && tries < 400 {
+            std::thread::sleep(Duration::from_millis(5));
+            tries += 1;
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 50);
+        pool.shutdown();
+        assert_eq!(pool.threads(), 0);
+    }
+
+    #[test]
+    fn shed_over_max_connections() {
+        let r = Reactor::new(
+            ReactorConfig { threads: 1, max_connections: 2, ..Default::default() },
+            "shed-test",
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        r.listen(listener, Arc::new(|_| Box::new(Echo))).unwrap();
+        let mut live = Vec::new();
+        for _ in 0..2 {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(b"x").unwrap();
+            let mut b = [0u8; 1];
+            s.read_exact(&mut b).unwrap();
+            live.push(s);
+        }
+        // Third connection: accepted then immediately shed — the peer
+        // observes EOF instead of an echo.
+        let mut s3 = TcpStream::connect(&addr).unwrap();
+        s3.write_all(b"y").unwrap();
+        let mut b = [0u8; 1];
+        assert_eq!(s3.read(&mut b).unwrap_or(0), 0, "shed connection closes");
+        assert!(r.stats().shed.get() >= 1);
+    }
+}

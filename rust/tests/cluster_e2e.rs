@@ -184,6 +184,23 @@ fn admission_control_rejects_with_429_under_memory_pressure() {
         getbatch::client::sdk::ClientError::Status { status, .. } => assert_eq!(status, 429),
         other => panic!("expected 429, got {other:?}"),
     }
+    // The rejection carries a Retry-After derived from the budget's
+    // patience window, and the proxy propagates it to the client untouched.
+    let http = getbatch::proto::http::HttpClient::new(true);
+    let req = BatchRequest::new(vec![BatchEntry::obj("b", "obj-000000")]);
+    let resp = http
+        .request("GET", &c.proxy_addr(), getbatch::proto::wire::paths::BATCH, &req.to_body())
+        .unwrap();
+    assert_eq!(resp.status, 429);
+    let ra: u64 = resp
+        .header("retry-after")
+        .expect("429 carries retry-after")
+        .trim()
+        .parse()
+        .expect("integral seconds");
+    let want = c.cfg.getbatch.budget_patience.as_secs().max(1);
+    assert_eq!(ra, want, "back-off advertises the budget patience window");
+    let _ = resp.into_bytes();
 }
 
 #[test]
