@@ -10,7 +10,7 @@ use getbatch::client::sdk::Client;
 use getbatch::config::GetBatchConfig;
 use getbatch::dt::order::OrderBuffer;
 use getbatch::proto::frame::{chunk_frames, encode_into, read_frame, Frame};
-use getbatch::store::{Backend, CachedBackend, ChunkCache, LocalBackend, RemoteBackend};
+use getbatch::store::{Backend, CachedBackend, ChunkCache, LocalBackend, RemoteBackend, TailConfig};
 use getbatch::tar::TarWriter;
 use getbatch::testutil::fixtures;
 use getbatch::util::cli::Args;
@@ -211,6 +211,40 @@ fn main() {
     sclient.get_batch_collect(&warm_req).unwrap(); // cold fill
     bench("e2e: GetBatch(1MiB) remote bucket, warm cache", 50 * scale, || {
         sclient.get_batch_collect(&warm_req).unwrap();
+    });
+
+    // Degraded-endpoint scenario (the tail-latency engine): one of two
+    // endpoints serving the same object straggles 25 ms per read. With
+    // hedging off, latency-aware selection steers reads to the healthy
+    // endpoint but each periodic slow trial pays the full delay; with
+    // hedging on, a straggling read is raced to the healthy endpoint after
+    // the 5 ms floor, so the trials stop dominating the average.
+    let degraded = fixtures::cluster(1);
+    degraded.put_direct("rb", "o", &obj).unwrap();
+    degraded.targets[0].store.local().set_latency(Duration::from_millis(25), 1.0);
+    let slow_addr = degraded.proxy_addr();
+    let fast_addr = storage.proxy_addr();
+    let mk = |quantile: f64| {
+        RemoteBackend::with_tail(
+            &[&slow_addr, &fast_addr],
+            3,
+            Duration::from_millis(100),
+            TailConfig {
+                slow: Duration::from_millis(10),
+                hedge_quantile: quantile,
+                hedge_min: Duration::from_millis(5),
+                hedge_max_inflight: 32,
+            },
+            None,
+        )
+    };
+    let unhedged = mk(0.0);
+    bench("store: 1MiB read, degraded endpoint, hedge OFF", 50 * scale, || {
+        assert_eq!(unhedged.open_entry("rb", "o").unwrap().read_all().unwrap().len(), 1 << 20);
+    });
+    let hedged = mk(0.95);
+    bench("store: 1MiB read, degraded endpoint, hedge ON", 50 * scale, || {
+        assert_eq!(hedged.open_entry("rb", "o").unwrap().read_all().unwrap().len(), 1 << 20);
     });
     let _ = std::fs::remove_dir_all(&tier_dir);
 }

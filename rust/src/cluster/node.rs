@@ -16,7 +16,9 @@ use crate::metrics::{GetBatchMetrics, Registry};
 use crate::proto::http::{Body, Handler, HttpClient, HttpServer, Request, Response};
 use crate::proto::wire::{self, paths, DtRegister, SenderActivate};
 use crate::sender::run_sender;
-use crate::store::{Backend, CachedBackend, ChunkCache, ObjectStore, RemoteBackend, ShardIndexCache};
+use crate::store::{
+    Backend, CachedBackend, ChunkCache, ObjectStore, RemoteBackend, ShardIndexCache, TailConfig,
+};
 use crate::transport::{P2pServer, PeerPool, ReactorConfig};
 use crate::util::clock::{Clock, RealClock};
 use crate::util::threadpool::ThreadPool;
@@ -234,7 +236,10 @@ impl Cluster {
     /// cache — how endpoints only known at runtime (ephemeral ports) are
     /// attached after boot; config-time routing uses
     /// `GetBatchConfig::buckets`. Reads select among healthy endpoints and
-    /// fail over per `endpoint_failure_limit` / `endpoint_probe_ms`.
+    /// fail over per `endpoint_failure_limit` / `endpoint_probe_ms`;
+    /// straggling reads are hedged per `hedge_quantile` / `hedge_min_ms` /
+    /// `hedge_max_inflight`, with slow-not-dead endpoints deprioritized
+    /// past `endpoint_slow_ms`.
     ///
     /// Panics if `addrs` is empty — an endpoint-less remote bucket cannot
     /// serve anything (the config path rejects the same misconfiguration
@@ -251,10 +256,11 @@ impl Cluster {
     pub fn route_remote_bucket_on(&self, target: usize, bucket: &str, addrs: &[&str], cached: bool) {
         let t = &self.targets[target];
         let gb = &self.cfg.getbatch;
-        let remote: Arc<dyn Backend> = Arc::new(RemoteBackend::multi(
+        let remote: Arc<dyn Backend> = Arc::new(RemoteBackend::with_tail(
             addrs,
             gb.endpoint_failure_limit,
             gb.endpoint_probe,
+            tail_config(gb),
             Some(Arc::clone(&t.metrics)),
         ));
         let stack: Arc<dyn Backend> = if cached && gb.cache_bytes > 0 {
@@ -294,6 +300,18 @@ fn reactor_config(cfg: &ClusterConfig, metrics: &Arc<GetBatchMetrics>) -> Reacto
 /// `Ok(None)` when the spec reduces to the default (plain local,
 /// uncached), `Err` when the spec is invalid — a misconfigured bucket
 /// must refuse to boot, not silently serve the wrong tier.
+/// The tail-latency policy a node's remote backends run under, straight
+/// from the config section (`endpoint_slow_ms`, `hedge_quantile`,
+/// `hedge_min_ms`, `hedge_max_inflight`).
+fn tail_config(gb: &crate::config::GetBatchConfig) -> TailConfig {
+    TailConfig {
+        slow: gb.endpoint_slow,
+        hedge_quantile: gb.hedge_quantile,
+        hedge_min: gb.hedge_min,
+        hedge_max_inflight: gb.hedge_max_inflight,
+    }
+}
+
 fn bucket_stack(
     spec: &crate::config::BucketSpec,
     store: &Arc<ObjectStore>,
@@ -304,10 +322,11 @@ fn bucket_stack(
     let base: Arc<dyn Backend> = match spec.backend.as_str() {
         "remote" if !spec.remote_addrs.is_empty() => {
             let addrs: Vec<&str> = spec.remote_addrs.iter().map(|a| a.as_str()).collect();
-            Arc::new(RemoteBackend::multi(
+            Arc::new(RemoteBackend::with_tail(
                 &addrs,
                 gb.endpoint_failure_limit,
                 gb.endpoint_probe,
+                tail_config(gb),
                 Some(Arc::clone(metrics)),
             ))
         }

@@ -134,9 +134,29 @@ pub struct GetBatchConfig {
     pub endpoint_failure_limit: u32,
     /// How often an unhealthy remote endpoint is re-tried: the interval
     /// between active `/v1/health` probes and between half-open trial
-    /// admissions of live traffic. Smaller means faster recovery after an
-    /// endpoint returns, at the cost of more probe traffic.
+    /// admissions of live traffic (also the interval between slow trials
+    /// of a latency-deprioritized endpoint). Smaller means faster recovery
+    /// after an endpoint returns, at the cost of more probe traffic.
     pub endpoint_probe: Duration,
+    /// Tail latency: a healthy remote endpoint whose ranged-read latency
+    /// EWMA exceeds this is deprioritized — sorted after every faster
+    /// healthy peer, its circuit NOT opened — and re-tried once per
+    /// `endpoint_probe_ms` (slow trial) so it recovers when it speeds up.
+    /// `0` disables slow-endpoint deprioritization.
+    pub endpoint_slow: Duration,
+    /// Tail latency: hedge a ranged read once its first byte outlives this
+    /// quantile of the serving endpoint's own latency histogram (e.g.
+    /// `0.95` = hedge past the endpoint's P95). `0.0` disables hedged
+    /// reads.
+    pub hedge_quantile: f64,
+    /// Tail latency: floor under the hedge trigger — never hedge before
+    /// this much wall time, even while the latency histogram is cold or
+    /// the endpoint is very fast.
+    pub hedge_min: Duration,
+    /// Tail latency: cap on concurrent hedge attempts per remote backend,
+    /// bounding the extra load hedging can add during a brown-out. `0`
+    /// disables hedged reads.
+    pub hedge_max_inflight: usize,
     /// Per-bucket backend routing (see [`BucketSpec`]); buckets not listed
     /// are served by the node's local backend, uncached.
     pub buckets: Vec<BucketSpec>,
@@ -161,6 +181,10 @@ impl Default for GetBatchConfig {
             coherence_grace: Duration::from_millis(500),
             endpoint_failure_limit: 3,
             endpoint_probe: Duration::from_millis(1000),
+            endpoint_slow: Duration::from_millis(500),
+            hedge_quantile: 0.95,
+            hedge_min: Duration::from_millis(25),
+            hedge_max_inflight: 32,
             buckets: Vec::new(),
         }
     }
@@ -187,6 +211,15 @@ impl GetBatchConfig {
         // probe thread).
         c.endpoint_failure_limit = c.endpoint_failure_limit.max(1);
         c.endpoint_probe = c.endpoint_probe.max(Duration::from_millis(10));
+        // A hedge quantile outside [0, 1] (or NaN from a hand-edited file)
+        // would either hedge every read instantly or never; clamp it, and
+        // keep a non-zero floor so a cold histogram can't trigger
+        // zero-delay hedges.
+        if !c.hedge_quantile.is_finite() {
+            c.hedge_quantile = GetBatchConfig::default().hedge_quantile;
+        }
+        c.hedge_quantile = c.hedge_quantile.clamp(0.0, 1.0);
+        c.hedge_min = c.hedge_min.max(Duration::from_millis(1));
         c
     }
 
@@ -208,6 +241,10 @@ impl GetBatchConfig {
             .set("coherence_grace_ms", Value::num(self.coherence_grace.as_millis() as f64))
             .set("endpoint_failure_limit", Value::num(self.endpoint_failure_limit as f64))
             .set("endpoint_probe_ms", Value::num(self.endpoint_probe.as_millis() as f64))
+            .set("endpoint_slow_ms", Value::num(self.endpoint_slow.as_millis() as f64))
+            .set("hedge_quantile", Value::num(self.hedge_quantile))
+            .set("hedge_min_ms", Value::num(self.hedge_min.as_millis() as f64))
+            .set("hedge_max_inflight", Value::num(self.hedge_max_inflight as f64))
             .set("buckets", Value::Arr(self.buckets.iter().map(BucketSpec::to_json).collect()))
     }
 
@@ -260,6 +297,19 @@ impl GetBatchConfig {
                 .u64_field("endpoint_probe_ms")
                 .map(Duration::from_millis)
                 .unwrap_or(d.endpoint_probe),
+            endpoint_slow: v
+                .u64_field("endpoint_slow_ms")
+                .map(Duration::from_millis)
+                .unwrap_or(d.endpoint_slow),
+            hedge_quantile: v
+                .get("hedge_quantile")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(d.hedge_quantile),
+            hedge_min: v.u64_field("hedge_min_ms").map(Duration::from_millis).unwrap_or(d.hedge_min),
+            hedge_max_inflight: v
+                .u64_field("hedge_max_inflight")
+                .map(|x| x as usize)
+                .unwrap_or(d.hedge_max_inflight),
             buckets: v
                 .get("buckets")
                 .and_then(|b| b.as_arr())
@@ -410,6 +460,10 @@ mod tests {
         c.getbatch.coherence_grace = Duration::from_millis(125);
         c.getbatch.endpoint_failure_limit = 7;
         c.getbatch.endpoint_probe = Duration::from_millis(250);
+        c.getbatch.endpoint_slow = Duration::from_millis(350);
+        c.getbatch.hedge_quantile = 0.5; // exact in binary: roundtrips verbatim
+        c.getbatch.hedge_min = Duration::from_millis(7);
+        c.getbatch.hedge_max_inflight = 3;
         c.getbatch.buckets = vec![
             BucketSpec {
                 name: "hot".into(),
@@ -443,13 +497,22 @@ mod tests {
         let c = GetBatchConfig {
             endpoint_failure_limit: 0,
             endpoint_probe: Duration::ZERO,
+            hedge_quantile: 7.5,
+            hedge_min: Duration::ZERO,
             ..Default::default()
         }
         .sanitized();
         assert_eq!(c.endpoint_failure_limit, 1);
         assert!(c.endpoint_probe >= Duration::from_millis(10));
+        assert_eq!(c.hedge_quantile, 1.0, "quantile clamped into [0, 1]");
+        assert!(c.hedge_min >= Duration::from_millis(1));
+        let nan = GetBatchConfig { hedge_quantile: f64::NAN, ..Default::default() }.sanitized();
+        assert_eq!(nan.hedge_quantile, GetBatchConfig::default().hedge_quantile);
+        let off = GetBatchConfig { hedge_quantile: 0.0, ..Default::default() }.sanitized();
+        assert_eq!(off.hedge_quantile, 0.0, "0 stays 0: hedging disabled is respected");
         let ok = GetBatchConfig::default().sanitized();
         assert_eq!(ok.endpoint_probe, GetBatchConfig::default().endpoint_probe);
+        assert_eq!(ok.hedge_quantile, GetBatchConfig::default().hedge_quantile);
     }
 
     #[test]

@@ -114,6 +114,16 @@ pub struct GetBatchMetrics {
     pub remote_failovers: Counter,
     /// Active health probes issued against broken remote endpoints.
     pub endpoint_probes: Counter,
+    /// Hedged reads launched: a ranged read outlived its endpoint's
+    /// tracked latency quantile and the same range was raced on the
+    /// second-best healthy endpoint.
+    pub hedges: Counter,
+    /// Hedges where the backup endpoint delivered first.
+    pub hedge_wins: Counter,
+    /// Hedge losers canceled after producing a usable response (their
+    /// connection is dropped, not recycled). Losers that errored or were
+    /// abandoned mid-flight count as neither win nor cancel.
+    pub hedges_canceled: Counter,
 
     // -- connection scheduling ----------------------------------------------
     /// epoll wake-ups across the node's reactor threads (HTTP + P2P).
@@ -140,13 +150,27 @@ pub struct GetBatchMetrics {
     /// this node's remote backends. Flips back down when a broken endpoint
     /// passes a health probe (or serves a half-open trial request).
     pub endpoints_unhealthy: Gauge,
-    /// Per-endpoint circuit state, rendered as one
-    /// `remote_endpoint_healthy{addr="..."}` gauge line per configured
-    /// endpoint (1 = circuit closed). Keyed by address with a registration
-    /// refcount: endpoint sets that share an address on one node share
-    /// (and overwrite) its line, and the line disappears only when the
-    /// *last* set tracking that address is dropped.
-    endpoint_health: Mutex<BTreeMap<String, (bool, usize)>>,
+    /// Per-endpoint state, rendered as labeled gauge lines per configured
+    /// endpoint: `remote_endpoint_healthy{addr="..."}` (1 = circuit
+    /// closed), `remote_endpoint_latency_ewma_ms{addr="..."}` (decayed
+    /// ranged-read latency, once sampled), and
+    /// `remote_endpoint_inflight{addr="..."}` (requests currently
+    /// outstanding). Keyed by address with a registration refcount:
+    /// endpoint sets that share an address on one node share (and
+    /// overwrite) its lines, and the lines disappear only when the *last*
+    /// set tracking that address is dropped.
+    endpoint_health: Mutex<BTreeMap<String, EndpointLine>>,
+}
+
+/// One remote endpoint's labeled-gauge state (see
+/// [`GetBatchMetrics::register_endpoint`]).
+struct EndpointLine {
+    healthy: bool,
+    /// Latency EWMA in ms; `None` until the first sample (no line rendered
+    /// for an endpoint that has never served a ranged read).
+    ewma_ms: Option<f64>,
+    inflight: i64,
+    refs: usize,
 }
 
 impl GetBatchMetrics {
@@ -161,25 +185,43 @@ impl GetBatchMetrics {
     /// event.
     pub fn register_endpoint(&self, addr: &str) {
         let mut m = self.endpoint_health.lock().unwrap();
-        m.entry(addr.to_string()).or_insert((true, 0)).1 += 1;
+        m.entry(addr.to_string())
+            .or_insert(EndpointLine { healthy: true, ewma_ms: None, inflight: 0, refs: 0 })
+            .refs += 1;
     }
 
     /// Update one endpoint's health line (circuit open/close). No-op for
     /// an unregistered address.
     pub fn set_endpoint_health(&self, addr: &str, healthy: bool) {
         if let Some(e) = self.endpoint_health.lock().unwrap().get_mut(addr) {
-            e.0 = healthy;
+            e.healthy = healthy;
         }
     }
 
-    /// Drop one registration of `addr`'s health line (its set was dropped —
-    /// bucket re-routed, cluster shutdown); the line is removed only when
-    /// no set tracks the address anymore.
+    /// Update one endpoint's latency-EWMA line (per successful ranged
+    /// read). No-op for an unregistered address.
+    pub fn set_endpoint_latency(&self, addr: &str, ewma_ms: f64) {
+        if let Some(e) = self.endpoint_health.lock().unwrap().get_mut(addr) {
+            e.ewma_ms = Some(ewma_ms);
+        }
+    }
+
+    /// Adjust one endpoint's in-flight gauge line (±1 per request guard).
+    /// No-op for an unregistered address.
+    pub fn add_endpoint_inflight(&self, addr: &str, delta: i64) {
+        if let Some(e) = self.endpoint_health.lock().unwrap().get_mut(addr) {
+            e.inflight += delta;
+        }
+    }
+
+    /// Drop one registration of `addr`'s lines (its set was dropped —
+    /// bucket re-routed, cluster shutdown); the lines are removed only
+    /// when no set tracks the address anymore.
     pub fn drop_endpoint_health(&self, addr: &str) {
         let mut m = self.endpoint_health.lock().unwrap();
         if let Some(e) = m.get_mut(addr) {
-            e.1 = e.1.saturating_sub(1);
-            if e.1 == 0 {
+            e.refs = e.refs.saturating_sub(1);
+            if e.refs == 0 {
                 m.remove(addr);
             }
         }
@@ -223,6 +265,9 @@ impl GetBatchMetrics {
             c("remote_fetch_bytes_total", "payload bytes fetched from remote backends", self.remote_fetch_bytes.get());
             c("remote_failovers_total", "remote operations failed over to another endpoint", self.remote_failovers.get());
             c("endpoint_probes_total", "active health probes of broken remote endpoints", self.endpoint_probes.get());
+            c("hedges_total", "hedged remote reads launched", self.hedges.get());
+            c("hedge_wins_total", "hedged reads won by the backup endpoint", self.hedge_wins.get());
+            c("hedges_canceled_total", "hedge losers canceled after responding", self.hedges_canceled.get());
             c("reactor_wakeups_total", "epoll wake-ups across reactor threads", self.reactor_wakeups.get());
             c("accept_backlog_shed_total", "connections shed at the max_connections cap", self.accept_backlog_shed.get());
         }
@@ -247,10 +292,35 @@ impl GetBatchMetrics {
                 "# HELP ais_getbatch_remote_endpoint_healthy 1 if the endpoint's circuit is closed\n\
                  # TYPE ais_getbatch_remote_endpoint_healthy gauge\n",
             );
-            for (addr, (healthy, _refs)) in eps.iter() {
+            for (addr, line) in eps.iter() {
                 out.push_str(&format!(
                     "ais_getbatch_remote_endpoint_healthy{{node=\"{node}\",addr=\"{addr}\"}} {}\n",
-                    u8::from(*healthy)
+                    u8::from(line.healthy)
+                ));
+            }
+            // Latency lines only for endpoints that have actually served a
+            // ranged read — a cold endpoint has no latency, not latency 0.
+            if eps.values().any(|l| l.ewma_ms.is_some()) {
+                out.push_str(
+                    "# HELP ais_getbatch_remote_endpoint_latency_ewma_ms decayed ranged-read latency per endpoint\n\
+                     # TYPE ais_getbatch_remote_endpoint_latency_ewma_ms gauge\n",
+                );
+                for (addr, line) in eps.iter() {
+                    if let Some(ms) = line.ewma_ms {
+                        out.push_str(&format!(
+                            "ais_getbatch_remote_endpoint_latency_ewma_ms{{node=\"{node}\",addr=\"{addr}\"}} {ms:.3}\n"
+                        ));
+                    }
+                }
+            }
+            out.push_str(
+                "# HELP ais_getbatch_remote_endpoint_inflight requests currently in flight per endpoint\n\
+                 # TYPE ais_getbatch_remote_endpoint_inflight gauge\n",
+            );
+            for (addr, line) in eps.iter() {
+                out.push_str(&format!(
+                    "ais_getbatch_remote_endpoint_inflight{{node=\"{node}\",addr=\"{addr}\"}} {}\n",
+                    line.inflight
                 ));
             }
         }
@@ -363,6 +433,54 @@ mod tests {
         m.drop_endpoint_health("10.0.0.7:8080");
         m.drop_endpoint_health("10.0.0.8:8080");
         assert!(!m.render("t0").contains("remote_endpoint_healthy{"));
+    }
+
+    #[test]
+    fn endpoint_latency_and_inflight_lines_render() {
+        let m = GetBatchMetrics::default();
+        m.register_endpoint("10.0.0.7:8080");
+        // Inflight renders from registration; latency only once sampled.
+        let text = m.render("t0");
+        assert!(
+            text.contains("ais_getbatch_remote_endpoint_inflight{node=\"t0\",addr=\"10.0.0.7:8080\"} 0"),
+            "{text}"
+        );
+        assert!(!text.contains("remote_endpoint_latency_ewma_ms"), "no latency before a sample");
+        m.set_endpoint_latency("10.0.0.7:8080", 12.5);
+        m.add_endpoint_inflight("10.0.0.7:8080", 1);
+        let text = m.render("t0");
+        assert!(
+            text.contains(
+                "ais_getbatch_remote_endpoint_latency_ewma_ms{node=\"t0\",addr=\"10.0.0.7:8080\"} 12.500"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains("ais_getbatch_remote_endpoint_inflight{node=\"t0\",addr=\"10.0.0.7:8080\"} 1"),
+            "{text}"
+        );
+        m.add_endpoint_inflight("10.0.0.7:8080", -1);
+        assert!(m
+            .render("t0")
+            .contains("ais_getbatch_remote_endpoint_inflight{node=\"t0\",addr=\"10.0.0.7:8080\"} 0"));
+        // Updates on unregistered addresses are no-ops, not phantom lines.
+        m.set_endpoint_latency("nobody:1", 3.0);
+        m.add_endpoint_inflight("nobody:1", 1);
+        assert!(!m.render("t0").contains("nobody:1"));
+        m.drop_endpoint_health("10.0.0.7:8080");
+        assert!(!m.render("t0").contains("remote_endpoint_inflight{"));
+    }
+
+    #[test]
+    fn hedge_counters_render_and_parse() {
+        let m = GetBatchMetrics::default();
+        m.hedges.add(5);
+        m.hedge_wins.add(3);
+        m.hedges_canceled.add(2);
+        let parsed = GetBatchMetrics::parse(&m.render("t0"));
+        assert_eq!(parsed["ais_getbatch_hedges_total"], 5.0);
+        assert_eq!(parsed["ais_getbatch_hedge_wins_total"], 3.0);
+        assert_eq!(parsed["ais_getbatch_hedges_canceled_total"], 2.0);
     }
 
     #[test]

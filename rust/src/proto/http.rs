@@ -225,6 +225,22 @@ pub fn serve_ranged_bytes(req: &Request, payload: &[u8]) -> Response {
     }
 }
 
+/// [`serve_ranged_bytes`] with an injected service delay — the test-stub
+/// hook for "slow-not-dead endpoint" scenarios (tail-latency suites). The
+/// sleep happens in the stub server's handler thread before any byte of
+/// the response is written, so the client observes it as time to first
+/// byte.
+pub fn serve_ranged_bytes_after(
+    delay: std::time::Duration,
+    req: &Request,
+    payload: &[u8],
+) -> Response {
+    if !delay.is_zero() {
+        std::thread::sleep(delay);
+    }
+    serve_ranged_bytes(req, payload)
+}
+
 // --------------------------------------------------------------- parsing --
 
 fn parse_query(q: &str) -> BTreeMap<String, String> {

@@ -443,6 +443,14 @@ impl CacheSource {
     /// serving *and* caching — transient residency is one fill span
     /// (≤ `(readahead_chunks + 1) × chunk_bytes`, clamped at boot to fit
     /// `dt_buffer_bytes`).
+    ///
+    /// Fills over a *hedged* remote inner tier need no extra handling
+    /// here: a hedge (or failover) can change which endpoint serves the
+    /// fill's bytes mid-span, but the remote source version-pins its own
+    /// re-opens (fail-closed on a stamp change once bytes flowed) and
+    /// surfaces the stamp via `observed_version` — which the gate below
+    /// checks against this source's pin before any byte is served or
+    /// cached.
     fn fill(&self, idx: u64) -> Result<Arc<Vec<u8>>, StoreError> {
         let cb = self.cache.chunk_bytes() as u64;
         let last_idx = if self.obj_len == 0 { 0 } else { (self.obj_len - 1) / cb };

@@ -1,8 +1,10 @@
 //! Endpoint health tracking for the remote tier: a per-endpoint
 //! consecutive-error **circuit breaker** with half-open recovery and cheap
-//! active re-probing — what turns a list of `host:port` endpoints into a
-//! fault-tolerant endpoint *set* the [`RemoteBackend`](super::RemoteBackend)
-//! can fail over across.
+//! active re-probing, plus the **tail-latency signals** (latency EWMA,
+//! live quantile histogram, outstanding-request counts) that drive
+//! latency-aware selection and hedged reads — what turns a list of
+//! `host:port` endpoints into a fault- and straggler-tolerant endpoint
+//! *set* the [`RemoteBackend`](super::RemoteBackend) can fail over across.
 //!
 //! Mechanics:
 //!
@@ -21,10 +23,25 @@
 //!   selection path, so probing needs no dedicated scheduler thread)
 //!   launches one short-lived background `GET /v1/health` per due broken
 //!   endpoint; a 200 closes the circuit without risking a real read.
+//! - **Latency tracking** — [`EndpointSet::note_latency`] folds each
+//!   successful ranged read's time-to-first-byte into a per-endpoint EWMA
+//!   and a [`LogHistogram`] whose live quantile estimate feeds the hedge
+//!   trigger ([`EndpointSet::hedge_deadline`]). Open streams and in-flight
+//!   attempts are counted via [`EndpointSet::track`] guards.
 //!
-//! Selection among healthy endpoints is round-robin. Health state is shared
-//! per backend instance — every reader opened through one `RemoteBackend`
-//! observes (and contributes to) the same circuit state.
+//! Selection among healthy endpoints is **least-outstanding, tie-broken by
+//! latency EWMA** (coarse log2 bands, so near-equal endpoints still share
+//! load round-robin): under concurrency the outstanding counts spread work,
+//! and a sequentially-probed set simply uses its fastest endpoint. An
+//! endpoint whose EWMA exceeds the configured slow threshold is *soft*
+//! deprioritized — never selected while a faster peer exists, its circuit
+//! stays closed — but every `endpoint_probe_ms` one plan leads with it as a
+//! **slow trial**, so its EWMA keeps getting samples and decays back down
+//! when the endpoint speeds up (under hedging, that trial request is
+//! hedged, so paying the slow endpoint's latency is bounded too). Health
+//! and latency state are shared per backend instance — every reader opened
+//! through one `RemoteBackend` observes (and contributes to) the same
+//! state.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -33,6 +50,71 @@ use std::time::{Duration, Instant};
 use crate::metrics::GetBatchMetrics;
 use crate::proto::http::HttpClient;
 use crate::proto::wire::paths;
+use crate::util::stats::LogHistogram;
+
+/// EWMA smoothing factor for per-endpoint latency: `new = α·sample +
+/// (1-α)·old`. 0.3 reacts to a 50x slowdown within one sample (the EWMA
+/// lands well past any sane slow threshold) yet needs a handful of fast
+/// samples to forgive it — brief hiccups don't flap the slow flag.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Minimum histogram samples before the live quantile estimate is trusted
+/// as a hedge deadline; below this the configured floor (`hedge_min_ms`)
+/// applies alone.
+const HEDGE_MIN_SAMPLES: u64 = 16;
+
+/// Tail-latency policy for one endpoint set: the slow-endpoint
+/// deprioritization threshold plus the hedged-read trigger knobs. Carried
+/// by `GetBatchConfig` (`endpoint_slow_ms`, `hedge_quantile`,
+/// `hedge_min_ms`, `hedge_max_inflight`) and fed to
+/// [`RemoteBackend::with_tail`](super::RemoteBackend::with_tail).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TailConfig {
+    /// Latency-EWMA threshold above which an endpoint is deprioritized
+    /// (soft: circuit stays closed, periodic slow trials allow recovery).
+    /// `Duration::ZERO` disables the slow flag.
+    pub slow: Duration,
+    /// Quantile of the endpoint's own latency histogram that triggers a
+    /// hedge (0.95 → hedge once the attempt outlives the endpoint's P95).
+    /// `0.0` disables hedging.
+    pub hedge_quantile: f64,
+    /// Floor under the quantile estimate: never hedge before this much
+    /// wall time (guards against hedging every request while the
+    /// histogram is still cold or the endpoint is genuinely fast).
+    pub hedge_min: Duration,
+    /// Cap on concurrent hedge attempts per backend — bounds the load
+    /// amplification hedging can add during a brown-out. `0` disables
+    /// hedging.
+    pub hedge_max_inflight: usize,
+}
+
+impl Default for TailConfig {
+    fn default() -> Self {
+        TailConfig {
+            slow: Duration::from_millis(500),
+            hedge_quantile: 0.95,
+            hedge_min: Duration::from_millis(25),
+            hedge_max_inflight: 32,
+        }
+    }
+}
+
+impl TailConfig {
+    /// Everything off: round-robin-era behavior for callers that opt out.
+    pub fn disabled() -> TailConfig {
+        TailConfig {
+            slow: Duration::ZERO,
+            hedge_quantile: 0.0,
+            hedge_min: Duration::ZERO,
+            hedge_max_inflight: 0,
+        }
+    }
+
+    /// Whether hedged reads are on at all.
+    pub fn hedging_enabled(&self) -> bool {
+        self.hedge_quantile > 0.0 && self.hedge_max_inflight > 0
+    }
+}
 
 /// Per-endpoint circuit state (under the endpoint's lock).
 struct EpState {
@@ -49,11 +131,57 @@ struct EpState {
     last_probe: Option<Instant>,
     /// An active probe thread is in flight (don't stack probes).
     probe_inflight: bool,
+    /// Last slow-trial admission: a slow-flagged (but healthy) endpoint is
+    /// led with once per probe window so its EWMA keeps getting samples
+    /// and can observe a recovery.
+    last_slow_trial: Option<Instant>,
+}
+
+/// Per-endpoint latency signals (own lock — updated on every successful
+/// ranged read, read on every plan).
+struct LatStat {
+    /// Decayed latency EWMA in µs; 0 until the first sample.
+    ewma_us: f64,
+    /// Log2-bucket histogram of per-ranged-read latency — the live
+    /// quantile estimate behind the hedge deadline.
+    hist: LogHistogram,
 }
 
 struct Endpoint {
     addr: String,
     state: Mutex<EpState>,
+    lat: Mutex<LatStat>,
+    /// Requests currently in flight against this endpoint (open streams +
+    /// racing attempts), maintained by [`Inflight`] guards.
+    outstanding: AtomicUsize,
+}
+
+/// RAII guard counting one in-flight request against an endpoint (see
+/// [`EndpointSet::track`]); dropping it decrements the outstanding count
+/// (and the per-endpoint in-flight gauge).
+pub struct Inflight {
+    ep: Arc<Endpoint>,
+    metrics: Option<Arc<GetBatchMetrics>>,
+}
+
+impl Drop for Inflight {
+    fn drop(&mut self) {
+        self.ep.outstanding.fetch_sub(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.add_endpoint_inflight(&self.ep.addr, -1);
+        }
+    }
+}
+
+/// Coarse log2 band of a latency EWMA: endpoints within a ~2x band compare
+/// equal, so modest differences still share load (round-robin rotation
+/// breaks the tie) while a genuinely slower endpoint sorts after its peers.
+fn ewma_band(ewma_us: f64) -> i64 {
+    if ewma_us <= 0.0 {
+        0
+    } else {
+        ewma_us.max(1.0).log2().round() as i64
+    }
 }
 
 /// A health-tracked set of interchangeable endpoints serving the same
@@ -63,20 +191,23 @@ pub struct EndpointSet {
     rr: AtomicUsize,
     failure_limit: u32,
     probe_interval: Duration,
+    /// Slow-flag threshold (see [`TailConfig::slow`]); ZERO disables.
+    slow: Duration,
     metrics: Option<Arc<GetBatchMetrics>>,
 }
 
 impl EndpointSet {
-    /// Track `addrs` with circuit-breaker parameters. `failure_limit` is
-    /// clamped to ≥ 1 (a limit of 0 would open circuits spontaneously).
-    /// Duplicate addresses are collapsed — health state is keyed by
-    /// address, and a duplicate would shadow its twin's circuit (lookups
-    /// resolve to the first instance, leaving the copy permanently
-    /// "healthy" in rotation).
+    /// Track `addrs` with circuit-breaker parameters and the slow-endpoint
+    /// threshold. `failure_limit` is clamped to ≥ 1 (a limit of 0 would
+    /// open circuits spontaneously). Duplicate addresses are collapsed —
+    /// health state is keyed by address, and a duplicate would shadow its
+    /// twin's circuit (lookups resolve to the first instance, leaving the
+    /// copy permanently "healthy" in rotation).
     pub fn new(
         addrs: &[&str],
         failure_limit: u32,
         probe_interval: Duration,
+        slow: Duration,
         metrics: Option<Arc<GetBatchMetrics>>,
     ) -> Arc<EndpointSet> {
         assert!(!addrs.is_empty(), "endpoint set needs at least one endpoint");
@@ -100,7 +231,10 @@ impl EndpointSet {
                     last_trial: None,
                     last_probe: None,
                     probe_inflight: false,
+                    last_slow_trial: None,
                 }),
+                lat: Mutex::new(LatStat { ewma_us: 0.0, hist: LogHistogram::new() }),
+                outstanding: AtomicUsize::new(0),
             }));
         }
         Arc::new(EndpointSet {
@@ -108,6 +242,7 @@ impl EndpointSet {
             rr: AtomicUsize::new(0),
             failure_limit: failure_limit.max(1),
             probe_interval,
+            slow,
             metrics,
         })
     }
@@ -144,28 +279,142 @@ impl EndpointSet {
         self.endpoints.iter().filter(|e| e.state.lock().unwrap().unhealthy).count()
     }
 
-    /// Ordered candidate list for one operation: broken endpoints whose
-    /// half-open window has elapsed come **first** — callers stop at the
-    /// first success, so a trailing trial would be admitted (window
-    /// re-armed) yet never actually attempted while a healthy peer keeps
-    /// succeeding, and an endpoint whose server has no `/v1/health` route
-    /// could then never recover. Leading the list makes live traffic the
-    /// real half-open trial: at most one request per `endpoint_probe_ms`
-    /// pays the broken endpoint's failure latency (admission is recorded,
-    /// so trials don't stampede), and its success closes the circuit.
-    /// Healthy endpoints follow, round-robin rotated; `last` (the endpoint
-    /// the caller just watched fail) is retried only as the absolute last
-    /// resort. Callers walk the list in order and stop at the first
-    /// success.
+    fn find(&self, addr: &str) -> Option<&Arc<Endpoint>> {
+        self.endpoints.iter().find(|e| e.addr == addr)
+    }
+
+    /// Fold one successful ranged read's latency into `addr`'s EWMA and
+    /// quantile histogram. The first sample seeds the EWMA directly, so a
+    /// single pathological read is enough to flag a straggler.
+    pub fn note_latency(&self, addr: &str, elapsed: Duration) {
+        if let Some(ep) = self.find(addr) {
+            let us = elapsed.as_secs_f64() * 1e6;
+            let ewma_ms = {
+                let mut lat = ep.lat.lock().unwrap();
+                lat.ewma_us = if lat.hist.count() == 0 {
+                    us
+                } else {
+                    EWMA_ALPHA * us + (1.0 - EWMA_ALPHA) * lat.ewma_us
+                };
+                lat.hist.record_us(us);
+                lat.ewma_us / 1e3
+            };
+            if let Some(m) = &self.metrics {
+                m.set_endpoint_latency(addr, ewma_ms);
+            }
+        }
+    }
+
+    /// Current latency EWMA for `addr` in milliseconds (`None` before the
+    /// first sample). Tests and diagnostics.
+    pub fn latency_ewma_ms(&self, addr: &str) -> Option<f64> {
+        let ep = self.find(addr)?;
+        let lat = ep.lat.lock().unwrap();
+        (lat.hist.count() > 0).then_some(lat.ewma_us / 1e3)
+    }
+
+    /// Requests currently in flight against `addr`.
+    pub fn outstanding(&self, addr: &str) -> usize {
+        self.find(addr).map(|e| e.outstanding.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Count one in-flight request against `addr` for as long as the
+    /// returned guard lives (attempt races, open streams).
+    pub fn track(&self, addr: &str) -> Option<Inflight> {
+        let ep = self.find(addr)?;
+        ep.outstanding.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.add_endpoint_inflight(addr, 1);
+        }
+        Some(Inflight { ep: Arc::clone(ep), metrics: self.metrics.clone() })
+    }
+
+    /// How long an attempt against `addr` may run before a hedge fires:
+    /// the `quantile` estimate from the endpoint's own latency histogram
+    /// (once it has enough samples), floored by `floor` (`hedge_min_ms`).
+    pub fn hedge_deadline(&self, addr: &str, quantile: f64, floor: Duration) -> Duration {
+        let est = self
+            .find(addr)
+            .and_then(|ep| {
+                let lat = ep.lat.lock().unwrap();
+                if lat.hist.count() < HEDGE_MIN_SAMPLES {
+                    return None;
+                }
+                let us = lat.hist.percentile_us((quantile * 100.0).clamp(0.0, 100.0));
+                us.is_finite().then(|| Duration::from_micros(us as u64))
+            })
+            .unwrap_or(Duration::ZERO);
+        est.max(floor)
+    }
+
+    /// The best healthy endpoint other than `exclude` to aim a hedge at:
+    /// least outstanding, tie-broken by EWMA band, configuration order
+    /// last. Slow-flagged endpoints are still eligible — with every faster
+    /// peer excluded there may be nothing else, and a hedge against a slow
+    /// endpoint can only improve on an attempt that already overran its
+    /// deadline.
+    pub fn hedge_peer(&self, exclude: &str) -> Option<String> {
+        self.endpoints
+            .iter()
+            .filter(|e| e.addr != exclude && !e.state.lock().unwrap().unhealthy)
+            .min_by_key(|e| {
+                (
+                    e.outstanding.load(Ordering::Relaxed),
+                    ewma_band(e.lat.lock().unwrap().ewma_us),
+                )
+            })
+            .map(|e| e.addr.clone())
+    }
+
+    /// Ordered candidate list for one operation. Leading the list (callers
+    /// stop at the first success, so anything trailing a healthy peer never
+    /// actually runs):
+    ///
+    /// 1. broken endpoints whose half-open window elapsed (live traffic is
+    ///    the half-open trial; admission re-arms the window so trials don't
+    ///    stampede),
+    /// 2. slow-flagged endpoints whose slow-trial window elapsed (one real
+    ///    request per window keeps the EWMA observable so the flag can
+    ///    clear when the endpoint speeds up),
+    /// 3. healthy endpoints, **least-outstanding first, tie-broken by
+    ///    latency EWMA band**; endpoints flagged slow (EWMA above the slow
+    ///    threshold) sort after every unflagged peer, and full ties keep a
+    ///    round-robin rotation so cold or equal endpoints share load,
+    /// 4. `last` (the endpoint the caller just watched fail) as the
+    ///    absolute last resort.
     pub fn plan(&self, last: Option<&str>) -> Vec<String> {
-        let mut trial: Vec<String> = Vec::new();
-        let mut healthy: Vec<String> = Vec::new();
+        let mut out: Vec<String> = Vec::new();
+        let mut slow_trial: Vec<String> = Vec::new();
+        let mut healthy: Vec<(String, u8, usize, i64)> = Vec::new();
         let now = Instant::now();
+        let slow_us = self.slow.as_micros() as f64;
         for ep in &self.endpoints {
             let mut st = ep.state.lock().unwrap();
             if !st.unhealthy {
-                if Some(ep.addr.as_str()) != last {
-                    healthy.push(ep.addr.clone());
+                if Some(ep.addr.as_str()) == last {
+                    continue;
+                }
+                let ewma_us = ep.lat.lock().unwrap().ewma_us;
+                let slow = slow_us > 0.0 && ewma_us > slow_us;
+                if slow
+                    && st
+                        .last_slow_trial
+                        .map(|t| now.duration_since(t) >= self.probe_interval)
+                        .unwrap_or(true)
+                {
+                    // Slow trial: lead with the straggler once per window.
+                    // Without this it would never see traffic again (its
+                    // EWMA band sorts it last), freezing the EWMA at its
+                    // worst and making the slow flag permanent.
+                    st.last_slow_trial = Some(now);
+                    slow_trial.push(ep.addr.clone());
+                } else {
+                    healthy.push((
+                        ep.addr.clone(),
+                        u8::from(slow),
+                        ep.outstanding.load(Ordering::Relaxed),
+                        ewma_band(ewma_us),
+                    ));
                 }
             } else if st
                 .last_trial
@@ -174,23 +423,27 @@ impl EndpointSet {
                 && Some(ep.addr.as_str()) != last
             {
                 st.last_trial = Some(now);
-                trial.push(ep.addr.clone());
+                out.push(ep.addr.clone());
             }
         }
         if !healthy.is_empty() {
+            // Rotate before the (stable) sort: candidates whose keys tie —
+            // cold starts, equal load — still spread round-robin.
             let k = self.rr.fetch_add(1, Ordering::Relaxed) % healthy.len();
             healthy.rotate_left(k);
+            healthy.sort_by_key(|&(_, slow, outstanding, band)| (slow, outstanding, band));
         }
-        trial.extend(healthy);
+        out.extend(slow_trial);
+        out.extend(healthy.into_iter().map(|(a, ..)| a));
         if let Some(l) = last {
-            trial.push(l.to_string());
+            out.push(l.to_string());
         }
-        trial
+        out
     }
 
     /// Record a successful operation on `addr`: closes the circuit.
     pub fn note_ok(&self, addr: &str) {
-        if let Some(ep) = self.endpoints.iter().find(|e| e.addr == addr) {
+        if let Some(ep) = self.find(addr) {
             let mut st = ep.state.lock().unwrap();
             st.consec_errors = 0;
             if st.unhealthy {
@@ -206,7 +459,7 @@ impl EndpointSet {
     /// Record a failed operation on `addr`; `failure_limit` consecutive
     /// failures open the circuit.
     pub fn note_err(&self, addr: &str) {
-        if let Some(ep) = self.endpoints.iter().find(|e| e.addr == addr) {
+        if let Some(ep) = self.find(addr) {
             let mut st = ep.state.lock().unwrap();
             st.consec_errors = st.consec_errors.saturating_add(1);
             // Failing (healthy or half-open trial) also re-arms the
@@ -311,7 +564,15 @@ mod tests {
     use super::*;
 
     fn set(addrs: &[&str], limit: u32, probe: Duration) -> Arc<EndpointSet> {
-        EndpointSet::new(addrs, limit, probe, None)
+        EndpointSet::new(addrs, limit, probe, Duration::ZERO, None)
+    }
+
+    fn set_slow(
+        addrs: &[&str],
+        probe: Duration,
+        slow: Duration,
+    ) -> Arc<EndpointSet> {
+        EndpointSet::new(addrs, 3, probe, slow, None)
     }
 
     #[test]
@@ -355,12 +616,79 @@ mod tests {
     }
 
     #[test]
-    fn plan_round_robins_healthy_endpoints() {
+    fn plan_spreads_cold_endpoints_round_robin() {
+        // No latency data, no load: all keys tie, so the rotation must
+        // spread selection across the whole set (cold-start load sharing).
         let s = set(&["a:1", "b:2", "c:3"], 3, Duration::from_secs(60));
         let firsts: Vec<String> =
             (0..6).map(|_| s.plan(None).first().unwrap().clone()).collect();
         let distinct: std::collections::HashSet<&String> = firsts.iter().collect();
         assert_eq!(distinct.len(), 3, "{firsts:?}");
+    }
+
+    #[test]
+    fn plan_prefers_lower_latency_ewma() {
+        let s = set(&["a:1", "b:2"], 3, Duration::from_secs(60));
+        for _ in 0..3 {
+            s.note_latency("a:1", Duration::from_millis(50));
+            s.note_latency("b:2", Duration::from_millis(1));
+        }
+        assert!(s.latency_ewma_ms("a:1").unwrap() > 40.0);
+        assert!(s.latency_ewma_ms("b:2").unwrap() < 2.0);
+        // EWMA bands differ by ~log2(50) ≈ 5.6: b always sorts first.
+        for _ in 0..6 {
+            assert_eq!(s.plan(None).first().map(|x| x.as_str()), Some("b:2"));
+        }
+    }
+
+    #[test]
+    fn plan_prefers_least_outstanding_over_ewma() {
+        let s = set(&["a:1", "b:2"], 3, Duration::from_secs(60));
+        for _ in 0..3 {
+            s.note_latency("a:1", Duration::from_millis(8));
+            s.note_latency("b:2", Duration::from_millis(1));
+        }
+        assert_eq!(s.plan(None).first().map(|x| x.as_str()), Some("b:2"));
+        // Load b up: least-outstanding dominates the EWMA tie-break.
+        let g1 = s.track("b:2").unwrap();
+        let g2 = s.track("b:2").unwrap();
+        assert_eq!(s.outstanding("b:2"), 2);
+        assert_eq!(s.plan(None).first().map(|x| x.as_str()), Some("a:1"));
+        drop(g1);
+        drop(g2);
+        assert_eq!(s.outstanding("b:2"), 0);
+        assert_eq!(s.plan(None).first().map(|x| x.as_str()), Some("b:2"));
+    }
+
+    #[test]
+    fn slow_endpoint_deprioritized_without_opening_circuit_and_recovers() {
+        let s = set_slow(
+            &["a:1", "b:2"],
+            Duration::from_secs(60),
+            Duration::from_millis(10),
+        );
+        s.note_latency("b:2", Duration::from_millis(1));
+        // One pathological sample seeds the EWMA past the slow threshold.
+        s.note_latency("a:1", Duration::from_millis(500));
+        assert!(s.is_healthy("a:1"), "slowness must not open the circuit");
+        assert_eq!(s.unhealthy_count(), 0);
+        // First plan after flagging admits a leading slow trial...
+        let p = s.plan(None);
+        assert_eq!(p.first().map(|x| x.as_str()), Some("a:1"), "slow trial leads: {p:?}");
+        // ...then the straggler sorts last for the rest of the window.
+        for _ in 0..4 {
+            let p = s.plan(None);
+            assert_eq!(p, vec!["b:2".to_string(), "a:1".to_string()], "deprioritized");
+        }
+        // Fast samples (e.g. delivered by slow trials) decay the EWMA back
+        // under the threshold: the flag clears and selection resumes.
+        for _ in 0..12 {
+            s.note_latency("a:1", Duration::from_millis(1));
+        }
+        assert!(s.latency_ewma_ms("a:1").unwrap() < 10.0, "EWMA recovered");
+        let firsts: Vec<String> =
+            (0..4).map(|_| s.plan(None).first().unwrap().clone()).collect();
+        assert!(firsts.contains(&"a:1".to_string()), "recovered into rotation: {firsts:?}");
     }
 
     #[test]
@@ -379,12 +707,54 @@ mod tests {
     }
 
     #[test]
+    fn hedge_peer_picks_best_other_healthy_endpoint() {
+        let s = set(&["a:1", "b:2", "c:3"], 1, Duration::from_secs(60));
+        for _ in 0..3 {
+            s.note_latency("b:2", Duration::from_millis(20));
+            s.note_latency("c:3", Duration::from_millis(1));
+        }
+        assert_eq!(s.hedge_peer("a:1").as_deref(), Some("c:3"), "fastest peer");
+        assert_eq!(s.hedge_peer("c:3").as_deref(), Some("b:2"));
+        s.note_err("c:3");
+        assert_eq!(s.hedge_peer("a:1").as_deref(), Some("b:2"), "skips open circuits");
+        let lone = set(&["a:1"], 1, Duration::from_secs(60));
+        assert_eq!(lone.hedge_peer("a:1"), None, "nobody to hedge against");
+    }
+
+    #[test]
+    fn hedge_deadline_floors_until_enough_samples() {
+        let s = set(&["a:1"], 3, Duration::from_secs(60));
+        let floor = Duration::from_millis(25);
+        assert_eq!(s.hedge_deadline("a:1", 0.95, floor), floor, "cold histogram");
+        for _ in 0..10 {
+            s.note_latency("a:1", Duration::from_millis(200));
+        }
+        assert_eq!(
+            s.hedge_deadline("a:1", 0.95, floor),
+            floor,
+            "still under the sample minimum"
+        );
+        for _ in 0..10 {
+            s.note_latency("a:1", Duration::from_millis(200));
+        }
+        let d = s.hedge_deadline("a:1", 0.95, floor);
+        assert!(d > Duration::from_millis(90) && d < Duration::from_millis(400), "{d:?}");
+        // A fast endpoint's estimate never undercuts the floor.
+        let f = set(&["f:1"], 3, Duration::from_secs(60));
+        for _ in 0..20 {
+            f.note_latency("f:1", Duration::from_micros(300));
+        }
+        assert_eq!(f.hedge_deadline("f:1", 0.95, floor), floor);
+    }
+
+    #[test]
     fn drop_settles_the_unhealthy_gauge() {
         let metrics = GetBatchMetrics::new();
         let s = EndpointSet::new(
             &["a:1", "b:2"],
             1,
             Duration::from_secs(60),
+            Duration::ZERO,
             Some(Arc::clone(&metrics)),
         );
         s.note_err("a:1");
@@ -401,6 +771,7 @@ mod tests {
             &["a:1", "b:2"],
             1,
             Duration::from_secs(60),
+            Duration::ZERO,
             Some(Arc::clone(&metrics)),
         );
         // One labeled line per configured endpoint, healthy at birth.
@@ -422,6 +793,42 @@ mod tests {
         // Dropping the set removes its lines.
         drop(s);
         assert!(!metrics.render("t0").contains("remote_endpoint_healthy{"));
+    }
+
+    #[test]
+    fn per_endpoint_latency_and_inflight_lines_render() {
+        let metrics = GetBatchMetrics::new();
+        let s = EndpointSet::new(
+            &["a:1"],
+            1,
+            Duration::from_secs(60),
+            Duration::ZERO,
+            Some(Arc::clone(&metrics)),
+        );
+        let text = metrics.render("t0");
+        assert!(
+            text.contains("ais_getbatch_remote_endpoint_inflight{node=\"t0\",addr=\"a:1\"} 0"),
+            "{text}"
+        );
+        s.note_latency("a:1", Duration::from_millis(12));
+        let g = s.track("a:1").unwrap();
+        let text = metrics.render("t0");
+        assert!(
+            text.contains("ais_getbatch_remote_endpoint_inflight{node=\"t0\",addr=\"a:1\"} 1"),
+            "{text}"
+        );
+        let ewma_line = text
+            .lines()
+            .find(|l| l.starts_with("ais_getbatch_remote_endpoint_latency_ewma_ms{"))
+            .expect("latency line rendered");
+        let v: f64 = ewma_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((v - 12.0).abs() < 1.0, "{ewma_line}");
+        drop(g);
+        assert!(metrics
+            .render("t0")
+            .contains("ais_getbatch_remote_endpoint_inflight{node=\"t0\",addr=\"a:1\"} 0"));
+        drop(s);
+        assert!(!metrics.render("t0").contains("remote_endpoint_latency_ewma_ms{"));
     }
 
     #[test]
@@ -469,6 +876,7 @@ mod tests {
             &[addr.as_str()],
             1,
             Duration::from_millis(10),
+            Duration::ZERO,
             Some(Arc::clone(&metrics)),
         );
         let cl = HttpClient::new(true);

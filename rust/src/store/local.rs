@@ -24,6 +24,7 @@ use std::io::{self, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use super::engine::{Backend, ChunkSource, EntryReader, StoreError};
 use super::mountpath::Mountpaths;
@@ -89,6 +90,10 @@ pub struct LocalBackend {
     /// Injected read fault rate (failure testing); 0.0 in production.
     fault_rate: std::sync::Mutex<f64>,
     fault_rng: std::sync::Mutex<crate::util::rng::Rng>,
+    /// Injected read latency (tail-latency testing): (delay, rate). A
+    /// read sleeps `delay` with probability `rate` — the "slow-not-dead
+    /// disk" the hedging/selection machinery is built against.
+    latency: std::sync::Mutex<(Duration, f64)>,
     /// Authoritative per-object write generations, lazily seeded from
     /// sidecars. Each object has its own slot mutex: PUT/DELETE mutate the
     /// slot in the same critical section as the object rename/unlink (see
@@ -116,6 +121,7 @@ impl LocalBackend {
             tmp_dir,
             fault_rate: std::sync::Mutex::new(0.0),
             fault_rng: std::sync::Mutex::new(crate::util::rng::Rng::new(0xFA01)),
+            latency: std::sync::Mutex::new((Duration::ZERO, 0.0)),
             versions: Mutex::new(HashMap::new()),
         })
     }
@@ -125,10 +131,26 @@ impl LocalBackend {
         *self.fault_rate.lock().unwrap() = rate;
     }
 
+    /// Injected read latency (tail-latency testing): each read sleeps
+    /// `delay` with probability `rate`. `rate` 1.0 makes every read slow
+    /// (the deterministic 50x-slower-endpoint scenario); 0.0 disables.
+    /// Unlike `set_fault_rate` this never errors — the backend is slow,
+    /// not broken, which is exactly the case circuit breakers can't see.
+    pub fn set_latency(&self, delay: Duration, rate: f64) {
+        *self.latency.lock().unwrap() = (delay, rate);
+    }
+
     fn maybe_fault(&self) -> Result<(), StoreError> {
         let rate = *self.fault_rate.lock().unwrap();
         if rate > 0.0 && self.fault_rng.lock().unwrap().bool(rate) {
             return Err(StoreError::Io(io::Error::new(io::ErrorKind::Other, "injected EIO")));
+        }
+        let (delay, lrate) = *self.latency.lock().unwrap();
+        if !delay.is_zero()
+            && lrate > 0.0
+            && (lrate >= 1.0 || self.fault_rng.lock().unwrap().bool(lrate))
+        {
+            std::thread::sleep(delay);
         }
         Ok(())
     }
@@ -494,6 +516,21 @@ mod tests {
         assert!(b.open_entry("b", "o").is_err());
         b.set_fault_rate(0.0);
         assert_eq!(b.get("b", "o").unwrap(), b"x");
+        fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn latency_injection_delays_reads_without_erroring() {
+        let (b, base) = backend("latency");
+        b.put("b", "o", b"payload").unwrap();
+        b.set_latency(Duration::from_millis(40), 1.0);
+        let t0 = std::time::Instant::now();
+        assert_eq!(b.get("b", "o").unwrap(), b"payload", "slow, not broken");
+        assert!(t0.elapsed() >= Duration::from_millis(40), "delay applied");
+        b.set_latency(Duration::ZERO, 0.0);
+        let t0 = std::time::Instant::now();
+        assert_eq!(b.get("b", "o").unwrap(), b"payload");
+        assert!(t0.elapsed() < Duration::from_millis(40), "delay cleared");
         fs::remove_dir_all(base).unwrap();
     }
 }

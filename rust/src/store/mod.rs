@@ -22,7 +22,7 @@ pub mod shard;
 
 pub use cache::{CachedBackend, ChunkCache};
 pub use engine::{Backend, ChunkSource, EntryReader, ObjectStat, ObjectStore, StoreError};
-pub use health::EndpointSet;
+pub use health::{EndpointSet, TailConfig};
 pub use local::LocalBackend;
 pub use remote::RemoteBackend;
 pub use shard::ShardIndexCache;

@@ -9,7 +9,8 @@
 //! `content-range` total plus the `x-getbatch-crc32` response header.
 //!
 //! A bucket is served by an **endpoint set**, not a single trusted address:
-//! every operation walks [`EndpointSet::plan`]'s health-ordered candidates
+//! every operation walks [`EndpointSet::plan`]'s candidates — ordered by
+//! health, outstanding requests, and latency EWMA (see [`super::health`]) —
 //! and fails over on endpoint faults (connect errors, 5xx), so one dead
 //! host degrades to a retry instead of a hard `Io` error. Because a remote
 //! read is a ranged stream, failover works **mid-stream** too: when the
@@ -22,26 +23,39 @@
 //! **same underlying store** — a *ranged* span (cache fill, shard member,
 //! GFN) has no per-range hash to verify against, so divergent replicas in
 //! one endpoint set are unsupported on every path. `StoreError::Io`
-//! surfaces only once *all* endpoints are down. Health state
-//! (consecutive-error circuit breaker, half-open trials, active
-//! `/v1/health` probes) lives in [`super::health`].
+//! surfaces only once *all* endpoints are down.
+//!
+//! **Hedged reads** (the tail-latency engine): a ranged read whose
+//! response headers don't arrive within the serving endpoint's tracked
+//! latency quantile ([`TailConfig::hedge_quantile`], floored by
+//! `hedge_min_ms`) is raced against the second-best healthy endpoint — the
+//! first usable response wins, the loser's connection is dropped (never
+//! recycled into the pool), and concurrent hedges are capped by
+//! `hedge_max_inflight` so hedging cannot amplify load during a brown-out.
+//! A hedge can change which endpoint serves a stream mid-object, so every
+//! (re-)opened stream is **version-gated**: once a source has delivered
+//! bytes, a re-open whose `x-getbatch-version` stamp differs from the
+//! pinned one fails closed instead of stitching bytes from two object
+//! versions (the failover CRC check remains as the unversioned backstop).
 //!
 //! Point an endpoint at a target for single-node buckets, or at a proxy to
 //! front a whole remote cluster (object requests follow the proxy's 307
 //! redirect to the HRW owner; `list` fans out proxy-side). List several
-//! endpoints (replicated fronts, multi-host gateways) to enable failover.
+//! endpoints (replicated fronts, multi-host gateways) to enable failover
+//! and hedging.
 
 use std::io::{self, Read};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::metrics::GetBatchMetrics;
-use crate::proto::http::{content_range_total, HttpClient};
+use crate::proto::http::{content_range_total, BodyReader, HttpClient};
 use crate::proto::wire;
 use crate::util::crc32;
 
 use super::engine::{Backend, ChunkSource, EntryReader, StoreError};
-use super::health::EndpointSet;
+use super::health::{EndpointSet, Inflight, TailConfig};
 
 /// How one endpoint's attempt at an operation failed.
 enum Attempt {
@@ -53,31 +67,262 @@ enum Attempt {
     Endpoint(io::Error),
 }
 
+/// One endpoint attempt, shareable across the hedge race threads.
+type Op<T> = Arc<dyn Fn(&str) -> Result<T, Attempt> + Send + Sync>;
+
+/// Shared hedging state of one backend: the policy plus the live count of
+/// hedge attempts in flight (the `hedge_max_inflight` cap).
+struct TailState {
+    cfg: TailConfig,
+    hedges_inflight: AtomicUsize,
+}
+
+impl TailState {
+    /// Reserve one hedge slot, or `None` at the cap. The returned guard
+    /// releases the slot on drop (it travels into the hedge thread, so the
+    /// slot is held for the hedge attempt's full lifetime — including a
+    /// canceled loser still waiting on its response).
+    fn acquire(self: &Arc<TailState>) -> Option<HedgeSlot> {
+        let mut cur = self.hedges_inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.cfg.hedge_max_inflight {
+                return None;
+            }
+            match self.hedges_inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(HedgeSlot(Arc::clone(self))),
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+struct HedgeSlot(Arc<TailState>);
+
+impl Drop for HedgeSlot {
+    fn drop(&mut self) {
+        self.0.hedges_inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Spawn one raced attempt against `addr`. The result goes back over `tx`
+/// tagged with `hedge`; when the send fails the race is already decided —
+/// a loser that produced a usable response counts `hedges_canceled` and
+/// drops it (dropping an unconsumed response drops its connection instead
+/// of recycling it, which is exactly the cancellation we want). Returns
+/// false if the thread could not be spawned.
+fn spawn_attempt<T: Send + 'static>(
+    addr: &str,
+    book: Op<T>,
+    tx: mpsc::Sender<(bool, Result<T, Attempt>)>,
+    metrics: Option<Arc<GetBatchMetrics>>,
+    hedge: bool,
+    slot: Option<HedgeSlot>,
+) -> bool {
+    let addr = addr.to_string();
+    std::thread::Builder::new()
+        .name("hedge-read".to_string())
+        .stack_size(256 * 1024)
+        .spawn(move || {
+            let _slot = slot;
+            let res = book(&addr);
+            let usable = res.is_ok();
+            if tx.send((hedge, res)).is_err() && usable {
+                if let Some(m) = &metrics {
+                    m.hedges_canceled.inc();
+                }
+            }
+        })
+        .is_ok()
+}
+
+/// Run the plan's *first* candidate with hedging: if its response headers
+/// don't arrive within the endpoint's hedge deadline, race the same
+/// attempt on the best other healthy endpoint and take whichever answers
+/// first. Failover candidates after the first are not hedged — they are
+/// already the fallback path.
+fn race_first<T: Send + 'static>(
+    endpoints: &Arc<EndpointSet>,
+    tail: &Arc<TailState>,
+    metrics: &Option<Arc<GetBatchMetrics>>,
+    addr: &str,
+    book: &Op<T>,
+) -> Result<T, Attempt> {
+    if !tail.cfg.hedging_enabled() || endpoints.len() < 2 {
+        return book(addr);
+    }
+    let deadline = endpoints.hedge_deadline(addr, tail.cfg.hedge_quantile, tail.cfg.hedge_min);
+    let (tx, rx) = mpsc::channel::<(bool, Result<T, Attempt>)>();
+    if !spawn_attempt(addr, Arc::clone(book), tx.clone(), metrics.clone(), false, None) {
+        // Thread exhaustion: degrade to the plain synchronous attempt.
+        return book(addr);
+    }
+    let mut racing = 1usize;
+    match rx.recv_timeout(deadline) {
+        Ok((_, res)) => return res,
+        Err(mpsc::RecvTimeoutError::Timeout) => {}
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // Unreachable (the attempt thread sends exactly once), but
+            // never hang an I/O path on a race invariant.
+            return Err(Attempt::Endpoint(io::Error::new(
+                io::ErrorKind::Other,
+                "hedge race lost its attempt thread",
+            )));
+        }
+    }
+    // The primary outlived its deadline: launch the hedge if a peer and a
+    // slot are available (at the cap, or alone, we just keep waiting).
+    if let Some(peer) = endpoints.hedge_peer(addr) {
+        if let Some(slot) = tail.acquire() {
+            if spawn_attempt(&peer, Arc::clone(book), tx.clone(), metrics.clone(), true, Some(slot))
+            {
+                racing += 1;
+                if let Some(m) = metrics {
+                    m.hedges.inc();
+                    m.remote_fetches.inc();
+                }
+            }
+        }
+    }
+    drop(tx);
+    // First usable response wins; a definitive Fatal outranks endpoint
+    // faults once everyone has reported.
+    let mut fatal: Option<StoreError> = None;
+    let mut last_ep: Option<io::Error> = None;
+    while racing > 0 {
+        let (was_hedge, res) = rx.recv().expect("every racing attempt sends once");
+        racing -= 1;
+        match res {
+            Ok(v) => {
+                if was_hedge {
+                    if let Some(m) = metrics {
+                        m.hedge_wins.inc();
+                    }
+                }
+                return Ok(v);
+            }
+            Err(Attempt::Fatal(e)) => fatal = Some(e),
+            Err(Attempt::Endpoint(e)) => last_ep = Some(e),
+        }
+    }
+    match fatal {
+        Some(e) => Err(Attempt::Fatal(e)),
+        None => Err(Attempt::Endpoint(last_ep.unwrap_or_else(|| {
+            io::Error::new(io::ErrorKind::Other, "hedge race ended without a result")
+        }))),
+    }
+}
+
+/// Walk the endpoint set's candidates for one ranged operation: the first
+/// (best) candidate runs under [`race_first`]'s hedging, later candidates
+/// are the ordinary failover path. Every attempt is bracketed with the
+/// per-endpoint bookkeeping — outstanding-count guard, circuit notes, and
+/// a latency observation on success (response-header time, the
+/// time-to-first-byte proxy the EWMA/quantile machinery tracks).
+fn hedged_walk<T: Send + 'static>(
+    client: &HttpClient,
+    endpoints: &Arc<EndpointSet>,
+    tail: &Arc<TailState>,
+    metrics: &Option<Arc<GetBatchMetrics>>,
+    exclude: Option<&str>,
+    op: Op<T>,
+) -> Result<T, StoreError> {
+    EndpointSet::maybe_probe(endpoints, client);
+    let book: Op<T> = {
+        let endpoints = Arc::clone(endpoints);
+        Arc::new(move |addr: &str| {
+            let _inflight = endpoints.track(addr);
+            let t0 = Instant::now();
+            let res = op(addr);
+            match &res {
+                Ok(_) => {
+                    endpoints.note_ok(addr);
+                    endpoints.note_latency(addr, t0.elapsed());
+                }
+                // A definitive answer came from a live endpoint; its
+                // latency is not a ranged-read sample, so only the
+                // circuit learns from it.
+                Err(Attempt::Fatal(_)) => endpoints.note_ok(addr),
+                Err(Attempt::Endpoint(_)) => endpoints.note_err(addr),
+            }
+            res
+        })
+    };
+    let mut last_io: Option<io::Error> = None;
+    for (i, addr) in endpoints.plan(exclude).iter().enumerate() {
+        if last_io.is_some() || exclude.is_some() {
+            if let Some(m) = metrics {
+                m.remote_failovers.inc();
+            }
+        }
+        if let Some(m) = metrics {
+            m.remote_fetches.inc();
+        }
+        let res = if i == 0 {
+            race_first(endpoints, tail, metrics, addr, &book)
+        } else {
+            book(addr)
+        };
+        match res {
+            Ok(v) => return Ok(v),
+            Err(Attempt::Fatal(e)) => return Err(e),
+            Err(Attempt::Endpoint(e)) => last_io = Some(e),
+        }
+    }
+    Err(StoreError::Io(all_down(endpoints.len(), last_io)))
+}
+
 pub struct RemoteBackend {
     client: HttpClient,
     endpoints: Arc<EndpointSet>,
+    tail: Arc<TailState>,
     metrics: Option<Arc<GetBatchMetrics>>,
 }
 
 impl RemoteBackend {
-    /// Single-endpoint backend with default health parameters (3-error
-    /// circuit breaker, 1 s probe interval).
+    /// Single-endpoint backend with default health and tail parameters
+    /// (3-error circuit breaker, 1 s probe interval, default
+    /// [`TailConfig`] — hedging is moot with one endpoint).
     pub fn new(addr: &str, metrics: Option<Arc<GetBatchMetrics>>) -> RemoteBackend {
         RemoteBackend::multi(&[addr], 3, Duration::from_millis(1000), metrics)
     }
 
-    /// Backend over a health-tracked endpoint set — see
-    /// `GetBatchConfig::endpoint_failure_limit` / `endpoint_probe_ms` for
-    /// the knobs the cluster feeds in.
+    /// Backend over a health-tracked endpoint set with the default
+    /// [`TailConfig`] — see `GetBatchConfig::endpoint_failure_limit` /
+    /// `endpoint_probe_ms` for the knobs the cluster feeds in.
     pub fn multi(
         addrs: &[&str],
         failure_limit: u32,
         probe_interval: Duration,
         metrics: Option<Arc<GetBatchMetrics>>,
     ) -> RemoteBackend {
+        let tail = TailConfig::default();
+        RemoteBackend::with_tail(addrs, failure_limit, probe_interval, tail, metrics)
+    }
+
+    /// Backend with an explicit tail-latency policy (`endpoint_slow_ms`,
+    /// `hedge_quantile`, `hedge_min_ms`, `hedge_max_inflight`).
+    pub fn with_tail(
+        addrs: &[&str],
+        failure_limit: u32,
+        probe_interval: Duration,
+        tail: TailConfig,
+        metrics: Option<Arc<GetBatchMetrics>>,
+    ) -> RemoteBackend {
         RemoteBackend {
             client: HttpClient::new(true),
-            endpoints: EndpointSet::new(addrs, failure_limit, probe_interval, metrics.clone()),
+            endpoints: EndpointSet::new(
+                addrs,
+                failure_limit,
+                probe_interval,
+                tail.slow,
+                metrics.clone(),
+            ),
+            tail: Arc::new(TailState { cfg: tail, hedges_inflight: AtomicUsize::new(0) }),
             metrics,
         }
     }
@@ -96,15 +341,10 @@ impl RemoteBackend {
         format!("{}?local=true", wire::object_path(bucket, obj))
     }
 
-    fn count_fetch(&self) {
-        if let Some(m) = &self.metrics {
-            m.remote_fetches.inc();
-        }
-    }
-
     /// Run `f` against the endpoint set's candidates in health order,
     /// failing over past endpoint faults; `Io` only when every candidate
-    /// failed.
+    /// failed. The non-hedged walk — control-plane operations (put,
+    /// delete, list) where racing duplicates would be unsafe or useless.
     fn with_endpoints<T>(
         &self,
         mut f: impl FnMut(&str) -> Result<T, Attempt>,
@@ -117,7 +357,9 @@ impl RemoteBackend {
                     m.remote_failovers.inc();
                 }
             }
-            self.count_fetch();
+            if let Some(m) = &self.metrics {
+                m.remote_fetches.inc();
+            }
             match f(&addr) {
                 Ok(v) => {
                     self.endpoints.note_ok(&addr);
@@ -139,6 +381,9 @@ impl RemoteBackend {
     /// 1-byte ranged probe: learns (total length, stored CRC-32 sidecar,
     /// write generation) — the CRC rides `x-getbatch-crc32`, the version
     /// `x-getbatch-version`; either may be absent (version-less server).
+    /// Probes ride the hedged walk like byte reads do: they are on the
+    /// per-entry hot path (every open probes first), and a straggling
+    /// probe delays a batch exactly like a straggling read.
     ///
     /// Zero-length objects: a 0-byte object cannot satisfy `bytes=0-0`, so
     /// a strict server answers **416** with `content-range: bytes */0` (the
@@ -146,8 +391,11 @@ impl RemoteBackend {
     /// the total). Either shape resolves to `size == 0`, not an error.
     fn probe(&self, bucket: &str, obj: &str) -> Result<(u64, Option<u32>, Option<u64>), StoreError> {
         let pq = Self::pq(bucket, obj);
-        self.with_endpoints(|addr| {
-            let resp = self.client.get_range(addr, &pq, 0, 1).map_err(Attempt::Endpoint)?;
+        let client = self.client.clone();
+        let bucket = bucket.to_string();
+        let obj = obj.to_string();
+        let op: Op<(u64, Option<u32>, Option<u64>)> = Arc::new(move |addr: &str| {
+            let resp = client.get_range(addr, &pq, 0, 1).map_err(Attempt::Endpoint)?;
             let crc = resp
                 .header(wire::HDR_OBJ_CRC)
                 .and_then(|h| u32::from_str_radix(h.trim(), 16).ok());
@@ -193,7 +441,8 @@ impl RemoteBackend {
                 )))),
                 s => Err(status_attempt(addr, "probe", s)),
             }
-        })
+        });
+        hedged_walk(&self.client, &self.endpoints, &self.tail, &self.metrics, None, op)
     }
 
     fn open_span(
@@ -208,6 +457,7 @@ impl RemoteBackend {
         let src = RemoteSource {
             client: self.client.clone(),
             endpoints: Arc::clone(&self.endpoints),
+            tail: Arc::clone(&self.tail),
             pq: Self::pq(bucket, obj),
             base,
             len,
@@ -219,6 +469,7 @@ impl RemoteBackend {
             mixed: false,
             seen_version: probed_version,
             unstamped: false,
+            delivered: false,
         };
         Ok(EntryReader::from_source(Box::new(src), len))
     }
@@ -275,7 +526,9 @@ impl Backend for RemoteBackend {
     /// write is issued once, to the first healthy candidate. Endpoint
     /// lists over *independent* replicas are read-only territory: writes
     /// would land on one replica and diverge the others (which the read
-    /// path's failover CRC check would then reject).
+    /// path's failover CRC check would then reject). Writes are never
+    /// hedged — a raced duplicate PUT is a correctness hazard, not a
+    /// latency fix.
     fn put(&self, bucket: &str, obj: &str, data: &[u8]) -> Result<(), StoreError> {
         let pq = Self::pq(bucket, obj);
         self.with_endpoints(|addr| {
@@ -364,32 +617,58 @@ impl Backend for RemoteBackend {
     }
 }
 
+/// A successfully opened ranged stream, as produced by one (possibly
+/// hedged) attempt: the body plus the version stamp the 206 carried.
+struct Opened {
+    body: BodyReader,
+    version: Option<u64>,
+    addr: String,
+}
+
+/// The open stream of a [`RemoteSource`].
+struct Stream {
+    body: BodyReader,
+    /// Entry-relative position of the stream's next byte.
+    at: u64,
+    /// Endpoint serving the stream.
+    addr: String,
+    /// Holds the endpoint's outstanding count for the stream's lifetime —
+    /// what makes least-outstanding selection see long-lived reads.
+    _inflight: Option<Inflight>,
+}
+
 /// Streaming source over one remote entry span: lazily opens a ranged GET
 /// covering `[base+pos, base+len)` and reads sequentially off its chunked
 /// body; a non-sequential `read_at` (seek) drops the stream and re-issues
-/// the range at the new position.
+/// the range at the new position. Opens go through [`hedged_walk`], so a
+/// straggling open is raced against the second-best endpoint.
 ///
 /// Failover: when the endpoint serving the open stream dies mid-body, the
 /// source marks it, drops the stream and **resumes the ranged fetch at the
 /// current offset** on the next candidate from the endpoint set — invisible
-/// to the reader above. A whole-object stream (base 0, full length) that
-/// was read strictly sequentially keeps a running CRC-32; if a mid-stream
-/// failover mixed bytes from more than one endpoint, the final CRC is
-/// checked against the PUT-time sidecar learned at open and a mismatch
-/// fails the read (fail closed — endpoints serving divergent replicas must
-/// not produce a silently corrupt entry).
+/// to the reader above. Two guards keep stitched streams honest:
+///
+/// - **Version pin**: once any byte has been delivered, a re-opened stream
+///   whose `x-getbatch-version` differs from the pinned version fails
+///   closed (`InvalidData`) instead of mixing bytes of two object
+///   versions — this is what makes hedged/failover re-opens safe against
+///   concurrent overwrites.
+/// - **CRC backstop**: a whole-object stream (base 0, full length) read
+///   strictly sequentially keeps a running CRC-32; if a mid-stream
+///   failover mixed bytes from more than one endpoint, the final CRC is
+///   checked against the PUT-time sidecar learned at open (catches
+///   divergent-replica misconfiguration even on version-less servers).
 struct RemoteSource {
     client: HttpClient,
     endpoints: Arc<EndpointSet>,
+    tail: Arc<TailState>,
     pq: String,
     /// Entry span start within the remote object.
     base: u64,
     /// Entry span length.
     len: u64,
     metrics: Option<Arc<GetBatchMetrics>>,
-    /// Open response body + the entry-relative position of its next byte +
-    /// the endpoint serving it.
-    stream: Option<(crate::proto::http::BodyReader, u64, String)>,
+    stream: Option<Stream>,
     /// Whole-object sidecar CRC learned by the open-time probe.
     expected_crc: Option<u32>,
     /// Running CRC while reads stay strictly sequential from byte 0;
@@ -400,7 +679,7 @@ struct RemoteSource {
     /// A mid-stream failover delivered bytes from more than one endpoint.
     mixed: bool,
     /// Latest `x-getbatch-version` observed — seeded by the open-time probe,
-    /// overwritten by every 206 that opens a byte stream. Versions are
+    /// updated by every 206 that opens a byte stream. Versions are
     /// monotonic per object, so "latest stamp == pin" implies every stream
     /// this source consumed was stamped with the pin, and (server-side
     /// open-then-stamp ordering over a stable file handle) every byte it
@@ -411,76 +690,79 @@ struct RemoteSource {
     /// `observed_version` reports `None` and version-gated consumers fall
     /// back to their own probe.
     unstamped: bool,
+    /// Any byte has been delivered to the reader: from here on the version
+    /// pin is enforced on every re-open (before first delivery a version
+    /// change is harmless — no bytes to stitch against).
+    delivered: bool,
 }
 
 impl RemoteSource {
-    /// (Re-)issue the ranged GET at entry-relative `pos`, walking the
-    /// endpoint set's candidates; `exclude` is the endpoint that just
-    /// failed mid-stream (tried again only as a last resort).
+    /// (Re-)issue the ranged GET at entry-relative `pos` through the
+    /// hedged walk; `exclude` is the endpoint that just failed mid-stream
+    /// (tried again only as a last resort).
     fn open_at(&mut self, pos: u64, exclude: Option<&str>) -> io::Result<()> {
         self.stream = None;
-        EndpointSet::maybe_probe(&self.endpoints, &self.client);
-        let mut failed_before = exclude.is_some();
-        let mut last_err: Option<io::Error> = None;
-        for addr in self.endpoints.plan(exclude) {
-            if failed_before {
-                if let Some(m) = &self.metrics {
-                    m.remote_failovers.inc();
-                }
-            }
-            if let Some(m) = &self.metrics {
-                m.remote_fetches.inc();
-            }
-            let resp = match self.client.get_range(&addr, &self.pq, self.base + pos, self.len - pos)
-            {
-                Ok(r) => r,
-                Err(e) => {
-                    self.endpoints.note_err(&addr);
-                    last_err = Some(e);
-                    failed_before = true;
-                    continue;
-                }
-            };
+        let client = self.client.clone();
+        let pq = self.pq.clone();
+        let start = self.base + pos;
+        let want = self.len - pos;
+        let op: Op<Opened> = Arc::new(move |addr: &str| {
+            let resp = client.get_range(addr, &pq, start, want).map_err(Attempt::Endpoint)?;
             match resp.status {
                 206 => {
-                    self.endpoints.note_ok(&addr);
-                    match resp
+                    let version = resp
                         .header(wire::HDR_OBJ_VERSION)
-                        .and_then(|h| h.trim().parse::<u64>().ok())
-                    {
-                        Some(v) => self.seen_version = Some(v),
-                        None => self.unstamped = true,
-                    }
-                    self.stream = Some((resp.body, pos, addr));
-                    return Ok(());
+                        .and_then(|h| h.trim().parse::<u64>().ok());
+                    Ok(Opened { body: resp.body, version, addr: addr.to_string() })
                 }
-                404 => {
-                    // A live endpoint says the object is gone: definitive.
-                    self.endpoints.note_ok(&addr);
-                    return Err(io::Error::new(
-                        io::ErrorKind::NotFound,
-                        format!("remote {addr}: object vanished mid-read"),
-                    ));
-                }
+                // A live endpoint says the object is gone: definitive.
+                404 => Err(Attempt::Fatal(StoreError::Io(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    format!("remote {addr}: object vanished mid-read"),
+                )))),
                 // Same classification as the non-stream paths: only
                 // endpoint faults (5xx/429) burn the circuit and fail
                 // over; a definitive per-object answer (e.g. 416 after
                 // the object shrank under a resumed range) must not
                 // poison every endpoint in the set.
-                s => match status_attempt(&addr, "read", s) {
-                    Attempt::Endpoint(e) => {
-                        self.endpoints.note_err(&addr);
-                        last_err = Some(e);
-                        failed_before = true;
-                    }
-                    Attempt::Fatal(se) => {
-                        self.endpoints.note_ok(&addr);
-                        return Err(se.into());
-                    }
-                },
+                s => Err(status_attempt(addr, "read", s)),
+            }
+        });
+        let opened =
+            hedged_walk(&self.client, &self.endpoints, &self.tail, &self.metrics, exclude, op)
+                .map_err(io::Error::from)?;
+        self.admit(opened, pos)
+    }
+
+    /// Gate a freshly opened stream behind the version pin, then install
+    /// it. Fail-closed rule: once bytes have been delivered, a stream
+    /// stamped with a *different* version must not contribute — a
+    /// concurrent overwrite raced the re-open (hedge or failover), and
+    /// stitching the two versions would fabricate an object that never
+    /// existed.
+    fn admit(&mut self, opened: Opened, pos: u64) -> io::Result<()> {
+        if self.delivered {
+            if let (Some(pin), Some(v)) = (self.seen_version, opened.version) {
+                if v != pin {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!(
+                            "object version changed mid-read (v{pin} -> v{v}) for {}: \
+                             refusing to stitch bytes across versions",
+                            self.pq
+                        ),
+                    ));
+                }
             }
         }
-        Err(all_down(self.endpoints.len(), last_err))
+        match opened.version {
+            Some(v) => self.seen_version = Some(v),
+            None => self.unstamped = true,
+        }
+        let inflight = self.endpoints.track(&opened.addr);
+        self.stream =
+            Some(Stream { body: opened.body, at: pos, addr: opened.addr, _inflight: inflight });
+        Ok(())
     }
 
     /// Fold successfully delivered bytes into the sequential-stream CRC and
@@ -531,12 +813,12 @@ impl ChunkSource for RemoteSource {
         // resuming this read (open_at itself walks all candidates per shot).
         let mut resumes = 0usize;
         loop {
-            if self.stream.as_ref().map(|(_, at, _)| *at) != Some(pos) {
+            if self.stream.as_ref().map(|s| s.at) != Some(pos) {
                 self.open_at(pos, None)?;
             }
             let r = {
-                let (body, _, _) = self.stream.as_mut().expect("stream just ensured");
-                body.read(buf)
+                let s = self.stream.as_mut().expect("stream just ensured");
+                s.body.read(buf)
             };
             match r {
                 Ok(0) => {
@@ -547,18 +829,19 @@ impl ChunkSource for RemoteSource {
                     return Ok(0);
                 }
                 Ok(n) => {
-                    let (_, at, _) = self.stream.as_mut().expect("stream open");
-                    *at += n as u64;
+                    let s = self.stream.as_mut().expect("stream open");
+                    s.at += n as u64;
                     if let Some(m) = &self.metrics {
                         m.remote_fetch_bytes.add(n as u64);
                     }
+                    self.delivered = true;
                     self.digest(pos, &buf[..n])?;
                     return Ok(n);
                 }
                 Err(e) => {
                     // The serving endpoint died mid-body: mark it, then
                     // resume the range at the current offset elsewhere.
-                    let failed = self.stream.take().map(|(_, _, a)| a);
+                    let failed = self.stream.take().map(|s| s.addr);
                     if let Some(a) = &failed {
                         self.endpoints.note_err(a);
                     }
@@ -626,5 +909,23 @@ mod tests {
         assert!(matches!(dead.size("b", "o"), Err(StoreError::Io(_))));
         assert!(matches!(dead.list("b"), Err(StoreError::Io(_))));
         assert!(!dead.exists("b", "o"));
+    }
+
+    #[test]
+    fn hedge_slot_cap_is_enforced_and_released() {
+        let tail = Arc::new(TailState {
+            cfg: TailConfig { hedge_max_inflight: 2, ..TailConfig::default() },
+            hedges_inflight: AtomicUsize::new(0),
+        });
+        let a = tail.acquire().expect("slot 1");
+        let _b = tail.acquire().expect("slot 2");
+        assert!(tail.acquire().is_none(), "cap reached");
+        drop(a);
+        assert!(tail.acquire().is_some(), "drop released the slot");
+        let off = Arc::new(TailState {
+            cfg: TailConfig::disabled(),
+            hedges_inflight: AtomicUsize::new(0),
+        });
+        assert!(off.acquire().is_none(), "disabled policy has zero slots");
     }
 }

@@ -1,0 +1,287 @@
+//! The tail-latency scenario family: hedged reads against a straggling
+//! endpoint — byte-identity of hedged batches plus the hedge counters
+//! moving, the headline P99 cut with hedging on vs off under identical
+//! load, and the version pin failing a read closed when an overwrite races
+//! a hedge/failover re-open.
+
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::client::sdk::Client;
+use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::proto::http::{
+    range_unsatisfiable, resolve_range, serve_ranged_bytes_after, Handler, HttpServer, RangeSpec,
+    Request, Response,
+};
+use getbatch::proto::wire;
+use getbatch::store::{Backend, RemoteBackend};
+use getbatch::util::crc32;
+use getbatch::util::rng::Rng;
+
+fn payload(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut buf = vec![0u8; n];
+    rng.fill_bytes(&mut buf);
+    buf
+}
+
+/// A controllable storage endpoint over an in-memory object map (keys
+/// `bucket/obj`):
+/// - `delay` is injected before serving any object request (the straggler
+///   knob — settable mid-test, `/v1/health` stays instant);
+/// - `version` stamps every object response with `x-getbatch-version`
+///   (models one fixed write generation per stub);
+/// - `die_after` makes ranged GETs deliver that many bytes then abort the
+///   connection mid-stream (endpoint death mid-read).
+struct StubEndpoint {
+    addr: String,
+    delay: Arc<Mutex<Duration>>,
+    _srv: HttpServer,
+}
+
+fn stub_endpoint(
+    objects: HashMap<String, Vec<u8>>,
+    version: Option<u64>,
+    die_after: Option<usize>,
+) -> StubEndpoint {
+    let objects = Arc::new(objects);
+    let delay = Arc::new(Mutex::new(Duration::ZERO));
+    let delay2 = Arc::clone(&delay);
+    let handler: Handler = Arc::new(move |req: Request| {
+        if req.path == wire::paths::HEALTH {
+            return Response::ok(b"ok".to_vec());
+        }
+        let (bucket, obj) = match wire::parse_object_path(&req.path) {
+            Some(x) => x,
+            None => return Response::status(404),
+        };
+        if req.method != "GET" {
+            return Response::status(400);
+        }
+        let data = match objects.get(&format!("{bucket}/{obj}")) {
+            Some(d) => d.clone(),
+            None => return Response::status(404),
+        };
+        let crc = crc32::hash(&data);
+        let pause = *delay2.lock().unwrap();
+        let resp = match die_after {
+            None => serve_ranged_bytes_after(pause, &req, &data),
+            Some(k) => {
+                let len = data.len() as u64;
+                match resolve_range(req.header("range"), len) {
+                    RangeSpec::Slice { start, end } if (end - start) as usize > k => {
+                        let partial = data[start as usize..start as usize + k].to_vec();
+                        Response::stream(move |w| {
+                            w.write_all(&partial)?;
+                            w.flush()?;
+                            Err(io::Error::new(io::ErrorKind::Other, "injected endpoint death"))
+                        })
+                        .into_partial(start, end, len)
+                    }
+                    RangeSpec::Slice { start, end } => {
+                        Response::ok(data[start as usize..end as usize].to_vec())
+                            .into_partial(start, end, len)
+                    }
+                    RangeSpec::Whole => Response::ok(data),
+                    RangeSpec::Unsatisfiable => range_unsatisfiable(len),
+                }
+            }
+        };
+        let resp = resp.with_header(wire::HDR_OBJ_CRC, &format!("{crc:08x}"));
+        match version {
+            Some(v) => resp.with_header(wire::HDR_OBJ_VERSION, &v.to_string()),
+            None => resp,
+        }
+    });
+    let srv = HttpServer::serve(handler, 8, "stub-ep").unwrap();
+    StubEndpoint { addr: srv.addr.to_string(), delay, _srv: srv }
+}
+
+fn stage(n: usize, bytes: usize, seed: u64) -> (HashMap<String, Vec<u8>>, Vec<(String, Vec<u8>)>) {
+    let mut objects = HashMap::new();
+    let mut staged = Vec::new();
+    for i in 0..n {
+        let name = format!("obj-{i:03}");
+        let data = payload(bytes, seed + i as u64);
+        objects.insert(format!("rb/{name}"), data.clone());
+        staged.push((name, data));
+    }
+    (objects, staged)
+}
+
+#[test]
+fn hedged_getbatch_is_byte_identical_and_the_backup_wins() {
+    // One endpoint straggles (120 ms to first byte), the other is instant.
+    // The straggler is listed FIRST so the cold round-robin pick lands on
+    // it; with a 5 ms hedge floor every such read must be raced to the
+    // fast endpoint, win there, and stay byte-identical.
+    let (objects, staged) = stage(6, 40 << 10, 700);
+    let slow = stub_endpoint(objects.clone(), Some(1), None);
+    *slow.delay.lock().unwrap() = Duration::from_millis(120);
+    let fast = stub_endpoint(objects, Some(1), None);
+
+    let c = getbatch::Cluster::start(ClusterConfig {
+        targets: 1,
+        http_workers: 4,
+        getbatch: GetBatchConfig {
+            chunk_bytes: 16 << 10,
+            dt_buffer_bytes: 64 << 10,
+            hedge_min: Duration::from_millis(5),
+            // No slow-trial noise in this test: the probe window is huge.
+            endpoint_probe: Duration::from_secs(60),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    c.route_remote_bucket("rb", &[&slow.addr, &fast.addr], false);
+    let client = Client::new(&c.proxy_addr());
+    let entries: Vec<BatchEntry> = staged.iter().map(|(n, _)| BatchEntry::obj("rb", n)).collect();
+
+    let items = client.get_batch_collect(&BatchRequest::new(entries)).unwrap();
+    for (item, (name, data)) in items.iter().zip(&staged) {
+        assert!(!item.is_missing(), "{name} must not degrade to a placeholder");
+        assert_eq!(item.data().unwrap(), &data[..], "{name} byte-identical under hedging");
+    }
+    let hedges: u64 = c.targets.iter().map(|t| t.metrics.hedges.get()).sum();
+    assert!(hedges > 0, "straggling reads launched hedges");
+    let wins: u64 = c.targets.iter().map(|t| t.metrics.hedge_wins.get()).sum();
+    assert!(wins > 0, "the fast endpoint won races");
+    let hard: u64 = c.targets.iter().map(|t| t.metrics.hard_failures.get()).sum();
+    assert_eq!(hard, 0, "no aborted requests");
+
+    // The losing primaries eventually answer (120 ms later); their usable
+    // responses are dropped and counted as canceled.
+    let mut canceled = 0;
+    for _ in 0..100 {
+        canceled = c.targets.iter().map(|t| t.metrics.hedges_canceled.get()).sum();
+        if canceled > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(canceled > 0, "losing primaries counted as canceled hedges");
+}
+
+/// One load run for the P99 comparison: 4 reader threads x 50 single-entry
+/// batches against a [slow, fast] endpoint pair, returning every read's
+/// client-observed duration plus the run's hedge counter.
+fn tail_run(hedge_quantile: f64) -> (Vec<Duration>, u64) {
+    let (objects, staged) = stage(8, 8 << 10, 1300);
+    let slow = stub_endpoint(objects.clone(), Some(1), None);
+    *slow.delay.lock().unwrap() = Duration::from_millis(150);
+    let fast = stub_endpoint(objects, Some(1), None);
+
+    let c = getbatch::Cluster::start(ClusterConfig {
+        targets: 1,
+        http_workers: 8,
+        getbatch: GetBatchConfig {
+            chunk_bytes: 16 << 10,
+            dt_buffer_bytes: 64 << 10,
+            // Past 50 ms EWMA the straggler is deprioritized (not opened);
+            // it keeps getting one re-trial per 100 ms window.
+            endpoint_slow: Duration::from_millis(50),
+            endpoint_probe: Duration::from_millis(100),
+            hedge_quantile,
+            hedge_min: Duration::from_millis(25),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    c.route_remote_bucket("rb", &[&slow.addr, &fast.addr], false);
+
+    let staged = Arc::new(staged);
+    let mut durations: Vec<Duration> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let staged = Arc::clone(&staged);
+            let proxy = c.proxy_addr();
+            handles.push(s.spawn(move || {
+                let client = Client::new(&proxy);
+                let mut took = Vec::new();
+                for i in 0..50usize {
+                    let (name, data) = &staged[(t * 50 + i) % staged.len()];
+                    let req = BatchRequest::new(vec![BatchEntry::obj("rb", name)]);
+                    let t0 = Instant::now();
+                    let items = client.get_batch_collect(&req).unwrap();
+                    took.push(t0.elapsed());
+                    assert_eq!(items[0].data().unwrap(), &data[..], "{name} byte-identical");
+                }
+                took
+            }));
+        }
+        for h in handles {
+            durations.extend(h.join().unwrap());
+        }
+    });
+    let hedges: u64 = c.targets.iter().map(|t| t.metrics.hedges.get()).sum();
+    (durations, hedges)
+}
+
+fn p99(mut v: Vec<Duration>) -> Duration {
+    v.sort();
+    v[(v.len() * 99) / 100]
+}
+
+#[test]
+fn hedging_cuts_the_read_p99_under_a_straggling_endpoint() {
+    // Identical load twice: hedging off (quantile 0.0), then on (0.95).
+    // Unhedged, every pick of the straggler costs its full 150 ms delay,
+    // so the P99 sits at the straggler's latency; hedged, those reads are
+    // raced to the fast endpoint after the 25 ms floor and the P99 must
+    // come down strictly.
+    let (unhedged, hedges_off) = tail_run(0.0);
+    let (hedged, hedges_on) = tail_run(0.95);
+    assert_eq!(hedges_off, 0, "quantile 0.0 disables hedging outright");
+    assert!(hedges_on > 0, "the straggler forced hedges");
+
+    let (p_off, p_on) = (p99(unhedged), p99(hedged));
+    assert!(
+        p_off >= Duration::from_millis(100),
+        "unhedged P99 must feel the 150 ms straggler, got {p_off:?}"
+    );
+    assert!(p_on < p_off, "hedging must cut the P99: hedged {p_on:?} vs unhedged {p_off:?}");
+}
+
+#[test]
+fn version_change_across_a_reopen_fails_closed() {
+    // Endpoint A serves write generation 1 and dies 4 KiB into every
+    // ranged body; endpoint B serves generation 2 with different bytes
+    // (an overwrite landed on the store between A's stream and the
+    // hedge/failover re-open). A read that started on A must surface the
+    // version pin's InvalidData — never v1-prefix + v2-suffix bytes.
+    let v1 = payload(64 << 10, 1);
+    let v2 = payload(64 << 10, 2);
+    let mut a_objects = HashMap::new();
+    a_objects.insert("b/o".to_string(), v1);
+    let mut b_objects = HashMap::new();
+    b_objects.insert("b/o".to_string(), v2.clone());
+    let a = stub_endpoint(a_objects, Some(1), Some(4 << 10));
+    let b = stub_endpoint(b_objects, Some(2), None);
+
+    let remote = RemoteBackend::multi(&[&a.addr, &b.addr], 10, Duration::from_millis(100), None);
+    let mut saw_pin = false;
+    for _ in 0..8 {
+        let _ = remote.size("b", "o").unwrap(); // parity shift onto A
+        match remote.open_entry("b", "o").unwrap().read_all() {
+            // Stream served wholly by B: fine, and only generation 2.
+            Ok(got) => assert_eq!(got, v2, "a clean stream must be pure v2"),
+            // Stream started on A, re-opened on B: must fail closed.
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("refusing to stitch bytes across versions"),
+                    "unexpected error: {msg}"
+                );
+                saw_pin = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_pin, "a stitched read must trip the version pin");
+}
