@@ -6,8 +6,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use getbatch::batch::request::{BatchEntry, BatchRequest};
+use getbatch::client::loader::{AccessMode, DataLoader, Manifest, SampleRef};
+use getbatch::client::prefetch::PrefetchPlanner;
 use getbatch::client::sdk::Client;
 use getbatch::config::GetBatchConfig;
+use getbatch::proto::http::HttpClient;
 use getbatch::dt::order::OrderBuffer;
 use getbatch::proto::frame::{chunk_frames, encode_into, read_frame, Frame};
 use getbatch::store::{Backend, CachedBackend, ChunkCache, LocalBackend, RemoteBackend, TailConfig};
@@ -246,5 +249,76 @@ fn main() {
     bench("store: 1MiB read, degraded endpoint, hedge ON", 50 * scale, || {
         assert_eq!(hedged.open_entry("rb", "o").unwrap().read_all().unwrap().len(), 1 << 20);
     });
+
+    // Epoch pipeline (the epoch-aware loading engine): one full
+    // deterministic epoch — begin_epoch + next_epoch_batch, GetBatch mode —
+    // over a remote-backed bucket, three ways. OFF-cold pays every remote
+    // fill inline on the demand path; OFF-warm is the cache-resident floor;
+    // ON-cold overlaps batch N+1's fills with batch N's streaming. The two
+    // cold scenarios invalidate the dataset through the gateway before each
+    // epoch (both pay that identically, so the OFF/ON delta prices the
+    // prefetch pipeline itself).
+    let epoch_storage = fixtures::cluster(1);
+    let mut manifest = Manifest::default();
+    for i in 0..16usize {
+        let name = format!("s-{i:03}");
+        epoch_storage.put_direct("ds", &name, &vec![i as u8; 64 << 10]).unwrap();
+        manifest.samples.push(SampleRef {
+            bucket: "ds".into(),
+            shard: None,
+            name,
+            size: 64 << 10,
+        });
+    }
+    let epoch_serving = fixtures::cluster_cfg(
+        2,
+        GetBatchConfig {
+            cache_bytes: 32 << 20,
+            readahead_chunks: 2,
+            prefetch_batches: 2,
+            ..Default::default()
+        },
+    );
+    epoch_serving.route_remote_bucket("ds", &[&epoch_storage.proxy_addr()], true);
+    let http = HttpClient::new(true);
+    let invalidate_all = || {
+        for s in &manifest.samples {
+            http.request(
+                "POST",
+                &epoch_serving.proxy_addr(),
+                &format!("/v1/invalidate?bucket=ds&obj={}", s.name),
+                &[],
+            )
+            .unwrap();
+        }
+    };
+    let eclient = Client::new(&epoch_serving.proxy_addr());
+    let mut edl = DataLoader::new(eclient.clone(), manifest.clone(), AccessMode::GetBatch, 4, 7);
+    bench("epoch: 16-obj remote epoch, prefetch OFF cold", 10 * scale, || {
+        invalidate_all();
+        edl.begin_epoch(0);
+        while edl.next_epoch_batch().unwrap().is_some() {}
+    });
+    bench("epoch: 16-obj remote epoch, prefetch OFF warm", 20 * scale, || {
+        edl.begin_epoch(0);
+        while edl.next_epoch_batch().unwrap().is_some() {}
+    });
+    let planner = PrefetchPlanner::new(eclient.clone(), 2, 4);
+    let mut pdl = DataLoader::new(eclient, manifest.clone(), AccessMode::GetBatch, 4, 7);
+    pdl.attach_prefetch(Arc::clone(&planner));
+    bench("epoch: 16-obj remote epoch, prefetch ON cold", 10 * scale, || {
+        invalidate_all();
+        pdl.begin_epoch(0);
+        while pdl.next_epoch_batch().unwrap().is_some() {}
+        // Drain the background fills so no iteration inherits warmth the
+        // previous one paid for.
+        planner.wait_idle(Duration::from_secs(10));
+    });
+    println!(
+        "epoch scenario: prefetch issued {} / failed {}",
+        planner.issued.get(),
+        planner.failed.get()
+    );
+
     let _ = std::fs::remove_dir_all(&tier_dir);
 }

@@ -11,12 +11,15 @@
 //! Sampling (shuffling, size-bucketing, batch formation) stays client-side;
 //! only the data access path differs — exactly the separation §2.5 draws.
 
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::batch::request::{BatchEntry, BatchRequest};
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
 use crate::util::threadpool::scoped_map;
 
+use super::prefetch::PrefetchPlanner;
 use super::sdk::{Client, ClientError};
 
 /// One sample's storage coordinates.
@@ -109,6 +112,41 @@ impl AccessMode {
     }
 }
 
+/// Deterministic epoch-wide shuffle plan — the epoch pipeline's determinism
+/// contract. Same `(seed, epoch, n_samples, batch_size)` ⇒ the identical
+/// batch sequence on every client, with no coordination: distributed loader
+/// workers agree on the global order by construction, and the prefetch
+/// planner can *predict* the future access sequence instead of guessing.
+///
+/// The permutation is a seeded Fisher–Yates over `0..n_samples`, keyed by
+/// `mix64(seed ^ mix64(epoch + 1))` so consecutive epochs draw independent
+/// permutations from one training seed.
+#[derive(Debug, Clone)]
+pub struct EpochPlan {
+    batches: Vec<Vec<usize>>,
+    pub seed: u64,
+    pub epoch: u64,
+}
+
+impl EpochPlan {
+    pub fn new(n_samples: usize, batch_size: usize, seed: u64, epoch: u64) -> EpochPlan {
+        let mut order: Vec<usize> = (0..n_samples).collect();
+        let mut rng = Rng::new(mix64(seed ^ mix64(epoch.wrapping_add(1))));
+        rng.shuffle(&mut order);
+        let batches = order.chunks(batch_size.max(1)).map(|c| c.to_vec()).collect();
+        EpochPlan { batches, seed, epoch }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Manifest indices of batch `i`, in serving order.
+    pub fn batch(&self, i: usize) -> Option<&[usize]> {
+        self.batches.get(i).map(|b| b.as_slice())
+    }
+}
+
 /// Size-stratified sampler ("dynamic bucketing" à la Lhotse): manifest
 /// indices are grouped into `n_buckets` by sample size; each batch draws
 /// from a single bucket so padded batches stay dense.
@@ -159,6 +197,14 @@ pub struct DataLoader {
     seq_shard_order: Vec<(String, String)>,
     seq_next_shard: usize,
     rng: Rng,
+    // Epoch-pipeline state: the active deterministic plan, the demand
+    // cursor, and the prefetch watermark (first batch index not yet handed
+    // to the planner — guarantees each future batch is scheduled once).
+    seed: u64,
+    epoch_plan: Option<EpochPlan>,
+    epoch_cursor: usize,
+    pf_next: usize,
+    prefetch: Option<Arc<PrefetchPlanner>>,
 }
 
 impl DataLoader {
@@ -180,7 +226,180 @@ impl DataLoader {
             seq_shard_order,
             seq_next_shard: 0,
             rng,
+            seed,
+            epoch_plan: None,
+            epoch_cursor: 0,
+            pf_next: 0,
+            prefetch: None,
         }
+    }
+
+    /// Attach a prefetch planner: while batch N of an epoch streams, the
+    /// planner warms the objects of batches N+1..N+`horizon` into the
+    /// cluster's cache tier (`horizon` = sanitized `prefetch_batches`).
+    pub fn attach_prefetch(&mut self, planner: Arc<PrefetchPlanner>) {
+        self.prefetch = Some(planner);
+    }
+
+    /// Install the deterministic plan for `epoch` and rewind the cursor.
+    /// Every loader sharing `(manifest, batch_size, seed)` that calls this
+    /// with the same `epoch` will serve byte-identical batch sequences.
+    pub fn begin_epoch(&mut self, epoch: u64) {
+        self.epoch_plan =
+            Some(EpochPlan::new(self.manifest.len(), self.batch_size, self.seed, epoch));
+        self.epoch_cursor = 0;
+        self.pf_next = 1; // batch 0 is always demand-fetched
+        if let Some(p) = &self.prefetch {
+            p.reset();
+        }
+    }
+
+    pub fn epoch_plan(&self) -> Option<&EpochPlan> {
+        self.epoch_plan.as_ref()
+    }
+
+    fn refs_of_batch(&self, i: usize) -> Vec<SampleRef> {
+        self.epoch_plan
+            .as_ref()
+            .and_then(|p| p.batch(i))
+            .map(|idxs| idxs.iter().map(|&s| self.manifest.samples[s].clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Serve the next batch of the active epoch (`begin_epoch` first);
+    /// `Ok(None)` once the epoch is exhausted. Order of operations is the
+    /// planner's pipeline: mark the current batch demand-in-flight, hand
+    /// the *future* window to the prefetch workers, then fetch — so the
+    /// cache warms for batch N+1 while batch N streams.
+    pub fn next_epoch_batch(&mut self) -> Result<Option<(Vec<Sample>, BatchTiming)>, ClientError> {
+        let n_batches = match &self.epoch_plan {
+            Some(p) => p.n_batches(),
+            None => return Ok(None),
+        };
+        if self.epoch_cursor >= n_batches {
+            return Ok(None);
+        }
+        let cur = self.epoch_cursor;
+        let refs = self.refs_of_batch(cur);
+        if let Some(planner) = self.prefetch.clone() {
+            planner.mark_demand(&refs);
+            let last = (cur + planner.horizon()).min(n_batches.saturating_sub(1));
+            let start = self.pf_next.max(cur + 1);
+            for i in start..=last {
+                let future = self.refs_of_batch(i);
+                planner.schedule(&future);
+            }
+            self.pf_next = self.pf_next.max(last + 1);
+        }
+        let result = self.fetch_refs(&refs);
+        if let Some(planner) = &self.prefetch {
+            planner.unmark_demand(&refs);
+        }
+        self.epoch_cursor += 1;
+        result.map(Some)
+    }
+
+    /// Fetch exactly `refs` (plan order) via the loader's access mode.
+    /// Output names are normalized to the manifest's sample names so the
+    /// served byte sequence is mode-independent — the determinism contract
+    /// holds across Sequential, RandomGet, and GetBatch.
+    fn fetch_refs(&self, refs: &[SampleRef]) -> Result<(Vec<Sample>, BatchTiming), ClientError> {
+        match self.mode {
+            AccessMode::Sequential => self.fetch_refs_sequential(refs),
+            AccessMode::RandomGet => self.fetch_refs_random(refs),
+            AccessMode::GetBatch => self.fetch_refs_getbatch(refs),
+        }
+    }
+
+    fn fetch_refs_random(&self, refs: &[SampleRef]) -> Result<(Vec<Sample>, BatchTiming), ClientError> {
+        let t0 = Instant::now();
+        let client = &self.client;
+        let results: Vec<Result<(Sample, Duration), ClientError>> =
+            scoped_map(refs, self.get_concurrency, |_, r| {
+                let t = Instant::now();
+                let data = match &r.shard {
+                    Some(sh) => client.get_member(&r.bucket, sh, &r.name)?,
+                    None => client.get(&r.bucket, &r.name)?,
+                };
+                Ok((Sample { name: r.name.clone(), data }, t.elapsed()))
+            });
+        let batch = t0.elapsed();
+        let mut samples = Vec::with_capacity(refs.len());
+        let mut per_object = Vec::with_capacity(refs.len());
+        for r in results {
+            let (s, d) = r?;
+            samples.push(s);
+            per_object.push(d);
+        }
+        Ok((samples, BatchTiming { batch, per_object }))
+    }
+
+    fn fetch_refs_getbatch(&self, refs: &[SampleRef]) -> Result<(Vec<Sample>, BatchTiming), ClientError> {
+        let entries: Vec<BatchEntry> = refs.iter().map(|r| r.to_entry()).collect();
+        let req = BatchRequest::new(entries).continue_on_err(self.coer).colocation(self.coloc);
+        let t0 = Instant::now();
+        let items = self.client.get_batch_collect(&req)?;
+        let batch = t0.elapsed();
+        // Delivery is ordered (§2.3.1): item i is refs[i]. Rename from the
+        // wire's "shard/member" output names to the manifest names.
+        let mut samples = Vec::with_capacity(refs.len());
+        for (r, it) in refs.iter().zip(items) {
+            match it {
+                crate::batch::reader::BatchItem::Ok { data, .. } => {
+                    samples.push(Sample { name: r.name.clone(), data })
+                }
+                crate::batch::reader::BatchItem::Missing { name } => {
+                    return Err(ClientError::Status {
+                        status: 404,
+                        msg: format!("missing in batch: {name}"),
+                    })
+                }
+            }
+        }
+        let k = samples.len();
+        let per = if k > 0 { batch / k as u32 } else { batch };
+        Ok((samples, BatchTiming { batch, per_object: vec![per; k] }))
+    }
+
+    fn fetch_refs_sequential(&self, refs: &[SampleRef]) -> Result<(Vec<Sample>, BatchTiming), ClientError> {
+        let t0 = Instant::now();
+        // Sequential I/O's unit of transfer is the shard: one whole-shard
+        // GET per distinct shard of the batch, member extraction client-side.
+        let mut shard_members: HashMap<(String, String), HashMap<String, Vec<u8>>> =
+            HashMap::new();
+        for r in refs {
+            if let Some(sh) = &r.shard {
+                let key = (r.bucket.clone(), sh.clone());
+                if !shard_members.contains_key(&key) {
+                    let bytes = self.client.get(&r.bucket, sh)?;
+                    let members = crate::tar::read_archive(&bytes)
+                        .map_err(ClientError::Tar)?
+                        .into_iter()
+                        .map(|e| (e.name, e.data))
+                        .collect();
+                    shard_members.insert(key, members);
+                }
+            }
+        }
+        let mut samples = Vec::with_capacity(refs.len());
+        for r in refs {
+            let data = match &r.shard {
+                Some(sh) => shard_members
+                    .get(&(r.bucket.clone(), sh.clone()))
+                    .and_then(|m| m.get(&r.name))
+                    .cloned()
+                    .ok_or_else(|| ClientError::Status {
+                        status: 404,
+                        msg: format!("member {} not in shard {sh}", r.name),
+                    })?,
+                None => self.client.get(&r.bucket, &r.name)?,
+            };
+            samples.push(Sample { name: r.name.clone(), data });
+        }
+        let batch = t0.elapsed();
+        let k = samples.len();
+        let per = if k > 0 { batch / k as u32 } else { batch };
+        Ok((samples, BatchTiming { batch, per_object: vec![per; k] }))
     }
 
     /// Load the next batch, returning samples + timing.
@@ -394,5 +613,57 @@ mod tests {
         let m = stage(&c, 5, 4);
         assert_eq!(m.shards().len(), 5);
         assert_eq!(m.len(), 20);
+    }
+
+    #[test]
+    fn epoch_plan_is_a_permutation() {
+        let p = EpochPlan::new(103, 8, 9, 4);
+        assert_eq!(p.n_batches(), 13);
+        let mut seen: Vec<usize> =
+            (0..p.n_batches()).flat_map(|i| p.batch(i).unwrap().to_vec()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..103).collect::<Vec<_>>(), "every sample exactly once");
+        // Same inputs ⇒ the identical plan, independent of construction site.
+        let q = EpochPlan::new(103, 8, 9, 4);
+        for i in 0..p.n_batches() {
+            assert_eq!(p.batch(i), q.batch(i));
+        }
+        assert!(p.batch(13).is_none());
+    }
+
+    /// Satellite: the determinism regression. Two loaders with the same
+    /// seed produce byte-identical epoch batch sequences in **all three**
+    /// access modes; a different seed produces a different permutation.
+    #[test]
+    fn epoch_sequence_deterministic_across_modes_and_loaders() {
+        let c = cluster();
+        let manifest = stage(&c, 4, 8); // 32 samples, batch 5 ⇒ 7 batches
+        let mut canonical: Option<Vec<Vec<(String, Vec<u8>)>>> = None;
+        for mode in [AccessMode::Sequential, AccessMode::RandomGet, AccessMode::GetBatch] {
+            for run in 0..2 {
+                let cl = Client::new(&c.proxy_addr());
+                let mut dl = DataLoader::new(cl, manifest.clone(), mode, 5, 1234);
+                dl.begin_epoch(0);
+                let mut seq = Vec::new();
+                while let Some((samples, timing)) = dl.next_epoch_batch().unwrap() {
+                    assert_eq!(timing.per_object.len(), samples.len());
+                    seq.push(
+                        samples.into_iter().map(|s| (s.name, s.data)).collect::<Vec<_>>(),
+                    );
+                }
+                assert_eq!(seq.len(), 7, "{mode:?} run {run}");
+                match &canonical {
+                    None => canonical = Some(seq),
+                    Some(c0) => assert_eq!(&seq, c0, "{mode:?} run {run} diverges"),
+                }
+            }
+        }
+        // Different seed (or epoch) ⇒ different permutation.
+        let flat = |p: &EpochPlan| {
+            (0..p.n_batches()).flat_map(|i| p.batch(i).unwrap().to_vec()).collect::<Vec<_>>()
+        };
+        let base = EpochPlan::new(32, 5, 1234, 0);
+        assert_ne!(flat(&base), flat(&EpochPlan::new(32, 5, 4321, 0)), "seed");
+        assert_ne!(flat(&base), flat(&EpochPlan::new(32, 5, 1234, 1)), "epoch");
     }
 }

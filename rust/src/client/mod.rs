@@ -4,6 +4,8 @@
 
 pub mod sdk;
 pub mod loader;
+pub mod prefetch;
 
 pub use sdk::Client;
-pub use loader::{AccessMode, DataLoader, Manifest, Sample};
+pub use loader::{AccessMode, DataLoader, EpochPlan, Manifest, Sample};
+pub use prefetch::PrefetchPlanner;

@@ -1,0 +1,222 @@
+//! The epoch batch planner's prefetch engine: background workers that warm
+//! future batches' objects into the cluster's cache tier while the current
+//! batch streams to the trainer (the compute/IO-overlap win the WPI
+//! cloud-storage study quantifies).
+//!
+//! The planner is deliberately dumb about *what* to prefetch — the
+//! deterministic [`EpochPlan`](super::loader::EpochPlan) already knows the
+//! future access sequence, so the loader hands it the exact objects of
+//! batches N+1..N+`prefetch_batches`. What the planner owns is *how*:
+//!
+//! - a small worker pool (the `readahead_workers` pattern from the store's
+//!   page-cache warmers) issues `POST /v1/prefetch` calls off the demand
+//!   path, so a slow prefetch can never delay the batch being served;
+//! - object-level dedup: each object is issued at most once per epoch, and
+//!   objects currently held by an in-flight *demand* read are skipped —
+//!   the demand fill is already warming them;
+//! - failures are dropped on the floor (a missed prefetch costs the warm
+//!   hit, never correctness — the demand read just fills cold).
+//!
+//! Memory: prefetched chunks land in the target-side chunk cache and
+//! reserve against `cache_bytes` only (pin-aware admission, see
+//! `store::cache`) — never against `dt_buffer_bytes`.
+
+use std::collections::HashSet;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::threadpool::ThreadPool;
+
+use super::loader::SampleRef;
+use super::sdk::Client;
+
+/// One object's prefetch coordinates: `(bucket, object)`, where the object
+/// is the shard archive for sharded samples (members share the shard's
+/// chunks, so warming the shard warms every member).
+type ObjKey = (String, String);
+
+fn key_of(r: &SampleRef) -> ObjKey {
+    match &r.shard {
+        Some(s) => (r.bucket.clone(), s.clone()),
+        None => (r.bucket.clone(), r.name.clone()),
+    }
+}
+
+#[derive(Default)]
+struct PlannerState {
+    /// Objects already issued this epoch (prefetch is idempotent
+    /// server-side, but re-issuing is pure waste).
+    issued: HashSet<ObjKey>,
+    /// Objects currently held by an in-flight demand read of the loader —
+    /// their demand fill is already warming the cache.
+    demand: HashSet<ObjKey>,
+    /// Prefetch calls handed to the pool and not yet completed.
+    inflight: usize,
+}
+
+/// Background prefetch scheduler, shared between a loader and its worker
+/// pool. Construct once per training job and attach with
+/// [`DataLoader::attach_prefetch`](super::loader::DataLoader::attach_prefetch).
+pub struct PrefetchPlanner {
+    client: Client,
+    /// Batches ahead the loader schedules (`prefetch_batches`, sanitized).
+    horizon: usize,
+    pool: ThreadPool,
+    state: Mutex<PlannerState>,
+    idle: Condvar,
+    /// Prefetch calls issued / calls that failed (observability; the
+    /// cluster-side counters are the source of truth for fills).
+    pub issued: crate::metrics::Counter,
+    pub failed: crate::metrics::Counter,
+}
+
+impl PrefetchPlanner {
+    /// `horizon` = how many future batches to warm (0 disables scheduling
+    /// entirely); `workers` = background call concurrency.
+    pub fn new(client: Client, horizon: usize, workers: usize) -> std::sync::Arc<PrefetchPlanner> {
+        std::sync::Arc::new(PrefetchPlanner {
+            client,
+            horizon,
+            pool: ThreadPool::new(workers.max(1), "prefetch"),
+            state: Mutex::new(PlannerState::default()),
+            idle: Condvar::new(),
+            issued: Default::default(),
+            failed: Default::default(),
+        })
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.horizon
+    }
+
+    /// Forget the epoch's dedup state (call between epochs: the next epoch
+    /// legitimately re-touches the same objects).
+    pub fn reset(&self) {
+        self.state.lock().unwrap().issued.clear();
+    }
+
+    /// Queue prefetch calls for every not-yet-issued, not-in-demand object
+    /// of `refs`. Returns the number of objects actually queued.
+    pub fn schedule(self: &std::sync::Arc<Self>, refs: &[SampleRef]) -> usize {
+        if self.horizon == 0 || refs.is_empty() {
+            return 0;
+        }
+        let mut fresh: Vec<ObjKey> = Vec::new();
+        {
+            let mut st = self.state.lock().unwrap();
+            for r in refs {
+                let k = key_of(r);
+                if st.demand.contains(&k) || !st.issued.insert(k.clone()) {
+                    continue;
+                }
+                fresh.push(k);
+            }
+            st.inflight += fresh.len();
+        }
+        let n = fresh.len();
+        for (bucket, obj) in fresh {
+            let me = std::sync::Arc::clone(self);
+            self.pool.execute(move || {
+                me.issued.inc();
+                if me.client.prefetch(&bucket, &obj, me.horizon).is_err() {
+                    me.failed.inc();
+                }
+                let mut st = me.state.lock().unwrap();
+                st.inflight -= 1;
+                if st.inflight == 0 {
+                    me.idle.notify_all();
+                }
+            });
+        }
+        n
+    }
+
+    /// Mark the current batch's objects as demand-in-flight (the loader
+    /// brackets its fetch with mark/unmark so `schedule` won't duplicate
+    /// work the demand path is doing right now).
+    pub fn mark_demand(&self, refs: &[SampleRef]) {
+        let mut st = self.state.lock().unwrap();
+        for r in refs {
+            st.demand.insert(key_of(r));
+        }
+    }
+
+    pub fn unmark_demand(&self, refs: &[SampleRef]) {
+        let mut st = self.state.lock().unwrap();
+        for r in refs {
+            st.demand.remove(&key_of(r));
+        }
+    }
+
+    /// Prefetch calls queued or running.
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().inflight
+    }
+
+    /// Block until every queued prefetch completed (tests and epoch
+    /// boundaries); `false` on timeout.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        while st.inflight > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (next, res) = self.idle.wait_timeout(st, left).unwrap();
+            st = next;
+            if res.timed_out() && st.inflight > 0 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sref(bucket: &str, shard: Option<&str>, name: &str) -> SampleRef {
+        SampleRef {
+            bucket: bucket.into(),
+            shard: shard.map(|s| s.to_string()),
+            name: name.into(),
+            size: 1,
+        }
+    }
+
+    #[test]
+    fn schedule_dedupes_objects_and_demand() {
+        // No live cluster needed: the planner's dedup decisions happen
+        // before any call is queued, and a failed call (nothing listens on
+        // the address) only bumps `failed`.
+        let p = PrefetchPlanner::new(Client::new("127.0.0.1:1"), 2, 2);
+        let a = sref("b", Some("s-1.tar"), "m-0");
+        let a2 = sref("b", Some("s-1.tar"), "m-1"); // same shard
+        let c = sref("b", None, "obj-1");
+        assert_eq!(p.schedule(&[a.clone(), a2.clone(), c.clone()]), 2, "shard counted once");
+        assert_eq!(p.schedule(&[a2.clone()]), 0, "already issued this epoch");
+        let d = sref("b", None, "obj-2");
+        p.mark_demand(&[d.clone()]);
+        assert_eq!(p.schedule(&[d.clone()]), 0, "demand-in-flight object skipped");
+        p.unmark_demand(&[d.clone()]);
+        assert_eq!(p.schedule(&[d.clone()]), 1);
+        assert!(p.wait_idle(Duration::from_secs(10)), "pool drains");
+        assert_eq!(p.pending(), 0);
+        assert_eq!(p.issued.get(), 3);
+        assert_eq!(p.failed.get(), 3, "no cluster behind the address");
+        // New epoch: the same objects schedule again.
+        p.reset();
+        assert_eq!(p.schedule(&[a]), 1);
+        assert!(p.wait_idle(Duration::from_secs(10)));
+    }
+
+    #[test]
+    fn zero_horizon_schedules_nothing() {
+        let p = PrefetchPlanner::new(Client::new("127.0.0.1:1"), 0, 1);
+        assert_eq!(p.schedule(&[sref("b", None, "o")]), 0);
+        assert_eq!(p.pending(), 0);
+        assert!(p.wait_idle(Duration::from_millis(10)));
+    }
+}

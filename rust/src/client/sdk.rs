@@ -138,6 +138,25 @@ impl Client {
         Ok(self.get_batch(req)?.collect_all()?)
     }
 
+    /// Ask the cluster to warm an object's chunks into the cache tier of
+    /// its HRW owner target ahead of a predicted read (the epoch batch
+    /// planner's transport). `horizon` is observability only — it surfaces
+    /// the planner's configured `prefetch_batches` on the serving node's
+    /// gauge. Returns the number of cache chunks admitted (0 when the
+    /// bucket is uncached or the object was already warm).
+    pub fn prefetch(&self, bucket: &str, obj: &str, horizon: usize) -> Result<u64, ClientError> {
+        let pq = format!(
+            "{}?bucket={bucket}&obj={obj}&horizon={horizon}",
+            paths::PREFETCH
+        );
+        let resp = self.http.request("POST", &self.proxy, &pq, &[])?;
+        if resp.status != 200 {
+            return Err(status_err(resp));
+        }
+        let body = resp.into_bytes()?;
+        Ok(String::from_utf8_lossy(&body).trim().parse().unwrap_or(0))
+    }
+
     /// Scrape a node's Prometheus exposition.
     pub fn metrics(&self, node_addr: &str) -> Result<String, ClientError> {
         let resp = self.http.get(node_addr, paths::METRICS)?;

@@ -17,7 +17,8 @@ use crate::proto::http::{Body, Handler, HttpClient, HttpServer, Request, Respons
 use crate::proto::wire::{self, paths, DtRegister, SenderActivate};
 use crate::sender::run_sender;
 use crate::store::{
-    Backend, CachedBackend, ChunkCache, ObjectStore, RemoteBackend, ShardIndexCache, TailConfig,
+    Backend, CachedBackend, ChunkCache, ObjectStore, RemoteBackend, ShardIndexCache, StoreError,
+    TailConfig,
 };
 use crate::transport::{P2pServer, PeerPool, ReactorConfig};
 use crate::util::clock::{Clock, RealClock};
@@ -411,6 +412,30 @@ fn target_route(st: &Arc<TargetState>, req: Request) -> Response {
                     st.cache.invalidate_object(bucket, obj);
                     st.shards.invalidate(bucket, obj);
                     Response::ok(Vec::new())
+                }
+                _ => Response::text(400, "missing bucket/obj"),
+            }
+        }
+        // Epoch prefetch (the batch planner's warm-ahead call): pull the
+        // object's chunks into this node's cache tier ahead of the demand
+        // read the planner predicted. Runs inline on the handler worker —
+        // the *client* keeps it off its own demand path by issuing it from
+        // background planner workers.
+        ("POST", paths::PREFETCH) => {
+            match (req.query_param("bucket"), req.query_param("obj")) {
+                (Some(bucket), Some(obj)) => {
+                    st.metrics.prefetch_issued.inc();
+                    if let Some(h) = req.query_param("horizon").and_then(|h| h.parse::<i64>().ok())
+                    {
+                        st.metrics.prefetch_horizon.set(h);
+                    }
+                    match st.store.prefetch(bucket, obj) {
+                        Ok(filled) => Response::ok(format!("{filled}").into_bytes()),
+                        Err(StoreError::NotFound(k)) => {
+                            Response::text(404, &format!("object not found: {k}"))
+                        }
+                        Err(e) => Response::text(500, &e.to_string()),
+                    }
                 }
                 _ => Response::text(400, "missing bucket/obj"),
             }

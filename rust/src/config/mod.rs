@@ -119,6 +119,15 @@ pub struct GetBatchConfig {
     /// *following* chunks through one ranged read of the inner backend
     /// (clamped so one fill never exceeds `dt_buffer_bytes`).
     pub readahead_chunks: usize,
+    /// Epoch prefetch: how many *future* batches the client-side batch
+    /// planner may warm into the chunk cache while the current batch
+    /// streams (`0` disables prefetch). Bounded by `cache_bytes`: the
+    /// sanitizer clamps it so the worst-case prefetch footprint — one
+    /// read-ahead fill span of `(readahead_chunks + 1) × chunk_bytes` per
+    /// prefetched batch — always fits inside the cache alongside the
+    /// demand path's own fills. Prefetch reserves against `cache_bytes`
+    /// only, never against `dt_buffer_bytes`.
+    pub prefetch_batches: usize,
     /// Cache coherence: how long the chunk cache trusts remembered
     /// per-object metadata (length + write generation) before an open
     /// re-probes the inner backend. Within the grace, cross-node coherence
@@ -178,6 +187,7 @@ impl Default for GetBatchConfig {
             budget_overrun_limit: 4,
             cache_bytes: 64 << 20,
             readahead_chunks: 2,
+            prefetch_batches: 1,
             coherence_grace: Duration::from_millis(500),
             endpoint_failure_limit: 3,
             endpoint_probe: Duration::from_millis(1000),
@@ -205,6 +215,15 @@ impl GetBatchConfig {
         // so a single fill can never out-size the node's data-plane budget.
         let max_ra = (c.dt_buffer_bytes / c.chunk_bytes as u64).saturating_sub(1) as usize;
         c.readahead_chunks = c.readahead_chunks.min(max_ra);
+        // Prefetch reserves against the *cache*, never the DT budget: the
+        // horizon's worst-case footprint (one read-ahead fill span per
+        // prefetched batch, each span (readahead_chunks + 1) chunks) must
+        // fit inside `cache_bytes`, or prefetch would evict the very
+        // chunks the demand path is about to read. With caching disabled
+        // there is nowhere to prefetch into.
+        let span_bytes = (c.readahead_chunks as u64 + 1) * c.chunk_bytes as u64;
+        let max_pf = (c.cache_bytes / span_bytes).min(usize::MAX as u64) as usize;
+        c.prefetch_batches = c.prefetch_batches.min(max_pf);
         // A failure limit of 0 would open endpoint circuits spontaneously,
         // and a zero probe interval would disable trial/probe rate-limiting
         // (every operation would lead with a broken endpoint and spawn a
@@ -238,6 +257,7 @@ impl GetBatchConfig {
             .set("budget_overrun_limit", Value::num(self.budget_overrun_limit as f64))
             .set("cache_bytes", Value::num(self.cache_bytes as f64))
             .set("readahead_chunks", Value::num(self.readahead_chunks as f64))
+            .set("prefetch_batches", Value::num(self.prefetch_batches as f64))
             .set("coherence_grace_ms", Value::num(self.coherence_grace.as_millis() as f64))
             .set("endpoint_failure_limit", Value::num(self.endpoint_failure_limit as f64))
             .set("endpoint_probe_ms", Value::num(self.endpoint_probe.as_millis() as f64))
@@ -285,6 +305,10 @@ impl GetBatchConfig {
                 .u64_field("readahead_chunks")
                 .map(|x| x as usize)
                 .unwrap_or(d.readahead_chunks),
+            prefetch_batches: v
+                .u64_field("prefetch_batches")
+                .map(|x| x as usize)
+                .unwrap_or(d.prefetch_batches),
             coherence_grace: v
                 .u64_field("coherence_grace_ms")
                 .map(Duration::from_millis)
@@ -457,6 +481,7 @@ mod tests {
         c.getbatch.budget_overrun_limit = 9;
         c.getbatch.cache_bytes = 8 << 20;
         c.getbatch.readahead_chunks = 5;
+        c.getbatch.prefetch_batches = 3;
         c.getbatch.coherence_grace = Duration::from_millis(125);
         c.getbatch.endpoint_failure_limit = 7;
         c.getbatch.endpoint_probe = Duration::from_millis(250);
@@ -527,6 +552,43 @@ mod tests {
         assert_eq!(c.readahead_chunks, 3, "fill of ra+1 chunks fits the budget");
         let ok = GetBatchConfig::default().sanitized();
         assert_eq!(ok.readahead_chunks, GetBatchConfig::default().readahead_chunks);
+    }
+
+    #[test]
+    fn sanitized_clamps_prefetch_to_cache() {
+        // Cache holds 4 chunks; read-ahead span is 2 chunks ⇒ at most two
+        // prefetched-batch spans fit alongside each other.
+        let c = GetBatchConfig {
+            chunk_bytes: 64 << 10,
+            dt_buffer_bytes: 1 << 20,
+            cache_bytes: 256 << 10,
+            readahead_chunks: 1,
+            prefetch_batches: 16,
+            ..Default::default()
+        }
+        .sanitized();
+        assert_eq!(c.prefetch_batches, 2, "horizon clamped so spans fit cache_bytes");
+        // Caching disabled ⇒ nowhere to prefetch into.
+        let off = GetBatchConfig { cache_bytes: 0, prefetch_batches: 4, ..Default::default() }
+            .sanitized();
+        assert_eq!(off.prefetch_batches, 0);
+        // The cross-clamp composes with the readahead clamp: a huge
+        // readahead is first clamped to the DT budget, and the prefetch
+        // bound uses the *clamped* span size.
+        let cross = GetBatchConfig {
+            chunk_bytes: 64 << 10,
+            dt_buffer_bytes: 256 << 10, // readahead clamps to 3
+            cache_bytes: 512 << 10,     // 8 chunks / 4-chunk span = 2
+            readahead_chunks: 64,
+            prefetch_batches: 64,
+            ..Default::default()
+        }
+        .sanitized();
+        assert_eq!(cross.readahead_chunks, 3);
+        assert_eq!(cross.prefetch_batches, 2);
+        // Defaults untouched.
+        let ok = GetBatchConfig::default().sanitized();
+        assert_eq!(ok.prefetch_batches, GetBatchConfig::default().prefetch_batches);
     }
 
     #[test]

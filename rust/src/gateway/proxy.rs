@@ -112,6 +112,7 @@ fn route(st: &Arc<ProxyState>, req: Request) -> Response {
         },
         ("GET", paths::LIST) => route_list(st, req),
         ("POST", paths::INVALIDATE) => route_invalidate(st, req),
+        ("POST", paths::PREFETCH) => route_prefetch(st, req),
         ("GET", paths::METRICS) => Response::ok(st.metrics.render(&st.id).into_bytes()),
         ("GET", paths::HEALTH) => Response::ok(b"ok".to_vec()),
         _ => Response::status(404),
@@ -183,6 +184,30 @@ fn route_invalidate(st: &Arc<ProxyState>, req: Request) -> Response {
         }
     });
     Response::ok(format!("invalidated on {delivered}/{n} targets").into_bytes())
+}
+
+/// Epoch prefetch → redirect to the object's HRW owner: the target that
+/// will serve the predicted demand read (as sender or DT-local), so the
+/// warmth lands in the one cache that matters. Same per-request hop shape
+/// as `route_object`; the client follows the 307 with method+body intact.
+fn route_prefetch(st: &ProxyState, req: Request) -> Response {
+    let smap = match st.smap.get() {
+        Some(s) => s,
+        None => return Response::text(503, "smap not ready"),
+    };
+    let (bucket, obj) = match (req.query_param("bucket"), req.query_param("obj")) {
+        (Some(b), Some(o)) => (b, o),
+        _ => return Response::text(400, "missing bucket/obj"),
+    };
+    let owner = placement::owner(&smap, &format!("{bucket}/{obj}"));
+    let target = &smap.targets[owner];
+    let qs: Vec<String> = req.query.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    Response::redirect(&format!(
+        "http://{}{}?{}",
+        target.http_addr,
+        paths::PREFETCH,
+        qs.join("&")
+    ))
 }
 
 /// Object GET/PUT → redirect to the HRW owner target (per-request hop that

@@ -95,6 +95,18 @@ pub struct GetBatchMetrics {
     pub cache_hits: Counter,
     pub cache_misses: Counter,
     pub cache_evictions: Counter,
+    /// Chunk-cache fills by origin: `demand` fills happen inline on a
+    /// read's miss path, `prefetch` fills are issued ahead of need by the
+    /// epoch batch planner. Rendered as `cache_fills_total{kind=...}`.
+    pub cache_fills_demand: Counter,
+    pub cache_fills_prefetch: Counter,
+    /// Epoch prefetch: objects the prefetch path was asked to warm
+    /// (`issued`), demand reads that landed on a still-pinned prefetched
+    /// chunk (`hits`), and prefetched chunks dropped — evicted, staled, or
+    /// invalidated — before any demand read consumed them (`wasted`).
+    pub prefetch_issued: Counter,
+    pub prefetch_hits: Counter,
+    pub prefetch_wasted: Counter,
     /// Coherence: invalidation events applied to the chunk cache (local
     /// write-through + received `/v1/invalidate` broadcasts).
     pub cache_invalidations: Counter,
@@ -150,6 +162,9 @@ pub struct GetBatchMetrics {
     /// this node's remote backends. Flips back down when a broken endpoint
     /// passes a health probe (or serves a half-open trial request).
     pub endpoints_unhealthy: Gauge,
+    /// Epoch prefetch: the batch horizon the planner is currently running
+    /// with (`prefetch_batches` after sanitization; 0 = prefetch off).
+    pub prefetch_horizon: Gauge,
     /// Per-endpoint state, rendered as labeled gauge lines per configured
     /// endpoint: `remote_endpoint_healthy{addr="..."}` (1 = circuit
     /// closed), `remote_endpoint_latency_ewma_ms{addr="..."}` (decayed
@@ -258,6 +273,9 @@ impl GetBatchMetrics {
             c("cache_hits_total", "chunk cache hits", self.cache_hits.get());
             c("cache_misses_total", "chunk cache misses", self.cache_misses.get());
             c("cache_evictions_total", "chunk cache LRU evictions", self.cache_evictions.get());
+            c("prefetch_issued_total", "objects the epoch prefetch path was asked to warm", self.prefetch_issued.get());
+            c("prefetch_hits_total", "demand reads served by a still-pinned prefetched chunk", self.prefetch_hits.get());
+            c("prefetch_wasted_total", "prefetched chunks dropped before any demand read", self.prefetch_wasted.get());
             c("cache_invalidations_total", "cache invalidation events applied", self.cache_invalidations.get());
             c("cache_stale_evictions_total", "chunks dropped for version staleness", self.cache_stale_evictions.get());
             c("invalidate_broadcasts_total", "invalidation broadcasts initiated", self.invalidate_broadcasts.get());
@@ -271,6 +289,26 @@ impl GetBatchMetrics {
             c("reactor_wakeups_total", "epoll wake-ups across reactor threads", self.reactor_wakeups.get());
             c("accept_backlog_shed_total", "connections shed at the max_connections cap", self.accept_backlog_shed.get());
         }
+        // Fill-origin split: one labeled counter line per fill kind.
+        // `parse` strips labels (the two lines would collide in its map),
+        // so consumers of the split assert on the raw text lines.
+        out.push_str(&format!(
+            "# HELP ais_getbatch_cache_fills_total chunk-cache fills by origin\n\
+             # TYPE ais_getbatch_cache_fills_total counter\n\
+             ais_getbatch_cache_fills_total{{node=\"{node}\",kind=\"demand\"}} {}\n\
+             ais_getbatch_cache_fills_total{{node=\"{node}\",kind=\"prefetch\"}} {}\n",
+            self.cache_fills_demand.get(),
+            self.cache_fills_prefetch.get()
+        ));
+        // Derived hit ratio: computed at render time from the counters so
+        // scrapers get it without doing the division (0 with no traffic).
+        let (h, m) = (self.cache_hits.get(), self.cache_misses.get());
+        let ratio = if h + m == 0 { 0.0 } else { h as f64 / (h + m) as f64 };
+        out.push_str(&format!(
+            "# HELP ais_getbatch_cache_hit_ratio derived chunk-cache hit ratio: hits / (hits + misses)\n\
+             # TYPE ais_getbatch_cache_hit_ratio gauge\n\
+             ais_getbatch_cache_hit_ratio{{node=\"{node}\"}} {ratio:.4}\n"
+        ));
         let mut g = |name: &str, help: &str, v: i64| {
             out.push_str(&format!(
                 "# HELP ais_getbatch_{name} {help}\n# TYPE ais_getbatch_{name} gauge\nais_getbatch_{name}{{node=\"{node}\"}} {v}\n"
@@ -282,6 +320,7 @@ impl GetBatchMetrics {
         g("sender_peak_buffer", "largest single sender-side entry buffer", self.sender_peak_buffer.get());
         g("cache_resident_bytes", "bytes resident in the chunk cache", self.cache_resident_bytes.get());
         g("endpoints_unhealthy", "remote endpoints currently marked unhealthy", self.endpoints_unhealthy.get());
+        g("prefetch_horizon", "epoch prefetch horizon in batches (0 = off)", self.prefetch_horizon.get());
         // Per-endpoint circuit state: one labeled line per configured
         // remote endpoint (the ROADMAP's "surface per-endpoint health"
         // item — the aggregate gauge above says *how many* are broken,
@@ -481,6 +520,33 @@ mod tests {
         assert_eq!(parsed["ais_getbatch_hedges_total"], 5.0);
         assert_eq!(parsed["ais_getbatch_hedge_wins_total"], 3.0);
         assert_eq!(parsed["ais_getbatch_hedges_canceled_total"], 2.0);
+    }
+
+    #[test]
+    fn fill_split_and_hit_ratio_render() {
+        let m = GetBatchMetrics::default();
+        // No traffic: ratio is defined (0), both fill kinds render at 0.
+        let text = m.render("t0");
+        assert!(text.contains("ais_getbatch_cache_hit_ratio{node=\"t0\"} 0.0000"), "{text}");
+        assert!(text.contains("cache_fills_total{node=\"t0\",kind=\"demand\"} 0"), "{text}");
+        assert!(text.contains("cache_fills_total{node=\"t0\",kind=\"prefetch\"} 0"), "{text}");
+        m.cache_hits.add(3);
+        m.cache_misses.add(1);
+        m.cache_fills_demand.add(4);
+        m.cache_fills_prefetch.add(9);
+        m.prefetch_issued.add(2);
+        m.prefetch_hits.inc();
+        m.prefetch_wasted.inc();
+        m.prefetch_horizon.set(2);
+        let text = m.render("t0");
+        assert!(text.contains("ais_getbatch_cache_hit_ratio{node=\"t0\"} 0.7500"), "{text}");
+        assert!(text.contains("cache_fills_total{node=\"t0\",kind=\"demand\"} 4"), "{text}");
+        assert!(text.contains("cache_fills_total{node=\"t0\",kind=\"prefetch\"} 9"), "{text}");
+        let parsed = GetBatchMetrics::parse(&text);
+        assert_eq!(parsed["ais_getbatch_prefetch_issued_total"], 2.0);
+        assert_eq!(parsed["ais_getbatch_prefetch_hits_total"], 1.0);
+        assert_eq!(parsed["ais_getbatch_prefetch_wasted_total"], 1.0);
+        assert_eq!(parsed["ais_getbatch_prefetch_horizon"], 2.0);
     }
 
     #[test]

@@ -34,6 +34,16 @@ pub mod paths {
     /// delivery degrades to versioned-key revalidation after
     /// `coherence_grace_ms`, never to a stale read forever.
     pub const INVALIDATE: &str = "/v1/invalidate";
+    /// Epoch prefetch: `POST /v1/prefetch?bucket={bucket}&obj={obj}`
+    /// (optional `&horizon={batches}` — observability only, surfaces the
+    /// planner's current horizon on the serving node's gauge). On a
+    /// **proxy** it 307-redirects to the object's HRW owner target — the
+    /// node whose chunk cache will serve the upcoming demand read; on a
+    /// **target** it warms the object's chunks through the bucket's
+    /// caching tier (a no-op for uncached buckets) and returns the number
+    /// of chunks admitted. Best-effort: a failed prefetch costs the warm
+    /// hit, never correctness.
+    pub const PREFETCH: &str = "/v1/prefetch";
 }
 
 /// Response header carrying an object's PUT-time CRC-32 sidecar (8 hex

@@ -298,6 +298,39 @@ mod tests {
         assert!(t128 > t32, "t32={t32:.2} t128={t128:.2}");
     }
 
+    /// Satellite: smoke-test both drivers under `cargo test` with tiny
+    /// configs, locking the output *shape* (labels, sample counts, and the
+    /// percentile invariants) so a refactor can't silently change what the
+    /// experiment binaries print.
+    #[test]
+    fn smoke_tiny_configs_lock_output_shape() {
+        let m = CostModel::oci_16node();
+        // Synthetic, batched: ops arrive k-at-a-time and bytes = ops × size.
+        let syn = run_synthetic(&m, 2, 64 << 10, Some(4), 0.1, 11);
+        assert_eq!(syn.label, "GetBatch(4) 64KiB");
+        assert!(syn.throughput.ops > 0 && syn.throughput.ops % 4 == 0);
+        assert_eq!(syn.throughput.bytes, syn.throughput.ops * (64 << 10));
+        assert_eq!(syn.batch_latency_ms.n as u64, syn.throughput.ops / 4);
+        assert!(syn.batch_latency_ms.p50 > 0.0);
+        assert!(syn.batch_latency_ms.p50 <= syn.batch_latency_ms.p99);
+        // Synthetic, per-object GET baseline.
+        let get = run_synthetic(&m, 1, 4096, None, 0.05, 12);
+        assert_eq!(get.label, "GET 4KiB");
+        assert!(get.throughput.ops > 0);
+        assert_eq!(get.throughput.bytes, get.throughput.ops * 4096);
+        // Training: every mode yields exactly loaders×steps batch samples
+        // and loaders×steps×batch_size per-object samples.
+        for (mode, seed) in
+            [(AccessMode::Sequential, 13), (AccessMode::RandomGet, 14), (AccessMode::GetBatch, 15)]
+        {
+            let r = run_training(&m, mode, 2, 4, 3, 1.0, seed);
+            assert_eq!(r.mode, mode);
+            assert_eq!(r.batch_ms.n, 6, "{mode:?}");
+            assert_eq!(r.per_object_ms.n, 24, "{mode:?}");
+            assert!(r.batch_ms.p50 > 0.0 && r.batch_ms.p99 >= r.batch_ms.p50, "{mode:?}");
+        }
+    }
+
     #[test]
     fn table2_ordering_of_methods() {
         let m = CostModel::oci_16node();

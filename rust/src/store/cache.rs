@@ -47,6 +47,20 @@ struct CacheSlot {
     data: Arc<Vec<u8>>,
     /// LRU stamp; also the key into `CacheState::lru`.
     seq: u64,
+    /// Pinned by the prefetch path for an imminent demand read: pinned
+    /// slots are skipped by ordinary LRU eviction (a demand fill evicts
+    /// them only as a last resort, and a prefetch fill never does) and
+    /// unpin on their first demand hit.
+    pinned: bool,
+}
+
+/// Who is inserting a chunk: the demand path fills inline on a read miss;
+/// the prefetch path fills ahead of need (pinned, and forbidden from
+/// evicting other pinned chunks to make room).
+#[derive(Clone, Copy, PartialEq)]
+enum FillKind {
+    Demand,
+    Prefetch,
 }
 
 /// Remembered per-object metadata: warm opens (and fully cached objects
@@ -88,6 +102,16 @@ pub struct ChunkCache {
     /// Invalidation events processed (local write-through or received
     /// `/v1/invalidate` broadcast).
     pub invalidations: crate::metrics::Counter,
+    /// Fill origin split: chunks inserted by the demand (read-miss) path
+    /// vs the prefetch path.
+    pub fills_demand: crate::metrics::Counter,
+    pub fills_prefetch: crate::metrics::Counter,
+    /// Demand hits that landed on a still-pinned prefetched chunk — the
+    /// prefetch did its job.
+    pub prefetch_hits: crate::metrics::Counter,
+    /// Prefetched chunks dropped (evicted, staled, invalidated, or never
+    /// admitted for lack of unpinned room) before any demand read.
+    pub prefetch_wasted: crate::metrics::Counter,
 }
 
 impl ChunkCache {
@@ -106,6 +130,10 @@ impl ChunkCache {
             evictions: Default::default(),
             stale_evictions: Default::default(),
             invalidations: Default::default(),
+            fills_demand: Default::default(),
+            fills_prefetch: Default::default(),
+            prefetch_hits: Default::default(),
+            prefetch_wasted: Default::default(),
         }
     }
 
@@ -125,12 +153,22 @@ impl ChunkCache {
         let mut st = self.state.lock().unwrap();
         let key = (bucket.to_string(), obj.to_string(), version, idx);
         if let Some(slot) = st.map.get(&key) {
-            let (old, data) = (slot.seq, Arc::clone(&slot.data));
+            let (old, data, pinned) = (slot.seq, Arc::clone(&slot.data), slot.pinned);
             st.lru.remove(&old);
             st.seq += 1;
             let seq = st.seq;
             st.lru.insert(seq, key.clone());
-            st.map.get_mut(&key).expect("slot present").seq = seq;
+            let slot = st.map.get_mut(&key).expect("slot present");
+            slot.seq = seq;
+            if pinned {
+                // First demand read of a prefetched chunk: the prefetch
+                // paid off. Unpin so the chunk ages out like any other.
+                slot.pinned = false;
+                self.prefetch_hits.inc();
+                if let Some(m) = &self.metrics {
+                    m.prefetch_hits.inc();
+                }
+            }
             self.hits.inc();
             if let Some(m) = &self.metrics {
                 m.cache_hits.inc();
@@ -145,10 +183,36 @@ impl ChunkCache {
         }
     }
 
-    fn insert(&self, bucket: &str, obj: &str, version: u64, idx: u64, data: Arc<Vec<u8>>) {
+    /// Whether a chunk is resident, with no side effects — no hit/miss
+    /// accounting, no LRU touch, no unpin. The prefetch planner uses this
+    /// to skip already-warm chunks without skewing the demand-path stats.
+    fn contains(&self, bucket: &str, obj: &str, version: u64, idx: u64) -> bool {
+        let st = self.state.lock().unwrap();
+        st.map.contains_key(&(bucket.to_string(), obj.to_string(), version, idx))
+    }
+
+    /// Insert one chunk; returns whether it was admitted. Eviction is
+    /// pin-aware: oldest *unpinned* chunks go first; a demand fill may
+    /// evict pinned chunks as a last resort (capacity is a hard
+    /// invariant), while a prefetch fill that finds nothing unpinned to
+    /// evict drops the incoming chunk instead — speculative work never
+    /// cannibalizes earlier speculation or the demand working set, and
+    /// resident bytes never exceed `capacity`.
+    fn insert(
+        &self,
+        bucket: &str,
+        obj: &str,
+        version: u64,
+        idx: u64,
+        data: Arc<Vec<u8>>,
+        kind: FillKind,
+    ) -> bool {
         let len = data.len() as u64;
         if len > self.capacity {
-            return; // larger than the whole cache: not cacheable
+            if kind == FillKind::Prefetch {
+                self.count_wasted(1);
+            }
+            return false; // larger than the whole cache: not cacheable
         }
         let mut st = self.state.lock().unwrap();
         let key = (bucket.to_string(), obj.to_string(), version, idx);
@@ -156,12 +220,32 @@ impl ChunkCache {
             st.lru.remove(&old.seq);
             st.bytes -= old.data.len() as u64;
         }
-        // Strict LRU eviction down to capacity.
         while st.bytes + len > self.capacity {
-            let (&oldest, _) = st.lru.iter().next().expect("bytes > 0 implies lru non-empty");
-            let victim = st.lru.remove(&oldest).expect("oldest present");
-            let slot = st.map.remove(&victim).expect("lru and map in sync");
+            let unpinned = st
+                .lru
+                .iter()
+                .find(|&(_, k)| !st.map[k].pinned)
+                .map(|(&s, k)| (s, k.clone()));
+            let (vseq, vkey) = match unpinned {
+                Some(v) => v,
+                None if kind == FillKind::Prefetch => {
+                    // Everything resident is pinned for imminent batches:
+                    // this speculative chunk loses, not them.
+                    drop(st);
+                    self.count_wasted(1);
+                    return false;
+                }
+                None => {
+                    let (&s, k) = st.lru.iter().next().expect("bytes > 0 implies lru non-empty");
+                    (s, k.clone())
+                }
+            };
+            st.lru.remove(&vseq).expect("victim present");
+            let slot = st.map.remove(&vkey).expect("lru and map in sync");
             st.bytes -= slot.data.len() as u64;
+            if slot.pinned {
+                self.count_wasted(1);
+            }
             self.evictions.inc();
             if let Some(m) = &self.metrics {
                 m.cache_evictions.inc();
@@ -171,9 +255,31 @@ impl ChunkCache {
         let seq = st.seq;
         st.lru.insert(seq, key.clone());
         st.bytes += len;
-        st.map.insert(key, CacheSlot { data, seq });
+        st.map.insert(key, CacheSlot { data, seq, pinned: kind == FillKind::Prefetch });
         if let Some(m) = &self.metrics {
             m.cache_resident_bytes.set(st.bytes as i64);
+        }
+        match kind {
+            FillKind::Demand => {
+                self.fills_demand.inc();
+                if let Some(m) = &self.metrics {
+                    m.cache_fills_demand.inc();
+                }
+            }
+            FillKind::Prefetch => {
+                self.fills_prefetch.inc();
+                if let Some(m) = &self.metrics {
+                    m.cache_fills_prefetch.inc();
+                }
+            }
+        }
+        true
+    }
+
+    fn count_wasted(&self, n: u64) {
+        self.prefetch_wasted.add(n);
+        if let Some(m) = &self.metrics {
+            m.prefetch_wasted.add(n);
         }
     }
 
@@ -183,6 +289,11 @@ impl ChunkCache {
             if let Some(slot) = st.map.remove(&key) {
                 st.lru.remove(&slot.seq);
                 st.bytes -= slot.data.len() as u64;
+                if slot.pinned {
+                    // A prefetched chunk staled (overwrite/invalidate)
+                    // before any demand read consumed it.
+                    self.count_wasted(1);
+                }
                 self.stale_evictions.inc();
                 if let Some(m) = &self.metrics {
                     m.cache_stale_evictions.inc();
@@ -304,6 +415,7 @@ impl CachedBackend {
             obj_len,
             version,
             readahead_chunks: self.readahead_chunks,
+            kind: FillKind::Demand,
         }
     }
 
@@ -414,6 +526,47 @@ impl Backend for CachedBackend {
             crc,
         })
     }
+
+    /// Warm every not-yet-cached chunk of the object, pinned for the
+    /// demand read the epoch planner predicted. Fills run through the same
+    /// read-ahead spans and version gate as demand fills — a prefetch
+    /// racing an overwrite fails (or is invalidated later by `observe`)
+    /// rather than planting stale bytes. Residency stays ≤ the cache
+    /// capacity unconditionally: a prefetch insert never evicts pinned
+    /// chunks and drops its own chunk when only pinned chunks remain.
+    /// Transient fill residency is one span, bounded the same way as the
+    /// demand path's (never against `dt_buffer_bytes`).
+    fn prefetch(&self, bucket: &str, obj: &str) -> Result<u64, StoreError> {
+        if self.cache.capacity() == 0 {
+            return Ok(0);
+        }
+        let (len, ver, _) = self.object_meta(bucket, obj)?;
+        if len == 0 {
+            return Ok(0);
+        }
+        let mut src = self.source(bucket, obj, 0, len, ver);
+        src.kind = FillKind::Prefetch;
+        let cb = self.cache.chunk_bytes() as u64;
+        let last_idx = (len - 1) / cb;
+        let span = self.readahead_chunks as u64 + 1;
+        let mut admitted = 0u64;
+        let mut idx = 0u64;
+        while idx <= last_idx {
+            if self.cache.contains(bucket, obj, ver, idx) {
+                idx += 1;
+                continue;
+            }
+            let (_, n) = src.fill(idx)?;
+            admitted += n;
+            if n == 0 {
+                // The cache declined the whole span (everything resident
+                // is pinned): further spans would be declined too.
+                break;
+            }
+            idx += span;
+        }
+        Ok(admitted)
+    }
 }
 
 /// Source serving entry bytes from object-aligned cached chunks,
@@ -434,6 +587,9 @@ struct CacheSource {
     /// Pinned object version (0 = unversioned: no fill check possible).
     version: u64,
     readahead_chunks: usize,
+    /// Demand (read-miss) or prefetch fills: decides insert pinning,
+    /// eviction rights, and which fill counter the chunks land in.
+    kind: FillKind,
 }
 
 impl CacheSource {
@@ -451,7 +607,9 @@ impl CacheSource {
     /// surfaces the stamp via `observed_version` — which the gate below
     /// checks against this source's pin before any byte is served or
     /// cached.
-    fn fill(&self, idx: u64) -> Result<Arc<Vec<u8>>, StoreError> {
+    /// Returns the first chunk of the span plus how many chunks the cache
+    /// actually admitted (a pin-aware prefetch insert may decline).
+    fn fill(&self, idx: u64) -> Result<(Arc<Vec<u8>>, u64), StoreError> {
         let cb = self.cache.chunk_bytes() as u64;
         let last_idx = if self.obj_len == 0 { 0 } else { (self.obj_len - 1) / cb };
         let end_idx = idx.saturating_add(self.readahead_chunks as u64).min(last_idx);
@@ -506,10 +664,20 @@ impl CacheSource {
                 }
             }
         }
+        let mut admitted = 0u64;
         for (k, piece) in pieces.iter().enumerate() {
-            self.cache.insert(&self.bucket, &self.obj, self.version, idx + k as u64, Arc::clone(piece));
+            if self.cache.insert(
+                &self.bucket,
+                &self.obj,
+                self.version,
+                idx + k as u64,
+                Arc::clone(piece),
+                self.kind,
+            ) {
+                admitted += 1;
+            }
         }
-        Ok(Arc::clone(&pieces[0]))
+        Ok((Arc::clone(&pieces[0]), admitted))
     }
 }
 
@@ -535,7 +703,7 @@ impl ChunkSource for CacheSource {
         let idx = off / cb;
         let chunk = match self.cache.get(&self.bucket, &self.obj, self.version, idx) {
             Some(c) => c,
-            None => self.fill(idx).map_err(io::Error::from)?,
+            None => self.fill(idx).map_err(io::Error::from)?.0,
         };
         let within = (off - idx * cb) as usize;
         if within >= chunk.len() {
@@ -817,6 +985,83 @@ mod tests {
         // top of *this* one gets the same single-round-trip gate.
         let r = cached.open_entry("b", "o").unwrap();
         assert_eq!(r.observed_version(), local.content_version("b", "o"));
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn prefetch_warms_chunks_demand_reads_all_hit() {
+        let (cached, cache, _local, base) = setup("pfwarm", 1 << 20, 4 << 10, 1);
+        let data = payload(16 << 10, 11); // 4 chunks
+        cached.put("b", "o", &data).unwrap();
+        let filled = cached.prefetch("b", "o").unwrap();
+        assert_eq!(filled, 4, "every chunk warmed");
+        assert_eq!(cache.fills_prefetch.get(), 4);
+        assert_eq!(cache.fills_demand.get(), 0);
+        assert_eq!(cache.resident_bytes(), 16 << 10);
+        // Idempotent: a second prefetch finds everything resident.
+        assert_eq!(cached.prefetch("b", "o").unwrap(), 0);
+        assert_eq!(cache.fills_prefetch.get(), 4, "no refill of warm chunks");
+        // The demand read is all hits, and consuming the pinned chunks
+        // counts as prefetch hits (and unpins them).
+        let miss_before = cache.misses.get();
+        assert_eq!(cached.open_entry("b", "o").unwrap().read_all().unwrap(), data);
+        assert_eq!(cache.misses.get(), miss_before, "prefetched epoch read misses nothing");
+        assert_eq!(cache.prefetch_hits.get(), 4);
+        assert_eq!(cache.prefetch_wasted.get(), 0);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn prefetch_never_exceeds_capacity_or_evicts_pinned() {
+        // Cache of 3 chunks. Object A (2 chunks) prefetched and pinned;
+        // prefetching object B (3 chunks) may use the one free slot but
+        // must not evict A's pinned chunks or overshoot capacity.
+        let (cached, cache, _local, base) = setup("pfcap", 12 << 10, 4 << 10, 0);
+        cached.put("b", "a", &payload(8 << 10, 1)).unwrap();
+        cached.put("b", "bb", &payload(12 << 10, 2)).unwrap();
+        assert_eq!(cached.prefetch("b", "a").unwrap(), 2);
+        let admitted = cached.prefetch("b", "bb").unwrap();
+        assert!(admitted <= 1, "only the unpinned slot was available, got {admitted}");
+        assert!(cache.resident_bytes() <= cache.capacity());
+        assert!(cache.prefetch_wasted.get() >= 1, "declined speculative chunks counted");
+        // A's pinned chunks survived: reading A misses nothing.
+        let miss_before = cache.misses.get();
+        assert_eq!(cached.open_entry("b", "a").unwrap().read_all().unwrap(), payload(8 << 10, 1));
+        assert_eq!(cache.misses.get(), miss_before);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn demand_churn_spares_pinned_chunks() {
+        // Capacity 3 chunks; A (2 chunks) prefetched+pinned, then a demand
+        // read of B (3 chunks) churns through the single unpinned slot
+        // without evicting A.
+        let (cached, cache, _local, base) = setup("pfpin", 12 << 10, 4 << 10, 0);
+        cached.put("b", "a", &payload(8 << 10, 3)).unwrap();
+        cached.put("b", "bb", &payload(12 << 10, 4)).unwrap();
+        assert_eq!(cached.prefetch("b", "a").unwrap(), 2);
+        assert_eq!(cached.open_entry("b", "bb").unwrap().read_all().unwrap(), payload(12 << 10, 4));
+        assert!(cache.resident_bytes() <= cache.capacity());
+        let miss_before = cache.misses.get();
+        assert_eq!(cached.open_entry("b", "a").unwrap().read_all().unwrap(), payload(8 << 10, 3));
+        assert_eq!(cache.misses.get(), miss_before, "pinned chunks outlived the demand churn");
+        assert_eq!(cache.prefetch_hits.get(), 2);
+        std::fs::remove_dir_all(base).unwrap();
+    }
+
+    #[test]
+    fn overwrite_invalidates_prefetched_chunks_as_wasted() {
+        let (cached, cache, _local, base) = setup("pfinval", 1 << 20, 4 << 10, 0);
+        cached.put("b", "o", &payload(8 << 10, 5)).unwrap();
+        assert_eq!(cached.prefetch("b", "o").unwrap(), 2);
+        let fresh = payload(8 << 10, 6);
+        cached.put("b", "o", &fresh).unwrap(); // write-through invalidation
+        assert_eq!(cache.prefetch_wasted.get(), 2, "unconsumed prefetched chunks dropped");
+        assert_eq!(
+            cached.open_entry("b", "o").unwrap().read_all().unwrap(),
+            fresh,
+            "post-overwrite read serves the fresh bytes, never the prefetched ones"
+        );
         std::fs::remove_dir_all(base).unwrap();
     }
 

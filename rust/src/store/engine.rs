@@ -115,6 +115,15 @@ pub trait Backend: Send + Sync {
         let len = self.size(bucket, obj)?;
         Ok(ObjectStat { len, version, crc: self.content_crc(bucket, obj) })
     }
+    /// Warm the object's bytes ahead of a predicted read, returning how
+    /// many cache chunks were newly admitted. Only the caching tier has
+    /// anywhere to put warmth, so the default is a no-op — a prefetch
+    /// against a local or remote tier costs nothing and fills nothing.
+    /// Prefetched chunks reserve capacity against `cache_bytes` only,
+    /// never against `dt_buffer_bytes` (the data-plane budget).
+    fn prefetch(&self, _bucket: &str, _obj: &str) -> Result<u64, StoreError> {
+        Ok(0)
+    }
 }
 
 /// The byte source behind an [`EntryReader`]: positioned reads over one
@@ -367,6 +376,12 @@ impl ObjectStore {
     /// Length + coherence metadata in one call (see [`Backend::stat`]).
     pub fn stat(&self, bucket: &str, obj: &str) -> Result<ObjectStat, StoreError> {
         self.backend_for(bucket).stat(bucket, obj)
+    }
+
+    /// Warm an object into the bucket's caching tier ahead of a predicted
+    /// read (see [`Backend::prefetch`]); a no-op for uncached buckets.
+    pub fn prefetch(&self, bucket: &str, obj: &str) -> Result<u64, StoreError> {
+        self.backend_for(bucket).prefetch(bucket, obj)
     }
 
     pub fn mountpath_count(&self) -> usize {
