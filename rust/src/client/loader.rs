@@ -145,6 +145,16 @@ impl EpochPlan {
     pub fn batch(&self, i: usize) -> Option<&[usize]> {
         self.batches.get(i).map(|b| b.as_slice())
     }
+
+    /// Batch indices owned by loader worker `rank` of `world`: `i ≡ rank
+    /// (mod world)`. Every rank recomputes the same plan locally (the
+    /// shuffle is seeded), so the split needs zero coordination, and the
+    /// rank slices partition `0..n_batches()` exactly — the groundwork for
+    /// distributed epoch sharding.
+    pub fn rank_batches(&self, rank: usize, world: usize) -> Vec<usize> {
+        let world = world.max(1);
+        (rank..self.n_batches()).step_by(world).collect()
+    }
 }
 
 /// Size-stratified sampler ("dynamic bucketing" à la Lhotse): manifest

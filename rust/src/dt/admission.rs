@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::GetBatchConfig;
 use crate::metrics::GetBatchMetrics;
-use crate::util::clock::Clock;
+use crate::util::clock::{Clock, RealClock};
 
 /// Node-wide resident-bytes budget shared by every in-flight DT execution
 /// on one target.
@@ -46,6 +46,10 @@ pub struct MemoryBudget {
     cv: Condvar,
     patience: Duration,
     metrics: Option<Arc<GetBatchMetrics>>,
+    /// Deadlines and wait slices run on this clock. Production budgets use
+    /// the real monotonic clock; the scale simulator injects a
+    /// `VirtualClock` so millions of patience windows elapse in CI seconds.
+    clock: Arc<dyn Clock>,
 }
 
 struct BudgetState {
@@ -72,6 +76,18 @@ impl MemoryBudget {
         patience: Duration,
         metrics: Option<Arc<GetBatchMetrics>>,
     ) -> Arc<MemoryBudget> {
+        MemoryBudget::with_clock(budget_bytes, chunk_bytes, patience, metrics, RealClock::new())
+    }
+
+    /// Budget on an explicit clock (the simulation-harness entry point; the
+    /// production constructors above pin the real clock).
+    pub fn with_clock(
+        budget_bytes: u64,
+        chunk_bytes: u64,
+        patience: Duration,
+        metrics: Option<Arc<GetBatchMetrics>>,
+        clock: Arc<dyn Clock>,
+    ) -> Arc<MemoryBudget> {
         let budget = budget_bytes.max(1);
         let cap = budget.saturating_sub(chunk_bytes).max(1);
         Arc::new(MemoryBudget {
@@ -81,6 +97,7 @@ impl MemoryBudget {
             cv: Condvar::new(),
             patience,
             metrics,
+            clock,
         })
     }
 
@@ -92,6 +109,21 @@ impl MemoryBudget {
     /// How long a producer may block before being force-admitted.
     pub fn patience(&self) -> Duration {
         self.patience
+    }
+
+    /// Current time on the budget's clock (nanoseconds). Deadlines handed to
+    /// [`MemoryBudget::wait_room_until_ns`] must come from here so that real
+    /// and virtual budgets share one code path.
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Would a normal (non-exempt) reservation of `bytes` be admitted right
+    /// now? Pure query — reserves nothing. The simulator uses this to model
+    /// TCP backpressure: a sender whose chunk has no room is rescheduled
+    /// instead of force-admitted.
+    pub fn has_room(&self, bytes: u64) -> bool {
+        self.state.lock().unwrap().used + bytes <= self.cap
     }
 
     pub fn used(&self) -> u64 {
@@ -142,22 +174,43 @@ impl MemoryBudget {
 
     /// Block briefly waiting for room (or an exemption-state change — the
     /// caller re-checks its exemption between slices). Returns `false` once
-    /// `deadline` has passed.
+    /// `deadline` has passed. Wall-clock convenience over
+    /// [`MemoryBudget::wait_room_until_ns`].
     pub fn wait_room_until(&self, deadline: Instant) -> bool {
-        let now = Instant::now();
-        if now >= deadline {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return false;
+        }
+        self.wait_room_until_ns(self.clock.now_ns().saturating_add(remaining.as_nanos() as u64))
+    }
+
+    /// Clock-relative variant: `deadline_ns` is on the budget's own clock
+    /// ([`MemoryBudget::now_ns`]). On a real clock this parks on the budget
+    /// condvar in ≤ 5 ms slices exactly as before; on a virtual clock it
+    /// *advances* the clock by the slice instead — parking would deadlock,
+    /// since virtual time only moves when someone moves it.
+    pub fn wait_room_until_ns(&self, deadline_ns: u64) -> bool {
+        let now = self.clock.now_ns();
+        if now >= deadline_ns {
             return false;
         }
         // Short slice: exemption state (the consumer's head index) changes
         // without a budget notification, so never park for long.
-        let slice = (deadline - now).min(Duration::from_millis(5));
-        let st = self.state.lock().unwrap();
-        let t0 = Instant::now();
-        let _ = self.cv.wait_timeout(st, slice).unwrap();
-        if let Some(m) = &self.metrics {
-            m.budget_wait_ns.add(t0.elapsed().as_nanos() as u64);
+        let slice = Duration::from_nanos((deadline_ns - now).min(5_000_000));
+        if self.clock.is_virtual() {
+            self.clock.sleep(slice);
+            if let Some(m) = &self.metrics {
+                m.budget_wait_ns.add(slice.as_nanos() as u64);
+            }
+        } else {
+            let st = self.state.lock().unwrap();
+            let t0 = Instant::now();
+            let _ = self.cv.wait_timeout(st, slice).unwrap();
+            if let Some(m) = &self.metrics {
+                m.budget_wait_ns.add(t0.elapsed().as_nanos() as u64);
+            }
         }
-        Instant::now() < deadline
+        self.clock.now_ns() < deadline_ns
     }
 
     /// Consumer-side reservation for GFN recovery chunks. Recovery *is* the
@@ -174,8 +227,8 @@ impl MemoryBudget {
         if bytes == 0 || self.try_reserve(bytes) {
             return;
         }
-        let deadline = Instant::now() + Duration::from_millis(50);
-        while self.wait_room_until(deadline) {
+        let deadline_ns = self.clock.now_ns().saturating_add(50_000_000);
+        while self.wait_room_until_ns(deadline_ns) {
             if self.try_reserve(bytes) {
                 return;
             }
@@ -394,6 +447,37 @@ mod tests {
         assert_eq!(metrics.budget_overruns.get(), 1);
         b.release(50);
         assert_eq!(metrics.dt_buffered_bytes.get(), 0);
+    }
+
+    #[test]
+    fn virtual_budget_waits_advance_time_instead_of_parking() {
+        let clock = VirtualClock::new();
+        let b = MemoryBudget::with_clock(10, 2, Duration::from_millis(30), None, clock.clone());
+        assert!(b.try_reserve(8)); // cap reached
+        assert!(!b.has_room(1));
+        let t0 = Instant::now();
+        let deadline = b.now_ns() + 30_000_000;
+        let mut slices = 0;
+        while b.wait_room_until_ns(deadline) {
+            slices += 1;
+            assert!(slices < 1000, "must terminate");
+        }
+        assert!(slices >= 5, "30 ms of patience in 5 ms virtual slices, saw {slices}");
+        assert_eq!(clock.now_ns(), 30_000_000, "waits advanced the virtual clock");
+        assert!(t0.elapsed() < Duration::from_secs(1), "no real-time parking");
+        b.release(8);
+        assert!(b.has_room(2));
+    }
+
+    #[test]
+    fn virtual_budget_recovery_reservation_is_instant_in_real_time() {
+        let clock = VirtualClock::new();
+        let b = MemoryBudget::with_clock(10, 2, Duration::from_secs(3600), None, clock.clone());
+        assert!(b.try_reserve(8)); // saturated
+        b.reserve_for_recovery(4); // 50 ms virtual grace, then exemption
+        assert_eq!(b.used(), 12);
+        assert_eq!(b.overruns(), 0, "recovery exemption is not an overrun");
+        assert!(clock.now_ns() >= 50_000_000, "grace elapsed virtually");
     }
 
     #[test]

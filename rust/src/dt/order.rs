@@ -146,7 +146,9 @@ impl OrderBuffer {
         if bytes == 0 {
             return true;
         }
-        let deadline = Instant::now() + budget.patience();
+        // Patience deadline on the budget's own clock, so a virtual-clock
+        // budget (the scale simulator) pays patience in virtual time.
+        let deadline_ns = budget.now_ns().saturating_add(budget.patience().as_nanos() as u64);
         loop {
             if self.closed.load(Ordering::Relaxed) {
                 return false;
@@ -171,7 +173,7 @@ impl OrderBuffer {
                 budget.force_reserve(bytes, false);
                 return true;
             }
-            if !budget.wait_room_until(deadline) {
+            if !budget.wait_room_until_ns(deadline_ns) {
                 // Liveness valve: waited past the budget's patience —
                 // force-admit (counted as an overrun) rather than wedging
                 // the node.

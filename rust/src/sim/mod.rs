@@ -1,5 +1,9 @@
-//! Discrete-event cluster simulator (paper-scale experiments). See event.rs.
+//! Discrete-event cluster simulator (paper-scale experiments). See event.rs
+//! for the event core and scale.rs for the time-virtualized million-client
+//! harness that replays simulated clients against the *real* admission,
+//! order-buffer, and cache code.
 pub mod event;
 pub mod model;
 pub mod cluster;
 pub mod workload;
+pub mod scale;

@@ -33,9 +33,10 @@
 use std::collections::{BTreeMap, HashMap};
 use std::io;
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::metrics::GetBatchMetrics;
+use crate::util::clock::{Clock, RealClock};
 
 use super::engine::{Backend, ChunkSource, EntryReader, ObjectStat, StoreError};
 
@@ -72,7 +73,10 @@ struct ObjMeta {
     /// PUT-time CRC-32 sidecar learned by the same probe, when the inner
     /// tier stores one — kept so `stat` answers without a second probe.
     crc: Option<u32>,
-    validated: Instant,
+    /// Stamp on the cache's clock ([`ChunkCache::with_clock`]) — compared
+    /// against the same clock by `remembered`, so grace windows age in
+    /// virtual time under the scale simulator.
+    validated_ns: u64,
 }
 
 #[derive(Default)]
@@ -92,6 +96,9 @@ pub struct ChunkCache {
     chunk_bytes: usize,
     state: Mutex<CacheState>,
     metrics: Option<Arc<GetBatchMetrics>>,
+    /// Coherence-grace aging runs on this clock (real in production,
+    /// virtual under the scale simulator).
+    clock: Arc<dyn Clock>,
     pub hits: crate::metrics::Counter,
     pub misses: crate::metrics::Counter,
     pub evictions: crate::metrics::Counter,
@@ -120,11 +127,23 @@ impl ChunkCache {
         chunk_bytes: usize,
         metrics: Option<Arc<GetBatchMetrics>>,
     ) -> ChunkCache {
+        ChunkCache::with_clock(capacity, chunk_bytes, metrics, RealClock::new())
+    }
+
+    /// Cache on an explicit clock (the simulation-harness entry point; the
+    /// production constructor above pins the real clock).
+    pub fn with_clock(
+        capacity: u64,
+        chunk_bytes: usize,
+        metrics: Option<Arc<GetBatchMetrics>>,
+        clock: Arc<dyn Clock>,
+    ) -> ChunkCache {
         ChunkCache {
             capacity,
             chunk_bytes: chunk_bytes.max(1),
             state: Mutex::new(CacheState::default()),
             metrics,
+            clock,
             hits: Default::default(),
             misses: Default::default(),
             evictions: Default::default(),
@@ -313,9 +332,10 @@ impl ChunkCache {
         grace: Duration,
     ) -> Option<(u64, u64, Option<u32>)> {
         let st = self.state.lock().unwrap();
+        let now = self.clock.now_ns();
         st.lens
             .get(&(bucket.to_string(), obj.to_string()))
-            .filter(|m| m.validated.elapsed() <= grace)
+            .filter(|m| now.saturating_sub(m.validated_ns) <= grace.as_nanos() as u64)
             .map(|m| (m.len, m.version, m.crc))
     }
 
@@ -335,7 +355,7 @@ impl ChunkCache {
         let mut st = self.state.lock().unwrap();
         let prev = st.lens.insert(
             (bucket.to_string(), obj.to_string()),
-            ObjMeta { len, version, crc, validated: Instant::now() },
+            ObjMeta { len, version, crc, validated_ns: self.clock.now_ns() },
         );
         if version != 0 || prev.map(|m| m.version != 0).unwrap_or(false) {
             let victims: Vec<ChunkKey> = st

@@ -10,6 +10,12 @@ use std::time::{Duration, Instant};
 pub trait Clock: Send + Sync {
     fn now_ns(&self) -> u64;
     fn sleep(&self, d: Duration);
+    /// `true` when time only moves because somebody advances it. Blocking
+    /// primitives (condvar waits) must not park on a virtual clock — time
+    /// would never pass for them; they advance the clock instead.
+    fn is_virtual(&self) -> bool {
+        false
+    }
 }
 
 /// Wall (monotonic) clock.
@@ -52,6 +58,12 @@ impl VirtualClock {
     pub fn advance(&self, d: Duration) {
         self.ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
     }
+    /// Jump forward to an absolute instant (no-op if `ns` is in the past) —
+    /// the discrete-event simulator sets the clock to each event's
+    /// timestamp before dispatching it.
+    pub fn advance_to(&self, ns: u64) {
+        self.ns.fetch_max(ns, Ordering::SeqCst);
+    }
 }
 
 impl Clock for VirtualClock {
@@ -60,6 +72,9 @@ impl Clock for VirtualClock {
     }
     fn sleep(&self, d: Duration) {
         self.advance(d);
+    }
+    fn is_virtual(&self) -> bool {
+        true
     }
 }
 
@@ -98,6 +113,17 @@ mod tests {
         assert_eq!(c.now_ns(), 5_000_000);
         c.advance(Duration::from_micros(1));
         assert_eq!(c.now_ns(), 5_001_000);
+    }
+
+    #[test]
+    fn advance_to_is_monotonic() {
+        let c = VirtualClock::default();
+        c.advance_to(7_000);
+        assert_eq!(c.now_ns(), 7_000);
+        c.advance_to(3_000); // the past: no-op
+        assert_eq!(c.now_ns(), 7_000);
+        assert!(c.is_virtual());
+        assert!(!RealClock::default().is_virtual());
     }
 
     #[test]

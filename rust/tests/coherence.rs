@@ -9,14 +9,17 @@
 //! The overwrite-race property reads its RNG seed from
 //! `GETBATCH_COHERENCE_SEED` so CI can pin the interleavings it exercises.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::{payload, seeded_tempdir, serving_rb, start_cluster, sum};
 use getbatch::batch::request::{BatchEntry, BatchRequest};
 use getbatch::client::sdk::Client;
 use getbatch::cluster::placement;
-use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::config::GetBatchConfig;
 use getbatch::proto::http::HttpClient;
 use getbatch::proto::wire;
 use getbatch::store::{Backend, CachedBackend, ChunkCache, LocalBackend};
@@ -25,20 +28,13 @@ use getbatch::testutil::prop::{check, PropConfig};
 use getbatch::util::rng::Rng;
 use getbatch::Cluster;
 
-fn payload(n: usize, seed: u64) -> Vec<u8> {
-    let mut rng = Rng::new(seed);
-    let mut buf = vec![0u8; n];
-    rng.fill_bytes(&mut buf);
-    buf
-}
-
 /// Serving cluster: 2 targets fronting bucket `rb` from `storage_addr`
 /// through each target's chunk cache, with the given coherence grace.
 fn serving(storage_addr: &str, grace: Duration) -> Cluster {
-    let c = Cluster::start(ClusterConfig {
-        targets: 2,
-        http_workers: 4,
-        getbatch: GetBatchConfig {
+    serving_rb(
+        storage_addr,
+        2,
+        GetBatchConfig {
             chunk_bytes: 4 << 10,
             dt_buffer_bytes: 64 << 10,
             cache_bytes: 4 << 20,
@@ -46,11 +42,7 @@ fn serving(storage_addr: &str, grace: Duration) -> Cluster {
             coherence_grace: grace,
             ..Default::default()
         },
-        ..Default::default()
-    })
-    .unwrap();
-    c.route_remote_bucket("rb", &[storage_addr], true);
-    c
+    )
 }
 
 fn batch_bytes(client: &Client, obj: &str) -> Vec<u8> {
@@ -59,10 +51,6 @@ fn batch_bytes(client: &Client, obj: &str) -> Vec<u8> {
         .unwrap();
     assert_eq!(items.len(), 1);
     items[0].data().expect("entry present").to_vec()
-}
-
-fn sum(c: &Cluster, f: impl Fn(&getbatch::cluster::node::TargetNode) -> u64) -> u64 {
-    c.targets.iter().map(f).sum()
 }
 
 /// The acceptance scenario: overwrite through node A, GetBatch through the
@@ -239,10 +227,10 @@ fn delete_through_cluster_is_visible_despite_warm_caches() {
 #[test]
 fn proxy_invalidate_fans_out_to_every_target() {
     // Local cached bucket, long grace: only the fan-out can flip the bytes.
-    let c = Cluster::start(ClusterConfig {
-        targets: 2,
-        http_workers: 4,
-        getbatch: GetBatchConfig {
+    let c = start_cluster(
+        2,
+        4,
+        GetBatchConfig {
             chunk_bytes: 4 << 10,
             cache_bytes: 1 << 20,
             coherence_grace: Duration::from_secs(60),
@@ -254,9 +242,7 @@ fn proxy_invalidate_fans_out_to_every_target() {
             }],
             ..Default::default()
         },
-        ..Default::default()
-    })
-    .unwrap();
+    );
     let client = Client::new(&c.proxy_addr());
     let v1 = payload(16 << 10, 51);
     c.put_direct("hot", "o", &v1).unwrap();
@@ -315,14 +301,7 @@ fn prop_concurrent_overwrites_never_interleave_versions() {
 }
 
 fn overwrite_race(chunk: usize, obj_len: usize, writes: usize) -> Result<(), String> {
-    static SEQ: AtomicUsize = AtomicUsize::new(0);
-    let base = std::env::temp_dir().join(format!(
-        "gbcoh-race-{}-{}",
-        std::process::id(),
-        SEQ.fetch_add(1, Ordering::Relaxed)
-    ));
-    let _ = std::fs::remove_dir_all(&base);
-    std::fs::create_dir_all(&base).map_err(|e| e.to_string())?;
+    let base = seeded_tempdir("coh-race");
     let local = Arc::new(LocalBackend::open(&base, 1).map_err(|e| e.to_string())?);
     let cache = Arc::new(ChunkCache::new(1 << 20, chunk, None));
     let cached = Arc::new(CachedBackend::new(

@@ -1,0 +1,89 @@
+//! Shared support for the integration suites: cluster spin-up, seeded
+//! payloads/tempdirs, metric scraping, and the bounded retry-once guard
+//! for timing-sensitive comparative assertions.
+//!
+//! Compiled into each `[[test]]` target via `mod common;` — not every
+//! suite uses every helper, hence the file-wide `dead_code` allow.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use getbatch::cluster::node::TargetNode;
+use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::util::rng::Rng;
+use getbatch::Cluster;
+
+/// Seeded random payload: same (n, seed) ⇒ same bytes, in every suite.
+pub fn payload(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut buf = vec![0u8; n];
+    rng.fill_bytes(&mut buf);
+    buf
+}
+
+/// Start a cluster with the given shape and GetBatch knobs (everything
+/// else defaulted) — the spin-up line every suite used to hand-roll.
+pub fn start_cluster(targets: usize, http_workers: usize, gb: GetBatchConfig) -> Cluster {
+    Cluster::start(ClusterConfig {
+        targets,
+        http_workers,
+        getbatch: gb,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Serving cluster fronting bucket `rb` from `storage_addr` through each
+/// target's chunk cache — the standard tiered-test topology.
+pub fn serving_rb(storage_addr: &str, targets: usize, gb: GetBatchConfig) -> Cluster {
+    let c = start_cluster(targets, 4, gb);
+    c.route_remote_bucket("rb", &[storage_addr], true);
+    c
+}
+
+/// Sum a per-target counter across the cluster (metric scraping).
+pub fn sum(c: &Cluster, f: impl Fn(&TargetNode) -> u64) -> u64 {
+    c.targets.iter().map(f).sum()
+}
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Fresh process-unique temp directory for store-backed tests; caller (or
+/// the OS) cleans up.
+pub fn seeded_tempdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "gb-{tag}-{}-{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// Bounded retry-once guard for timing-sensitive *comparative* assertions
+/// (P99 ON beats OFF, wall-time ON beats OFF): genuinely broken behavior
+/// fails twice in a row, a single CI scheduling hiccup does not. The
+/// repro seed is printed on every failure path so a flake can be replayed.
+pub fn retry_once<T>(
+    label: &str,
+    repro_seed: u64,
+    mut attempt: impl FnMut() -> Result<T, String>,
+) -> T {
+    match attempt() {
+        Ok(v) => v,
+        Err(first) => {
+            eprintln!(
+                "{label}: first attempt failed ({first}); retrying once \
+                 (repro seed {repro_seed})"
+            );
+            match attempt() {
+                Ok(v) => v,
+                Err(second) => {
+                    panic!("{label}: failed twice — {second} (repro seed {repro_seed})")
+                }
+            }
+        }
+    }
+}

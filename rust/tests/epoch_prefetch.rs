@@ -11,24 +11,19 @@
 //! caches. Prefetch calls go client → serving proxy → (307) → the entry's
 //! HRW owner target — the same node whose cache serves the demand read.
 
+mod common;
+
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use common::{payload, retry_once, serving_rb, sum};
 use getbatch::client::loader::{AccessMode, DataLoader, Manifest, SampleRef};
 use getbatch::client::prefetch::PrefetchPlanner;
 use getbatch::client::sdk::Client;
-use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::config::GetBatchConfig;
 use getbatch::proto::http::HttpClient;
 use getbatch::testutil::fixtures;
-use getbatch::util::rng::Rng;
 use getbatch::Cluster;
-
-fn payload(n: usize, seed: u64) -> Vec<u8> {
-    let mut rng = Rng::new(seed);
-    let mut buf = vec![0u8; n];
-    rng.fill_bytes(&mut buf);
-    buf
-}
 
 /// Stage `n` standalone objects of `size` bytes in the storage cluster's
 /// `rb` bucket and return the manifest the loaders will iterate.
@@ -48,19 +43,7 @@ fn stage(storage: &Cluster, n: usize, size: usize) -> Manifest {
 }
 
 fn serving(storage_addr: &str, gb: GetBatchConfig) -> Cluster {
-    let c = Cluster::start(ClusterConfig {
-        targets: 3,
-        http_workers: 4,
-        getbatch: gb,
-        ..Default::default()
-    })
-    .unwrap();
-    c.route_remote_bucket("rb", &[storage_addr], true);
-    c
-}
-
-fn sum(c: &Cluster, f: impl Fn(&getbatch::cluster::node::TargetNode) -> u64) -> u64 {
-    c.targets.iter().map(f).sum()
+    serving_rb(storage_addr, 3, gb)
 }
 
 /// Drive one full epoch; with a planner attached, wait for its background
@@ -172,9 +155,11 @@ fn second_epoch_wall_time_prefetch_on_beats_off() {
     let storage = fixtures::cluster(1);
     let manifest = stage(&storage, 8, 40 << 10); // batches of 2 ⇒ 4 batches
     // Every storage read now sleeps: a cold fill is expensive, which is
-    // exactly the gap prefetch exists to hide.
+    // exactly the gap prefetch exists to hide. 25 ms is deliberately large
+    // relative to CI scheduling jitter so the ON/OFF gap cannot be drowned
+    // out by a noisy runner.
     for t in &storage.targets {
-        t.store.local().set_latency(Duration::from_millis(10), 1.0);
+        t.store.local().set_latency(Duration::from_millis(25), 1.0);
     }
 
     let run = |with_prefetch: bool| -> Duration {
@@ -218,12 +203,21 @@ fn second_epoch_wall_time_prefetch_on_beats_off() {
         t0.elapsed()
     };
 
-    let off = run(false);
-    let on = run(true);
-    assert!(
-        on < off,
-        "prefetch ON epoch ({on:?}) must strictly beat OFF ({off:?}) under injected latency"
-    );
+    // Wall-time comparison under injected latency is timing-sensitive:
+    // the bounded retry-once guard absorbs a single CI scheduling hiccup,
+    // while a real regression fails both attempts. Seed 7 is the loader
+    // shuffle seed both runs share.
+    retry_once("epoch_prefetch::on_beats_off", 7, || {
+        let off = run(false);
+        let on = run(true);
+        if on >= off {
+            return Err(format!(
+                "prefetch ON epoch ({on:?}) must strictly beat OFF ({off:?}) \
+                 under injected latency"
+            ));
+        }
+        Ok(())
+    });
 }
 
 /// (c) The memory invariant and coherence under prefetch: resident cache

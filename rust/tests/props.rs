@@ -472,6 +472,104 @@ fn prop_versioned_cache_matches_oracle_and_respects_capacity() {
 }
 
 #[test]
+fn prop_epoch_plan_permutation_and_rank_shards_partition() {
+    // The PR 8 epoch shuffle, as properties: for arbitrary (manifest
+    // length, batch size, seed, epoch) the plan's batches concatenate to a
+    // true permutation of 0..n (every sample exactly once, full batches
+    // except possibly the last), recomputing the plan is deterministic,
+    // and the rank-sharded slices `i ≡ r (mod world)` partition the batch
+    // index space exactly — no batch dropped, none served twice.
+    use getbatch::client::loader::EpochPlan;
+
+    check(
+        PropConfig { cases: 48, ..Default::default() },
+        |rng: &mut Rng, size: usize| {
+            let n = rng.usize_below(size * 8 + 16) + 1;
+            let batch = rng.usize_below(9) + 1;
+            let world = rng.usize_below(5) + 1;
+            (n, batch, world, rng.below(1 << 48), rng.below(64))
+        },
+        |&(n, batch, world, seed, epoch)| {
+            let plan = EpochPlan::new(n, batch, seed, epoch);
+            let mut flat = Vec::with_capacity(n);
+            for i in 0..plan.n_batches() {
+                let b = plan.batch(i).ok_or("n_batches lied")?;
+                if b.is_empty() {
+                    return Err(format!("batch {i} is empty"));
+                }
+                if i + 1 < plan.n_batches() && b.len() != batch {
+                    return Err(format!(
+                        "non-final batch {i} has {} samples, want {batch}",
+                        b.len()
+                    ));
+                }
+                flat.extend_from_slice(b);
+            }
+            let mut sorted = flat;
+            sorted.sort_unstable();
+            if sorted != (0..n).collect::<Vec<_>>() {
+                return Err(format!("batches are not a permutation of 0..{n}"));
+            }
+            let again = EpochPlan::new(n, batch, seed, epoch);
+            for i in 0..plan.n_batches() {
+                if plan.batch(i) != again.batch(i) {
+                    return Err(format!("recomputed plan differs at batch {i}"));
+                }
+            }
+            let mut claimed = vec![0u32; plan.n_batches()];
+            for r in 0..world {
+                for &i in &plan.rank_batches(r, world) {
+                    if i % world != r {
+                        return Err(format!(
+                            "rank {r} of {world} claimed batch {i} (≢ {r} mod {world})"
+                        ));
+                    }
+                    claimed[i] += 1;
+                }
+            }
+            if claimed.iter().any(|&c| c != 1) {
+                return Err(format!("rank shards are not a partition: {claimed:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The bench-manifest gate: the scenario list recorded in
+/// `BENCH_hotpath.json` must match the `bench("…")` calls of
+/// `rust/benches/hotpath.rs` exactly — same names, same order — so a
+/// scenario added, renamed, or dropped without updating the recorded
+/// series fails CI instead of silently desynchronizing the benchmark
+/// record from the code.
+#[test]
+fn bench_manifest_matches_hotpath_scenarios() {
+    let manifest =
+        Value::parse(include_str!("../../BENCH_hotpath.json")).expect("BENCH_hotpath.json parses");
+    let recorded: Vec<String> = manifest
+        .get("scenarios")
+        .and_then(|s| s.as_arr())
+        .expect("scenarios array present")
+        .iter()
+        .map(|s| s.str_field("name").expect("scenario has a name").to_string())
+        .collect();
+
+    let mut in_source = Vec::new();
+    for line in include_str!("../benches/hotpath.rs").lines() {
+        if let Some(rest) = line.trim_start().strip_prefix("bench(\"") {
+            let name = rest.split('"').next().unwrap();
+            in_source.push(name.to_string());
+        }
+    }
+    assert!(!in_source.is_empty(), "no bench(\"…\") calls found in hotpath.rs");
+    assert_eq!(
+        recorded, in_source,
+        "BENCH_hotpath.json scenarios drifted from rust/benches/hotpath.rs — \
+         regenerate the recorded series (scripts/record_hotpath.sh) when \
+         adding, renaming, or removing a bench"
+    );
+}
+
+#[test]
 fn prop_hrw_stability_under_node_addition() {
     // adding a node must move only keys that now rank it first
     check(

@@ -1,0 +1,157 @@
+//! The scale gate: time-virtualized populations driven through the *real*
+//! admission / order-buffer / cache code by `sim::scale`. In release mode
+//! (CI's `sim_scale` job) the storm scenario registers ≥ 1,000,000 clients
+//! in under 60 s of wall clock; debug builds default to a 50,000-client
+//! smoke of the same paths so plain `cargo test` stays fast.
+//!
+//! Knobs:
+//! - `GETBATCH_SIM_SEED`    — workload seed (CI pins two; failures print it)
+//! - `GETBATCH_SIM_CLIENTS` — population override for either build profile
+//!
+//! Every scenario asserts the four harness invariants from the report —
+//! peak resident ≤ `dt_buffer_bytes`, cache occupancy ≤ `cache_bytes`,
+//! zero patience-valve overruns, bounded admission wait — and the storm
+//! scenario additionally proves determinism: two same-seed runs produce
+//! byte-identical reports (trace hash included).
+
+use std::time::Instant;
+
+use getbatch::sim::scale::{run_scale, ScaleConfig, ScaleReport};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn seed() -> u64 {
+    env_u64("GETBATCH_SIM_SEED", 0x5CA1E)
+}
+
+/// Full-scale population in release, a smoke-scale one in debug: the event
+/// loop is an order of magnitude slower without optimizations, and the
+/// million-client bar is the release job's to hold.
+fn population() -> u64 {
+    let default = if cfg!(debug_assertions) { 50_000 } else { 1_000_000 };
+    env_u64("GETBATCH_SIM_CLIENTS", default)
+}
+
+fn assert_invariants(tag: &str, seed: u64, cfg: &ScaleConfig, r: &ScaleReport) {
+    assert_eq!(
+        r.completed, r.clients,
+        "{tag}: every client must complete (seed {seed})"
+    );
+    assert!(
+        r.peak_resident <= r.dt_buffer_bytes,
+        "{tag}: peak resident {} exceeded dt_buffer_bytes {} (seed {seed})",
+        r.peak_resident,
+        r.dt_buffer_bytes
+    );
+    assert!(
+        r.cache_peak <= r.cache_bytes,
+        "{tag}: cache occupancy {} exceeded cache_bytes {} (seed {seed})",
+        r.cache_peak,
+        r.cache_bytes
+    );
+    assert_eq!(
+        r.overruns, 0,
+        "{tag}: backpressured deliveries must never trip the patience valve (seed {seed})"
+    );
+    assert!(
+        r.max_admission_wait_ns <= cfg.starvation_bound_ns,
+        "{tag}: a registration waited {} ns, past the {} ns fairness bound (seed {seed})",
+        r.max_admission_wait_ns,
+        cfg.starvation_bound_ns
+    );
+}
+
+/// The headline gate: a uniform small-object storm at the full population,
+/// run twice with the same seed. Invariants hold on both runs, the two
+/// reports are identical down to the trace hash, and (release only) each
+/// run fits the 60 s wall budget.
+#[test]
+fn storm_at_full_population_is_bounded_deterministic_and_fast() {
+    let (seed, clients) = (seed(), population());
+    let cfg = ScaleConfig::storm(clients, seed);
+
+    let t0 = Instant::now();
+    let first = run_scale(&cfg);
+    let first_wall = t0.elapsed();
+    let t1 = Instant::now();
+    let second = run_scale(&cfg);
+    let second_wall = t1.elapsed();
+
+    println!(
+        "storm: {} clients, {} events, virtual {:.3} s, wall {:.1?} + {:.1?}, \
+         peak {}/{} B, cache {}/{} B, rejected {}, backpressured {}, \
+         trace {:#018x} (seed {seed})",
+        first.clients,
+        first.events,
+        first.virtual_ns as f64 / 1e9,
+        first_wall,
+        second_wall,
+        first.peak_resident,
+        first.dt_buffer_bytes,
+        first.cache_peak,
+        first.cache_bytes,
+        first.rejected,
+        first.backpressured,
+        first.trace_hash,
+    );
+
+    assert_invariants("storm", seed, &cfg, &first);
+    assert_eq!(
+        first, second,
+        "same seed must reproduce the identical report, trace hash included (seed {seed})"
+    );
+
+    // The wall budget is a release-profile promise; debug runs the same
+    // paths at smoke scale without timing them.
+    #[cfg(not(debug_assertions))]
+    for (tag, wall) in [("first", first_wall), ("second", second_wall)] {
+        assert!(
+            wall.as_secs() < 60,
+            "storm {tag} run took {wall:?}, past the 60 s wall budget \
+             ({clients} clients, seed {seed})"
+        );
+    }
+}
+
+/// Zipf hot-shard mix at a quarter of the population: the cache carries the
+/// load (hits strictly outnumber misses) and every invariant still holds.
+#[test]
+fn zipf_hot_shards_hold_invariants_and_concentrate_hits() {
+    let (seed, clients) = (seed(), population() / 4);
+    let cfg = ScaleConfig::zipf(clients.max(1), seed);
+    let r = run_scale(&cfg);
+    assert_invariants("zipf", seed, &cfg, &r);
+    assert!(
+        r.cache_hits > r.cache_misses,
+        "zipf head must be cache-resident: {} hits vs {} misses (seed {seed})",
+        r.cache_hits,
+        r.cache_misses
+    );
+}
+
+/// EpochPlan replay at a quarter of the population: the training-fleet
+/// access pattern (PR 8 shuffles) through the same real components.
+#[test]
+fn epoch_replay_holds_invariants_at_scale() {
+    let (seed, clients) = (seed(), population() / 4);
+    let cfg = ScaleConfig::epoch_replay(clients.max(1), seed);
+    let r = run_scale(&cfg);
+    assert_invariants("epoch_replay", seed, &cfg, &r);
+    assert!(r.cache_hits + r.cache_misses > 0, "replay exercised the cache (seed {seed})");
+}
+
+/// The trace hash is a real fingerprint: a different seed produces a
+/// different trace (at smoke scale — this is a property of the hash, not
+/// of the population).
+#[test]
+fn different_seeds_produce_different_traces() {
+    let seed = seed();
+    let a = run_scale(&ScaleConfig::storm(10_000, seed));
+    let b = run_scale(&ScaleConfig::storm(10_000, seed ^ 0xDEAD_BEEF));
+    assert_ne!(
+        a.trace_hash, b.trace_hash,
+        "distinct seeds must not collide on the trace hash (seed {seed})"
+    );
+}

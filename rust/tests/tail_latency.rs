@@ -4,14 +4,17 @@
 //! load, and the version pin failing a read closed when an overwrite races
 //! a hedge/failover re-open.
 
+mod common;
+
 use std::collections::HashMap;
 use std::io::{self, Write};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use common::{payload, retry_once, start_cluster, sum};
 use getbatch::batch::request::{BatchEntry, BatchRequest};
 use getbatch::client::sdk::Client;
-use getbatch::config::{ClusterConfig, GetBatchConfig};
+use getbatch::config::GetBatchConfig;
 use getbatch::proto::http::{
     range_unsatisfiable, resolve_range, serve_ranged_bytes_after, Handler, HttpServer, RangeSpec,
     Request, Response,
@@ -19,14 +22,6 @@ use getbatch::proto::http::{
 use getbatch::proto::wire;
 use getbatch::store::{Backend, RemoteBackend};
 use getbatch::util::crc32;
-use getbatch::util::rng::Rng;
-
-fn payload(n: usize, seed: u64) -> Vec<u8> {
-    let mut rng = Rng::new(seed);
-    let mut buf = vec![0u8; n];
-    rng.fill_bytes(&mut buf);
-    buf
-}
 
 /// A controllable storage endpoint over an in-memory object map (keys
 /// `bucket/obj`):
@@ -123,10 +118,10 @@ fn hedged_getbatch_is_byte_identical_and_the_backup_wins() {
     *slow.delay.lock().unwrap() = Duration::from_millis(120);
     let fast = stub_endpoint(objects, Some(1), None);
 
-    let c = getbatch::Cluster::start(ClusterConfig {
-        targets: 1,
-        http_workers: 4,
-        getbatch: GetBatchConfig {
+    let c = start_cluster(
+        1,
+        4,
+        GetBatchConfig {
             chunk_bytes: 16 << 10,
             dt_buffer_bytes: 64 << 10,
             hedge_min: Duration::from_millis(5),
@@ -134,9 +129,7 @@ fn hedged_getbatch_is_byte_identical_and_the_backup_wins() {
             endpoint_probe: Duration::from_secs(60),
             ..Default::default()
         },
-        ..Default::default()
-    })
-    .unwrap();
+    );
     c.route_remote_bucket("rb", &[&slow.addr, &fast.addr], false);
     let client = Client::new(&c.proxy_addr());
     let entries: Vec<BatchEntry> = staged.iter().map(|(n, _)| BatchEntry::obj("rb", n)).collect();
@@ -146,18 +139,15 @@ fn hedged_getbatch_is_byte_identical_and_the_backup_wins() {
         assert!(!item.is_missing(), "{name} must not degrade to a placeholder");
         assert_eq!(item.data().unwrap(), &data[..], "{name} byte-identical under hedging");
     }
-    let hedges: u64 = c.targets.iter().map(|t| t.metrics.hedges.get()).sum();
-    assert!(hedges > 0, "straggling reads launched hedges");
-    let wins: u64 = c.targets.iter().map(|t| t.metrics.hedge_wins.get()).sum();
-    assert!(wins > 0, "the fast endpoint won races");
-    let hard: u64 = c.targets.iter().map(|t| t.metrics.hard_failures.get()).sum();
-    assert_eq!(hard, 0, "no aborted requests");
+    assert!(sum(&c, |t| t.metrics.hedges.get()) > 0, "straggling reads launched hedges");
+    assert!(sum(&c, |t| t.metrics.hedge_wins.get()) > 0, "the fast endpoint won races");
+    assert_eq!(sum(&c, |t| t.metrics.hard_failures.get()), 0, "no aborted requests");
 
     // The losing primaries eventually answer (120 ms later); their usable
     // responses are dropped and counted as canceled.
     let mut canceled = 0;
     for _ in 0..100 {
-        canceled = c.targets.iter().map(|t| t.metrics.hedges_canceled.get()).sum();
+        canceled = sum(&c, |t| t.metrics.hedges_canceled.get());
         if canceled > 0 {
             break;
         }
@@ -175,10 +165,10 @@ fn tail_run(hedge_quantile: f64) -> (Vec<Duration>, u64) {
     *slow.delay.lock().unwrap() = Duration::from_millis(150);
     let fast = stub_endpoint(objects, Some(1), None);
 
-    let c = getbatch::Cluster::start(ClusterConfig {
-        targets: 1,
-        http_workers: 8,
-        getbatch: GetBatchConfig {
+    let c = start_cluster(
+        1,
+        8,
+        GetBatchConfig {
             chunk_bytes: 16 << 10,
             dt_buffer_bytes: 64 << 10,
             // Past 50 ms EWMA the straggler is deprioritized (not opened);
@@ -189,9 +179,7 @@ fn tail_run(hedge_quantile: f64) -> (Vec<Duration>, u64) {
             hedge_min: Duration::from_millis(25),
             ..Default::default()
         },
-        ..Default::default()
-    })
-    .unwrap();
+    );
     c.route_remote_bucket("rb", &[&slow.addr, &fast.addr], false);
 
     let staged = Arc::new(staged);
@@ -219,7 +207,7 @@ fn tail_run(hedge_quantile: f64) -> (Vec<Duration>, u64) {
             durations.extend(h.join().unwrap());
         }
     });
-    let hedges: u64 = c.targets.iter().map(|t| t.metrics.hedges.get()).sum();
+    let hedges = sum(&c, |t| t.metrics.hedges.get());
     (durations, hedges)
 }
 
@@ -234,18 +222,30 @@ fn hedging_cuts_the_read_p99_under_a_straggling_endpoint() {
     // Unhedged, every pick of the straggler costs its full 150 ms delay,
     // so the P99 sits at the straggler's latency; hedged, those reads are
     // raced to the fast endpoint after the 25 ms floor and the P99 must
-    // come down strictly.
-    let (unhedged, hedges_off) = tail_run(0.0);
-    let (hedged, hedges_on) = tail_run(0.95);
-    assert_eq!(hedges_off, 0, "quantile 0.0 disables hedging outright");
-    assert!(hedges_on > 0, "the straggler forced hedges");
+    // come down strictly. The comparison is timing-sensitive, so it runs
+    // under the bounded retry-once guard: one CI scheduling hiccup is
+    // absorbed, a real regression fails both attempts.
+    retry_once("tail_latency::hedged_p99", 1300, || {
+        let (unhedged, hedges_off) = tail_run(0.0);
+        let (hedged, hedges_on) = tail_run(0.95);
+        // Counter wiring is deterministic — a failure here is a real bug,
+        // never a flake, so these stay hard asserts inside the guard.
+        assert_eq!(hedges_off, 0, "quantile 0.0 disables hedging outright");
+        assert!(hedges_on > 0, "the straggler forced hedges");
 
-    let (p_off, p_on) = (p99(unhedged), p99(hedged));
-    assert!(
-        p_off >= Duration::from_millis(100),
-        "unhedged P99 must feel the 150 ms straggler, got {p_off:?}"
-    );
-    assert!(p_on < p_off, "hedging must cut the P99: hedged {p_on:?} vs unhedged {p_off:?}");
+        let (p_off, p_on) = (p99(unhedged), p99(hedged));
+        if p_off < Duration::from_millis(100) {
+            return Err(format!(
+                "unhedged P99 must feel the 150 ms straggler, got {p_off:?}"
+            ));
+        }
+        if p_on >= p_off {
+            return Err(format!(
+                "hedging must cut the P99: hedged {p_on:?} vs unhedged {p_off:?}"
+            ));
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -1,0 +1,92 @@
+#!/usr/bin/env bash
+# Record the `hotpath` bench series per the EXPERIMENTS.md protocol:
+# capture the machine fingerprint, run the series 3x release-mode, take
+# per-scenario medians, fill BENCH_hotpath.json, and print the dated
+# results block to append to EXPERIMENTS.md.
+#
+# Run on the pinned baseline machine (needs a Rust toolchain + python3):
+#   scripts/record_hotpath.sh [extra cargo-bench flags...]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+command -v cargo >/dev/null || {
+    echo "error: cargo not found — recording needs a Rust toolchain" >&2
+    exit 1
+}
+command -v python3 >/dev/null || {
+    echo "error: python3 not found (the median/JSON step needs it)" >&2
+    exit 1
+}
+
+RUNS=3
+OUT_DIR="$(mktemp -d)"
+trap 'rm -rf "$OUT_DIR"' EXIT
+
+echo "== machine fingerprint =="
+CPU="$(lscpu 2>/dev/null | awk -F: '/Model name/ {gsub(/^ +/,"",$2); print $2; exit}')"
+NCPU="$(nproc 2>/dev/null || echo '?')"
+MEM_GIB="$(free -g 2>/dev/null | awk '/^Mem:/ {print $2}')"
+KERNEL="$(uname -r)"
+RUSTC="$(rustc --version)"
+COMMIT="$(git rev-parse --short HEAD 2>/dev/null || echo 'unknown')"
+DATE="$(date +%Y-%m-%d)"
+LABEL="${BENCH_MACHINE_LABEL:-$(hostname)}"
+printf 'machine:   %s\ncpu:       %s, %s cores\nmemory:    %s GiB\nkernel:    %s\nrustc:     %s\ndate:      %s\ncommit:    %s\n' \
+    "$LABEL" "${CPU:-unknown}" "$NCPU" "${MEM_GIB:-?}" "$KERNEL" "$RUSTC" "$DATE" "$COMMIT"
+echo
+
+for i in $(seq 1 "$RUNS"); do
+    echo "== run $i/$RUNS =="
+    cargo bench --bench hotpath -- "$@" | tee "$OUT_DIR/run$i.txt"
+done
+
+python3 - "$OUT_DIR" "$RUNS" "$LABEL" "$CPU, $NCPU cores" "${MEM_GIB:-0}" \
+    "$KERNEL" "$RUSTC" "$DATE" "$COMMIT" <<'PY'
+import json, re, statistics, sys
+
+out_dir, runs = sys.argv[1], int(sys.argv[2])
+label, cpu, mem, kernel, rustc, date, commit = sys.argv[3:10]
+
+UNIT_NS = {"ns": 1.0, "µs": 1e3, "us": 1e3, "ms": 1e6, "s": 1e9}
+line_re = re.compile(r"^(.*?)\s+([0-9.]+)(ns|µs|us|ms|s)/iter\s+\(\d+ iters\)$")
+
+with open("BENCH_hotpath.json") as f:
+    manifest = json.load(f)
+names = [s["name"] for s in manifest["scenarios"]]
+
+per_run = []  # run -> {name: ns}
+for i in range(1, runs + 1):
+    got = {}
+    with open(f"{out_dir}/run{i}.txt") as f:
+        for line in f:
+            m = line_re.match(line.rstrip())
+            if m and m.group(1).rstrip() in names:
+                got[m.group(1).rstrip()] = float(m.group(2)) * UNIT_NS[m.group(3)]
+    missing = [n for n in names if n not in got]
+    if missing:
+        sys.exit(f"run {i} is missing scenarios {missing} — "
+                 "bench output and BENCH_hotpath.json have drifted")
+    per_run.append(got)
+
+print("\n== medians (ns/iter) ==")
+for s in manifest["scenarios"]:
+    vals = [r[s["name"]] for r in per_run]
+    med = statistics.median(vals)
+    s["value"] = round(med, 1)
+    spread = (max(vals) - min(vals)) / med if med else 0.0
+    flag = "   ** deviation > 10% — rerun or annotate **" if spread > 0.10 else ""
+    print(f'{s["name"]:<44} {med:>14.1f}{flag}')
+
+manifest["machine"] = {
+    "label": label, "cpu": cpu, "memory_gib": int(mem) if mem.isdigit() else None,
+    "disk": manifest["machine"].get("disk"), "kernel": kernel, "rustc": rustc,
+    "isolation": manifest["machine"].get("isolation"),
+}
+manifest["date"], manifest["commit"] = date, commit
+with open("BENCH_hotpath.json", "w") as f:
+    json.dump(manifest, f, indent=2)
+    f.write("\n")
+print("\nBENCH_hotpath.json updated. Append the fingerprint above and the"
+      "\nverbatim run outputs to the Results section of EXPERIMENTS.md.")
+PY
