@@ -15,6 +15,12 @@ use crate::proto::wire::{self, paths};
 pub struct Client {
     http: HttpClient,
     proxy: String,
+    /// Multi-tenant QoS identity sent as `x-getbatch-tenant` on batch
+    /// requests; `None` means the cluster's default tenant.
+    tenant: Option<String>,
+    /// Priority class (`interactive` / `batch` / `bulk`) sent as
+    /// `x-getbatch-priority`; `None` means the cluster default.
+    priority: Option<String>,
 }
 
 #[derive(Debug)]
@@ -56,18 +62,42 @@ pub struct FetchStats {
 
 impl Client {
     pub fn new(proxy_addr: &str) -> Client {
-        Client { http: HttpClient::new(true), proxy: proxy_addr.to_string() }
+        Client {
+            http: HttpClient::new(true),
+            proxy: proxy_addr.to_string(),
+            tenant: None,
+            priority: None,
+        }
     }
 
     /// Per-request connection mode (no keep-alive) — the cold-connection
     /// baseline for ablations.
     pub fn without_reuse(proxy_addr: &str) -> Client {
-        Client { http: HttpClient::new(false), proxy: proxy_addr.to_string() }
+        Client {
+            http: HttpClient::new(false),
+            proxy: proxy_addr.to_string(),
+            tenant: None,
+            priority: None,
+        }
     }
 
     /// Inject artificial RTT per request hop (models datacenter distance).
     pub fn with_rtt(mut self, rtt: Duration) -> Client {
         self.http = self.http.with_rtt(rtt);
+        self
+    }
+
+    /// Identify this client's batch traffic as `tenant` (fair-share
+    /// admission groups by this identity).
+    pub fn with_tenant(mut self, tenant: &str) -> Client {
+        self.tenant = Some(tenant.to_string());
+        self
+    }
+
+    /// Priority class for this client's batch traffic: `interactive`,
+    /// `batch`, or `bulk` (load shedding drops lowest class first).
+    pub fn with_priority(mut self, priority: &str) -> Client {
+        self.priority = Some(priority.to_string());
         self
     }
 
@@ -106,7 +136,17 @@ impl Client {
         if req.opts.colocation {
             pq.push_str(&format!("?{}=true", wire::QPARAM_COLOC));
         }
-        let resp = self.http.request("GET", &self.proxy, &pq, &req.to_body())?;
+        // QoS identity headers (preserved across the 307 redirect to the
+        // DT's stream endpoint); legacy clients simply send none.
+        let mut headers: Vec<(&str, &str)> = Vec::new();
+        if let Some(t) = &self.tenant {
+            headers.push((wire::HDR_TENANT, t.as_str()));
+        }
+        if let Some(p) = &self.priority {
+            headers.push((wire::HDR_PRIORITY, p.as_str()));
+        }
+        let resp =
+            self.http.request_with_headers("GET", &self.proxy, &pq, &headers, &req.to_body())?;
         if resp.status != 200 {
             return Err(status_err(resp));
         }

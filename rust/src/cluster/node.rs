@@ -8,7 +8,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::config::ClusterConfig;
-use crate::dt::admission::{Admission, Admit, MemoryBudget};
+use crate::dt::admission::{Admission, Admit, MemoryBudget, Priority, TenantLedger};
 use crate::util::error as anyhow;
 use crate::dt::exec::{assemble, AssembleCtx, DtExec, DtRegistry};
 use crate::gateway::proxy::{make_proxy_handler, ProxyState, SmapHolder};
@@ -135,6 +135,15 @@ impl Cluster {
                 cfg.getbatch.budget_patience,
                 Some(Arc::clone(&metrics)),
             );
+            // Multi-tenant QoS: weighted fair-share ledger over the same
+            // (budget, chunk) geometry, so "every active tenant at its
+            // share" sums to exactly the budget's usable cap.
+            let ledger = TenantLedger::new(
+                cfg.getbatch.dt_buffer_bytes,
+                cfg.getbatch.chunk_bytes as u64,
+                cfg.getbatch.tenant_weight_map(),
+                Some(Arc::clone(&metrics)),
+            );
 
             // P2P fan-in: frames go straight to the DT registry.
             let reg2 = Arc::clone(&dt_registry);
@@ -157,6 +166,7 @@ impl Cluster {
                 bg: Arc::clone(&bg),
                 admission: Admission::new(cfg.getbatch.clone(), Arc::clone(&metrics), Arc::clone(&clock)),
                 budget: Arc::clone(&budget),
+                ledger,
                 cfg: cfg.clone(),
                 clock: Arc::clone(&clock),
                 http: HttpClient::new(true),
@@ -374,6 +384,9 @@ struct TargetState {
     bg: Arc<ThreadPool>,
     admission: Admission,
     budget: Arc<MemoryBudget>,
+    /// Multi-tenant QoS: per-tenant weighted fair-share token accounting
+    /// layered over `budget`.
+    ledger: Arc<TenantLedger>,
     cfg: ClusterConfig,
     clock: Arc<dyn Clock>,
     /// Pooled client for intra-cluster control traffic (invalidation
@@ -619,11 +632,24 @@ fn stream_entry(
 /// sub-second patience never advertises "retry immediately"). That window
 /// is how long this node lets producers block before forcing an admission,
 /// i.e. the time scale on which buffered memory realistically drains.
-/// Proxies propagate the header to the client untouched.
-fn reject_429(st: &Arc<TargetState>, msg: &str) -> Response {
+/// Lower priority classes are shed earlier (their thresholds sit further
+/// from critical), so their hint is scaled by the class backoff factor —
+/// bulk traffic backs off longest, keeping the recovered headroom for
+/// interactive work. Proxies propagate the header to the client untouched.
+fn reject_429(st: &Arc<TargetState>, class: Priority, msg: &str) -> Response {
     let p = st.cfg.getbatch.budget_patience;
     let secs = (p.as_secs() + u64::from(p.subsec_nanos() > 0)).max(1);
+    let secs = secs.saturating_mul(class.backoff_factor());
     Response::text(429, msg).with_header("retry-after", &secs.to_string())
+}
+
+/// Priority class for one registration: the wire value when valid, else the
+/// configured default (itself sanitized at config load; `Batch` as the
+/// final fallback).
+fn resolve_priority(st: &Arc<TargetState>, wire_priority: &str) -> Priority {
+    Priority::parse(wire_priority)
+        .or_else(|| Priority::parse(&st.cfg.getbatch.default_priority))
+        .unwrap_or(Priority::Batch)
 }
 
 /// Phase 1: allocate per-request execution state; resolve *our own* entries
@@ -638,27 +664,36 @@ fn target_dt_register(st: &Arc<TargetState>, req: Request) -> Response {
     st.registry.reap_stale();
     // Memory is a hard constraint: §2.4.3. Both the buffered-bytes gate and
     // the budget-overrun gate surface as 429 (client backs off + retries).
-    match st.admission.check_register() {
+    // Shedding is lowest-class-first: a bulk registration hits its (lower)
+    // threshold while interactive traffic still admits.
+    let class = resolve_priority(st, &reg.priority);
+    match st.admission.check_register_class(class) {
         Admit::Ok => {}
         Admit::RejectMemory { buffered, critical } => {
-            return reject_429(st, &format!("memory pressure: {buffered}/{critical}"));
+            st.metrics.tenant_shed(&reg.tenant);
+            return reject_429(st, class, &format!("memory pressure: {buffered}/{critical}"));
         }
         Admit::RejectOverrun { overruns, limit } => {
+            st.metrics.tenant_shed(&reg.tenant);
             return reject_429(
                 st,
+                class,
                 &format!("memory budget overrunning: {overruns} forced admissions (limit {limit})"),
             );
         }
     }
     st.metrics.dt_requests.inc();
     st.metrics.dt_inflight.add(1);
+    st.metrics.tenant_admit(&reg.tenant);
     // The execution's reorder buffer reserves against the node's enforced
-    // memory budget — producers block under pressure (§2.4.3).
-    let exec = st.registry.register(DtExec::with_budget(
+    // memory budget and the owning tenant's fair-share ledger — producers
+    // block under pressure (§2.4.3), over-share tenants block earlier.
+    let exec = st.registry.register(DtExec::with_qos(
         reg.req_id,
         reg.request,
         reg.num_senders,
         Arc::clone(&st.budget),
+        st.ledger.handle(&reg.tenant),
     ));
 
     // DT-local resolution (runs concurrently with remote senders).

@@ -66,6 +66,33 @@ impl BucketSpec {
     }
 }
 
+/// One tenant's weight in the DT fair-share ledger (see
+/// `dt::admission::TenantLedger`): a tenant's resident-bytes share of the
+/// data-plane budget is proportional to its weight over the sum of the
+/// *active* tenants' weights. Tenants not listed weigh 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantWeight {
+    /// Tenant name as carried by the `x-getbatch-tenant` header.
+    pub tenant: String,
+    /// Relative weight; clamped to ≥ 1 by `GetBatchConfig::sanitized`.
+    pub weight: u64,
+}
+
+impl TenantWeight {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("tenant", Value::str(&self.tenant))
+            .set("weight", Value::num(self.weight as f64))
+    }
+
+    pub fn from_json(v: &Value) -> Option<TenantWeight> {
+        Some(TenantWeight {
+            tenant: v.str_field("tenant")?.to_string(),
+            weight: v.u64_field("weight").unwrap_or(1),
+        })
+    }
+}
+
 /// The paper's dedicated GetBatch configuration section (§2.4.3).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GetBatchConfig {
@@ -169,6 +196,14 @@ pub struct GetBatchConfig {
     /// Per-bucket backend routing (see [`BucketSpec`]); buckets not listed
     /// are served by the node's local backend, uncached.
     pub buckets: Vec<BucketSpec>,
+    /// Multi-tenant QoS: per-tenant weights for the DT fair-share ledger
+    /// (see [`TenantWeight`]). Empty means every tenant weighs 1 (equal
+    /// shares among active tenants).
+    pub tenant_weights: Vec<TenantWeight>,
+    /// Priority class assumed for registrations that carry none
+    /// (`"interactive"`, `"batch"`, or `"bulk"`); legacy clients land
+    /// here. Invalid values sanitize back to the default.
+    pub default_priority: String,
 }
 
 impl Default for GetBatchConfig {
@@ -196,6 +231,8 @@ impl Default for GetBatchConfig {
             hedge_min: Duration::from_millis(25),
             hedge_max_inflight: 32,
             buckets: Vec::new(),
+            tenant_weights: Vec::new(),
+            default_priority: "batch".to_string(),
         }
     }
 }
@@ -239,7 +276,23 @@ impl GetBatchConfig {
         }
         c.hedge_quantile = c.hedge_quantile.clamp(0.0, 1.0);
         c.hedge_min = c.hedge_min.max(Duration::from_millis(1));
+        // A zero tenant weight would starve that tenant outright (its fair
+        // share collapses to the chunk floor even on an idle node) — clamp
+        // to the implicit default weight instead.
+        for tw in &mut c.tenant_weights {
+            tw.weight = tw.weight.max(1);
+        }
+        // An unknown default class would make every legacy registration
+        // unclassifiable; fall back to the stock default.
+        if crate::dt::admission::Priority::parse(&c.default_priority).is_none() {
+            c.default_priority = GetBatchConfig::default().default_priority;
+        }
         c
+    }
+
+    /// Tenant-weights list as the map the fair-share ledger consumes.
+    pub fn tenant_weight_map(&self) -> std::collections::BTreeMap<String, u64> {
+        self.tenant_weights.iter().map(|tw| (tw.tenant.clone(), tw.weight.max(1))).collect()
     }
 
     pub fn to_json(&self) -> Value {
@@ -266,6 +319,11 @@ impl GetBatchConfig {
             .set("hedge_min_ms", Value::num(self.hedge_min.as_millis() as f64))
             .set("hedge_max_inflight", Value::num(self.hedge_max_inflight as f64))
             .set("buckets", Value::Arr(self.buckets.iter().map(BucketSpec::to_json).collect()))
+            .set(
+                "tenant_weights",
+                Value::Arr(self.tenant_weights.iter().map(TenantWeight::to_json).collect()),
+            )
+            .set("default_priority", Value::str(&self.default_priority))
     }
 
     pub fn from_json(v: &Value) -> GetBatchConfig {
@@ -339,6 +397,15 @@ impl GetBatchConfig {
                 .and_then(|b| b.as_arr())
                 .map(|specs| specs.iter().filter_map(BucketSpec::from_json).collect())
                 .unwrap_or(d.buckets),
+            tenant_weights: v
+                .get("tenant_weights")
+                .and_then(|b| b.as_arr())
+                .map(|specs| specs.iter().filter_map(TenantWeight::from_json).collect())
+                .unwrap_or(d.tenant_weights),
+            default_priority: v
+                .str_field("default_priority")
+                .map(|s| s.to_string())
+                .unwrap_or(d.default_priority),
         }
     }
 }
@@ -503,6 +570,11 @@ mod tests {
                 cache: false,
             },
         ];
+        c.getbatch.tenant_weights = vec![
+            TenantWeight { tenant: "trainer-a".into(), weight: 3 },
+            TenantWeight { tenant: "trainer-b".into(), weight: 1 },
+        ];
+        c.getbatch.default_priority = "bulk".into();
         let back = ClusterConfig::from_json(&c.to_json());
         assert_eq!(back, c);
     }
@@ -589,6 +661,28 @@ mod tests {
         // Defaults untouched.
         let ok = GetBatchConfig::default().sanitized();
         assert_eq!(ok.prefetch_batches, GetBatchConfig::default().prefetch_batches);
+    }
+
+    #[test]
+    fn sanitized_clamps_tenant_qos_knobs() {
+        let c = GetBatchConfig {
+            tenant_weights: vec![
+                TenantWeight { tenant: "a".into(), weight: 0 },
+                TenantWeight { tenant: "b".into(), weight: 5 },
+            ],
+            default_priority: "turbo".into(),
+            ..Default::default()
+        }
+        .sanitized();
+        assert_eq!(c.tenant_weights[0].weight, 1, "zero weight clamped to 1");
+        assert_eq!(c.tenant_weights[1].weight, 5);
+        assert_eq!(c.default_priority, "batch", "unknown class falls back to default");
+        let m = c.tenant_weight_map();
+        assert_eq!(m["a"], 1);
+        assert_eq!(m["b"], 5);
+        let ok = GetBatchConfig { default_priority: "interactive".into(), ..Default::default() }
+            .sanitized();
+        assert_eq!(ok.default_priority, "interactive", "valid classes untouched");
     }
 
     #[test]

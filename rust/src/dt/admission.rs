@@ -13,6 +13,7 @@
 //! CPU/disk pressure stays *soft* — the DT inserts calibrated sleeps
 //! ([`Admission::throttle`]) while in-flight work proceeds.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -123,7 +124,10 @@ impl MemoryBudget {
     /// TCP backpressure: a sender whose chunk has no room is rescheduled
     /// instead of force-admitted.
     pub fn has_room(&self, bytes: u64) -> bool {
-        self.state.lock().unwrap().used + bytes <= self.cap
+        if bytes > self.budget {
+            return false;
+        }
+        self.state.lock().unwrap().used.checked_add(bytes).is_some_and(|total| total <= self.cap)
     }
 
     pub fn used(&self) -> u64 {
@@ -149,11 +153,19 @@ impl MemoryBudget {
         }
     }
 
-    /// Admit `bytes` iff it fits under the cap.
+    /// Admit `bytes` iff it fits under the cap. A single reservation larger
+    /// than the whole budget, or one that would overflow the resident-bytes
+    /// counter (a corrupt frame header), is rejected outright — the old
+    /// unchecked `used + bytes` wrapped in release builds and falsely
+    /// admitted unbounded reservations.
     pub fn try_reserve(&self, bytes: u64) -> bool {
-        let mut st = self.state.lock().unwrap();
-        if st.used + bytes > self.cap {
+        if bytes > self.budget {
             return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        match st.used.checked_add(bytes) {
+            Some(total) if total <= self.cap => {}
+            _ => return false,
         }
         self.admit_locked(&mut st, bytes);
         true
@@ -247,6 +259,282 @@ impl MemoryBudget {
     }
 }
 
+/// Priority class carried on DT registration (the `priority` field /
+/// `x-getbatch-priority` header). Declaration order is shed order: as
+/// buffered bytes approach `mem_critical_bytes` the lowest class is
+/// rejected first (`Bulk` < `Batch` < `Interactive`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Bulk,
+    Batch,
+    Interactive,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "bulk" => Some(Priority::Bulk),
+            "batch" => Some(Priority::Batch),
+            "interactive" => Some(Priority::Interactive),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Bulk => "bulk",
+            Priority::Batch => "batch",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    /// Multiplier on the 429 `Retry-After` hint: lower classes are asked to
+    /// back off longer, so freed room is retried into by interactive work
+    /// first.
+    pub fn backoff_factor(self) -> u64 {
+        match self {
+            Priority::Interactive => 1,
+            Priority::Batch => 2,
+            Priority::Bulk => 4,
+        }
+    }
+
+    /// Buffered-bytes level at which this class is shed: bulk at 1/2 of
+    /// critical, batch at 3/4, interactive at the full threshold.
+    fn shed_threshold(self, critical: u64) -> u64 {
+        match self {
+            Priority::Bulk => (critical / 2).max(1),
+            Priority::Batch => (critical - critical / 4).max(1),
+            Priority::Interactive => critical,
+        }
+    }
+}
+
+/// Weighted-fair per-tenant token accounting layered over [`MemoryBudget`].
+///
+/// The node-wide budget stays the hard cap; the ledger divides the
+/// budget's usable cap among *active* tenants (those holding in-flight
+/// executions or resident bytes) in proportion to their configured
+/// weights. A tenant under its share is always admitted (subject to the
+/// global budget); a tenant over its share may *borrow* only headroom not
+/// reserved for other active tenants. Idle shares are therefore
+/// borrowable, but a greedy tenant blocks before the global cap as soon
+/// as anyone else is active — `OrderBuffer::reserve` consults the ledger
+/// ahead of the budget and never patience-forces past a fair-share
+/// refusal (isolation would collapse if it did; head-of-line progress is
+/// still exempt, so the over-share tenant drains slowly instead of
+/// wedging).
+pub struct TenantLedger {
+    cap: u64,
+    chunk: u64,
+    weights: BTreeMap<String, u64>,
+    state: Mutex<LedgerState>,
+    metrics: Option<Arc<GetBatchMetrics>>,
+}
+
+#[derive(Default)]
+struct LedgerState {
+    tenants: BTreeMap<String, TenantUse>,
+}
+
+#[derive(Default)]
+struct TenantUse {
+    weight: u64,
+    used: u64,
+    inflight: u64,
+}
+
+impl TenantLedger {
+    /// Ledger over the same (budget, chunk) geometry as the node's
+    /// [`MemoryBudget`] — shares are fractions of the budget's usable cap,
+    /// so "every active tenant at its share" sums to exactly the cap.
+    pub fn new(
+        budget_bytes: u64,
+        chunk_bytes: u64,
+        weights: BTreeMap<String, u64>,
+        metrics: Option<Arc<GetBatchMetrics>>,
+    ) -> Arc<TenantLedger> {
+        let budget = budget_bytes.max(1);
+        let cap = budget.saturating_sub(chunk_bytes).max(1);
+        Arc::new(TenantLedger {
+            cap,
+            chunk: chunk_bytes.max(1),
+            weights,
+            state: Mutex::new(LedgerState::default()),
+            metrics,
+        })
+    }
+
+    /// Handle for one execution owned by `tenant`. The tenant counts as
+    /// active — its unused share reserved, not borrowable — for the
+    /// handle's lifetime plus as long as it holds resident bytes.
+    pub fn handle(self: &Arc<TenantLedger>, tenant: &str) -> TenantHandle {
+        let weight = self.weights.get(tenant).copied().unwrap_or(1).max(1);
+        let mut st = self.state.lock().unwrap();
+        let t = st.tenants.entry(tenant.to_string()).or_default();
+        t.weight = weight;
+        t.inflight += 1;
+        drop(st);
+        TenantHandle { ledger: Arc::clone(self), tenant: tenant.to_string() }
+    }
+
+    fn share_locked(&self, st: &LedgerState, tenant: &str) -> u64 {
+        let total_w: u64 = st
+            .tenants
+            .iter()
+            .filter(|(name, t)| t.inflight > 0 || t.used > 0 || name.as_str() == tenant)
+            .map(|(_, t)| t.weight.max(1))
+            .sum();
+        let w = st.tenants.get(tenant).map_or(1, |t| t.weight.max(1));
+        if total_w <= w {
+            return self.cap; // sole active tenant: the whole budget
+        }
+        let share = ((self.cap as u128 * w as u128) / total_w as u128) as u64;
+        // Floor of two chunks so a tiny share can still stream.
+        share.max(2 * self.chunk)
+    }
+
+    fn admissible_locked(&self, st: &LedgerState, tenant: &str, bytes: u64) -> bool {
+        let used = st.tenants.get(tenant).map_or(0, |t| t.used);
+        let Some(after) = used.checked_add(bytes) else { return false };
+        if after <= self.share_locked(st, tenant) {
+            return true;
+        }
+        // Over share: borrow only headroom not reserved for other *active*
+        // tenants (their unused share is spoken for; idle tenants reserve
+        // nothing and are fully borrowable).
+        let mut reserved = 0u64;
+        let mut total_used = 0u64;
+        for (name, t) in st.tenants.iter() {
+            total_used = total_used.saturating_add(t.used);
+            if name.as_str() != tenant && (t.inflight > 0 || t.used > 0) {
+                reserved = reserved
+                    .saturating_add(self.share_locked(st, name).saturating_sub(t.used));
+            }
+        }
+        total_used.saturating_add(bytes).saturating_add(reserved) <= self.cap
+    }
+
+    fn charge_locked(&self, st: &mut LedgerState, tenant: &str, bytes: u64) {
+        let t = st.tenants.entry(tenant.to_string()).or_default();
+        if t.weight == 0 {
+            t.weight = self.weights.get(tenant).copied().unwrap_or(1).max(1);
+        }
+        t.used = t.used.saturating_add(bytes);
+        if let Some(m) = &self.metrics {
+            m.tenant_resident_add(tenant, bytes as i64);
+        }
+    }
+
+    /// Fair-share gate plus charge: admit `bytes` for `tenant` iff within
+    /// its share or borrowable headroom; charges the tenant on success.
+    pub fn try_charge(&self, tenant: &str, bytes: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if !self.admissible_locked(&st, tenant, bytes) {
+            return false;
+        }
+        self.charge_locked(&mut st, tenant, bytes);
+        true
+    }
+
+    /// Unconditional charge (head-of-line exemption or patience overrun):
+    /// residency accounting must stay exact even when the gate is bypassed.
+    pub fn force_charge(&self, tenant: &str, bytes: u64) {
+        let mut st = self.state.lock().unwrap();
+        self.charge_locked(&mut st, tenant, bytes);
+    }
+
+    pub fn uncharge(&self, tenant: &str, bytes: u64) {
+        let mut st = self.state.lock().unwrap();
+        let gone = match st.tenants.get_mut(tenant) {
+            Some(t) => {
+                t.used = t.used.saturating_sub(bytes);
+                t.inflight == 0 && t.used == 0
+            }
+            None => false,
+        };
+        if gone {
+            st.tenants.remove(tenant);
+        }
+        drop(st);
+        if let Some(m) = &self.metrics {
+            m.tenant_resident_add(tenant, -(bytes.min(i64::MAX as u64) as i64));
+        }
+    }
+
+    /// Pure query (the simulator's backpressure model): would `bytes` be
+    /// admitted for `tenant` right now? Reserves nothing.
+    pub fn would_admit(&self, tenant: &str, bytes: u64) -> bool {
+        let st = self.state.lock().unwrap();
+        self.admissible_locked(&st, tenant, bytes)
+    }
+
+    /// Current resident bytes charged to `tenant`.
+    pub fn used(&self, tenant: &str) -> u64 {
+        self.state.lock().unwrap().tenants.get(tenant).map_or(0, |t| t.used)
+    }
+
+    /// Current weighted-fair share of `tenant` given the active set.
+    pub fn share(&self, tenant: &str) -> u64 {
+        let st = self.state.lock().unwrap();
+        self.share_locked(&st, tenant)
+    }
+
+    fn note_throttle(&self, tenant: &str, ns: u64) {
+        if let Some(m) = &self.metrics {
+            m.tenant_throttle_add(tenant, ns);
+        }
+    }
+}
+
+/// One execution's claim on a tenant: keeps the tenant active in the
+/// ledger for the handle's lifetime. Charging goes through the handle so
+/// `OrderBuffer` stays tenant-agnostic beyond holding one of these.
+pub struct TenantHandle {
+    ledger: Arc<TenantLedger>,
+    tenant: String,
+}
+
+impl TenantHandle {
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    pub fn try_charge(&self, bytes: u64) -> bool {
+        self.ledger.try_charge(&self.tenant, bytes)
+    }
+
+    pub fn force_charge(&self, bytes: u64) {
+        self.ledger.force_charge(&self.tenant, bytes)
+    }
+
+    pub fn uncharge(&self, bytes: u64) {
+        self.ledger.uncharge(&self.tenant, bytes)
+    }
+
+    /// Account time a producer spent blocked on the fair-share gate or the
+    /// budget (per-tenant throttle-time metric).
+    pub fn note_throttle(&self, ns: u64) {
+        self.ledger.note_throttle(&self.tenant, ns);
+    }
+}
+
+impl Drop for TenantHandle {
+    fn drop(&mut self) {
+        let mut st = self.ledger.state.lock().unwrap();
+        let gone = match st.tenants.get_mut(&self.tenant) {
+            Some(t) => {
+                t.inflight = t.inflight.saturating_sub(1);
+                t.inflight == 0 && t.used == 0
+            }
+            None => false,
+        };
+        if gone {
+            st.tenants.remove(&self.tenant);
+        }
+    }
+}
+
 pub struct Admission {
     cfg: GetBatchConfig,
     metrics: Arc<GetBatchMetrics>,
@@ -276,17 +564,36 @@ impl Admission {
     /// budget overruns (≥ `budget_overrun_limit` forced admissions since
     /// the previous registration) ⇒ 429 too (`budget_overrun_limit = 0`
     /// disables the overrun gate).
+    ///
+    /// Class-agnostic legacy entry point: checks the full
+    /// `mem_critical_bytes` threshold, i.e. behaves like
+    /// [`Priority::Interactive`]. Class-aware callers use
+    /// [`Admission::check_register_class`].
     pub fn check_register(&self) -> Admit {
+        self.check_register_class(Priority::Interactive)
+    }
+
+    /// Class-aware registration gate: each [`Priority`] sheds at its own
+    /// fraction of `mem_critical_bytes` (bulk at 1/2, batch at 3/4,
+    /// interactive at the full threshold), so as buffered bytes approach
+    /// critical the lowest class is rejected first and interactive work
+    /// keeps landing until the node is genuinely out of room.
+    pub fn check_register_class(&self, class: Priority) -> Admit {
         let buffered = self.metrics.dt_buffered_bytes.get();
-        if buffered >= self.cfg.mem_critical_bytes as i64 {
+        let critical = class.shed_threshold(self.cfg.mem_critical_bytes);
+        if buffered >= critical as i64 {
             self.metrics.admission_rejects.inc();
-            return Admit::RejectMemory { buffered, critical: self.cfg.mem_critical_bytes };
+            return Admit::RejectMemory { buffered, critical };
         }
         let limit = self.cfg.budget_overrun_limit as u64;
         if limit > 0 {
             use std::sync::atomic::Ordering;
             let total = self.metrics.budget_overruns.get();
-            let seen = self.overruns_seen.swap(total, Ordering::Relaxed);
+            // fetch_max, not swap: a racing registration holding a stale
+            // (smaller) total must never rewind the watermark, or the same
+            // overrun burst is counted twice and healthy registrations get
+            // spurious 429s.
+            let seen = self.overruns_seen.fetch_max(total, Ordering::Relaxed);
             let fresh = total.saturating_sub(seen);
             if fresh >= limit {
                 self.metrics.admission_rejects.inc();
@@ -302,10 +609,14 @@ impl Admission {
         if inflight_items <= self.cfg.throttle_watermark {
             return Duration::ZERO;
         }
-        let over = (inflight_items - self.cfg.throttle_watermark) as u32;
+        let cap = Duration::from_millis(50);
+        let over = u32::try_from(inflight_items.saturating_sub(self.cfg.throttle_watermark))
+            .unwrap_or(u32::MAX);
         // Calibrated: base × overload factor, capped at 50 ms per step so
-        // in-flight work keeps making forward progress (§2.4.3).
-        let d = (self.cfg.throttle_base * over).min(Duration::from_millis(50));
+        // in-flight work keeps making forward progress (§2.4.3). checked_mul
+        // because `Duration * u32` panics on overflow and `over` is
+        // unbounded; overflow means "way past the cap", so fall back to it.
+        let d = self.cfg.throttle_base.checked_mul(over).unwrap_or(cap).min(cap);
         self.clock.sleep(d);
         self.metrics.throttle_ns.add(d.as_nanos() as u64);
         d
@@ -491,5 +802,168 @@ mod tests {
             assert!(waited < 1000, "must terminate");
         }
         assert!(Instant::now() >= deadline);
+    }
+
+    #[test]
+    fn oversized_reservation_rejected_not_wrapped() {
+        let b = MemoryBudget::new(100, 10, None);
+        // u64::MAX used to wrap `used + bytes` in release builds and falsely
+        // admit an unbounded reservation (panic in debug).
+        assert!(!b.has_room(u64::MAX));
+        assert!(!b.try_reserve(u64::MAX));
+        assert_eq!(b.used(), 0);
+        // a single reservation larger than the whole budget is nonsense
+        assert!(!b.try_reserve(101));
+        assert!(b.try_reserve(50));
+        // overflow with nonzero `used` (the original wrap site)
+        assert!(!b.has_room(u64::MAX - 10));
+        assert!(!b.try_reserve(u64::MAX - 10));
+        assert_eq!(b.used(), 50);
+    }
+
+    #[test]
+    fn overrun_watermark_never_rewinds_under_concurrent_registrations() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let (adm, m, _) = setup(1 << 30, 10);
+        let limit = GetBatchConfig::default().budget_overrun_limit as u64;
+        assert!(limit > 0);
+        let adm = Arc::new(adm);
+        let stop = Arc::new(AtomicBool::new(false));
+        let total_overruns = 20_000u64;
+        let adder = {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for _ in 0..total_overruns {
+                    m.budget_overruns.inc();
+                }
+                stop.store(true, Ordering::Release);
+            })
+        };
+        let checkers: Vec<_> = (0..4)
+            .map(|_| {
+                let adm = Arc::clone(&adm);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut consumed = 0u64;
+                    while !stop.load(Ordering::Acquire) {
+                        if let Admit::RejectOverrun { overruns, .. } = adm.check_register() {
+                            consumed += overruns;
+                        }
+                    }
+                    consumed
+                })
+            })
+            .collect();
+        adder.join().unwrap();
+        let consumed: u64 = checkers.into_iter().map(|h| h.join().unwrap()).sum();
+        // A monotone watermark (fetch_max) hands each overrun delta to at
+        // most one registration; the racy swap could rewind the watermark
+        // and count the same burst twice, pushing `consumed` past the true
+        // total and 429ing healthy registrations.
+        assert!(consumed <= total_overruns, "burst double-counted: {consumed} > {total_overruns}");
+        // gate settles: consume the residue, then a below-limit trickle is Ok
+        let _ = adm.check_register();
+        m.budget_overruns.add(limit - 1);
+        assert_eq!(adm.check_register(), Admit::Ok);
+    }
+
+    #[test]
+    fn throttle_survives_extreme_inflight() {
+        // i64::MAX inflight with a pathological base: the old unchecked
+        // `Duration * u32` panicked on overflow. Now it falls back to the cap.
+        let metrics = GetBatchMetrics::new();
+        let cfg = GetBatchConfig {
+            throttle_watermark: 64,
+            throttle_base: Duration::from_secs(1 << 40),
+            ..Default::default()
+        };
+        let adm = Admission::new(cfg, Arc::clone(&metrics), VirtualClock::new());
+        assert_eq!(adm.throttle(i64::MAX), Duration::from_millis(50));
+        // and the old `as u32` truncation can no longer wrap `over` to 0
+        // (watermark + 2^32 over used to throttle not at all)
+        let (adm2, _, _) = setup(1 << 30, 64);
+        assert_eq!(adm2.throttle(64 + (1i64 << 32)), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn shed_order_is_lowest_class_first() {
+        let (adm, m, _) = setup(1000, 10);
+        m.dt_buffered_bytes.set(600); // past bulk's 1/2, under batch's 3/4
+        assert!(matches!(adm.check_register_class(Priority::Bulk), Admit::RejectMemory { .. }));
+        assert_eq!(adm.check_register_class(Priority::Batch), Admit::Ok);
+        assert_eq!(adm.check_register_class(Priority::Interactive), Admit::Ok);
+        m.dt_buffered_bytes.set(800); // past batch's 3/4, under critical
+        assert!(matches!(adm.check_register_class(Priority::Batch), Admit::RejectMemory { .. }));
+        assert_eq!(adm.check_register_class(Priority::Interactive), Admit::Ok);
+        m.dt_buffered_bytes.set(1000); // critical: everyone sheds
+        assert!(matches!(
+            adm.check_register_class(Priority::Interactive),
+            Admit::RejectMemory { .. }
+        ));
+    }
+
+    #[test]
+    fn priority_parse_order_and_backoff() {
+        assert_eq!(Priority::parse("interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse("batch"), Some(Priority::Batch));
+        assert_eq!(Priority::parse("bulk"), Some(Priority::Bulk));
+        assert_eq!(Priority::parse("turbo"), None);
+        assert!(Priority::Bulk < Priority::Batch && Priority::Batch < Priority::Interactive);
+        assert!(Priority::Bulk.backoff_factor() > Priority::Batch.backoff_factor());
+        assert!(Priority::Batch.backoff_factor() > Priority::Interactive.backoff_factor());
+        assert_eq!(Priority::parse(Priority::Bulk.as_str()), Some(Priority::Bulk));
+    }
+
+    #[test]
+    fn sole_tenant_gets_the_whole_budget() {
+        let ledger = TenantLedger::new(100, 10, BTreeMap::new(), None);
+        let h = ledger.handle("a");
+        assert_eq!(ledger.share("a"), 90, "cap = budget - chunk");
+        assert!(h.try_charge(90));
+        assert!(!h.try_charge(1));
+        h.uncharge(90);
+        assert_eq!(ledger.used("a"), 0);
+    }
+
+    #[test]
+    fn active_tenant_share_is_not_borrowable() {
+        let ledger = TenantLedger::new(1000, 10, BTreeMap::new(), None);
+        let hog = ledger.handle("hog");
+        let steady = ledger.handle("steady");
+        // equal weights, two active tenants: each share is cap/2
+        assert_eq!(ledger.share("hog"), 495);
+        assert!(hog.try_charge(495));
+        assert!(!hog.try_charge(1), "steady is active: its share is reserved");
+        assert!(steady.try_charge(400), "the reserved room is really there");
+        steady.uncharge(400);
+        drop(steady); // steady goes idle...
+        assert!(hog.try_charge(200), "...and its share becomes borrowable");
+        hog.uncharge(695);
+    }
+
+    #[test]
+    fn weighted_shares_follow_config() {
+        let mut w = BTreeMap::new();
+        w.insert("gold".to_string(), 3);
+        w.insert("bronze".to_string(), 1);
+        let ledger = TenantLedger::new(4000, 10, w, None);
+        let _g = ledger.handle("gold");
+        let _b = ledger.handle("bronze");
+        // cap = 3990: gold gets 3/4 of it, bronze 1/4
+        assert_eq!(ledger.share("gold"), 2992);
+        assert_eq!(ledger.share("bronze"), 997);
+    }
+
+    #[test]
+    fn forced_charges_keep_residency_exact() {
+        let ledger = TenantLedger::new(100, 10, BTreeMap::new(), None);
+        let h = ledger.handle("t");
+        h.force_charge(95); // exemption path bypasses the gate...
+        assert_eq!(ledger.used("t"), 95);
+        assert!(!h.try_charge(1), "...but still counts against the share");
+        assert!(!ledger.would_admit("t", 1));
+        h.uncharge(95);
+        assert_eq!(ledger.used("t"), 0);
     }
 }

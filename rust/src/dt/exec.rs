@@ -28,7 +28,7 @@ use crate::proto::wire;
 use crate::tar::TarWriter;
 use crate::util::clock::{Clock, Stopwatch};
 
-use super::admission::MemoryBudget;
+use super::admission::{MemoryBudget, TenantHandle};
 use super::order::{ChunkWait, OrderBuffer};
 
 /// How often the assembler re-checks out-of-band completion state while
@@ -81,6 +81,30 @@ impl DtExec {
             request,
             num_senders,
             buf: OrderBuffer::with_budget(n, budget),
+            senders_done: AtomicU32::new(0),
+            local_done: AtomicBool::new(false),
+            registered_at: Instant::now(),
+            claimed: AtomicBool::new(false),
+        }
+    }
+
+    /// Execution whose reorder buffer reserves against the node's memory
+    /// budget *and* the owning tenant's fair-share ledger (multi-tenant
+    /// production path; the handle keeps the tenant active for the
+    /// execution's lifetime).
+    pub fn with_qos(
+        req_id: u64,
+        request: BatchRequest,
+        num_senders: u32,
+        budget: Arc<MemoryBudget>,
+        tenant: TenantHandle,
+    ) -> DtExec {
+        let n = request.entries.len();
+        DtExec {
+            req_id,
+            request,
+            num_senders,
+            buf: OrderBuffer::with_budget_tenant(n, budget, tenant),
             senders_done: AtomicU32::new(0),
             local_done: AtomicBool::new(false),
             registered_at: Instant::now(),

@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 
 use crate::batch::error::EntryError;
 
-use super::admission::MemoryBudget;
+use super::admission::{MemoryBudget, TenantHandle};
 
 #[derive(Debug)]
 enum Slot {
@@ -85,6 +85,10 @@ pub struct OrderBuffer {
     /// the budget until its patience runs out.
     closed: AtomicBool,
     budget: Option<Arc<MemoryBudget>>,
+    /// Multi-tenant QoS: when set, producers pass the tenant's fair-share
+    /// gate *before* the global budget, and every resident byte is charged
+    /// to (and released from) the tenant's ledger alongside the budget.
+    tenant: Option<TenantHandle>,
 }
 
 impl OrderBuffer {
@@ -96,6 +100,7 @@ impl OrderBuffer {
             next_idx: AtomicU32::new(0),
             closed: AtomicBool::new(false),
             budget: None,
+            tenant: None,
         }
     }
 
@@ -103,6 +108,22 @@ impl OrderBuffer {
     pub fn with_budget(n: usize, budget: Arc<MemoryBudget>) -> OrderBuffer {
         let mut b = OrderBuffer::new(n);
         b.budget = Some(budget);
+        b
+    }
+
+    /// Budget-gated buffer additionally charged to one tenant's fair-share
+    /// ledger. Fair-share refusals are never patience-forced (an over-share
+    /// tenant waiting out patience must not overrun into other tenants'
+    /// room); the head-of-line progress exemption still applies, so the
+    /// over-share tenant drains slowly rather than deadlocking.
+    pub fn with_budget_tenant(
+        n: usize,
+        budget: Arc<MemoryBudget>,
+        tenant: TenantHandle,
+    ) -> OrderBuffer {
+        let mut b = OrderBuffer::new(n);
+        b.budget = Some(budget);
+        b.tenant = Some(tenant);
         b
     }
 
@@ -148,13 +169,27 @@ impl OrderBuffer {
         }
         // Patience deadline on the budget's own clock, so a virtual-clock
         // budget (the scale simulator) pays patience in virtual time.
-        let deadline_ns = budget.now_ns().saturating_add(budget.patience().as_nanos() as u64);
-        loop {
+        let patience_ns = budget.patience().as_nanos() as u64;
+        let start_ns = budget.now_ns();
+        let mut deadline_ns = start_ns.saturating_add(patience_ns);
+        let mut waited = false;
+        let admitted = loop {
             if self.closed.load(Ordering::Relaxed) {
-                return false;
+                break false;
             }
-            if budget.try_reserve(bytes) {
-                return true;
+            // Tenant fair-share gate first (cheap, no condvar), then the
+            // global budget; undo the tenant charge if the budget refuses.
+            let ledger_ok = match &self.tenant {
+                Some(t) => t.try_charge(bytes),
+                None => true,
+            };
+            if ledger_ok {
+                if budget.try_reserve(bytes) {
+                    break true;
+                }
+                if let Some(t) = &self.tenant {
+                    t.uncharge(bytes);
+                }
             }
             let (exempt, dead) = {
                 let slots = self.slots.lock().unwrap();
@@ -167,20 +202,41 @@ impl OrderBuffer {
                 }
             };
             if dead {
-                return false;
+                break false;
             }
             if exempt {
                 budget.force_reserve(bytes, false);
-                return true;
+                if let Some(t) = &self.tenant {
+                    t.force_charge(bytes);
+                }
+                break true;
             }
+            waited = true;
             if !budget.wait_room_until_ns(deadline_ns) {
-                // Liveness valve: waited past the budget's patience —
-                // force-admit (counted as an overrun) rather than wedging
-                // the node.
-                budget.force_reserve(bytes, true);
-                return true;
+                if ledger_ok {
+                    // Liveness valve: waited past the budget's patience —
+                    // force-admit (counted as an overrun) rather than
+                    // wedging the node.
+                    budget.force_reserve(bytes, true);
+                    if let Some(t) = &self.tenant {
+                        t.force_charge(bytes);
+                    }
+                    break true;
+                }
+                // Refused by the fair-share gate, not the budget: forcing
+                // here would let one tenant overrun into everyone else's
+                // room, collapsing isolation. Keep waiting on a fresh
+                // patience window — head-of-line progress stays exempt
+                // above, and close() breaks the loop for abandoned slots.
+                deadline_ns = budget.now_ns().saturating_add(patience_ns);
+            }
+        };
+        if waited {
+            if let Some(t) = &self.tenant {
+                t.note_throttle(budget.now_ns().saturating_sub(start_ns));
             }
         }
+        admitted
     }
 
     /// Resident bytes leaving the buffer (consumed or discarded).
@@ -192,6 +248,9 @@ impl OrderBuffer {
         if let Some(budget) = &self.budget {
             budget.release(bytes);
         }
+        if let Some(t) = &self.tenant {
+            t.uncharge(bytes);
+        }
     }
 
     /// Undo a reservation whose bytes never became resident.
@@ -201,6 +260,9 @@ impl OrderBuffer {
         }
         if let Some(budget) = &self.budget {
             budget.release(bytes);
+        }
+        if let Some(t) = &self.tenant {
+            t.uncharge(bytes);
         }
     }
 
@@ -461,12 +523,18 @@ impl OrderBuffer {
 
 impl Drop for OrderBuffer {
     fn drop(&mut self) {
-        // Release any still-resident bytes back to the shared budget
-        // (§2.4.2: completion/termination releases all per-request state).
-        if let Some(budget) = &self.budget {
+        // Release any still-resident bytes back to the shared budget and
+        // the tenant ledger (§2.4.2: completion/termination releases all
+        // per-request state).
+        if self.budget.is_some() || self.tenant.is_some() {
             let resident: u64 = self.slots.lock().unwrap().iter().map(|s| s.resident()).sum();
             if resident > 0 {
-                budget.release(resident);
+                if let Some(budget) = &self.budget {
+                    budget.release(resident);
+                }
+                if let Some(t) = &self.tenant {
+                    t.uncharge(resident);
+                }
             }
         }
     }
@@ -772,5 +840,56 @@ mod tests {
         assert!(budget.peak() <= 64, "peak {} > budget", budget.peak());
         assert_eq!(budget.used(), 0);
         assert_eq!(budget.overruns(), 0, "no forced admissions needed");
+    }
+
+    #[test]
+    fn tenant_over_share_waits_without_overrun() {
+        use super::super::admission::TenantLedger;
+        use std::collections::BTreeMap;
+        // Budget 64 / chunk 8 => usable cap 56; two active tenants split it
+        // 28/28. The hog fills its share, then tries to go over on a
+        // non-head slot: it must block past the budget's patience WITHOUT
+        // being force-admitted (fair-share refusals are never overruns).
+        let budget = MemoryBudget::with_patience(64, 8, Duration::from_millis(30), None);
+        let ledger = TenantLedger::new(64, 8, BTreeMap::new(), None);
+        let hog =
+            Arc::new(OrderBuffer::with_budget_tenant(4, Arc::clone(&budget), ledger.handle("hog")));
+        let _steady =
+            OrderBuffer::with_budget_tenant(1, Arc::clone(&budget), ledger.handle("steady"));
+        assert_eq!(ledger.share("hog"), 28);
+        hog.fill(0, vec![0u8; 28]);
+        assert_eq!(ledger.used("hog"), 28);
+        let h2 = Arc::clone(&hog);
+        let t = thread::spawn(move || h2.fill(2, vec![0u8; 8]));
+        thread::sleep(Duration::from_millis(120)); // several patience windows
+        assert_eq!(budget.overruns(), 0, "fair-share refusal must not patience-force");
+        assert_eq!(ledger.used("hog"), 28, "over-share fill not admitted");
+        hog.close();
+        t.join().unwrap();
+        assert_eq!(ledger.used("hog"), 28, "late producer dropped, nothing charged");
+        drop(hog);
+        assert_eq!(ledger.used("hog"), 0, "drop returns resident bytes to the ledger");
+        assert_eq!(budget.used(), 0);
+    }
+
+    #[test]
+    fn tenant_head_of_line_stays_exempt() {
+        use super::super::admission::TenantLedger;
+        use std::collections::BTreeMap;
+        // An over-share tenant's head-of-line slot (nothing resident) keeps
+        // the progress exemption: the consumer can always drain, so fair
+        // share throttles throughput instead of deadlocking the request.
+        let budget = MemoryBudget::with_patience(64, 8, Duration::from_secs(5), None);
+        let ledger = TenantLedger::new(64, 8, BTreeMap::new(), None);
+        let hog = OrderBuffer::with_budget_tenant(2, Arc::clone(&budget), ledger.handle("hog"));
+        let _steady =
+            OrderBuffer::with_budget_tenant(1, Arc::clone(&budget), ledger.handle("steady"));
+        hog.fill(1, vec![0u8; 28]); // share (28) filled on a later slot
+        assert_eq!(ledger.used("hog"), 28);
+        let t0 = Instant::now();
+        hog.fill(0, vec![0u8; 8]); // head slot: exempt from both gates
+        assert!(t0.elapsed() < Duration::from_secs(1), "no patience stall on head slot");
+        assert_eq!(ledger.used("hog"), 36, "exempt chunk still charged to the tenant");
+        assert_eq!(budget.overruns(), 0, "exemption is not an overrun");
     }
 }

@@ -273,8 +273,12 @@ fn route_batch(st: &Arc<ProxyState>, req: Request) -> Response {
     // Splice the client's body verbatim into the control messages instead
     // of re-serializing the parsed entry list — saves two full JSON
     // serializations per request on the proxy hot path (§Perf).
+    // Multi-tenant QoS identity rides on headers: tenant defaults for
+    // legacy clients, priority is resolved (and defaulted) at the DT.
     let raw = std::str::from_utf8(&req.body).unwrap_or("{}");
-    let reg_body = DtRegister::body_with_raw(req_id, num_senders, raw);
+    let tenant = req.header(wire::HDR_TENANT).unwrap_or(wire::DEFAULT_TENANT);
+    let priority = req.header(wire::HDR_PRIORITY).unwrap_or("");
+    let reg_body = DtRegister::body_with_raw_qos(req_id, num_senders, tenant, priority, raw);
     match st.http.request("POST", &dt.http_addr, paths::DT_REGISTER, &reg_body) {
         Ok(resp) if resp.status == 200 => {
             let _ = resp.into_bytes();
@@ -508,6 +512,46 @@ mod tests {
         assert_eq!(resp.status, 429);
         let ra = resp.headers.iter().find(|(k, _)| k == "retry-after");
         assert_eq!(ra.map(|(_, v)| v.as_str()), Some("3"), "Retry-After propagated");
+    }
+
+    #[test]
+    fn batch_registration_carries_tenant_and_priority() {
+        use crate::proto::http::HttpServer;
+
+        // DT stub capturing each parsed registration: the proxy must splice
+        // the client's QoS headers into the register body, and default the
+        // tenant for legacy clients that send none.
+        let seen: Arc<Mutex<Vec<(String, String)>>> = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = Arc::clone(&seen);
+        let dt: Handler = Arc::new(move |req: Request| {
+            let reg = DtRegister::from_body(&req.body).expect("parseable register body");
+            seen2.lock().unwrap().push((reg.tenant, reg.priority));
+            // 500 stops route_batch before activation/redirect.
+            Response::text(500, "stub")
+        });
+        let dt_srv = HttpServer::serve(dt, 2, "dt-qos-stub").unwrap();
+        let h = SmapHolder::new();
+        h.set(Arc::new(Smap::new(
+            1,
+            vec![],
+            vec![NodeInfo {
+                id: "t0".into(),
+                http_addr: dt_srv.addr.to_string(),
+                p2p_addr: String::new(),
+            }],
+        )));
+        let st = ProxyState::new("p0", h, GetBatchMetrics::new());
+        let body = BatchRequest::new(vec![BatchEntry::obj("b", "o")]).to_body();
+
+        let mut tagged = get("/v1/batch", &body);
+        tagged.headers.insert(wire::HDR_TENANT.to_string(), "trainer-a".into());
+        tagged.headers.insert(wire::HDR_PRIORITY.to_string(), "interactive".into());
+        let _ = route(&st, tagged);
+        let _ = route(&st, get("/v1/batch", &body)); // legacy client, no headers
+
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen[0], ("trainer-a".to_string(), "interactive".to_string()));
+        assert_eq!(seen[1], (wire::DEFAULT_TENANT.to_string(), String::new()));
     }
 
     #[test]

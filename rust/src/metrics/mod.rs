@@ -175,6 +175,23 @@ pub struct GetBatchMetrics {
     /// overwrite) its lines, and the lines disappear only when the *last*
     /// set tracking that address is dropped.
     endpoint_health: Mutex<BTreeMap<String, EndpointLine>>,
+    /// Per-tenant QoS state, rendered as labeled lines per tenant seen at
+    /// DT registration: `tenant_resident_bytes{tenant=...}` (bytes charged
+    /// to the tenant's fair-share ledger), `tenant_admits_total` /
+    /// `tenant_sheds_total` (registration outcomes), and
+    /// `tenant_throttle_ns_total` (time the tenant's producers spent
+    /// blocked on the fair-share gate or the budget). Lines appear on
+    /// first touch and persist for the node's lifetime.
+    tenant_lines: Mutex<BTreeMap<String, TenantLine>>,
+}
+
+/// One tenant's labeled QoS lines (see [`GetBatchMetrics::tenant_admit`]).
+#[derive(Default)]
+struct TenantLine {
+    resident: i64,
+    admits: u64,
+    sheds: u64,
+    throttle_ns: u64,
 }
 
 /// One remote endpoint's labeled-gauge state (see
@@ -240,6 +257,30 @@ impl GetBatchMetrics {
                 m.remove(addr);
             }
         }
+    }
+
+    /// Count one admitted DT registration for `tenant`.
+    pub fn tenant_admit(&self, tenant: &str) {
+        self.tenant_lines.lock().unwrap().entry(tenant.to_string()).or_default().admits += 1;
+    }
+
+    /// Count one shed (429-rejected) DT registration for `tenant`.
+    pub fn tenant_shed(&self, tenant: &str) {
+        self.tenant_lines.lock().unwrap().entry(tenant.to_string()).or_default().sheds += 1;
+    }
+
+    /// Adjust `tenant`'s resident-bytes gauge line (± ledger charges).
+    pub fn tenant_resident_add(&self, tenant: &str, delta: i64) {
+        let mut m = self.tenant_lines.lock().unwrap();
+        let t = m.entry(tenant.to_string()).or_default();
+        t.resident = t.resident.saturating_add(delta);
+    }
+
+    /// Accumulate producer-blocked time on `tenant`'s throttle line.
+    pub fn tenant_throttle_add(&self, tenant: &str, ns: u64) {
+        let mut m = self.tenant_lines.lock().unwrap();
+        let t = m.entry(tenant.to_string()).or_default();
+        t.throttle_ns = t.throttle_ns.saturating_add(ns);
     }
 
     /// Prometheus text exposition (§2.4.4 "lightweight, per-node Prometheus
@@ -360,6 +401,53 @@ impl GetBatchMetrics {
                 out.push_str(&format!(
                     "ais_getbatch_remote_endpoint_inflight{{node=\"{node}\",addr=\"{addr}\"}} {}\n",
                     line.inflight
+                ));
+            }
+        }
+        drop(eps);
+        // Per-tenant QoS lines: one labeled line per tenant seen at DT
+        // registration. As with the fill split, `parse` strips labels, so
+        // consumers assert on the raw text lines.
+        let tenants = self.tenant_lines.lock().unwrap();
+        if !tenants.is_empty() {
+            out.push_str(
+                "# HELP ais_getbatch_tenant_resident_bytes bytes charged to the tenant's fair-share ledger\n\
+                 # TYPE ais_getbatch_tenant_resident_bytes gauge\n",
+            );
+            for (t, line) in tenants.iter() {
+                out.push_str(&format!(
+                    "ais_getbatch_tenant_resident_bytes{{node=\"{node}\",tenant=\"{t}\"}} {}\n",
+                    line.resident
+                ));
+            }
+            out.push_str(
+                "# HELP ais_getbatch_tenant_admits_total DT registrations admitted per tenant\n\
+                 # TYPE ais_getbatch_tenant_admits_total counter\n",
+            );
+            for (t, line) in tenants.iter() {
+                out.push_str(&format!(
+                    "ais_getbatch_tenant_admits_total{{node=\"{node}\",tenant=\"{t}\"}} {}\n",
+                    line.admits
+                ));
+            }
+            out.push_str(
+                "# HELP ais_getbatch_tenant_sheds_total DT registrations shed (429) per tenant\n\
+                 # TYPE ais_getbatch_tenant_sheds_total counter\n",
+            );
+            for (t, line) in tenants.iter() {
+                out.push_str(&format!(
+                    "ais_getbatch_tenant_sheds_total{{node=\"{node}\",tenant=\"{t}\"}} {}\n",
+                    line.sheds
+                ));
+            }
+            out.push_str(
+                "# HELP ais_getbatch_tenant_throttle_ns_total ns the tenant's producers spent blocked on fair-share or budget\n\
+                 # TYPE ais_getbatch_tenant_throttle_ns_total counter\n",
+            );
+            for (t, line) in tenants.iter() {
+                out.push_str(&format!(
+                    "ais_getbatch_tenant_throttle_ns_total{{node=\"{node}\",tenant=\"{t}\"}} {}\n",
+                    line.throttle_ns
                 ));
             }
         }
@@ -547,6 +635,40 @@ mod tests {
         assert_eq!(parsed["ais_getbatch_prefetch_hits_total"], 1.0);
         assert_eq!(parsed["ais_getbatch_prefetch_wasted_total"], 1.0);
         assert_eq!(parsed["ais_getbatch_prefetch_horizon"], 2.0);
+    }
+
+    #[test]
+    fn tenant_lines_render_per_tenant() {
+        let m = GetBatchMetrics::default();
+        assert!(!m.render("t0").contains("tenant_resident_bytes"), "no lines before any tenant");
+        m.tenant_admit("alpha");
+        m.tenant_admit("alpha");
+        m.tenant_shed("beta");
+        m.tenant_resident_add("alpha", 4096);
+        m.tenant_resident_add("alpha", -1024);
+        m.tenant_throttle_add("beta", 500);
+        let text = m.render("t0");
+        assert!(
+            text.contains("ais_getbatch_tenant_resident_bytes{node=\"t0\",tenant=\"alpha\"} 3072"),
+            "{text}"
+        );
+        assert!(
+            text.contains("ais_getbatch_tenant_admits_total{node=\"t0\",tenant=\"alpha\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("ais_getbatch_tenant_sheds_total{node=\"t0\",tenant=\"beta\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("ais_getbatch_tenant_throttle_ns_total{node=\"t0\",tenant=\"beta\"} 500"),
+            "{text}"
+        );
+        // Touching one line creates the tenant's whole family (zeros).
+        assert!(
+            text.contains("ais_getbatch_tenant_admits_total{node=\"t0\",tenant=\"beta\"} 0"),
+            "{text}"
+        );
     }
 
     #[test]

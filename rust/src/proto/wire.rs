@@ -57,6 +57,37 @@ pub const HDR_OBJ_CRC: &str = "x-getbatch-crc32";
 /// version for the object (pre-versioning sidecar).
 pub const HDR_OBJ_VERSION: &str = "x-getbatch-version";
 
+/// Request header identifying the tenant a GetBatch call belongs to
+/// (multi-tenant QoS). Absent or invalid ⇒ [`DEFAULT_TENANT`], so legacy
+/// clients keep working and share one fair-share bucket.
+pub const HDR_TENANT: &str = "x-getbatch-tenant";
+
+/// Request header carrying the priority class (`interactive` / `batch` /
+/// `bulk`) for class-aware admission shedding. Absent or unknown ⇒ the
+/// node's `default_priority` config.
+pub const HDR_PRIORITY: &str = "x-getbatch-priority";
+
+/// Tenant name assigned to requests that carry no (valid) tenant header.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Restrict a tenant name to a JSON- and label-safe charset (alphanumeric
+/// plus `-`, `_`, `.`, max 64 chars): tenant strings arrive in headers and
+/// are raw-spliced into registration JSON and metric labels, so anything
+/// else is dropped. Empty (or fully-invalid) names become
+/// [`DEFAULT_TENANT`].
+pub fn sanitize_tenant(s: &str) -> String {
+    let t: String = s
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        .take(64)
+        .collect();
+    if t.is_empty() {
+        DEFAULT_TENANT.to_string()
+    } else {
+        t
+    }
+}
+
 /// Query parameter carrying the colocation hint (§2.4.1: "clients provide a
 /// colocation hint via a query parameter" so the proxy knows to unmarshal).
 pub const QPARAM_COLOC: &str = "coloc";
@@ -73,14 +104,38 @@ pub struct DtRegister {
     /// How many senders will be activated (so the DT knows when fan-in is
     /// complete even if it owns zero entries).
     pub num_senders: u32,
+    /// Tenant the execution is charged to in the DT fair-share ledger;
+    /// [`DEFAULT_TENANT`] for legacy bodies without the field.
+    pub tenant: String,
+    /// Requested priority class (`interactive` / `batch` / `bulk`); empty
+    /// means "use the node's `default_priority`". Legacy bodies parse as
+    /// empty.
+    pub priority: String,
 }
 
 impl DtRegister {
     /// Build the wire body splicing an already-serialized request verbatim
-    /// (proxy hot path: no re-serialization of the entry list).
+    /// (proxy hot path: no re-serialization of the entry list). Legacy
+    /// QoS-less form: default tenant, node-default priority.
     pub fn body_with_raw(req_id: u64, num_senders: u32, raw_request: &str) -> Vec<u8> {
+        DtRegister::body_with_raw_qos(req_id, num_senders, DEFAULT_TENANT, "", raw_request)
+    }
+
+    /// Raw-splice variant carrying QoS identity. `tenant` and `priority`
+    /// come from client headers, so both are re-sanitized here — a header
+    /// must not be able to inject JSON into the registration body.
+    pub fn body_with_raw_qos(
+        req_id: u64,
+        num_senders: u32,
+        tenant: &str,
+        priority: &str,
+        raw_request: &str,
+    ) -> Vec<u8> {
+        let t = sanitize_tenant(tenant);
+        let p: String =
+            priority.chars().filter(|c| c.is_ascii_alphanumeric()).take(16).collect();
         format!(
-            "{{\"num_senders\":{num_senders},\"req_id\":{req_id},\"request\":{raw_request}}}"
+            "{{\"num_senders\":{num_senders},\"priority\":\"{p}\",\"req_id\":{req_id},\"request\":{raw_request},\"tenant\":\"{t}\"}}"
         )
         .into_bytes()
     }
@@ -90,6 +145,8 @@ impl DtRegister {
             .set("req_id", Value::num(self.req_id as f64))
             .set("num_senders", Value::num(self.num_senders as f64))
             .set("request", self.request.to_json())
+            .set("tenant", Value::str(&self.tenant))
+            .set("priority", Value::str(&self.priority))
             .to_string()
             .into_bytes()
     }
@@ -100,6 +157,8 @@ impl DtRegister {
             req_id: v.u64_field("req_id")?,
             num_senders: v.u64_field("num_senders")? as u32,
             request: BatchRequest::from_json(v.get("request")?)?,
+            tenant: sanitize_tenant(v.str_field("tenant").unwrap_or("")),
+            priority: v.str_field("priority").unwrap_or("").to_string(),
         })
     }
 }
@@ -172,9 +231,54 @@ mod tests {
 
     #[test]
     fn dt_register_roundtrip() {
-        let m = DtRegister { req_id: 99, request: req(), num_senders: 15 };
+        let m = DtRegister {
+            req_id: 99,
+            request: req(),
+            num_senders: 15,
+            tenant: "trainer-a".into(),
+            priority: "bulk".into(),
+        };
         let back = DtRegister::from_body(&m.to_body()).unwrap();
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn legacy_register_body_defaults_tenant() {
+        // A pre-QoS body (no tenant/priority fields at all) must keep
+        // parsing: default tenant, empty priority (resolved to the node
+        // default at admission).
+        let legacy = b"{\"num_senders\":3,\"req_id\":7,\"request\":{\"in\":[]}}";
+        let reg = DtRegister::from_body(legacy).unwrap();
+        assert_eq!(reg.tenant, DEFAULT_TENANT);
+        assert_eq!(reg.priority, "");
+        assert_eq!(reg.req_id, 7);
+        assert_eq!(reg.num_senders, 3);
+        // ...and the QoS-less splice helper lands in the default bucket too.
+        let reg =
+            DtRegister::from_body(&DtRegister::body_with_raw(8, 1, "{\"in\":[]}")).unwrap();
+        assert_eq!(reg.tenant, DEFAULT_TENANT);
+        assert_eq!(reg.priority, "");
+    }
+
+    #[test]
+    fn qos_register_body_roundtrips_and_sanitizes() {
+        let raw = String::from_utf8(req().to_body()).unwrap();
+        let b = DtRegister::body_with_raw_qos(42, 2, "team.a-1", "interactive", &raw);
+        let reg = DtRegister::from_body(&b).unwrap();
+        assert_eq!(reg.tenant, "team.a-1");
+        assert_eq!(reg.priority, "interactive");
+        assert_eq!(reg.request, req());
+        // Header-borne injection attempts are stripped, not spliced: the
+        // body still parses and the tenant keeps only the safe charset.
+        let evil = DtRegister::body_with_raw_qos(1, 0, "x\",\"priority\":\"interactive", "b{lk", &raw);
+        let reg = DtRegister::from_body(&evil).unwrap();
+        assert_eq!(reg.tenant, "xpriorityinteractive");
+        assert_eq!(reg.priority, "blk");
+        // An all-invalid tenant collapses to the default bucket.
+        assert_eq!(sanitize_tenant("{\"}"), DEFAULT_TENANT);
+        assert_eq!(sanitize_tenant(""), DEFAULT_TENANT);
+        let long = "a".repeat(100);
+        assert_eq!(sanitize_tenant(&long).len(), 64, "names capped at 64 chars");
     }
 
     #[test]

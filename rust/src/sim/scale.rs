@@ -24,14 +24,14 @@
 //!   folded into [`ScaleReport::trace_hash`].
 
 use std::cmp::Ordering as CmpOrdering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::io;
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::client::loader::EpochPlan;
 use crate::config::GetBatchConfig;
-use crate::dt::admission::{Admission, Admit, MemoryBudget};
+use crate::dt::admission::{Admission, Admit, MemoryBudget, Priority, TenantLedger};
 use crate::dt::order::{OrderBuffer, SlotWait};
 use crate::metrics::GetBatchMetrics;
 use crate::store::{Backend, CachedBackend, ChunkCache, ChunkSource, EntryReader, StoreError};
@@ -190,6 +190,9 @@ enum EvKind {
     Deliver(u32),
     /// Consumer tries to take its next in-order entry.
     Drain,
+    /// The client abandons its execution (multi-tenant hog reap; never
+    /// scheduled by single-tenant scale runs).
+    Abort,
 }
 
 /// Heap entry; min-ordered by `(at, seq)` so dispatch order — and thus the
@@ -619,6 +622,7 @@ pub fn run_scale(cfg: &ScaleConfig) -> ScaleReport {
                     }
                 }
             }
+            EvKind::Abort => unreachable!("single-tenant scale runs schedule no aborts"),
         }
         let peak = budget.peak();
         assert!(
@@ -647,6 +651,397 @@ pub fn run_scale(cfg: &ScaleConfig) -> ScaleReport {
     fold(&mut report.trace_hash, report.cache_misses);
     fold(&mut report.trace_hash, report.rejected);
     fold(&mut report.trace_hash, report.backpressured);
+    fold(&mut report.trace_hash, report.events);
+    report
+}
+
+// ------------------------------------------------------------- multi-tenant --
+
+/// Parameters for [`run_multi_tenant`]: one misbehaving "hog" tenant —
+/// oversized bulk-class batches it registers and then never drains —
+/// replayed against a steady population of well-behaved interactive
+/// clients. All times are virtual nanoseconds.
+#[derive(Debug, Clone)]
+pub struct MultiTenantConfig {
+    pub steady_clients: u64,
+    /// Hog batch registrations (each is a separate execution; the tenant
+    /// ledger caps their *combined* residency).
+    pub hog_batches: u64,
+    pub seed: u64,
+    pub dt_buffer_bytes: u64,
+    pub chunk_bytes: u64,
+    pub mem_critical_bytes: u64,
+    pub patience: Duration,
+    pub steady_entry_bytes: u64,
+    pub entries_per_client: usize,
+    /// Oversized hog entries (per-entry bytes and count per batch).
+    pub hog_entry_bytes: u64,
+    pub hog_entries: usize,
+    /// Mean steady client inter-arrival gap.
+    pub arrival_gap_ns: u64,
+    /// First hog registration instant (after the steady stream is active).
+    pub hog_start_ns: u64,
+    /// Gap between successive hog batch registrations.
+    pub hog_gap_ns: u64,
+    pub deliver_gap_ns: u64,
+    pub backpressure_ns: u64,
+    pub consume_ns: u64,
+    pub poll_ns: u64,
+    pub retry_ns: u64,
+    /// The hog abandons an admitted execution (or gives up on a rejected
+    /// one) after this long — it never drains a byte.
+    pub hog_abort_ns: u64,
+    /// Fairness bound for *steady* clients only; the harness panics
+    /// (naming the seed) if a steady registration waits longer.
+    pub starvation_bound_ns: u64,
+}
+
+impl MultiTenantConfig {
+    /// Canonical hog-vs-steady scenario: a 1 MiB budget split between one
+    /// bulk hog (16 × 64 KiB per batch, never drained) and `steady_clients`
+    /// interactive clients with small promptly-drained batches.
+    pub fn hog_vs_steady(steady_clients: u64, seed: u64) -> MultiTenantConfig {
+        MultiTenantConfig {
+            steady_clients,
+            hog_batches: 2,
+            seed,
+            dt_buffer_bytes: 1 << 20,
+            chunk_bytes: 4 << 10,
+            mem_critical_bytes: 768 << 10,
+            patience: Duration::from_millis(50),
+            steady_entry_bytes: 4 << 10,
+            entries_per_client: 2,
+            hog_entry_bytes: 64 << 10,
+            hog_entries: 16,
+            arrival_gap_ns: 20_000,
+            hog_start_ns: 2_000_000,
+            hog_gap_ns: 10_000_000,
+            deliver_gap_ns: 50_000,
+            backpressure_ns: 100_000,
+            consume_ns: 200_000,
+            poll_ns: 100_000,
+            retry_ns: 1_000_000,
+            hog_abort_ns: 50_000_000,
+            starvation_bound_ns: 10_000_000_000,
+        }
+    }
+}
+
+/// Evidence from one multi-tenant run (see [`run_multi_tenant`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MultiTenantReport {
+    pub steady_clients: u64,
+    pub steady_completed: u64,
+    /// Steady (interactive) registrations shed by the admission gate.
+    pub steady_rejected: u64,
+    pub steady_backpressured: u64,
+    pub max_steady_admission_wait_ns: u64,
+    pub hog_batches: u64,
+    pub hog_admitted: u64,
+    /// Hog (bulk) registrations shed — lowest class sheds first, so this
+    /// climbs while `steady_rejected` stays at zero.
+    pub hog_rejected: u64,
+    pub hog_aborted: u64,
+    pub hog_gave_up: u64,
+    pub hog_backpressured: u64,
+    /// Peak hog-resident bytes while ≥ 1 steady execution was live — the
+    /// fair-share cap in action.
+    pub hog_peak_with_steady_bytes: u64,
+    /// Peak hog-resident bytes overall (idle shares are borrowable, so
+    /// this exceeds the with-steady peak once the steady population ends).
+    pub hog_peak_ledger_bytes: u64,
+    pub peak_resident: u64,
+    pub dt_buffer_bytes: u64,
+    pub overruns: u64,
+    pub virtual_ns: u64,
+    pub events: u64,
+    pub trace_hash: u64,
+}
+
+/// Replay a misbehaving tenant against well-behaved ones at scale, through
+/// the real admission gate ([`Admission::check_register_class`]), the real
+/// [`TenantLedger`] fair-share gate and the real [`MemoryBudget`] — the
+/// environment model (arrivals, sender pacing, backpressure deferral) is
+/// the same as [`run_scale`]'s. Deterministic per seed.
+pub fn run_multi_tenant(cfg: &MultiTenantConfig) -> MultiTenantReport {
+    const STEADY: &str = "steady";
+    const HOG: &str = "hog";
+    let clock = VirtualClock::new();
+    let metrics = GetBatchMetrics::new();
+    let budget = MemoryBudget::with_clock(
+        cfg.dt_buffer_bytes,
+        cfg.chunk_bytes,
+        cfg.patience,
+        Some(Arc::clone(&metrics)),
+        clock.clone(),
+    );
+    let gcfg = GetBatchConfig {
+        mem_critical_bytes: cfg.mem_critical_bytes,
+        dt_buffer_bytes: cfg.dt_buffer_bytes,
+        chunk_bytes: cfg.chunk_bytes as usize,
+        ..Default::default()
+    };
+    let adm = Admission::new(gcfg, Arc::clone(&metrics), clock.clone());
+    let ledger = TenantLedger::new(
+        cfg.dt_buffer_bytes,
+        cfg.chunk_bytes,
+        BTreeMap::new(), // equal weights
+        Some(Arc::clone(&metrics)),
+    );
+
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let mut arrivals = Rng::new(mix64(cfg.seed ^ 0x7e4a_47));
+    let mut at = 0u64;
+    for c in 0..cfg.steady_clients {
+        at += 1 + arrivals.below(cfg.arrival_gap_ns.max(1) * 2);
+        heap.push(Ev { at, seq, client: c as u32, kind: EvKind::Arrive });
+        seq += 1;
+    }
+    for k in 0..cfg.hog_batches {
+        heap.push(Ev {
+            at: cfg.hog_start_ns + k * cfg.hog_gap_ns,
+            seq,
+            client: (cfg.steady_clients + k) as u32,
+            kind: EvKind::Arrive,
+        });
+        seq += 1;
+    }
+
+    let mut live: HashMap<u32, Live> = HashMap::new();
+    let mut first_try: HashMap<u32, u64> = HashMap::new();
+    let mut steady_live: u64 = 0;
+    let mut report = MultiTenantReport {
+        steady_clients: cfg.steady_clients,
+        steady_completed: 0,
+        steady_rejected: 0,
+        steady_backpressured: 0,
+        max_steady_admission_wait_ns: 0,
+        hog_batches: cfg.hog_batches,
+        hog_admitted: 0,
+        hog_rejected: 0,
+        hog_aborted: 0,
+        hog_gave_up: 0,
+        hog_backpressured: 0,
+        hog_peak_with_steady_bytes: 0,
+        hog_peak_ledger_bytes: 0,
+        peak_resident: 0,
+        dt_buffer_bytes: cfg.dt_buffer_bytes,
+        overruns: 0,
+        virtual_ns: 0,
+        events: 0,
+        trace_hash: mix64(cfg.seed ^ 0x9e5),
+    };
+    let fold = |h: &mut u64, x: u64| *h = mix64(*h ^ x);
+
+    while let Some(ev) = heap.pop() {
+        clock.advance_to(ev.at);
+        report.events += 1;
+        report.virtual_ns = ev.at;
+        let cid = ev.client as u64;
+        let hog = cid >= cfg.steady_clients;
+        let (tenant, class) =
+            if hog { (HOG, Priority::Bulk) } else { (STEADY, Priority::Interactive) };
+        match ev.kind {
+            EvKind::Arrive => {
+                let t0 = *first_try.entry(ev.client).or_insert(ev.at);
+                match adm.check_register_class(class) {
+                    Admit::Ok => {
+                        first_try.remove(&ev.client);
+                        let sizes: Vec<u64> = if hog {
+                            vec![cfg.hog_entry_bytes; cfg.hog_entries.max(1)]
+                        } else {
+                            vec![cfg.steady_entry_bytes; cfg.entries_per_client.max(1)]
+                        };
+                        let buf = Arc::new(OrderBuffer::with_budget_tenant(
+                            sizes.len(),
+                            Arc::clone(&budget),
+                            ledger.handle(tenant),
+                        ));
+                        for (i, _) in sizes.iter().enumerate() {
+                            heap.push(Ev {
+                                at: ev.at + (i as u64 + 1) * cfg.deliver_gap_ns,
+                                seq,
+                                client: ev.client,
+                                kind: EvKind::Deliver(i as u32),
+                            });
+                            seq += 1;
+                        }
+                        if hog {
+                            report.hog_admitted += 1;
+                            // The hog never drains: its execution sits on
+                            // its resident bytes until reaped.
+                            heap.push(Ev {
+                                at: ev.at + cfg.hog_abort_ns,
+                                seq,
+                                client: ev.client,
+                                kind: EvKind::Abort,
+                            });
+                        } else {
+                            report.max_steady_admission_wait_ns =
+                                report.max_steady_admission_wait_ns.max(ev.at - t0);
+                            steady_live += 1;
+                            heap.push(Ev {
+                                at: ev.at + cfg.consume_ns,
+                                seq,
+                                client: ev.client,
+                                kind: EvKind::Drain,
+                            });
+                        }
+                        seq += 1;
+                        let entries = sizes.iter().map(|&b| (0u32, b)).collect();
+                        live.insert(ev.client, Live { buf, entries, next_take: 0 });
+                        fold(&mut report.trace_hash, ev.at);
+                        fold(&mut report.trace_hash, (cid << 3) | 1);
+                    }
+                    Admit::RejectMemory { .. } | Admit::RejectOverrun { .. } => {
+                        if hog {
+                            report.hog_rejected += 1;
+                            if ev.at - t0 >= cfg.hog_abort_ns {
+                                // Even the misbehaving client times out its
+                                // batch eventually.
+                                first_try.remove(&ev.client);
+                                report.hog_gave_up += 1;
+                            } else {
+                                heap.push(Ev {
+                                    at: ev.at + cfg.retry_ns,
+                                    seq,
+                                    client: ev.client,
+                                    kind: EvKind::Arrive,
+                                });
+                                seq += 1;
+                            }
+                        } else {
+                            report.steady_rejected += 1;
+                            if ev.at - t0 > cfg.starvation_bound_ns {
+                                panic!(
+                                    "steady client {cid} starved: first try {t0} ns, still \
+                                     rejected at {} ns (bound {} ns, seed {})",
+                                    ev.at, cfg.starvation_bound_ns, cfg.seed
+                                );
+                            }
+                            heap.push(Ev {
+                                at: ev.at + cfg.retry_ns,
+                                seq,
+                                client: ev.client,
+                                kind: EvKind::Arrive,
+                            });
+                            seq += 1;
+                        }
+                        fold(&mut report.trace_hash, ev.at);
+                        fold(&mut report.trace_hash, (cid << 3) | 2);
+                    }
+                }
+            }
+            EvKind::Deliver(i) => {
+                let Some(l) = live.get(&ev.client) else {
+                    // Late frame against a reaped execution: dropped, like
+                    // a closed reorder buffer drops late producers.
+                    fold(&mut report.trace_hash, ev.at);
+                    fold(&mut report.trace_hash, cid << 3);
+                    continue;
+                };
+                let (_, bytes) = l.entries[i as usize];
+                // Both real gates, checked the way a sender experiences
+                // them: no budget room or no fair-share room ⇒ the chunk
+                // stays in flight and retries later (TCP backpressure).
+                if !budget.has_room(bytes) || !ledger.would_admit(tenant, bytes) {
+                    if hog {
+                        report.hog_backpressured += 1;
+                    } else {
+                        report.steady_backpressured += 1;
+                    }
+                    heap.push(Ev {
+                        at: ev.at + cfg.backpressure_ns,
+                        seq,
+                        client: ev.client,
+                        kind: EvKind::Deliver(i),
+                    });
+                    seq += 1;
+                    fold(&mut report.trace_hash, ev.at);
+                    fold(&mut report.trace_hash, (cid << 3) | 4);
+                } else {
+                    let fill = (mix64(cfg.seed ^ cid) & 0xff) as u8;
+                    l.buf.fill(i, vec![fill; bytes as usize]);
+                    let hog_used = ledger.used(HOG);
+                    report.hog_peak_ledger_bytes = report.hog_peak_ledger_bytes.max(hog_used);
+                    if steady_live > 0 {
+                        report.hog_peak_with_steady_bytes =
+                            report.hog_peak_with_steady_bytes.max(hog_used);
+                    }
+                    fold(&mut report.trace_hash, ev.at);
+                    fold(&mut report.trace_hash, (cid << 3) | 3);
+                }
+            }
+            EvKind::Drain => {
+                let l = live.get_mut(&ev.client).expect("drain for a live steady client");
+                match l.buf.wait_take(l.next_take, Duration::ZERO) {
+                    SlotWait::Ready(data) => {
+                        fold(&mut report.trace_hash, ev.at);
+                        fold(&mut report.trace_hash, (cid << 3) | 5);
+                        fold(&mut report.trace_hash, data.len() as u64);
+                        l.next_take += 1;
+                        if l.next_take as usize == l.entries.len() {
+                            let l = live.remove(&ev.client).expect("still live");
+                            l.buf.close();
+                            steady_live -= 1;
+                            report.steady_completed += 1;
+                        } else {
+                            heap.push(Ev {
+                                at: ev.at + cfg.consume_ns,
+                                seq,
+                                client: ev.client,
+                                kind: EvKind::Drain,
+                            });
+                            seq += 1;
+                        }
+                    }
+                    SlotWait::TimedOut => {
+                        heap.push(Ev {
+                            at: ev.at + cfg.poll_ns,
+                            seq,
+                            client: ev.client,
+                            kind: EvKind::Drain,
+                        });
+                        seq += 1;
+                        fold(&mut report.trace_hash, ev.at);
+                        fold(&mut report.trace_hash, (cid << 3) | 6);
+                    }
+                    SlotWait::Failed(e) => {
+                        panic!("steady slot failed: {e:?} (seed {})", cfg.seed)
+                    }
+                }
+            }
+            EvKind::Abort => {
+                if let Some(l) = live.remove(&ev.client) {
+                    // close() + drop releases every resident byte back to
+                    // the budget AND the tenant ledger (production reap
+                    // path semantics).
+                    l.buf.close();
+                    report.hog_aborted += 1;
+                }
+                fold(&mut report.trace_hash, ev.at);
+                fold(&mut report.trace_hash, (cid << 3) | 7);
+            }
+        }
+        let peak = budget.peak();
+        assert!(
+            peak <= cfg.dt_buffer_bytes,
+            "resident peak {peak} exceeds dt_buffer_bytes {} (seed {})",
+            cfg.dt_buffer_bytes,
+            cfg.seed
+        );
+    }
+
+    assert!(live.is_empty() && first_try.is_empty(), "no client left behind (seed {})", cfg.seed);
+    report.peak_resident = budget.peak();
+    report.overruns = budget.overruns();
+    fold(&mut report.trace_hash, report.peak_resident);
+    fold(&mut report.trace_hash, report.hog_peak_ledger_bytes);
+    fold(&mut report.trace_hash, report.hog_peak_with_steady_bytes);
+    fold(&mut report.trace_hash, report.steady_rejected);
+    fold(&mut report.trace_hash, report.hog_rejected);
+    fold(&mut report.trace_hash, report.hog_backpressured);
     fold(&mut report.trace_hash, report.events);
     report
 }
@@ -714,6 +1109,36 @@ mod tests {
             head * 2 > total,
             "top 1% of objects should absorb most draws ({head}/{total})"
         );
+    }
+
+    #[test]
+    fn multi_tenant_hog_cannot_starve_steady_clients() {
+        let cfg = MultiTenantConfig::hog_vs_steady(2_000, 17);
+        let a = run_multi_tenant(&cfg);
+        let b = run_multi_tenant(&cfg);
+        assert_eq!(a, b, "same seed ⇒ identical multi-tenant report incl. trace hash");
+        assert_eq!(a.steady_completed, 2_000, "every steady client finishes: {a:?}");
+        assert_eq!(a.steady_rejected, 0, "interactive traffic is never shed by the hog: {a:?}");
+        assert_eq!(a.overruns, 0, "fair-share backpressure defers before patience: {a:?}");
+        assert!(a.peak_resident <= a.dt_buffer_bytes);
+        assert!(a.hog_rejected > 0, "bulk hog re-registrations are shed first: {a:?}");
+        assert_eq!(a.hog_aborted, a.hog_admitted, "hog batches never drain; all reaped: {a:?}");
+        assert!(a.hog_backpressured > 0, "hog over-share deliveries defer: {a:?}");
+        let fair_share = (cfg.dt_buffer_bytes - cfg.chunk_bytes) / 2;
+        assert!(
+            a.hog_peak_with_steady_bytes <= fair_share,
+            "hog capped at its share while steady tenants are active: {a:?}"
+        );
+        assert!(
+            a.hog_peak_ledger_bytes > fair_share,
+            "idle shares are borrowable once the steady population drains: {a:?}"
+        );
+        assert!(
+            a.max_steady_admission_wait_ns < 10_000_000,
+            "steady admission waits stay bounded: {a:?}"
+        );
+        let c = run_multi_tenant(&MultiTenantConfig::hog_vs_steady(2_000, 18));
+        assert_ne!(a.trace_hash, c.trace_hash, "different seed ⇒ different trace");
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Multi-tenant QoS gate: fair-share admission isolates a well-behaved
+//! tenant from a misbehaving one (tentpole), load shedding drops the
+//! lowest priority class first with class-scaled `Retry-After` hints, and
+//! tenant identity flows end-to-end into per-tenant metrics.
+//!
+//! Repro knob: `GETBATCH_QOS_SEED` pins the payload seed (printed on every
+//! timing-assertion failure so a flake can be replayed).
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use common::{payload, retry_once, start_cluster, sum};
+use getbatch::proto::http::HttpClient;
+use getbatch::proto::wire::{self, paths, DtRegister};
+use getbatch::{BatchEntry, BatchRequest, Client, GetBatchConfig};
+
+fn qos_seed() -> u64 {
+    std::env::var("GETBATCH_QOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x9057)
+}
+
+/// Register a batch directly at a target's DT endpoint with an explicit
+/// tenant/priority, bypassing the proxy. The single entry names an absent
+/// object so the DT-local resolver fails the slot without reserving budget
+/// bytes — the registration pins only the tenant's *activity* (its ledger
+/// handle), never memory, and `num_senders = 1` keeps it parked in the
+/// registry (no sender ever arrives) until the abandon reaper collects it.
+fn register_raw(
+    http: &HttpClient,
+    addr: &str,
+    req_id: u64,
+    tenant: &str,
+    priority: &str,
+) -> (u16, Option<String>) {
+    let raw = String::from_utf8(
+        BatchRequest::new(vec![BatchEntry::obj("qos", "absent-object")]).to_body(),
+    )
+    .unwrap();
+    let body = DtRegister::body_with_raw_qos(req_id, 1, tenant, priority, &raw);
+    let resp = http.request("POST", addr, paths::DT_REGISTER, &body).unwrap();
+    let status = resp.status;
+    let retry_after = resp.header("retry-after").map(|s| s.to_string());
+    let _ = resp.into_bytes();
+    (status, retry_after)
+}
+
+/// Tentpole: a tenant that registers a batch several times the node's
+/// entire DT buffer and then never drains its stream must not starve a
+/// well-behaved tenant. With the fair-share ledger the hog is capped at
+/// its share of the budget cap, so the steady tenant's rounds run at its
+/// solo pace (within 10%) and the budget's patience valve (forced
+/// overrun admissions) never fires. Without the ledger the hog pins the
+/// whole cap and every steady producer blocks for the full patience
+/// window.
+#[test]
+fn hog_tenant_cannot_starve_steady_tenant() {
+    let seed = qos_seed();
+    retry_once("two-tenant fairness", seed, || {
+        let gb = GetBatchConfig {
+            dt_buffer_bytes: 1 << 20,
+            chunk_bytes: 32 << 10,
+            // Shedding out of the picture: this test isolates fair shares.
+            mem_critical_bytes: 64 << 20,
+            budget_patience: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let c = start_cluster(1, 4, gb);
+        let t = &c.targets[0];
+
+        let steady =
+            Client::new(&c.proxy_addr()).with_tenant("steady").with_priority("interactive");
+        let hog = Client::new(&c.proxy_addr()).with_tenant("hog").with_priority("bulk");
+        for i in 0..12u64 {
+            steady.put("b", &format!("s{i}"), &payload(32 << 10, seed ^ i)).unwrap();
+        }
+        for i in 0..40u64 {
+            hog.put("b", &format!("h{i}"), &payload(256 << 10, seed ^ (0x100 + i))).unwrap();
+        }
+
+        // Keepalive: park one zero-byte steady registration so the steady
+        // tenant stays *active* across the gaps between measured rounds.
+        // Shares are divided among active tenants only — without this, the
+        // hog becomes sole-active in each inter-round gap, borrows the
+        // whole cap (by design: idle shares are borrowable), and the
+        // already-resident bytes can't be clawed back when steady returns.
+        let http = HttpClient::new(true);
+        let (status, _) =
+            register_raw(&http, &t.info.http_addr, 0x5EED_0001, "steady", "interactive");
+        assert_eq!(status, 200, "keepalive registration refused");
+
+        // Slow, deterministic reads: wall time measures data-path
+        // throughput, not request-dispatch noise.
+        t.store.local().set_latency(Duration::from_millis(2), 1.0);
+
+        let steady_req = BatchRequest::new(
+            (0..12).map(|i| BatchEntry::obj("b", &format!("s{i}"))).collect(),
+        );
+        let rounds = 8;
+        let run = |label: &str| -> Result<Duration, String> {
+            let t0 = Instant::now();
+            for r in 0..rounds {
+                let items = steady
+                    .get_batch_collect(&steady_req)
+                    .map_err(|e| format!("{label} round {r}: {e}"))?;
+                if items.len() != 12 {
+                    return Err(format!("{label} round {r}: short batch ({})", items.len()));
+                }
+            }
+            Ok(t0.elapsed())
+        };
+
+        let solo = run("solo")?;
+
+        // Contended phase: the hog registers a 10 MiB batch (10× the node
+        // budget) and sits on the stream without reading a byte, so its
+        // resident bytes pin at whatever admission grants for the whole
+        // phase. Dropping the reader at the end aborts the stream.
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let hog2 = hog.clone();
+        let hog_thread = thread::spawn(move || {
+            let req = BatchRequest::new(
+                (0..40).map(|i| BatchEntry::obj("b", &format!("h{i}"))).collect(),
+            );
+            let reader = hog2.get_batch(&req);
+            while !stop2.load(Ordering::Relaxed) {
+                thread::sleep(Duration::from_millis(5));
+            }
+            drop(reader);
+        });
+        // Let the hog wedge in and fill to its cap before measuring.
+        thread::sleep(Duration::from_millis(150));
+
+        let contended = run("contended");
+        stop.store(true, Ordering::Relaxed);
+        hog_thread.join().unwrap();
+        let contended = contended?;
+
+        let overruns = sum(&c, |t| t.metrics.budget_overruns.get());
+        if overruns != 0 {
+            return Err(format!("budget patience valve fired {overruns}× under a hog"));
+        }
+        // Within 10% of the solo baseline (+ a small absolute grace for
+        // scheduler jitter on a ~250 ms measurement).
+        let limit = solo.mul_f64(1.10) + Duration::from_millis(30);
+        if contended > limit {
+            return Err(format!(
+                "steady tenant degraded: solo {solo:?}, contended {contended:?} (limit {limit:?})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Load shedding is lowest-class-first: as buffered bytes climb toward
+/// `mem_critical_bytes`, bulk is rejected at 1/2 of critical, batch at
+/// 3/4, interactive only at the full threshold — and each 429 carries a
+/// `Retry-After` scaled by the class backoff factor (patience 2 s ⇒
+/// interactive "2", batch "4", bulk "8"), so recovered headroom is
+/// retried into by interactive work first.
+#[test]
+fn shedding_drops_lowest_class_first_with_scaled_backoff() {
+    let gb = GetBatchConfig {
+        dt_buffer_bytes: 4 << 20,
+        chunk_bytes: 64 << 10,
+        mem_critical_bytes: 1 << 20,
+        budget_patience: Duration::from_secs(2),
+        ..Default::default()
+    };
+    let c = start_cluster(1, 4, gb);
+    let t = &c.targets[0];
+    let http = HttpClient::new(true);
+    let mut next_id = 0xbee0_u64;
+    let mut register = |class: &str| {
+        next_id += 1;
+        register_raw(&http, &t.info.http_addr, next_id, "shed-test", class)
+    };
+
+    // 600 KiB buffered: past bulk's half-critical threshold only.
+    t.metrics.dt_buffered_bytes.set(600 << 10);
+    assert_eq!(register("bulk"), (429, Some("8".into())), "bulk sheds first, longest backoff");
+    assert_eq!(register("batch").0, 200, "batch still admits at 600 KiB");
+    assert_eq!(register("interactive").0, 200);
+
+    // 800 KiB: past batch's three-quarter threshold.
+    t.metrics.dt_buffered_bytes.set(800 << 10);
+    assert_eq!(register("batch"), (429, Some("4".into())), "batch sheds next");
+    assert_eq!(register("interactive").0, 200, "interactive admits until critical");
+
+    // At critical: everyone sheds, interactive with the shortest hint.
+    t.metrics.dt_buffered_bytes.set(1 << 20);
+    assert_eq!(register("interactive"), (429, Some("2".into())));
+
+    // An unknown class label falls back to the configured default
+    // ("batch"), which is shed at this level too.
+    assert_eq!(register("turbo").0, 429);
+
+    let rejects = sum(&c, |t| t.metrics.admission_rejects.get());
+    assert_eq!(rejects, 4, "one admission reject per 429");
+}
+
+/// Tenant identity flows from the client SDK through the proxy's register
+/// body into the DT's per-tenant metrics; legacy clients (no QoS headers)
+/// are accounted under the default tenant.
+#[test]
+fn tenant_identity_lands_in_per_tenant_metrics() {
+    let c = start_cluster(1, 4, GetBatchConfig::default());
+    let tagged = Client::new(&c.proxy_addr()).with_tenant("alpha").with_priority("interactive");
+    tagged.put("b", "o1", &payload(8 << 10, qos_seed())).unwrap();
+    let req = BatchRequest::new(vec![BatchEntry::obj("b", "o1")]);
+    assert_eq!(tagged.get_batch_collect(&req).unwrap().len(), 1);
+
+    let legacy = Client::new(&c.proxy_addr());
+    assert_eq!(legacy.get_batch_collect(&req).unwrap().len(), 1);
+
+    let t = &c.targets[0];
+    let text = t.metrics.render(&t.info.id);
+    assert!(text.contains("tenant_admits_total"), "per-tenant family missing:\n{text}");
+    assert!(text.contains("tenant=\"alpha\""), "tagged tenant line missing:\n{text}");
+    assert!(
+        text.contains(&format!("tenant=\"{}\"", wire::DEFAULT_TENANT)),
+        "legacy traffic not accounted under the default tenant:\n{text}"
+    );
+}
